@@ -1,0 +1,78 @@
+"""Paper-table benchmarks (§5 of the paper), driven by the DES.
+
+One function per table/figure:
+  * :func:`overhead_table`      — Fig. 9 (overhead tests, no data locality)
+  * :func:`data_locality_table` — Fig. 10 (mongoDB + data-locality)
+  * :func:`qualitative_mqtt`    — §5.1 case study (vanilla vs tAPP)
+
+Each returns a list of row dicts and is averaged over N deployments
+(the paper's redeploy-every-2-repetitions methodology, seeded).
+"""
+from __future__ import annotations
+
+import statistics
+from typing import Dict, List
+
+from repro.core.sim.scenarios import run_benchmark, run_mqtt_case
+
+OVERHEAD_TESTS = ["hellojs", "sleep", "matrixMult", "cold-start",
+                  "slackpost", "pycatj"]
+LOCALITY_TESTS = ["mongoDB", "data-locality"]
+SCHEDULERS = ["vanilla", "default", "min_memory", "isolated", "shared"]
+
+
+def _row(test: str, label: str, *, scheduler: str, tagged: bool,
+         n_deployments: int) -> Dict:
+    means, stds, fails = [], [], []
+    for seed in range(n_deployments):
+        _, res = run_benchmark(test, scheduler=scheduler, tagged=tagged,
+                               seed=seed)
+        s = res.summary()
+        means.append(s["mean"])
+        stds.append(s["std"])
+        fails.append(s["failure_rate"])
+    return {
+        "test": test,
+        "scheduler": label,
+        "mean_s": statistics.fmean(means),
+        "std_s": statistics.fmean(stds),
+        "deployment_spread_s": statistics.pstdev(means) if len(means) > 1 else 0.0,
+        "failure_rate": statistics.fmean(fails),
+    }
+
+
+def overhead_table(n_deployments: int = 6) -> List[Dict]:
+    rows = []
+    for test in OVERHEAD_TESTS:
+        for sched in SCHEDULERS:
+            rows.append(_row(test, sched, scheduler=sched, tagged=False,
+                             n_deployments=n_deployments))
+    return rows
+
+
+def data_locality_table(n_deployments: int = 6) -> List[Dict]:
+    rows = []
+    for test in LOCALITY_TESTS:
+        for sched in SCHEDULERS:
+            rows.append(_row(test, sched, scheduler=sched, tagged=False,
+                             n_deployments=n_deployments))
+        rows.append(_row(test, "shared+tapp", scheduler="shared", tagged=True,
+                         n_deployments=n_deployments))
+    return rows
+
+
+def qualitative_mqtt() -> List[Dict]:
+    rows = []
+    for use_tapp in (False, True):
+        for cloud_first in (True, False):
+            results = run_mqtt_case(use_tapp=use_tapp, minutes=20,
+                                    cloud_first=cloud_first)
+            for fn, res in results.items():
+                rows.append({
+                    "system": "tapp" if use_tapp else "vanilla",
+                    "deployment": "cloud-primary" if cloud_first else "edge-primary",
+                    "function": fn,
+                    "failure_rate": res.failure_rate,
+                    "mean_s": res.summary()["mean"],
+                })
+    return rows

@@ -1,0 +1,49 @@
+"""Re-derive roofline terms for every saved dry-run artifact from its
+persisted HLO (no recompilation) — used when the cost model improves."""
+import dataclasses
+import json
+import pathlib
+import sys
+
+import zstandard
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.configs import get_config                      # noqa: E402
+from repro.models.api import SHAPES                       # noqa: E402
+from repro.roofline.analysis import (                     # noqa: E402
+    model_bytes_min, model_flops, roofline_terms,
+)
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def main() -> None:
+    for jpath in sorted(ART.glob("*.json")):
+        rec = json.loads(jpath.read_text())
+        if rec.get("status") != "ok":
+            continue
+        hpath = jpath.with_suffix("").with_suffix("")  # strip .json
+        hpath = ART / (jpath.stem + ".hlo.zst")
+        if not hpath.exists():
+            continue
+        hlo = zstandard.ZstdDecompressor().decompress(hpath.read_bytes()).decode()
+        cfg = get_config(rec["arch"])
+        if rec["shape"] != "train_4k":
+            cfg = dataclasses.replace(cfg, param_dtype="bfloat16")
+        shape = SHAPES[rec["shape"]]
+        terms = roofline_terms(
+            cost={"flops": 0.0, "bytes accessed": 0.0},
+            hlo_text=hlo,
+            n_chips=rec["n_chips"],
+            model_flops_total=model_flops(cfg, shape),
+            model_bytes_min=model_bytes_min(cfg, shape, rec["n_chips"]),
+        )
+        rec["roofline"] = terms.to_json()
+        jpath.write_text(json.dumps(rec, indent=2))
+        print(f"recomputed {jpath.name}: dom={terms.dominant} "
+              f"frac={terms.roofline_fraction:.3f}")
+
+
+if __name__ == "__main__":
+    main()

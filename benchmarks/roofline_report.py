@@ -1,0 +1,114 @@
+"""Aggregate dry-run artifacts into the §Roofline table.
+
+Reads ``artifacts/dryrun/*.json`` (written by ``repro.launch.dryrun``) and
+emits a markdown table + CSV rows with the three roofline terms, dominant
+bottleneck, FLOPs ratio, and the per-cell one-line recommendation.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+_RECOMMEND = {
+    "compute": "raise per-chip math utilisation (larger per-chip tiles, "
+               "fewer remat recomputes, bf16 everywhere)",
+    "memory": "cut HBM traffic (deeper fusion, bf16/int8 caches, larger "
+              "arithmetic intensity per block)",
+    "collective": "cut wire bytes (reduce-scatter grads in bf16, EP "
+                  "all-to-all instead of expert all-gather, overlap with compute)",
+}
+
+
+def load_records(mesh: str = "single", tag: str = "") -> List[Dict]:
+    records = []
+    suffix = f"__{tag}.json" if tag else ".json"
+    for path in sorted(ARTIFACTS.glob(f"*__{mesh}{suffix}")):
+        name = path.name
+        if not tag and name.count("__") != 2:
+            continue  # skip tagged variants in the baseline table
+        records.append(json.loads(path.read_text()))
+    return records
+
+
+def recommendation(rec: Dict) -> str:
+    dom = rec["roofline"]["dominant"]
+    return _RECOMMEND[dom]
+
+
+def table_rows(mesh: str = "single", tag: str = "") -> List[Dict]:
+    rows = []
+    for rec in load_records(mesh, tag):
+        if rec["status"] == "skipped":
+            rows.append({
+                "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+                "status": "skipped", "reason": rec["reason"],
+            })
+            continue
+        if rec["status"] != "ok":
+            rows.append({
+                "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+                "status": "error", "reason": rec.get("error", "?")[:80],
+            })
+            continue
+        t = rec["roofline"]
+        rows.append({
+            "arch": rec["arch"],
+            "shape": rec["shape"],
+            "mesh": rec["mesh"],
+            "status": "ok",
+            "compute_s": t["compute_s"],
+            "memory_s": t["memory_s"],
+            "collective_s": t["collective_s"],
+            "dominant": t["dominant"],
+            "model_flops": t["model_flops_total"],
+            "flops_ratio": t["flops_ratio"],
+            "roofline_fraction": t["roofline_fraction"],
+            "mem_gib": rec["memory"]["per_device_gib_modeled"],
+            "fits": rec["memory"]["fits_hbm"],
+            "recommendation": _RECOMMEND[t["dominant"]],
+        })
+    return rows
+
+
+def markdown_table(mesh: str = "single", tag: str = "") -> str:
+    rows = table_rows(mesh, tag)
+    lines = [
+        "| arch | shape | compute (s) | memory (s) | collective (s) | "
+        "dominant | MODEL/HLO flops | roofline frac | mem GiB (fits) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — | — | — |"
+            )
+            continue
+        if r["status"] == "error":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | ERROR | — | — | — |"
+            )
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | {r['dominant']} | "
+            f"{r['flops_ratio']:.2f} | {r['roofline_fraction']:.3f} | "
+            f"{r['mem_gib']:.2f} ({'Y' if r['fits'] else 'N'}) |"
+        )
+    return "\n".join(lines)
+
+
+def csv_rows(mesh: str = "single") -> List[Dict]:
+    out = []
+    for r in table_rows(mesh):
+        if r["status"] != "ok":
+            continue
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        out.append({
+            "name": f"roofline_{r['arch']}_{r['shape']}_{mesh}",
+            "us_per_call": bound * 1e6,
+            "derived": f"dom={r['dominant']};frac={r['roofline_fraction']:.3f}",
+        })
+    return out

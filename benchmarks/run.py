@@ -1,0 +1,73 @@
+"""Benchmark entry point — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus section separators).
+Roofline rows appear only when dry-run artifacts exist (run
+``python -m repro.launch.dryrun --all`` first).
+"""
+from __future__ import annotations
+
+import sys
+
+
+def _emit(rows):
+    for r in rows:
+        name = r.get("name")
+        if name is None:
+            name = f"{r['test']}_{r['scheduler']}".replace("+", "_")
+        us = r.get("us_per_call", r.get("mean_s", 0.0) * 1e6)
+        derived = r.get("derived")
+        if derived is None:
+            derived = (
+                f"std_s={r.get('std_s', 0):.3f};"
+                f"spread_s={r.get('deployment_spread_s', 0):.3f};"
+                f"fail={r.get('failure_rate', 0):.2%}"
+            )
+        print(f"{name},{us:.1f},{derived}")
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    n_dep = 3 if quick else 6
+
+    print("# === Fig. 9 analogue: overhead tests (no data-locality) ===")
+    from benchmarks.paper_tables import overhead_table
+
+    _emit(overhead_table(n_deployments=n_dep))
+
+    print("# === Fig. 10 analogue: data-locality tests ===")
+    from benchmarks.paper_tables import data_locality_table
+
+    _emit(data_locality_table(n_deployments=n_dep))
+
+    print("# === §5.1 analogue: qualitative MQTT case ===")
+    from benchmarks.paper_tables import qualitative_mqtt
+
+    for r in qualitative_mqtt():
+        print(
+            f"mqtt_{r['system']}_{r['deployment']}_{r['function']},"
+            f"{r['mean_s'] * 1e6:.1f},fail={r['failure_rate']:.0%}"
+        )
+
+    print("# === scheduler microbenchmark (policy-evaluation cost) ===")
+    from benchmarks.scheduler_micro import microbench
+
+    for r in microbench():
+        print(f"{r['name']},{r['us_per_call']:.1f},decision-latency")
+
+    print("# === serving engine (tAPP-scheduled continuous batching) ===")
+    from benchmarks.serving_bench import serving_bench
+
+    _emit(serving_bench())
+
+    print("# === roofline (from dry-run artifacts; see EXPERIMENTS.md) ===")
+    from benchmarks.roofline_report import csv_rows
+
+    rows = csv_rows("single")
+    if rows:
+        _emit(rows)
+    else:
+        print("# (no dry-run artifacts — run python -m repro.launch.dryrun --all)")
+
+
+if __name__ == "__main__":
+    main()

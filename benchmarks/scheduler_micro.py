@@ -1,0 +1,87 @@
+"""Scheduler microbenchmark: µs per scheduling decision.
+
+The paper's overhead argument (§5.4.1) rests on the policy interpreter
+being cheap relative to function execution; this measures it directly:
+tAPP policy evaluation vs vanilla co-prime, across cluster sizes.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core.scheduler import (
+    ClusterState,
+    ControllerState,
+    Invocation,
+    TappEngine,
+    VanillaScheduler,
+    WorkerState,
+)
+from repro.core.scheduler.topology import DistributionPolicy
+from repro.core.tapp import parse_tapp
+
+SCRIPT = """
+- default:
+  - workers:
+    - set:
+    strategy: platform
+    invalidate: overload
+- tagged:
+  - workers:
+    - set: east
+    strategy: random
+    invalidate: capacity_used 80%
+  - workers:
+    - set: west
+  followup: default
+"""
+
+
+def _cluster(n_workers: int) -> ClusterState:
+    c = ClusterState()
+    c.add_controller(ControllerState(name="C1", zone="east"))
+    c.add_controller(ControllerState(name="C2", zone="west"))
+    for i in range(n_workers):
+        zone = "east" if i % 2 == 0 else "west"
+        c.add_worker(
+            WorkerState(name=f"w{i}", zone=zone, sets=frozenset({zone, "any"}))
+        )
+    return c
+
+
+def _time_us(fn, n: int = 2000) -> float:
+    fn()  # warm
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def microbench() -> List[Dict]:
+    rows = []
+    script = parse_tapp(SCRIPT)
+    for n_workers in (4, 16, 64, 256):
+        cluster = _cluster(n_workers)
+        engine = TappEngine(DistributionPolicy.SHARED, seed=0)
+        vanilla = VanillaScheduler()
+        inv_tag = Invocation("fn", tag="tagged")
+        inv_plain = Invocation("fn")
+        rows.append({
+            "name": f"tapp_tagged_{n_workers}w",
+            "us_per_call": _time_us(
+                lambda: engine.schedule(inv_tag, script, cluster)
+            ),
+        })
+        rows.append({
+            "name": f"tapp_default_{n_workers}w",
+            "us_per_call": _time_us(
+                lambda: engine.schedule(inv_plain, script, cluster)
+            ),
+        })
+        rows.append({
+            "name": f"vanilla_{n_workers}w",
+            "us_per_call": _time_us(
+                lambda: vanilla.schedule(inv_plain, cluster)
+            ),
+        })
+    return rows

@@ -1,0 +1,172 @@
+"""Sharded, atomic, async checkpointing with elastic restore.
+
+Layout (one directory per step)::
+
+    <dir>/step_000123/
+        manifest.json            # tree structure, shapes, dtypes, meta
+        arrays/<leaf-id>.npy     # one file per leaf (host-gathered)
+    <dir>/step_000123.COMMITTED  # atomicity marker (written last)
+
+Design points for the 1000-node story:
+  * **atomic**: a checkpoint is visible only after the COMMITTED marker —
+    a process killed mid-write never corrupts the latest checkpoint;
+  * **async**: `save(..., blocking=False)` snapshots device arrays to host
+    then writes on a background thread — the train loop keeps stepping;
+  * **elastic**: `restore(..., shardings=...)` re-places every leaf into
+    the *current* mesh's shardings, so a job restarted on a different
+    topology (e.g. 512→256 chips after losing a pod) resumes directly;
+  * **garbage collection**: `keep_last` bounds disk usage.
+
+On a real multi-host fleet each host would write only its owned shards
+(`jax.experimental.multihost_utils` / array_serialization); in-process we
+gather, which is exact on a single host and keeps the format trivial.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import re
+import shutil
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree: Any) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+            for k in path
+        )
+        out.append((name, leaf))
+    return out
+
+
+@dataclasses.dataclass
+class CheckpointInfo:
+    step: int
+    path: pathlib.Path
+
+
+class Checkpointer:
+    def __init__(self, directory: str, *, keep_last: int = 3) -> None:
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep_last = keep_last
+        self._pending: Optional[threading.Thread] = None
+
+    # -- save ---------------------------------------------------------------------
+
+    def save(self, step: int, tree: Any, *, blocking: bool = True,
+             extra: Optional[Dict] = None) -> None:
+        """Snapshot to host, then write (optionally on a background thread)."""
+        self.wait()  # one async save in flight at a time
+        host_leaves = [
+            (name, np.asarray(jax.device_get(leaf)))
+            for name, leaf in _flatten_with_names(tree)
+        ]
+        treedef = jax.tree_util.tree_structure(tree)
+
+        def write() -> None:
+            final = self.dir / f"step_{step:09d}"
+            tmp = self.dir / f".tmp_step_{step:09d}"
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            (tmp / "arrays").mkdir(parents=True)
+            manifest = {
+                "step": step,
+                "treedef": str(treedef),
+                "leaves": [],
+                "extra": extra or {},
+            }
+            for idx, (name, arr) in enumerate(host_leaves):
+                fname = f"{idx:05d}.npy"
+                np.save(tmp / "arrays" / fname, arr)
+                manifest["leaves"].append(
+                    {"name": name, "file": fname,
+                     "shape": list(arr.shape), "dtype": str(arr.dtype)}
+                )
+            (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+            if final.exists():
+                shutil.rmtree(final)
+            tmp.rename(final)
+            # Commit marker written last → crash-safe visibility.
+            (self.dir / f"step_{step:09d}.COMMITTED").touch()
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            self._pending = threading.Thread(target=write, daemon=True)
+            self._pending.start()
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    # -- restore -------------------------------------------------------------------
+
+    def latest_step(self) -> Optional[int]:
+        steps = []
+        for marker in self.dir.glob("step_*.COMMITTED"):
+            m = re.match(r"step_(\d+)\.COMMITTED", marker.name)
+            if m and (self.dir / f"step_{int(m.group(1)):09d}").exists():
+                steps.append(int(m.group(1)))
+        return max(steps) if steps else None
+
+    def restore(
+        self,
+        like: Any,
+        *,
+        step: Optional[int] = None,
+        shardings: Optional[Any] = None,
+    ) -> Tuple[Any, int, Dict]:
+        """Restore into the structure of ``like``; re-place onto
+        ``shardings`` (elastic restore onto any current mesh)."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
+        path = self.dir / f"step_{step:09d}"
+        manifest = json.loads((path / "manifest.json").read_text())
+
+        arrays = {}
+        for leaf_info in manifest["leaves"]:
+            arrays[leaf_info["name"]] = np.load(path / "arrays" / leaf_info["file"])
+
+        names = [name for name, _ in _flatten_with_names(like)]
+        missing = [n for n in names if n not in arrays]
+        if missing:
+            raise ValueError(f"checkpoint missing leaves: {missing[:5]}…")
+
+        sharding_leaves = None
+        if shardings is not None:
+            sharding_leaves = [s for _, s in _flatten_with_names(shardings)]
+
+        leaves = []
+        for i, name in enumerate(names):
+            arr = arrays[name]
+            if sharding_leaves is not None:
+                leaves.append(jax.device_put(arr, sharding_leaves[i]))
+            else:
+                leaves.append(jax.numpy.asarray(arr))
+        treedef = jax.tree_util.tree_structure(like)
+        return treedef.unflatten(leaves), step, manifest.get("extra", {})
+
+    # -- gc -------------------------------------------------------------------------
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(re.match(r"step_(\d+)\.COMMITTED", m.name).group(1))
+            for m in self.dir.glob("step_*.COMMITTED")
+        )
+        for old in steps[: -self.keep_last]:
+            shutil.rmtree(self.dir / f"step_{old:09d}", ignore_errors=True)
+            (self.dir / f"step_{old:09d}.COMMITTED").unlink(missing_ok=True)

@@ -1,0 +1,10 @@
+"""The paper's primary contribution: the tAPP language (``repro.core.tapp``),
+the topology-aware scheduler (``repro.core.scheduler``), and the evaluation
+simulator (``repro.core.sim``).
+
+The data plane that these schedule — models, kernels, sharding, serving —
+lives in the sibling subpackages of :mod:`repro`.
+"""
+from repro.core import scheduler, sim, tapp
+
+__all__ = ["scheduler", "sim", "tapp"]

@@ -1,0 +1,59 @@
+"""Topology-aware function-execution scheduler (the paper's control plane)."""
+from repro.core.scheduler.controller import Admission, AdmissionError, ControllerRuntime
+from repro.core.scheduler.engine import (
+    Invocation,
+    Outcome,
+    ScheduleDecision,
+    TappEngine,
+    TraceEvent,
+)
+from repro.core.scheduler.gateway import Gateway, GatewayStats
+from repro.core.scheduler.invalidate import (
+    DEFAULT_INVALIDATE,
+    invalid_reason,
+    is_invalid,
+    resolve_invalidate,
+)
+from repro.core.scheduler.state import (
+    ClusterState,
+    ControllerState,
+    WorkerState,
+    make_cluster,
+)
+from repro.core.scheduler.strategy import coprime_order, order_candidates, stable_hash
+from repro.core.scheduler.topology import (
+    DistributionPolicy,
+    WorkerView,
+    distribution_view,
+)
+from repro.core.scheduler.vanilla import VanillaScheduler
+from repro.core.scheduler.watcher import Watcher
+
+__all__ = [
+    "Admission",
+    "AdmissionError",
+    "ClusterState",
+    "ControllerRuntime",
+    "ControllerState",
+    "DEFAULT_INVALIDATE",
+    "DistributionPolicy",
+    "Gateway",
+    "GatewayStats",
+    "Invocation",
+    "Outcome",
+    "ScheduleDecision",
+    "TappEngine",
+    "TraceEvent",
+    "VanillaScheduler",
+    "Watcher",
+    "WorkerState",
+    "WorkerView",
+    "coprime_order",
+    "distribution_view",
+    "invalid_reason",
+    "is_invalid",
+    "make_cluster",
+    "order_candidates",
+    "resolve_invalidate",
+    "stable_hash",
+]

@@ -1,0 +1,104 @@
+"""Per-zone controller bookkeeping (the paper's ConfigurableLoadBalancer).
+
+The policy *evaluation* lives in :mod:`engine`; this module provides the
+stateful controller object the runtime/simulator uses to admit, execute,
+and complete invocations on workers — i.e. the part of OpenWhisk's
+LoadBalancer that tracks in-flight activations per invoker.
+
+It also exposes the hook the serving engine uses for **straggler
+mitigation**: completing an admission with ``slow=True`` feeds the
+watcher's load signal so tAPP ``capacity_used`` / ``overload`` conditions
+steer subsequent invocations away from the slow worker.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.core.scheduler.state import ClusterState, WorkerState
+from repro.core.scheduler.watcher import Watcher
+
+
+@dataclasses.dataclass
+class Admission:
+    """A ticket for one invocation admitted onto a worker."""
+
+    worker: str
+    controller: str
+    invocation_id: int
+
+
+class AdmissionError(RuntimeError):
+    pass
+
+
+class ControllerRuntime:
+    """Tracks slot occupancy for the workers a deployment exposes.
+
+    All mutations go through the watcher so every gateway/controller view
+    of load is consistent (single writer, versioned snapshots).
+    """
+
+    def __init__(self, watcher: Watcher) -> None:
+        self._watcher = watcher
+        self._next_id = 0
+
+    @property
+    def cluster(self) -> ClusterState:
+        return self._watcher.cluster
+
+    def admit(self, worker_name: str, controller_name: str) -> Admission:
+        worker = self.cluster.workers.get(worker_name)
+        if worker is None:
+            raise AdmissionError(f"unknown worker {worker_name!r}")
+        if not worker.reachable:
+            raise AdmissionError(f"worker {worker_name!r} unreachable")
+        self._next_id += 1
+        by = dict(worker.inflight_by)
+        by[controller_name] = by.get(controller_name, 0) + 1
+        self._watcher.update_worker(
+            worker_name,
+            inflight=worker.inflight + 1,
+            inflight_by=by,
+            capacity_used_pct=_pct(worker.inflight + 1, worker.capacity_slots),
+        )
+        return Admission(
+            worker=worker_name,
+            controller=controller_name,
+            invocation_id=self._next_id,
+        )
+
+    def complete(self, admission: Admission, *, slow: bool = False) -> None:
+        worker = self.cluster.workers.get(admission.worker)
+        if worker is None:
+            return  # worker evicted while running; nothing to release
+        inflight = max(0, worker.inflight - 1)
+        by = dict(worker.inflight_by)
+        by[admission.controller] = max(0, by.get(admission.controller, 1) - 1)
+        fields: Dict = dict(
+            inflight=inflight,
+            inflight_by=by,
+            capacity_used_pct=_pct(inflight, worker.capacity_slots),
+        )
+        if slow:
+            # Straggler signal: report the worker as fully loaded so
+            # capacity_used-based policies route around it until the next
+            # healthy heartbeat clears the flag.
+            fields["capacity_used_pct"] = 100.0
+        self._watcher.update_worker(admission.worker, **fields)
+
+    def heartbeat(self, worker_name: str, *, healthy: bool = True) -> None:
+        worker = self.cluster.workers.get(worker_name)
+        if worker is None:
+            return
+        self._watcher.update_worker(
+            worker_name,
+            healthy=healthy,
+            capacity_used_pct=_pct(worker.inflight, worker.capacity_slots),
+        )
+
+
+def _pct(inflight: int, slots: int) -> float:
+    if slots <= 0:
+        return 100.0
+    return min(100.0, 100.0 * inflight / slots)

@@ -1,0 +1,461 @@
+"""The tAPP policy-evaluation engine (paper §3.3 semantics).
+
+Given an invocation (function name + tag), a parsed :class:`TappScript`,
+and a cluster snapshot, the engine produces a :class:`ScheduleDecision`:
+either a (controller, worker) placement or a followup outcome, together
+with a full evaluation trace (used by tests, the simulator, and serving
+observability).
+
+Evaluation order, faithful to the paper:
+
+1. Resolve the tag (untagged → ``default``; unknown tag → ``default``;
+   no script at all → the caller falls back to the vanilla scheduler).
+2. Order the tag's blocks by the tag-level strategy (default best_first).
+3. Per block: resolve the executing controller (the gateway step):
+   the named controller if available, otherwise per ``topology_tolerance``
+   (all → any available controller; same → any available controller but
+   workers restricted to the designated controller's zone; none → block
+   invalid). Blocks without a controller clause are executed by a
+   gateway-chosen controller (round-robin cursor).
+4. Per block: expand worker items against the controller's distribution
+   view, order candidates by block/set strategy, and pick the first one
+   whose invalidate condition does not hold.
+5. All blocks exhausted → followup (``fail`` | re-evaluate ``default``;
+   the default tag's own followup is always ``fail``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import random as _random
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.scheduler.invalidate import (
+    invalid_reason,
+    resolve_invalidate,
+)
+from repro.core.scheduler.state import ClusterState, ControllerState, WorkerState
+from repro.core.scheduler.strategy import order_candidates, stable_hash
+from repro.core.scheduler.topology import (
+    DistributionPolicy,
+    WorkerView,
+    distribution_view,
+)
+from repro.core.tapp.ast import (
+    DEFAULT_TAG,
+    Block,
+    FollowupKind,
+    Strategy,
+    TagPolicy,
+    TappScript,
+    TopologyTolerance,
+    WorkerRef,
+    WorkerSet,
+)
+
+
+class Outcome(enum.Enum):
+    SCHEDULED = "scheduled"
+    FAILED = "failed"
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceEvent:
+    kind: str  # "block", "controller", "candidate", "followup", "tag"
+    detail: str
+
+
+@dataclasses.dataclass
+class ScheduleDecision:
+    outcome: Outcome
+    worker: Optional[str] = None
+    controller: Optional[str] = None
+    tag: Optional[str] = None
+    used_default_fallback: bool = False
+    zone_restriction: Optional[str] = None
+    trace: List[TraceEvent] = dataclasses.field(default_factory=list)
+
+    @property
+    def scheduled(self) -> bool:
+        return self.outcome is Outcome.SCHEDULED
+
+    def explain(self) -> str:
+        return "\n".join(f"{e.kind:>10}: {e.detail}" for e in self.trace)
+
+
+@dataclasses.dataclass(frozen=True)
+class Invocation:
+    """One function-execution request."""
+
+    function: str
+    tag: Optional[str] = None
+    # Data-plane context: which model / resource the function touches.
+    model_id: Optional[str] = None
+    request_id: int = 0
+
+    @property
+    def hash(self) -> int:
+        return stable_hash(self.function)
+
+
+class TappEngine:
+    """Stateless policy evaluator (all mutable state lives in the cluster
+    snapshot and in the RNG/cursors the caller owns)."""
+
+    def __init__(
+        self,
+        distribution: DistributionPolicy = DistributionPolicy.DEFAULT,
+        *,
+        seed: Optional[int] = None,
+    ) -> None:
+        self.distribution = distribution
+        self._rng = _random.Random(seed)
+        self._controller_cursor = 0  # round-robin for controller-less blocks
+
+    # -- public API ----------------------------------------------------------
+
+    def schedule(
+        self,
+        invocation: Invocation,
+        script: Optional[TappScript],
+        cluster: ClusterState,
+    ) -> ScheduleDecision:
+        """Resolve one invocation to a worker placement."""
+        decision = ScheduleDecision(outcome=Outcome.FAILED)
+        if script is None or not script.tags:
+            decision.trace.append(
+                TraceEvent("tag", "no tAPP script: caller should use vanilla fallback")
+            )
+            return decision
+
+        tag_name = invocation.tag or DEFAULT_TAG
+        policy = script.get(tag_name)
+        if policy is None:
+            decision.trace.append(
+                TraceEvent(
+                    "tag",
+                    f"tag {tag_name!r} not in script; falling back to "
+                    f"{DEFAULT_TAG!r}",
+                )
+            )
+            policy = script.default
+            tag_name = DEFAULT_TAG
+            if policy is None:
+                decision.trace.append(
+                    TraceEvent("tag", "no default tag either: fail")
+                )
+                return decision
+
+        return self._evaluate_tag(invocation, policy, script, cluster, decision)
+
+    # -- tag evaluation -------------------------------------------------------
+
+    def _evaluate_tag(
+        self,
+        invocation: Invocation,
+        policy: TagPolicy,
+        script: TappScript,
+        cluster: ClusterState,
+        decision: ScheduleDecision,
+        *,
+        is_fallback: bool = False,
+        zone_override: Optional[str] = None,
+    ) -> ScheduleDecision:
+        decision.tag = policy.tag
+        decision.used_default_fallback = is_fallback
+        decision.trace.append(
+            TraceEvent(
+                "tag",
+                f"evaluating tag {policy.tag!r} "
+                f"(strategy={policy.effective_strategy.value}, "
+                f"followup={policy.effective_followup.value})",
+            )
+        )
+
+        blocks = order_candidates(
+            list(enumerate(policy.blocks)),
+            policy.effective_strategy,
+            rng=self._rng,
+            function_hash=invocation.hash,
+        )
+        for block_index, block in blocks:
+            placed = self._evaluate_block(
+                invocation, block, block_index, cluster, decision,
+                zone_override=zone_override,
+            )
+            if placed is not None:
+                controller, worker = placed
+                decision.outcome = Outcome.SCHEDULED
+                decision.controller = controller
+                decision.worker = worker
+                return decision
+
+        # All blocks exhausted → followup.
+        followup = policy.effective_followup
+        decision.trace.append(
+            TraceEvent("followup", f"tag {policy.tag!r} exhausted → {followup.value}")
+        )
+        if followup is FollowupKind.DEFAULT and not is_fallback:
+            # Paper §3.4 (followup × topology_tolerance interaction): when a
+            # tag with `topology_tolerance: same` falls back to the default
+            # tag, other controllers may manage the scheduling BUT execution
+            # stays restricted to the designated controller's zone.
+            sticky_zone = zone_override
+            for block in policy.blocks:
+                if (
+                    block.controller is not None
+                    and block.controller.topology_tolerance
+                    is TopologyTolerance.SAME
+                ):
+                    designated = cluster.controllers.get(block.controller.label)
+                    if designated is not None:
+                        sticky_zone = designated.zone
+                        decision.trace.append(
+                            TraceEvent(
+                                "followup",
+                                f"tolerance=same → default restricted to "
+                                f"zone {sticky_zone!r}",
+                            )
+                        )
+                        break
+            default_policy = script.default
+            if default_policy is not None and default_policy.tag != policy.tag:
+                return self._evaluate_tag(
+                    invocation,
+                    default_policy,
+                    script,
+                    cluster,
+                    decision,
+                    is_fallback=True,
+                    zone_override=sticky_zone,
+                )
+            decision.trace.append(
+                TraceEvent("followup", "no usable default tag: fail")
+            )
+        decision.outcome = Outcome.FAILED
+        return decision
+
+    # -- block evaluation ------------------------------------------------------
+
+    def _evaluate_block(
+        self,
+        invocation: Invocation,
+        block: Block,
+        block_index: int,
+        cluster: ClusterState,
+        decision: ScheduleDecision,
+        *,
+        zone_override: Optional[str] = None,
+    ) -> Optional[Tuple[str, str]]:
+        if block.controller is None:
+            # No controller clause: the gateway tries the available
+            # controllers starting at the round-robin cursor. If one
+            # controller's view has no valid worker, control returns to the
+            # gateway, which passes the invocation to the next controller
+            # (paper §5.4.1: the isolated policy "returns control to Nginx,
+            # which passes the invocation to a different controller").
+            controllers = [c for c in cluster.controllers.values() if c.available]
+            if not controllers:
+                decision.trace.append(
+                    TraceEvent(
+                        "controller",
+                        f"block[{block_index}]: no available controller",
+                    )
+                )
+                return None
+            start = self._controller_cursor
+            self._controller_cursor += 1
+            for offset in range(len(controllers)):
+                controller = controllers[(start + offset) % len(controllers)]
+                decision.trace.append(
+                    TraceEvent(
+                        "controller",
+                        f"block[{block_index}]: gateway → {controller.name!r}",
+                    )
+                )
+                placed = self._evaluate_block_on(
+                    invocation, block, controller, zone_override, cluster,
+                    decision,
+                )
+                if placed is not None:
+                    return placed
+            return None
+
+        controller, zone_restriction, note = self._resolve_controller(
+            block, cluster
+        )
+        decision.trace.append(
+            TraceEvent("controller", f"block[{block_index}]: {note}")
+        )
+        if controller is None:
+            return None
+        zone_restriction = zone_restriction or zone_override
+        decision.zone_restriction = zone_restriction
+        return self._evaluate_block_on(
+            invocation, block, controller, zone_restriction, cluster, decision
+        )
+
+    def _evaluate_block_on(
+        self,
+        invocation: Invocation,
+        block: Block,
+        controller: ControllerState,
+        zone_restriction: Optional[str],
+        cluster: ClusterState,
+        decision: ScheduleDecision,
+    ) -> Optional[Tuple[str, str]]:
+        views = distribution_view(
+            cluster,
+            controller.zone,
+            self.distribution,
+            controller_name=controller.name,
+            zone_restriction=zone_restriction,
+        )
+        view_map: Dict[str, WorkerView] = {v.worker.name: v for v in views}
+
+        candidates = self._expand_block_candidates(
+            invocation, block, views, view_map
+        )
+        for worker, condition in candidates:
+            view = view_map.get(worker.name)
+            if view is None:
+                decision.trace.append(
+                    TraceEvent(
+                        "candidate",
+                        f"{worker.name}: outside controller "
+                        f"{controller.name!r}'s distribution view",
+                    )
+                )
+                continue
+            reason = invalid_reason(worker, condition)
+            if reason is None and view.saturated:
+                reason = (
+                    f"controller entitlement saturated "
+                    f"({worker.inflight}/{view.slot_cap} slots)"
+                )
+            if reason is None:
+                decision.trace.append(
+                    TraceEvent(
+                        "candidate",
+                        f"{worker.name}: VALID (zone={worker.zone}, "
+                        f"inflight={worker.inflight}/{worker.capacity_slots})",
+                    )
+                )
+                return controller.name, worker.name
+            decision.trace.append(
+                TraceEvent("candidate", f"{worker.name}: invalid — {reason}")
+            )
+        return None
+
+    def _resolve_controller(
+        self, block: Block, cluster: ClusterState
+    ) -> Tuple[Optional[ControllerState], Optional[str], str]:
+        """Return (controller, zone_restriction, trace note)."""
+        if block.controller is None:
+            ctl = self._round_robin_controller(cluster)
+            if ctl is None:
+                return None, None, "no available controller in deployment"
+            return ctl, None, f"no controller clause → round-robin pick {ctl.name!r}"
+
+        clause = block.controller
+        assert clause is not None
+        designated = cluster.controllers.get(clause.label)
+        if designated is not None and designated.available:
+            return designated, None, f"designated controller {clause.label!r} available"
+
+        # Designated controller missing/unavailable → topology_tolerance.
+        designated_zone = designated.zone if designated is not None else None
+        tol = clause.topology_tolerance
+        if tol is TopologyTolerance.NONE:
+            return (
+                None,
+                None,
+                f"controller {clause.label!r} unavailable, tolerance=none → block invalid",
+            )
+        alternative = self._round_robin_controller(cluster)
+        if alternative is None:
+            return None, None, "no alternative controller available"
+        if tol is TopologyTolerance.SAME:
+            if designated_zone is None:
+                return (
+                    None,
+                    None,
+                    f"controller {clause.label!r} unknown and tolerance=same → "
+                    f"cannot resolve its zone, block invalid",
+                )
+            return (
+                alternative,
+                designated_zone,
+                f"controller {clause.label!r} unavailable, tolerance=same → "
+                f"{alternative.name!r} restricted to zone {designated_zone!r}",
+            )
+        return (
+            alternative,
+            None,
+            f"controller {clause.label!r} unavailable, tolerance=all → "
+            f"{alternative.name!r}",
+        )
+
+    def _round_robin_controller(
+        self, cluster: ClusterState
+    ) -> Optional[ControllerState]:
+        controllers = [c for c in cluster.controllers.values() if c.available]
+        if not controllers:
+            return None
+        ctl = controllers[self._controller_cursor % len(controllers)]
+        self._controller_cursor += 1
+        return ctl
+
+    # -- candidate expansion ----------------------------------------------------
+
+    def _expand_block_candidates(
+        self,
+        invocation: Invocation,
+        block: Block,
+        views: Sequence[WorkerView],
+        view_map: Dict[str, WorkerView],
+    ):
+        """Yield (worker, resolved invalidate condition) in trial order."""
+        if not block.uses_sets:
+            # Explicit wrk list: the block-level strategy orders the list.
+            items = order_candidates(
+                list(block.workers),
+                block.strategy or Strategy.BEST_FIRST,
+                rng=self._rng,
+                function_hash=invocation.hash,
+            )
+            for item in items:
+                assert isinstance(item, WorkerRef)
+                view = view_map.get(item.label)
+                if view is None:
+                    # Unknown label ⇒ treated as unreachable: emit a stub so the
+                    # trace shows why it was skipped.
+                    ghost = WorkerState(name=item.label, reachable=False)
+                    yield ghost, resolve_invalidate(item.invalidate, block.invalidate)
+                    continue
+                yield view.worker, resolve_invalidate(item.invalidate, block.invalidate)
+            return
+
+        # Set list: block-level strategy orders the *set items*; each set's
+        # inner strategy orders its members. Distribution-view tiering
+        # (local-first) is preserved within each set expansion.
+        set_items = order_candidates(
+            list(block.workers),
+            block.strategy or Strategy.BEST_FIRST,
+            rng=self._rng,
+            function_hash=invocation.hash,
+        )
+        for item in set_items:
+            assert isinstance(item, WorkerSet)
+            members = [v for v in views if v.worker.in_set(item.label)]
+            local = [v.worker for v in members if v.local]
+            foreign = [v.worker for v in members if not v.local]
+            inner = item.strategy or Strategy.PLATFORM  # the platform default
+            ordered = order_candidates(
+                local, inner, rng=self._rng, function_hash=invocation.hash
+            ) + order_candidates(
+                foreign, inner, rng=self._rng, function_hash=invocation.hash
+            )
+            condition = resolve_invalidate(item.invalidate, block.invalidate)
+            for worker in ordered:
+                yield worker, condition

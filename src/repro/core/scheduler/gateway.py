@@ -1,0 +1,85 @@
+"""The platform gateway (the paper's modified Nginx, §4.3).
+
+The gateway is the single entry point: it extracts the policy tag from an
+invocation, consults the cached tAPP script, and resolves the invocation
+through the :class:`TappEngine`. Without a script it falls back to the
+vanilla round-robin/co-prime baseline — exactly the paper's behaviour
+("when no tAPP script is provided, it falls back to the built-in
+round-robin").
+
+Caching model (paper §4.3/§4.5): the gateway keeps a local copy of the
+script and the label mapping, and re-pulls from the watcher only when the
+watcher bumps a version — mirroring the NFS-store + cache-invalidation
+design.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.scheduler.engine import (
+    Invocation,
+    ScheduleDecision,
+    TappEngine,
+)
+from repro.core.scheduler.topology import DistributionPolicy
+from repro.core.scheduler.vanilla import VanillaScheduler
+from repro.core.scheduler.watcher import Watcher
+from repro.core.tapp.ast import TappScript
+
+
+@dataclasses.dataclass
+class GatewayStats:
+    routed: int = 0
+    tapp_routed: int = 0
+    vanilla_routed: int = 0
+    failed: int = 0
+    script_reloads: int = 0
+
+
+class Gateway:
+    def __init__(
+        self,
+        watcher: Watcher,
+        *,
+        distribution: DistributionPolicy = DistributionPolicy.DEFAULT,
+        seed: Optional[int] = None,
+    ) -> None:
+        self._watcher = watcher
+        self._engine = TappEngine(distribution, seed=seed)
+        self._vanilla = VanillaScheduler()
+        self._cached_script: Optional[TappScript] = None
+        self._cached_version = -1
+        self.stats = GatewayStats()
+        watcher.subscribe(self._on_event)
+
+    # -- cache management ---------------------------------------------------------
+
+    def _on_event(self, kind: str) -> None:
+        if kind == "script":
+            # Invalidate only; the refresh happens lazily on the next request.
+            self._cached_version = -1
+
+    def _script(self) -> Optional[TappScript]:
+        version = self._watcher.script_version
+        if version != self._cached_version:
+            self._cached_script = self._watcher.script
+            self._cached_version = version
+            self.stats.script_reloads += 1
+        return self._cached_script
+
+    # -- routing --------------------------------------------------------------------
+
+    def route(self, invocation: Invocation) -> ScheduleDecision:
+        self.stats.routed += 1
+        script = self._script()
+        cluster = self._watcher.cluster
+        if script is None or not script.tags:
+            decision = self._vanilla.schedule(invocation, cluster)
+            self.stats.vanilla_routed += 1
+        else:
+            decision = self._engine.schedule(invocation, script, cluster)
+            self.stats.tapp_routed += 1
+        if not decision.scheduled:
+            self.stats.failed += 1
+        return decision

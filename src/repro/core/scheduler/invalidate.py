@@ -1,0 +1,78 @@
+"""Invalidate-condition evaluation (paper §3.3).
+
+All invalidate options include, as a preliminary condition, the
+unreachability of the worker. The three conditions:
+
+* ``overload`` — the worker lacks resources to run the function. Maps to
+  the platform health signal (OpenWhisk's "unhealthy invoker"; here the
+  serving engine's slot-exhaustion/heartbeat state).
+* ``capacity_used n%`` — load percentage threshold.
+* ``max_concurrent_invocations n`` — buffered concurrent invocations
+  threshold.
+
+Resolution order of the condition applied to a worker item (paper §3.3):
+per-``wrk``/per-``set`` condition ▸ enclosing block condition ▸ platform
+default (``overload``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.scheduler.state import WorkerState
+from repro.core.tapp.ast import (
+    CapacityUsed,
+    Invalidate,
+    MaxConcurrentInvocations,
+    Overload,
+)
+
+DEFAULT_INVALIDATE: Invalidate = Overload()
+
+
+def resolve_invalidate(
+    item_level: Optional[Invalidate],
+    block_level: Optional[Invalidate],
+) -> Invalidate:
+    """Inner condition overrides outer; fall back to the platform default."""
+    if item_level is not None:
+        return item_level
+    if block_level is not None:
+        return block_level
+    return DEFAULT_INVALIDATE
+
+
+def is_invalid(worker: WorkerState, condition: Invalidate) -> bool:
+    """True iff the worker cannot host the execution under ``condition``."""
+    if not worker.reachable:
+        return True
+    if isinstance(condition, Overload):
+        return worker.overloaded
+    if isinstance(condition, CapacityUsed):
+        return worker.capacity_used_pct >= condition.percent
+    if isinstance(condition, MaxConcurrentInvocations):
+        return worker.concurrent >= condition.limit
+    raise TypeError(f"unknown invalidate condition {condition!r}")
+
+
+def invalid_reason(worker: WorkerState, condition: Invalidate) -> Optional[str]:
+    """Human-readable reason the worker is invalid, or None if valid."""
+    if not worker.reachable:
+        return "unreachable"
+    if isinstance(condition, Overload):
+        if not worker.healthy:
+            return "unhealthy"
+        if worker.inflight >= worker.capacity_slots:
+            return f"slots exhausted ({worker.inflight}/{worker.capacity_slots})"
+        return None
+    if isinstance(condition, CapacityUsed):
+        if worker.capacity_used_pct >= condition.percent:
+            return (
+                f"capacity_used {worker.capacity_used_pct:.0f}% >= "
+                f"{condition.percent:.0f}%"
+            )
+        return None
+    if isinstance(condition, MaxConcurrentInvocations):
+        if worker.concurrent >= condition.limit:
+            return f"concurrent {worker.concurrent} >= {condition.limit}"
+        return None
+    raise TypeError(f"unknown invalidate condition {condition!r}")

@@ -1,0 +1,178 @@
+"""Live cluster state consumed by the tAPP scheduler.
+
+In the paper's OpenWhisk deployment this information is produced by the
+*Watcher* (polling the Kubernetes API) and stored on an NFS share. Here it
+is an in-process snapshot maintained by :mod:`repro.core.scheduler.watcher`;
+on a real TPU fleet it would be fed by per-host agents reporting HBM use,
+queue depth, and liveness heartbeats.
+
+A *worker* is the unit of placement: in this framework, a model replica —
+a mesh slice (a set of chips) that hosts one compiled model's weights and
+serves invocations against it. The same abstraction covers the paper's
+container-based invokers, which is what the discrete-event simulator
+instantiates for the paper-table benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class WorkerState:
+    """Mutable live state of one worker (model replica / invoker).
+
+    Attributes:
+      name: unique worker label (the tAPP ``wrk`` label).
+      zone: physical topology zone (here: pod / ICI domain).
+      sets: logical worker-set labels this worker belongs to (tAPP ``set``).
+      capacity_slots: max concurrent invocations the worker can run.
+      inflight: currently executing invocations.
+      queued: buffered (not yet executing) invocations.
+      capacity_used_pct: load percentage (CPU in the paper; HBM+slot
+        occupancy here). Fed by the watcher.
+      healthy: platform health signal (OpenWhisk "unhealthy invoker" API ~
+        serving-engine heartbeat). ``overload`` invalidation triggers on
+        ``not healthy`` or slot exhaustion.
+      reachable: network reachability; unreachability is the *preliminary*
+        invalidate condition for every policy (paper §3.3).
+      resident_models: model ids whose weights are resident (data locality:
+        scheduling onto a non-resident worker incurs a cold start).
+      memory_bytes / memory_used_bytes: HBM capacity bookkeeping.
+      perf_factor: relative execution-speed multiplier (1.0 = nominal);
+        the simulator uses it for heterogeneous workers and stragglers.
+    """
+
+    name: str
+    zone: str = "default"
+    sets: FrozenSet[str] = frozenset()
+    capacity_slots: int = 16
+    inflight: int = 0
+    inflight_by: Dict[str, int] = dataclasses.field(default_factory=dict)
+    queued: int = 0
+    capacity_used_pct: float = 0.0
+    healthy: bool = True
+    reachable: bool = True
+    resident_models: FrozenSet[str] = frozenset()
+    memory_bytes: int = 16 * 1024**3
+    memory_used_bytes: int = 0
+    perf_factor: float = 1.0
+
+    @property
+    def concurrent(self) -> int:
+        """Buffered concurrent invocations (queued + running)."""
+        return self.inflight + self.queued
+
+    @property
+    def overloaded(self) -> bool:
+        return (not self.healthy) or self.inflight >= self.capacity_slots
+
+    @property
+    def load_fraction(self) -> float:
+        if self.capacity_slots <= 0:
+            return 1.0
+        return self.inflight / self.capacity_slots
+
+    def in_set(self, label: Optional[str]) -> bool:
+        """Blank set label (None) matches every worker (paper §3.3)."""
+        return label is None or label in self.sets
+
+    def inflight_for(self, controller: str) -> int:
+        """Admissions by one controller (its entitlement consumption)."""
+        return self.inflight_by.get(controller, 0)
+
+
+@dataclasses.dataclass
+class ControllerState:
+    """One controller (per-zone scheduler)."""
+
+    name: str
+    zone: str = "default"
+    healthy: bool = True
+    reachable: bool = True
+
+    @property
+    def available(self) -> bool:
+        return self.healthy and self.reachable
+
+
+@dataclasses.dataclass
+class ClusterState:
+    """A consistent snapshot of controllers + workers.
+
+    The scheduler never mutates entries it did not create; the watcher owns
+    the authoritative copy and hands out snapshots (the paper's NFS-stored
+    mapping, §4.2).
+    """
+
+    workers: Dict[str, WorkerState] = dataclasses.field(default_factory=dict)
+    controllers: Dict[str, ControllerState] = dataclasses.field(default_factory=dict)
+    version: int = 0
+
+    # -- membership ---------------------------------------------------------
+
+    def add_worker(self, worker: WorkerState) -> None:
+        if worker.name in self.workers:
+            raise ValueError(f"duplicate worker {worker.name!r}")
+        self.workers[worker.name] = worker
+        self.version += 1
+
+    def remove_worker(self, name: str) -> None:
+        self.workers.pop(name, None)
+        self.version += 1
+
+    def add_controller(self, controller: ControllerState) -> None:
+        if controller.name in self.controllers:
+            raise ValueError(f"duplicate controller {controller.name!r}")
+        self.controllers[controller.name] = controller
+        self.version += 1
+
+    def remove_controller(self, name: str) -> None:
+        self.controllers.pop(name, None)
+        self.version += 1
+
+    # -- queries -------------------------------------------------------------
+
+    def worker_names(self) -> List[str]:
+        return list(self.workers.keys())
+
+    def workers_in_zone(self, zone: str) -> List[WorkerState]:
+        return [w for w in self.workers.values() if w.zone == zone]
+
+    def workers_in_set(self, label: Optional[str]) -> List[WorkerState]:
+        return [w for w in self.workers.values() if w.in_set(label)]
+
+    def set_labels(self) -> List[str]:
+        labels: set = set()
+        for w in self.workers.values():
+            labels |= w.sets
+        return sorted(labels)
+
+    def zones(self) -> List[str]:
+        zs = {w.zone for w in self.workers.values()}
+        zs |= {c.zone for c in self.controllers.values()}
+        return sorted(zs)
+
+    def controllers_in_zone(self, zone: str) -> List[ControllerState]:
+        return [c for c in self.controllers.values() if c.zone == zone]
+
+    def controller_names(self) -> List[str]:
+        return list(self.controllers.keys())
+
+
+def make_cluster(
+    workers: Iterable[Mapping],
+    controllers: Iterable[Mapping] = (),
+) -> ClusterState:
+    """Convenience constructor from plain dicts (used by tests/configs)."""
+    cluster = ClusterState()
+    for spec in workers:
+        spec = dict(spec)
+        if "sets" in spec:
+            spec["sets"] = frozenset(spec["sets"])
+        if "resident_models" in spec:
+            spec["resident_models"] = frozenset(spec["resident_models"])
+        cluster.add_worker(WorkerState(**spec))
+    for spec in controllers:
+        cluster.add_controller(ControllerState(**dict(spec)))
+    return cluster

@@ -1,0 +1,84 @@
+"""Item-selection strategies (paper §3.3).
+
+* ``best_first`` — order of appearance; send to the first valid item.
+* ``random`` — fair random choice among valid items.
+* ``platform`` — the host platform's default schedule. Faithful to
+  OpenWhisk's *co-prime scheduling* (paper §2, footnotes 5–6): a function is
+  hashed to a primary index ``hash % n``; on invalidation the index steps by
+  a fixed *step size* that is co-prime with ``n``, cycling through all items.
+
+Strategies are implemented as *orderings*: given the candidate items and an
+invocation context, they yield the order in which candidates are tried. The
+engine then applies invalidation in that order, which uniformly implements
+"pick first valid" for all three strategies.
+"""
+from __future__ import annotations
+
+import hashlib
+import random as _random
+from typing import List, Optional, Sequence, TypeVar
+
+from repro.core.tapp.ast import Strategy
+
+T = TypeVar("T")
+
+
+def stable_hash(text: str) -> int:
+    """Deterministic 64-bit hash (Python's ``hash`` is salted per-process)."""
+    return int.from_bytes(
+        hashlib.blake2b(text.encode("utf-8"), digest_size=8).digest(), "big"
+    )
+
+
+def _coprime_step(hash_value: int, n: int) -> int:
+    """Smallest step > 1 co-prime with ``n`` derived from the hash (1 if n<=2)."""
+    if n <= 2:
+        return 1
+    import math
+
+    candidates = [s for s in range(2, n) if math.gcd(s, n) == 1]
+    if not candidates:
+        return 1
+    return candidates[hash_value % len(candidates)]
+
+
+def coprime_order(n: int, hash_value: int) -> List[int]:
+    """OpenWhisk co-prime schedule: primary ``hash % n``, then step cycles.
+
+    The step size is co-prime with ``n`` so the cycle visits every index
+    exactly once.
+    """
+    if n <= 0:
+        return []
+    primary = hash_value % n
+    step = _coprime_step(hash_value, n)
+    order, idx = [], primary
+    for _ in range(n):
+        order.append(idx)
+        idx = (idx + step) % n
+    # Co-primality guarantees a full cycle; assert in debug builds.
+    assert len(set(order)) == n, (n, step, order)
+    return order
+
+
+def order_candidates(
+    items: Sequence[T],
+    strategy: Strategy,
+    *,
+    rng: Optional[_random.Random] = None,
+    function_hash: int = 0,
+) -> List[T]:
+    """Return ``items`` in the order the strategy would try them."""
+    items = list(items)
+    if not items:
+        return []
+    if strategy is Strategy.BEST_FIRST:
+        return items
+    if strategy is Strategy.RANDOM:
+        rng = rng or _random.Random()
+        shuffled = list(items)
+        rng.shuffle(shuffled)
+        return shuffled
+    if strategy is Strategy.PLATFORM:
+        return [items[i] for i in coprime_order(len(items), function_hash)]
+    raise ValueError(f"unknown strategy {strategy!r}")

@@ -1,0 +1,152 @@
+"""Topology-based worker distribution policies (paper §4.4).
+
+At deployment time, DevOps pick the access policy all controllers follow
+when reaching for workers inside/outside their zone:
+
+* ``default``   — every controller may use every worker, but each worker's
+  capacity is *split* evenly among controllers (the original OpenWhisk
+  resource model), with co-located workers prioritised (our extension's
+  behaviour in §5.4.1).
+* ``min_memory`` — foreign controllers get only a *minimal fraction* of a
+  worker's resources (one invocation slot, OpenWhisk's 256MB analogue).
+  Workers whose zone hosts no controller fall back to ``default`` splitting.
+* ``isolated``  — controllers may only use co-located workers.
+* ``shared``    — co-located workers first at full capacity; foreign
+  workers only after the local ones are exhausted.
+
+The policy is expressed as a *view*: the ordered list of workers a
+controller may consider, each with the effective slot capacity that
+controller may occupy. The scheduling engine evaluates tAPP policies
+against this view, so distribution policies compose with every strategy
+and invalidate condition.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.scheduler.state import ClusterState, WorkerState
+
+
+class DistributionPolicy(enum.Enum):
+    DEFAULT = "default"
+    MIN_MEMORY = "min_memory"
+    ISOLATED = "isolated"
+    SHARED = "shared"
+
+    @classmethod
+    def parse(cls, text: str) -> "DistributionPolicy":
+        try:
+            return cls(text.strip())
+        except ValueError:
+            raise ValueError(
+                f"unknown distribution policy {text!r}; expected one of "
+                f"{[p.value for p in cls]}"
+            ) from None
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerView:
+    """A controller's entitlement on one worker under a distribution policy.
+
+    ``slot_cap`` bounds how many of the worker's concurrent slots this
+    controller may occupy. ``tier`` orders candidates: tier 0 (local) is
+    always tried before tier 1 (foreign); ``shared`` additionally requires
+    tier-0 exhaustion before tier 1 becomes eligible, which is exactly the
+    invalidation cascade, so the engine needs no special case.
+    """
+
+    worker: WorkerState
+    local: bool
+    slot_cap: int
+    controller: str = ""
+
+    @property
+    def tier(self) -> int:
+        return 0 if self.local else 1
+
+    @property
+    def saturated(self) -> bool:
+        """This controller's entitlement on the worker is used up.
+
+        The entitlement is consumed by *this controller's* admissions (the
+        paper's per-controller resource reservation); global load is handled
+        separately by the tAPP invalidate conditions.
+        """
+        own = self.worker.inflight_for(self.controller)
+        return own >= min(self.slot_cap, self.worker.capacity_slots)
+
+
+def distribution_view(
+    cluster: ClusterState,
+    controller_zone: str,
+    policy: DistributionPolicy,
+    *,
+    controller_name: str = "",
+    zone_restriction: Optional[str] = None,
+) -> List[WorkerView]:
+    """The ordered worker view of a controller in ``controller_zone``.
+
+    ``zone_restriction`` implements ``topology_tolerance: same``: when set,
+    only workers of that zone are visible regardless of the distribution
+    policy tiering (the tolerance is a *function*-level constraint and takes
+    precedence over deployment-level resource sharing).
+    """
+    n_controllers = max(1, len(cluster.controllers))
+    views: List[WorkerView] = []
+    for worker in cluster.workers.values():
+        if zone_restriction is not None and worker.zone != zone_restriction:
+            continue
+        local = worker.zone == controller_zone
+        view = _entitlement(cluster, worker, local, policy, n_controllers)
+        if view is not None:
+            views.append(
+                WorkerView(
+                    worker=view.worker,
+                    local=view.local,
+                    slot_cap=view.slot_cap,
+                    controller=controller_name,
+                )
+            )
+    # Stable order: local tier first, then foreign; preserve insertion order
+    # within a tier so best_first means "order of appearance" deterministically.
+    views.sort(key=lambda v: v.tier)
+    return views
+
+
+def _entitlement(
+    cluster: ClusterState,
+    worker: WorkerState,
+    local: bool,
+    policy: DistributionPolicy,
+    n_controllers: int,
+) -> Optional[WorkerView]:
+    cap = worker.capacity_slots
+    if policy is DistributionPolicy.DEFAULT:
+        # Capacity split evenly among all controllers (racing access).
+        split = max(1, cap // n_controllers)
+        return WorkerView(worker=worker, local=local, slot_cap=split)
+    if policy is DistributionPolicy.MIN_MEMORY:
+        if local:
+            return WorkerView(worker=worker, local=True, slot_cap=cap)
+        # Foreign controllers: minimal fraction (one invocation slot). When
+        # the worker's zone hosts no controller at all, fall back to the
+        # default splitting (paper §4.4).
+        if not cluster.controllers_in_zone(worker.zone):
+            split = max(1, cap // n_controllers)
+            return WorkerView(worker=worker, local=False, slot_cap=split)
+        return WorkerView(worker=worker, local=False, slot_cap=1)
+    if policy is DistributionPolicy.ISOLATED:
+        if local:
+            return WorkerView(worker=worker, local=True, slot_cap=cap)
+        return None
+    if policy is DistributionPolicy.SHARED:
+        # Full capacity everywhere; tier ordering enforces local-first and
+        # foreign workers are only reached after locals invalidate.
+        return WorkerView(worker=worker, local=local, slot_cap=cap)
+    raise ValueError(f"unknown distribution policy {policy!r}")
+
+
+def views_by_name(views: Sequence[WorkerView]) -> Dict[str, WorkerView]:
+    return {v.worker.name: v for v in views}

@@ -1,0 +1,88 @@
+"""Baseline: vanilla OpenWhisk scheduling (paper §2), topology-agnostic.
+
+This is the comparison system of every experiment in the paper, so it is
+implemented as a first-class scheduler:
+
+* the gateway (Nginx) forwards requests to controllers **round-robin**
+  (hard-coded, §4.3);
+* each controller runs **co-prime scheduling** (§2 footnotes 5–6): the
+  function's hash selects a *home* (primary) worker — the same function
+  always lands on the same worker when it is usable, which implements
+  OpenWhisk's code-locality caching — and a co-prime step size walks the
+  remaining workers when the preceding ones are overloaded;
+* the only invalidation is worker overload/unreachability — there is no
+  notion of zones, sets, or data locality, which is exactly the failure
+  mode of §5.1 (the MQTT function repeatedly lands on the cloud worker).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.core.scheduler.engine import (
+    Invocation,
+    Outcome,
+    ScheduleDecision,
+    TraceEvent,
+)
+from repro.core.scheduler.state import ClusterState, WorkerState
+from repro.core.scheduler.strategy import coprime_order
+
+
+class VanillaScheduler:
+    """Round-robin gateway + co-prime controller schedule."""
+
+    def __init__(self) -> None:
+        self._controller_cursor = 0
+
+    def schedule(
+        self, invocation: Invocation, cluster: ClusterState
+    ) -> ScheduleDecision:
+        decision = ScheduleDecision(outcome=Outcome.FAILED, tag=None)
+        controllers = [c for c in cluster.controllers.values() if c.available]
+        if not controllers:
+            decision.trace.append(
+                TraceEvent("controller", "no available controller")
+            )
+            return decision
+        controller = controllers[self._controller_cursor % len(controllers)]
+        self._controller_cursor += 1
+        decision.trace.append(
+            TraceEvent(
+                "controller", f"round-robin → {controller.name!r} (vanilla gateway)"
+            )
+        )
+
+        workers: List[WorkerState] = list(cluster.workers.values())
+        if not workers:
+            decision.trace.append(TraceEvent("candidate", "no workers"))
+            return decision
+
+        for idx in coprime_order(len(workers), invocation.hash):
+            worker = workers[idx]
+            if not worker.reachable:
+                decision.trace.append(
+                    TraceEvent("candidate", f"{worker.name}: unreachable")
+                )
+                continue
+            if worker.overloaded:
+                decision.trace.append(
+                    TraceEvent(
+                        "candidate",
+                        f"{worker.name}: overloaded "
+                        f"({worker.inflight}/{worker.capacity_slots})",
+                    )
+                )
+                continue
+            decision.outcome = Outcome.SCHEDULED
+            decision.controller = controller.name
+            decision.worker = worker.name
+            decision.trace.append(
+                TraceEvent("candidate", f"{worker.name}: VALID (co-prime home)")
+            )
+            return decision
+
+        decision.trace.append(
+            TraceEvent("followup", "all workers overloaded → fail (vanilla)")
+        )
+        return decision

@@ -1,0 +1,159 @@
+"""The Watcher service (paper §4.2) + live tAPP reload (paper §4.5).
+
+The watcher owns the authoritative cluster state — the mapping from
+tAPP-level labels/zones/sets to live workers — and the single global copy
+of the current tAPP script. Gateways and controllers keep cached copies;
+the watcher bumps a version counter and notifies subscribers on change,
+which models the paper's NFS-store + cache-invalidation design without
+the NFS indirection.
+
+On a TPU fleet, `poll()` would consume per-host agent heartbeats (HBM
+occupancy, queue depth, liveness); in-process the runtime/simulator calls
+the mutation methods directly.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict, Iterable, List, Optional
+
+from repro.core.scheduler.state import ClusterState, ControllerState, WorkerState
+from repro.core.tapp.ast import TappScript
+from repro.core.tapp.parser import parse_tapp
+from repro.core.tapp.validate import ValidationReport, validate_script
+
+Subscriber = Callable[[str], None]  # event kind: "topology" | "script"
+
+
+class Watcher:
+    def __init__(self, cluster: Optional[ClusterState] = None) -> None:
+        self._lock = threading.RLock()
+        self._cluster = cluster or ClusterState()
+        self._script: Optional[TappScript] = None
+        self._script_version = 0
+        self._subscribers: List[Subscriber] = []
+        self._last_report: Optional[ValidationReport] = None
+
+    # -- subscriptions ---------------------------------------------------------
+
+    def subscribe(self, callback: Subscriber) -> None:
+        with self._lock:
+            self._subscribers.append(callback)
+
+    def _notify(self, kind: str) -> None:
+        for cb in list(self._subscribers):
+            cb(kind)
+
+    # -- cluster state ----------------------------------------------------------
+
+    @property
+    def cluster(self) -> ClusterState:
+        return self._cluster
+
+    def register_worker(self, worker: WorkerState) -> None:
+        """A worker joins (elastic scale-up / node replacement)."""
+        with self._lock:
+            self._cluster.add_worker(worker)
+        self._notify("topology")
+
+    def deregister_worker(self, name: str) -> None:
+        """A worker leaves (scale-down, failure eviction)."""
+        with self._lock:
+            self._cluster.remove_worker(name)
+        self._notify("topology")
+
+    def register_controller(self, controller: ControllerState) -> None:
+        with self._lock:
+            self._cluster.add_controller(controller)
+        self._notify("topology")
+
+    def deregister_controller(self, name: str) -> None:
+        with self._lock:
+            self._cluster.remove_controller(name)
+        self._notify("topology")
+
+    def update_worker(self, name: str, **fields) -> None:
+        """Apply a heartbeat (load/health/residency update)."""
+        with self._lock:
+            worker = self._cluster.workers.get(name)
+            if worker is None:
+                raise KeyError(f"unknown worker {name!r}")
+            for key, value in fields.items():
+                if not hasattr(worker, key):
+                    raise AttributeError(f"WorkerState has no field {key!r}")
+                if key in ("sets", "resident_models"):
+                    value = frozenset(value)
+                setattr(worker, key, value)
+            self._cluster.version += 1
+
+    def mark_unreachable(self, name: str) -> None:
+        self.update_worker(name, reachable=False)
+        self._notify("topology")
+
+    def mark_unhealthy(self, name: str) -> None:
+        self.update_worker(name, healthy=False)
+        self._notify("topology")
+
+    # -- script store (live reload, §4.5) ---------------------------------------
+
+    @property
+    def script(self) -> Optional[TappScript]:
+        return self._script
+
+    @property
+    def script_version(self) -> int:
+        return self._script_version
+
+    @property
+    def last_validation(self) -> Optional[ValidationReport]:
+        return self._last_report
+
+    def load_script(self, yaml_text: str, *, strict: bool = True) -> TappScript:
+        """Parse + validate + atomically publish a new tAPP script.
+
+        With ``strict`` the update is rejected on validation *errors*
+        (the live system keeps the previous script — no partial state);
+        topology warnings never block, since set membership is dynamic.
+        """
+        script = parse_tapp(yaml_text)
+        with self._lock:
+            report = validate_script(
+                script,
+                known_controllers=self._cluster.controller_names(),
+                known_worker_labels=self._cluster.worker_names(),
+                known_set_labels=self._cluster.set_labels(),
+            )
+            self._last_report = report
+            if strict:
+                report.raise_on_error()
+            self._script_version += 1
+            self._script = TappScript(
+                tags=script.tags,
+                source=script.source,
+                version=self._script_version,
+            )
+        self._notify("script")
+        return self._script
+
+    def clear_script(self) -> None:
+        """Remove the script → platforms fall back to vanilla (paper §4.3)."""
+        with self._lock:
+            self._script = None
+            self._script_version += 1
+        self._notify("script")
+
+    # -- snapshotting --------------------------------------------------------------
+
+    def snapshot_labels(self) -> Dict[str, Dict]:
+        """The label→node mapping the paper's watcher stores on NFS."""
+        with self._lock:
+            return {
+                "workers": {
+                    w.name: {"zone": w.zone, "sets": sorted(w.sets)}
+                    for w in self._cluster.workers.values()
+                },
+                "controllers": {
+                    c.name: {"zone": c.zone}
+                    for c in self._cluster.controllers.values()
+                },
+                "version": self._cluster.version,
+            }

@@ -1,0 +1,432 @@
+"""Discrete-event simulator for serverless function scheduling.
+
+Reproduces the paper's evaluation environment (§5.3) as a closed-loop
+(JMeter-style) queueing simulation over a zoned cluster:
+
+* **users** issue requests sequentially (send → wait for response →
+  optional pause → next), with a ramp-up stagger;
+* the **gateway** (tAPP or vanilla) resolves each invocation to a worker
+  using the *live* cluster snapshot — the same scheduler code that drives
+  the JAX serving runtime;
+* **workers** have concurrent slots, per-function warm-container caches
+  with a TTL (code locality), a performance factor (heterogeneity /
+  stragglers), and zone placement;
+* a **network model** charges zone-to-zone RTTs and bandwidth for
+  functions that touch remote data (data locality) and the gateway→zone
+  forwarding hop;
+* functions may **require** a resource label reachable only from some
+  zones (the §5.1 MQTT broker) — running elsewhere raises a function
+  error, which is exactly how vanilla OpenWhisk fails that case study.
+
+The simulator is deterministic under a seed, so benchmark tables are
+reproducible bit-for-bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import random
+import statistics
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+from repro.core.scheduler.controller import ControllerRuntime
+from repro.core.scheduler.engine import Invocation, ScheduleDecision
+from repro.core.scheduler.state import ClusterState
+from repro.core.scheduler.vanilla import VanillaScheduler
+from repro.core.scheduler.watcher import Watcher
+
+
+# ---------------------------------------------------------------------------
+# Models
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FunctionProfile:
+    """Execution profile of one benchmark function."""
+
+    name: str
+    exec_time: float                      # service time at perf_factor=1 (s)
+    exec_jitter: float = 0.05             # lognormal-ish multiplicative jitter
+    cold_start_time: float = 0.35         # container/init time on first use (s)
+    warm_overhead: float = 0.004          # warm-path platform overhead (s)
+    warm_ttl: float = 600.0               # warm cache TTL (OpenWhisk: 10 min)
+    data_zone: Optional[str] = None       # zone hosting the function's data
+    data_bytes: int = 0                   # payload moved from data zone
+    data_roundtrips: int = 1              # queries per invocation
+    requires: Optional[str] = None        # resource reachable only in some zones
+    tag: Optional[str] = None             # tAPP policy tag attached to requests
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkModel:
+    """Zone-to-zone RTT (seconds) and bandwidth (bytes/s). Symmetric keys."""
+
+    rtt: Mapping[Tuple[str, str], float]
+    bandwidth: Mapping[Tuple[str, str], float]
+    default_rtt: float = 0.080
+    default_bandwidth: float = 50e6
+    # Resource reachability: resource label -> zones that can reach it.
+    resource_zones: Mapping[str, Sequence[str]] = dataclasses.field(
+        default_factory=dict
+    )
+
+    def get_rtt(self, a: str, b: str) -> float:
+        if a == b:
+            return self.rtt.get((a, b), 0.0005)
+        return self.rtt.get((a, b), self.rtt.get((b, a), self.default_rtt))
+
+    def get_bandwidth(self, a: str, b: str) -> float:
+        if a == b:
+            return self.bandwidth.get((a, b), 10e9)
+        return self.bandwidth.get(
+            (a, b), self.bandwidth.get((b, a), self.default_bandwidth)
+        )
+
+    def reachable(self, resource: str, zone: str) -> bool:
+        zones = self.resource_zones.get(resource)
+        return zones is None or zone in zones
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    """A JMeter-style closed-loop workload for one function."""
+
+    function: str
+    users: int = 4
+    requests_per_user: int = 200
+    ramp_up: float = 10.0                 # thread-start stagger window (s)
+    pause: float = 0.0                    # think time between requests (s)
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    request_id: int
+    function: str
+    user: int
+    submitted: float
+    completed: float = 0.0
+    worker: Optional[str] = None
+    controller: Optional[str] = None
+    scheduled: bool = False
+    error: Optional[str] = None
+    cold: bool = False
+
+    @property
+    def latency(self) -> float:
+        return self.completed - self.submitted
+
+    @property
+    def ok(self) -> bool:
+        return self.scheduled and self.error is None
+
+
+@dataclasses.dataclass
+class SimResult:
+    records: List[RequestRecord]
+
+    def ok_latencies(self) -> List[float]:
+        return [r.latency for r in self.records if r.ok]
+
+    @property
+    def n_failed(self) -> int:
+        return sum(1 for r in self.records if not r.ok)
+
+    @property
+    def failure_rate(self) -> float:
+        return self.n_failed / max(1, len(self.records))
+
+    def summary(self) -> Dict[str, float]:
+        lats = self.ok_latencies()
+        if not lats:
+            return {
+                "count": len(self.records),
+                "ok": 0,
+                "failure_rate": self.failure_rate,
+                "mean": float("nan"),
+                "std": float("nan"),
+                "p50": float("nan"),
+                "p99": float("nan"),
+                "max": float("nan"),
+            }
+        lats_sorted = sorted(lats)
+
+        def pct(p: float) -> float:
+            idx = min(len(lats_sorted) - 1, int(p * len(lats_sorted)))
+            return lats_sorted[idx]
+
+        return {
+            "count": len(self.records),
+            "ok": len(lats),
+            "failure_rate": self.failure_rate,
+            "mean": statistics.fmean(lats),
+            "std": statistics.pstdev(lats) if len(lats) > 1 else 0.0,
+            "p50": pct(0.50),
+            "p99": pct(0.99),
+            "max": lats_sorted[-1],
+        }
+
+    def per_worker_counts(self) -> Dict[str, int]:
+        counts: Dict[str, int] = {}
+        for r in self.records:
+            if r.worker:
+                counts[r.worker] = counts.get(r.worker, 0) + 1
+        return counts
+
+
+# ---------------------------------------------------------------------------
+# Simulator
+# ---------------------------------------------------------------------------
+
+# Scheduler adapter: anything mapping (Invocation, ClusterState) -> decision.
+SchedulerFn = Callable[[Invocation, ClusterState], ScheduleDecision]
+
+
+@dataclasses.dataclass
+class SimConfig:
+    # Control-plane costs (seconds). tAPP interprets a script per request
+    # (paper §4.3 keeps this footprint small via caching); vanilla's
+    # round-robin is marginally cheaper. Tagged requests additionally pay
+    # tag extraction + policy resolution + label→node mapping retrieval —
+    # the paper calls many-lightweight-request workloads "the worst case
+    # for the overhead" (§5.4.2), so this constant is deliberately visible.
+    scheduler_overhead_tapp: float = 0.0020
+    scheduler_overhead_vanilla: float = 0.0008
+    tag_resolution_overhead: float = 0.045
+    gateway_zone: str = "cloud"           # where the entry point lives
+    queue_limit: int = 10_000             # per-worker buffered invocations
+    seed: int = 0
+
+
+class Simulation:
+    """Closed-loop discrete-event simulation of one deployment + workload."""
+
+    def __init__(
+        self,
+        watcher: Watcher,
+        scheduler: SchedulerFn,
+        network: NetworkModel,
+        profiles: Mapping[str, FunctionProfile],
+        config: Optional[SimConfig] = None,
+        *,
+        is_tapp: bool = True,
+    ) -> None:
+        self.watcher = watcher
+        self.scheduler = scheduler
+        self.network = network
+        self.profiles = dict(profiles)
+        self.config = config or SimConfig()
+        self.is_tapp = is_tapp
+        self.runtime = ControllerRuntime(watcher)
+        self.rng = random.Random(self.config.seed)
+        self._warm: Dict[Tuple[str, str], float] = {}  # (worker, fn) -> last end
+        self._queues: Dict[str, List] = {}             # worker -> FIFO of pending
+        self._link_load: Dict[Tuple[str, str], int] = {}  # active transfers/link
+        self._events: List = []
+        self._seq = itertools.count()
+        self.records: List[RequestRecord] = []
+
+    # -- event helpers -----------------------------------------------------------
+
+    def _push(self, time: float, kind: str, payload) -> None:
+        heapq.heappush(self._events, (time, next(self._seq), kind, payload))
+
+    # -- main loop ---------------------------------------------------------------
+
+    def run(self, workload: Sequence[WorkloadSpec]) -> SimResult:
+        rid = itertools.count()
+        for spec in workload:
+            profile = self.profiles[spec.function]
+            for user in range(spec.users):
+                start = (
+                    (user / max(1, spec.users)) * spec.ramp_up
+                    if spec.users > 1
+                    else 0.0
+                )
+                self._push(
+                    start,
+                    "submit",
+                    {
+                        "spec": spec,
+                        "profile": profile,
+                        "user": user,
+                        "remaining": spec.requests_per_user,
+                        "rid": next(rid),
+                    },
+                )
+
+        while self._events:
+            time, _, kind, payload = heapq.heappop(self._events)
+            if kind == "submit":
+                self._on_submit(time, payload)
+            elif kind == "start":
+                self._on_start(time, payload)
+            elif kind == "finish":
+                self._on_finish(time, payload)
+            else:  # pragma: no cover - defensive
+                raise RuntimeError(f"unknown event {kind}")
+        return SimResult(records=self.records)
+
+    # -- event handlers -------------------------------------------------------------
+
+    def _on_submit(self, time: float, payload: Dict) -> None:
+        profile: FunctionProfile = payload["profile"]
+        record = RequestRecord(
+            request_id=payload["rid"],
+            function=profile.name,
+            user=payload["user"],
+            submitted=time,
+        )
+        self.records.append(record)
+
+        overhead = (
+            self.config.scheduler_overhead_tapp
+            if self.is_tapp
+            else self.config.scheduler_overhead_vanilla
+        )
+        if self.is_tapp and profile.tag is not None:
+            overhead += self.config.tag_resolution_overhead
+        invocation = Invocation(
+            function=profile.name, tag=profile.tag, request_id=record.request_id
+        )
+        decision = self.scheduler(invocation, self.watcher.cluster)
+        now = time + overhead
+
+        if not decision.scheduled or decision.worker is None:
+            record.completed = now
+            record.error = "no-valid-worker"
+            self._finish_user_chain(now, payload, record)
+            return
+
+        record.scheduled = True
+        record.worker = decision.worker
+        record.controller = decision.controller
+        worker = self.watcher.cluster.workers[decision.worker]
+
+        # Request path: gateway → controller (zone hop) → worker (zone hop).
+        # Vanilla's topology-blind worker choice pays cross-zone
+        # controller→worker hops that tAPP's local-first ordering avoids —
+        # this is the §5.4.1 effect (default policy beating vanilla).
+        ctl = (
+            self.watcher.cluster.controllers.get(decision.controller)
+            if decision.controller
+            else None
+        )
+        ctl_zone = ctl.zone if ctl is not None else worker.zone
+        now += self.network.get_rtt(self.config.gateway_zone, ctl_zone)
+        now += self.network.get_rtt(ctl_zone, worker.zone)
+
+        admission = self.runtime.admit(decision.worker, decision.controller or "?")
+        state = {"payload": payload, "record": record, "admission": admission}
+        queue = self._queues.setdefault(decision.worker, [])
+        # `inflight` counts all admitted (buffered) work — the paper's
+        # "concurrent invocations"; executing work = inflight - queued.
+        executing = worker.inflight - len(queue)
+        if executing <= worker.capacity_slots:
+            self._push(now, "start", state)
+        else:
+            queue.append((now, state))
+
+    def _on_start(self, time: float, state: Dict) -> None:
+        record: RequestRecord = state["record"]
+        profile: FunctionProfile = self.profiles[record.function]
+        worker = self.watcher.cluster.workers.get(record.worker)
+        if worker is None:  # evicted while queued
+            record.completed = time
+            record.error = "worker-evicted"
+            self._finish_user_chain(time, state["payload"], record)
+            return
+
+        duration = 0.0
+        # Code locality: cold vs warm container.
+        key = (worker.name, profile.name)
+        last = self._warm.get(key)
+        if last is None or (time - last) > profile.warm_ttl:
+            duration += profile.cold_start_time
+            record.cold = True
+        else:
+            duration += profile.warm_overhead
+
+        # Required local-only resource (the MQTT broker case).
+        if profile.requires and not self.network.reachable(
+            profile.requires, worker.zone
+        ):
+            # Connection attempt times out → function error.
+            duration += self.network.get_rtt(worker.zone, profile.data_zone or worker.zone)
+            duration += 1.0  # connect timeout
+            record.error = f"cannot-reach:{profile.requires}"
+            self._push(time + duration, "finish", state)
+            return
+
+        # Execution time with heterogeneity + jitter.
+        jitter = 1.0 + self.rng.uniform(-profile.exec_jitter, profile.exec_jitter)
+        duration += profile.exec_time * jitter / max(1e-6, worker.perf_factor)
+
+        # Data locality: RTTs + payload transfer from the data zone. Link
+        # bandwidth is shared by concurrent transfers on the same zone pair
+        # (fair-share approximation at transfer start).
+        if profile.data_zone is not None:
+            link = _link_key(worker.zone, profile.data_zone)
+            rtt = self.network.get_rtt(worker.zone, profile.data_zone)
+            bw = self.network.get_bandwidth(worker.zone, profile.data_zone)
+            duration += profile.data_roundtrips * rtt
+            if profile.data_bytes:
+                sharers = self._link_load.get(link, 0) + 1
+                self._link_load[link] = sharers
+                state["link"] = link
+                duration += profile.data_bytes * sharers / bw
+
+        self._warm[key] = time + duration
+        self._push(time + duration, "finish", state)
+
+    def _on_finish(self, time: float, state: Dict) -> None:
+        record: RequestRecord = state["record"]
+        self.runtime.complete(state["admission"])
+        record.completed = time
+        link = state.pop("link", None)
+        if link is not None:
+            self._link_load[link] = max(0, self._link_load.get(link, 1) - 1)
+
+        # Pull the next queued invocation for this worker, if any.
+        queue = self._queues.get(record.worker or "", [])
+        if queue:
+            _, next_state = queue.pop(0)
+            self._push(time, "start", next_state)
+
+        self._finish_user_chain(time, state["payload"], record)
+
+    def _finish_user_chain(self, time: float, payload: Dict, record: RequestRecord) -> None:
+        payload = dict(payload)
+        payload["remaining"] -= 1
+        if payload["remaining"] > 0:
+            spec: WorkloadSpec = payload["spec"]
+            payload["rid"] = record.request_id + 1_000_000  # unique per chain hop
+            self._push(time + spec.pause, "submit", payload)
+
+
+def _link_key(a: str, b: str) -> Tuple[str, str]:
+    return (a, b) if a <= b else (b, a)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler adapters
+# ---------------------------------------------------------------------------
+
+
+def gateway_scheduler(gateway) -> SchedulerFn:
+    """Adapt a :class:`Gateway` to the simulator's scheduler signature."""
+
+    def schedule(invocation: Invocation, _cluster: ClusterState) -> ScheduleDecision:
+        return gateway.route(invocation)
+
+    return schedule
+
+
+def vanilla_scheduler(vanilla: Optional[VanillaScheduler] = None) -> SchedulerFn:
+    v = vanilla or VanillaScheduler()
+
+    def schedule(invocation: Invocation, cluster: ClusterState) -> ScheduleDecision:
+        return v.schedule(invocation, cluster)
+
+    return schedule

@@ -1,0 +1,344 @@
+"""Paper-faithful evaluation scenarios (§5.1–§5.3).
+
+Builders for:
+* the two-zone benchmark cluster of §5.3 (France Central / East US, two
+  controllers, three workers, MongoDB + terrain backend in East US);
+* the qualitative MQTT case of §5.1 (edge zone with a local-only broker);
+* the ad-hoc and real-world function profiles (§5.2) with timings scaled
+  to reproduce the paper's relationships (absolute values are calibration
+  constants — documented per profile);
+* the tAPP scripts used in the experiments (Fig. 8 analogues).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.scheduler.gateway import Gateway
+from repro.core.scheduler.state import ClusterState, ControllerState, WorkerState
+from repro.core.scheduler.topology import DistributionPolicy
+from repro.core.scheduler.watcher import Watcher
+from repro.core.sim.core import (
+    FunctionProfile,
+    NetworkModel,
+    SimConfig,
+    Simulation,
+    WorkloadSpec,
+    gateway_scheduler,
+    vanilla_scheduler,
+)
+
+# Zones of the quantitative cluster (§5.3): the data (MongoDB, terrain
+# backend) lives next to the `east_us` nodes; `france` is ~80ms away.
+ZONE_EAST = "east_us"
+ZONE_FRANCE = "france"
+
+# Zones of the qualitative case (§5.1).
+ZONE_EDGE = "edge"
+ZONE_CLOUD = "cloud"
+
+
+# ---------------------------------------------------------------------------
+# Clusters
+# ---------------------------------------------------------------------------
+
+
+def benchmark_cluster(*, deployment_seed: int = 0) -> Watcher:
+    """§5.3: 1 controller + 1 worker in France, 1 controller + 2 workers in
+    East US. Worker slots model Standard_DS1_v2 (1 vCPU) invoker pools.
+
+    ``deployment_seed`` permutes worker registration order — the paper's
+    methodology redeploys the whole platform every 2 repetitions "to avoid
+    benchmarking specific configurations, e.g., bad, random configurations
+    where vanilla OpenWhisk elects as primary a high-latency worker". Each
+    seed is one such deployment: vanilla's co-prime primary depends on the
+    order, tAPP's topology-aware choice does not.
+    """
+    import random as _random
+
+    cluster = ClusterState()
+    cluster.add_controller(ControllerState(name="FranceCtl", zone=ZONE_FRANCE))
+    cluster.add_controller(ControllerState(name="EastCtl", zone=ZONE_EAST))
+    workers = [
+        WorkerState(
+            name="fr-w0", zone=ZONE_FRANCE, sets=frozenset({"france", "any"}),
+            capacity_slots=2,
+        ),
+        WorkerState(
+            name="us-w0", zone=ZONE_EAST, sets=frozenset({"east", "any"}),
+            capacity_slots=2,
+        ),
+        WorkerState(
+            name="us-w1", zone=ZONE_EAST, sets=frozenset({"east", "any"}),
+            capacity_slots=2,
+        ),
+    ]
+    _random.Random(deployment_seed).shuffle(workers)
+    for w in workers:
+        cluster.add_worker(w)
+    return Watcher(cluster)
+
+
+def benchmark_network() -> NetworkModel:
+    """Measured latencies of §5.3: ~2ms from East US to the data host,
+    ~80ms from France Central. Bandwidths sized for the 124MB payload."""
+    return NetworkModel(
+        rtt={
+            (ZONE_EAST, ZONE_EAST): 0.002,
+            (ZONE_FRANCE, ZONE_EAST): 0.080,
+            (ZONE_FRANCE, ZONE_FRANCE): 0.002,
+        },
+        bandwidth={
+            (ZONE_EAST, ZONE_EAST): 300e6,     # same-region ~2.4 Gbps
+            (ZONE_FRANCE, ZONE_EAST): 35e6,    # cross-Atlantic ~280 Mbps
+            (ZONE_FRANCE, ZONE_FRANCE): 300e6,
+        },
+    )
+
+
+def mqtt_cluster(*, cloud_first: bool = True) -> Watcher:
+    """§5.1: edge zone (controller + worker + broker/db) and cloud zone
+    (controller + worker). The broker is reachable only from the edge.
+
+    ``cloud_first`` controls worker registration order. Vanilla OpenWhisk's
+    co-prime schedule makes "the first worker chosen for the function depend
+    on the deployment" (§5.1) — the paper observed the *unlucky* deployment
+    where the cloud worker is primary and every invocation fails. The
+    qualitative benchmark runs both orders to show vanilla is
+    deployment-dependent while tAPP succeeds under either.
+    """
+    cluster = ClusterState()
+    cluster.add_controller(ControllerState(name="LocalCtl", zone=ZONE_EDGE))
+    cluster.add_controller(ControllerState(name="CloudCtl", zone=ZONE_CLOUD))
+    edge = WorkerState(
+        name="W_1", zone=ZONE_EDGE, sets=frozenset({"edge", "any"}),
+        capacity_slots=4,
+    )
+    cloud = WorkerState(
+        name="W_2", zone=ZONE_CLOUD, sets=frozenset({"cloud", "any"}),
+        capacity_slots=4,
+    )
+    for w in ((cloud, edge) if cloud_first else (edge, cloud)):
+        cluster.add_worker(w)
+    return Watcher(cluster)
+
+
+def mqtt_network() -> NetworkModel:
+    return NetworkModel(
+        rtt={
+            (ZONE_EDGE, ZONE_EDGE): 0.001,
+            (ZONE_EDGE, ZONE_CLOUD): 0.040,
+            (ZONE_CLOUD, ZONE_CLOUD): 0.002,
+        },
+        bandwidth={
+            (ZONE_EDGE, ZONE_EDGE): 1e9,
+            (ZONE_EDGE, ZONE_CLOUD): 100e6,
+            (ZONE_CLOUD, ZONE_CLOUD): 1e9,
+        },
+        # The broker is only reachable from the edge network (§5.1).
+        resource_zones={"mqtt_broker": [ZONE_EDGE]},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Function profiles (§5.2)
+# ---------------------------------------------------------------------------
+
+#: Ad-hoc tests. exec_time values are calibration constants chosen to match
+#: the paper's qualitative relationships (Fig. 9): hellojs ~ tens of ms,
+#: sleep = 3s exactly, matrixMult ~ meaningful CPU work, cold-start loads
+#: 42.8MB of dependencies.
+def adhoc_profiles(tagged: bool) -> Dict[str, FunctionProfile]:
+    def tag(name: Optional[str]) -> Optional[str]:
+        return name if tagged else None
+
+    return {
+        "hellojs": FunctionProfile(
+            name="hellojs", exec_time=0.020, cold_start_time=0.30,
+        ),
+        "sleep": FunctionProfile(
+            name="sleep", exec_time=3.0, exec_jitter=0.0, cold_start_time=0.30,
+        ),
+        "matrixMult": FunctionProfile(
+            name="matrixMult", exec_time=0.160, cold_start_time=0.30,
+        ),
+        "cold-start": FunctionProfile(
+            name="cold-start", exec_time=0.030,
+            cold_start_time=2.8,            # 42.8MB dependency load
+            warm_ttl=60.0,                  # throttled past cache timeout
+        ),
+        "mongoDB": FunctionProfile(
+            name="mongoDB", exec_time=0.010, cold_start_time=0.35,
+            data_zone=ZONE_EAST, data_bytes=106, data_roundtrips=3,
+            tag=tag("db_query"),
+        ),
+        "data-locality": FunctionProfile(
+            name="data-locality", exec_time=0.060, cold_start_time=0.35,
+            data_zone=ZONE_EAST, data_bytes=int(124.38e6), data_roundtrips=3,
+            tag=tag("db_query"),
+        ),
+        # Real-world (Wonderless) tests.
+        "slackpost": FunctionProfile(
+            name="slackpost", exec_time=0.180, cold_start_time=0.40,
+        ),
+        "pycatj": FunctionProfile(
+            name="pycatj", exec_time=0.045, cold_start_time=0.45,
+        ),
+    }
+
+
+#: JMeter configurations (§5.3 "Configuration").
+WORKLOADS: Dict[str, WorkloadSpec] = {
+    "hellojs": WorkloadSpec("hellojs", users=4, requests_per_user=200, ramp_up=10.0),
+    "sleep": WorkloadSpec("sleep", users=4, requests_per_user=25, ramp_up=10.0),
+    "matrixMult": WorkloadSpec("matrixMult", users=4, requests_per_user=200, ramp_up=10.0),
+    "cold-start": WorkloadSpec("cold-start", users=1, requests_per_user=3, pause=660.0),
+    "mongoDB": WorkloadSpec("mongoDB", users=4, requests_per_user=200, ramp_up=10.0),
+    "data-locality": WorkloadSpec("data-locality", users=4, requests_per_user=50, ramp_up=10.0),
+    "slackpost": WorkloadSpec("slackpost", users=1, requests_per_user=100, pause=1.0),
+    "pycatj": WorkloadSpec("pycatj", users=4, requests_per_user=200, ramp_up=10.0),
+}
+
+
+#: tAPP script used for the tagged data-locality runs (§5.4.2): prefer the
+#: workers co-located with the data (East US), spill to France on load.
+DATA_LOCALITY_SCRIPT = """
+- default:
+  - workers:
+    - set:
+    strategy: platform
+    invalidate: overload
+- db_query:
+  - workers:
+    - set: east
+    strategy: random
+    invalidate: capacity_used 90%
+  - workers:
+    - set: france
+    strategy: random
+    invalidate: overload
+  followup: default
+"""
+
+#: tAPP script of the MQTT case (Fig. 8).
+MQTT_SCRIPT = """
+- default:
+  - workers:
+    - set:
+    strategy: platform
+    invalidate: overload
+- MQTT:
+  - controller: LocalCtl
+    workers:
+    - set: edge
+    topology_tolerance: none
+  followup: fail
+- DB:
+  - workers:
+    - wrk: W_1
+      invalidate: capacity_used 50%
+    - wrk: W_2
+    strategy: best_first
+- Cloud:
+  - controller: CloudCtl
+    workers:
+    - set: cloud
+    topology_tolerance: none
+  followup: fail
+"""
+
+
+def mqtt_profiles() -> Dict[str, FunctionProfile]:
+    """The three pipeline functions of the §5.1 case study."""
+    return {
+        "data-collection": FunctionProfile(
+            name="data-collection", exec_time=1.1,  # collects 1s of sensor data
+            requires="mqtt_broker", data_zone=ZONE_EDGE, data_bytes=60_000 * 40,
+            tag="MQTT",
+        ),
+        "feature-extraction": FunctionProfile(
+            name="feature-extraction", exec_time=0.08,
+            data_zone=ZONE_EDGE, data_bytes=60_000 * 40, tag="DB",
+        ),
+        "feature-analysis": FunctionProfile(
+            name="feature-analysis", exec_time=0.15,
+            data_zone=ZONE_EDGE, data_bytes=12 * 8, tag="Cloud",
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Runners
+# ---------------------------------------------------------------------------
+
+
+def run_benchmark(
+    test: str,
+    *,
+    scheduler: str,                      # "vanilla" | a DistributionPolicy value
+    tagged: bool = False,
+    script: Optional[str] = None,
+    seed: int = 0,
+) -> Tuple[Simulation, "SimResult"]:
+    """Run one §5.2 test on a fresh §5.3 deployment. Returns (sim, result)."""
+    watcher = benchmark_cluster(deployment_seed=seed)
+    profiles = adhoc_profiles(tagged)
+    network = benchmark_network()
+    config = SimConfig(seed=seed, gateway_zone=ZONE_EAST)
+
+    if scheduler == "vanilla":
+        sched = vanilla_scheduler()
+        sim = Simulation(watcher, sched, network, profiles, config, is_tapp=False)
+    else:
+        policy = DistributionPolicy.parse(scheduler)
+        gateway = Gateway(watcher, distribution=policy, seed=seed)
+        if script is not None:
+            watcher.load_script(script)
+        elif tagged:
+            watcher.load_script(DATA_LOCALITY_SCRIPT)
+        # No script + untagged → gateway falls back to vanilla logic but the
+        # run still pays the tAPP platform overhead (§5.4.1 methodology),
+        # with topology-prioritised worker order. We emulate the co-located
+        # preference by loading a minimal blank-set default script.
+        else:
+            watcher.load_script(
+                "- default:\n"
+                "  - workers:\n"
+                "    - set:\n"
+                "    strategy: platform\n"
+                "    invalidate: overload\n"
+            )
+        sim = Simulation(
+            watcher, gateway_scheduler(gateway), network, profiles, config,
+            is_tapp=True,
+        )
+
+    result = sim.run([WORKLOADS[test]])
+    return sim, result
+
+
+def run_mqtt_case(
+    *, use_tapp: bool, minutes: int = 30, seed: int = 0, cloud_first: bool = True
+) -> Dict[str, "SimResult"]:
+    """§5.1 qualitative case: one pipeline invocation per minute."""
+    watcher = mqtt_cluster(cloud_first=cloud_first)
+    profiles = mqtt_profiles()
+    network = mqtt_network()
+    config = SimConfig(seed=seed, gateway_zone=ZONE_CLOUD)
+
+    if use_tapp:
+        gateway = Gateway(watcher, distribution=DistributionPolicy.SHARED, seed=seed)
+        watcher.load_script(MQTT_SCRIPT)
+        sched = gateway_scheduler(gateway)
+        is_tapp = True
+    else:
+        sched = vanilla_scheduler()
+        is_tapp = False
+
+    results: Dict[str, "SimResult"] = {}
+    for fn in ("data-collection", "feature-extraction", "feature-analysis"):
+        sim = Simulation(watcher, sched, network, profiles, config, is_tapp=is_tapp)
+        workload = [
+            WorkloadSpec(function=fn, users=1, requests_per_user=minutes, pause=60.0)
+        ]
+        results[fn] = sim.run(workload)
+    return results

@@ -1,0 +1,278 @@
+"""Typed AST for the tAPP language (Fig. 4 of the paper).
+
+Grammar (paper, Fig. 4)::
+
+    app        ::= tag*
+    tag        ::= policy_tag : block+  strategy?  followup?
+    block      ::= controller?  workers  strategy?  invalidate?
+    controller ::= controller: label  (topology_tolerance: all|same|none)?
+    workers    ::= workers: (wrk: label  invalidate?)+
+                 | workers: (set: label?  strategy?  invalidate?)+
+    strategy   ::= strategy: random | platform | best_first
+    invalidate ::= invalidate: capacity_used n% | max_concurrent_invocations n | overload
+    followup   ::= followup: default | fail
+
+The special ``default`` tag is the policy for untagged functions and the target of
+``followup: default``; its own followup is always ``fail`` (paper §3.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional, Sequence, Tuple, Union
+
+DEFAULT_TAG = "default"
+
+
+class Strategy(enum.Enum):
+    """Item-selection strategy at tag, block, or worker-set level."""
+
+    RANDOM = "random"
+    PLATFORM = "platform"
+    BEST_FIRST = "best_first"
+
+    @classmethod
+    def parse(cls, text: str) -> "Strategy":
+        try:
+            return cls(text.strip())
+        except ValueError:
+            raise ValueError(
+                f"unknown strategy {text!r}; expected one of "
+                f"{[s.value for s in cls]}"
+            ) from None
+
+
+class TopologyTolerance(enum.Enum):
+    """Failure tolerance of a ``controller`` clause (paper §3.3)."""
+
+    ALL = "all"    # any alternative controller, any zone of workers (default)
+    SAME = "same"  # alternative controller OK, workers must stay in the zone
+    NONE = "none"  # no forwarding at all
+
+    @classmethod
+    def parse(cls, text: str) -> "TopologyTolerance":
+        try:
+            return cls(text.strip())
+        except ValueError:
+            raise ValueError(
+                f"unknown topology_tolerance {text!r}; expected one of "
+                f"{[t.value for t in cls]}"
+            ) from None
+
+
+class FollowupKind(enum.Enum):
+    FAIL = "fail"
+    DEFAULT = "default"
+
+    @classmethod
+    def parse(cls, text: str) -> "FollowupKind":
+        try:
+            return cls(text.strip())
+        except ValueError:
+            raise ValueError(
+                f"unknown followup {text!r}; expected one of "
+                f"{[f.value for f in cls]}"
+            ) from None
+
+
+# ---------------------------------------------------------------------------
+# Invalidate conditions
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Overload:
+    """Worker lacks computational resources (platform health signal)."""
+
+    def describe(self) -> str:
+        return "overload"
+
+
+@dataclasses.dataclass(frozen=True)
+class CapacityUsed:
+    """Worker reached a threshold percentage of capacity (CPU/HBM load)."""
+
+    percent: float
+
+    def __post_init__(self) -> None:
+        if not (0.0 < self.percent <= 100.0):
+            raise ValueError(
+                f"capacity_used must be in (0, 100]; got {self.percent}"
+            )
+
+    def describe(self) -> str:
+        pct = self.percent
+        return f"capacity_used {int(pct) if pct == int(pct) else pct}%"
+
+
+@dataclasses.dataclass(frozen=True)
+class MaxConcurrentInvocations:
+    """Worker reached a threshold of buffered concurrent invocations."""
+
+    limit: int
+
+    def __post_init__(self) -> None:
+        if self.limit < 1:
+            raise ValueError(
+                f"max_concurrent_invocations must be >= 1; got {self.limit}"
+            )
+
+    def describe(self) -> str:
+        return f"max_concurrent_invocations {self.limit}"
+
+
+Invalidate = Union[Overload, CapacityUsed, MaxConcurrentInvocations]
+
+
+# ---------------------------------------------------------------------------
+# Worker items
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerRef:
+    """``wrk: label`` — one specific worker label (a singleton logical topology)."""
+
+    label: str
+    invalidate: Optional[Invalidate] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerSet:
+    """``set: label`` — a dynamically-populated set of workers.
+
+    ``label is None`` (blank set) selects *all* workers visible to the
+    controller. Sets may carry their own inner selection strategy and
+    invalidate condition (paper §3.3).
+    """
+
+    label: Optional[str] = None
+    strategy: Optional[Strategy] = None
+    invalidate: Optional[Invalidate] = None
+
+
+WorkerItem = Union[WorkerRef, WorkerSet]
+
+
+# ---------------------------------------------------------------------------
+# Blocks / tags / scripts
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerClause:
+    label: str
+    topology_tolerance: TopologyTolerance = TopologyTolerance.ALL
+
+
+@dataclasses.dataclass(frozen=True)
+class Block:
+    """One workers-block of a policy tag."""
+
+    workers: Tuple[WorkerItem, ...]
+    controller: Optional[ControllerClause] = None
+    strategy: Optional[Strategy] = None
+    invalidate: Optional[Invalidate] = None
+
+    def __post_init__(self) -> None:
+        if not self.workers:
+            raise ValueError("a block must list at least one workers item")
+        kinds = {type(w) for w in self.workers}
+        if kinds == {WorkerRef, WorkerSet}:
+            # The grammar separates wrk-lists from set-lists; mixing is invalid.
+            raise ValueError("a workers list cannot mix 'wrk' and 'set' items")
+
+    @property
+    def uses_sets(self) -> bool:
+        return bool(self.workers) and isinstance(self.workers[0], WorkerSet)
+
+
+@dataclasses.dataclass(frozen=True)
+class TagPolicy:
+    """The full policy attached to one policy tag."""
+
+    tag: str
+    blocks: Tuple[Block, ...]
+    strategy: Optional[Strategy] = None  # block-selection strategy
+    followup: Optional[FollowupKind] = None
+
+    def __post_init__(self) -> None:
+        if not self.blocks:
+            raise ValueError(f"tag {self.tag!r} must define at least one block")
+
+    @property
+    def effective_strategy(self) -> Strategy:
+        # best_first is the default block-selection policy (paper §3.3).
+        return self.strategy or Strategy.BEST_FIRST
+
+    @property
+    def effective_followup(self) -> FollowupKind:
+        if self.tag == DEFAULT_TAG:
+            # "the followup value of the default tag is always set to fail"
+            return FollowupKind.FAIL
+        return self.followup or FollowupKind.DEFAULT
+
+
+@dataclasses.dataclass(frozen=True)
+class TappScript:
+    """A parsed tAPP script: an ordered collection of tag policies."""
+
+    tags: Tuple[TagPolicy, ...]
+    source: Optional[str] = None  # original YAML text, for provenance
+    version: int = 0              # bumped by the watcher on live reload
+
+    def __post_init__(self) -> None:
+        seen = set()
+        for t in self.tags:
+            if t.tag in seen:
+                raise ValueError(f"duplicate policy tag {t.tag!r}")
+            seen.add(t.tag)
+
+    def get(self, tag: str) -> Optional[TagPolicy]:
+        for t in self.tags:
+            if t.tag == tag:
+                return t
+        return None
+
+    @property
+    def default(self) -> Optional[TagPolicy]:
+        return self.get(DEFAULT_TAG)
+
+    def tag_names(self) -> Sequence[str]:
+        return [t.tag for t in self.tags]
+
+
+def invalidate_from_text(text: str) -> Invalidate:
+    """Parse an invalidate condition from its textual form.
+
+    Accepted forms: ``overload``, ``capacity_used 50%``,
+    ``max_concurrent_invocations 100``.
+    """
+    text = str(text).strip()
+    if text == "overload":
+        return Overload()
+    if text.startswith("capacity_used"):
+        rest = text[len("capacity_used"):].strip()
+        if rest.endswith("%"):
+            rest = rest[:-1].strip()
+        if not rest:
+            raise ValueError("capacity_used requires a percentage, e.g. 'capacity_used 50%'")
+        try:
+            return CapacityUsed(float(rest))
+        except ValueError as e:
+            raise ValueError(f"bad capacity_used value {rest!r}") from e
+    if text.startswith("max_concurrent_invocations"):
+        rest = text[len("max_concurrent_invocations"):].strip()
+        if not rest:
+            raise ValueError(
+                "max_concurrent_invocations requires a count, e.g. "
+                "'max_concurrent_invocations 100'"
+            )
+        try:
+            return MaxConcurrentInvocations(int(rest))
+        except ValueError as e:
+            raise ValueError(f"bad max_concurrent_invocations value {rest!r}") from e
+    raise ValueError(
+        f"unknown invalidate condition {text!r}; expected 'overload', "
+        f"'capacity_used n%', or 'max_concurrent_invocations n'"
+    )

@@ -1,0 +1,167 @@
+"""Semantic validation of parsed tAPP scripts.
+
+Validation is split from parsing so the watcher can re-validate scripts
+against the *live* topology (unknown controller labels, unknown worker
+labels, empty sets) and surface warnings without rejecting the script —
+the paper's semantics treats unknown/unreachable workers as invalidated,
+not as parse errors.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+from repro.core.tapp.ast import (
+    DEFAULT_TAG,
+    FollowupKind,
+    TagPolicy,
+    TappScript,
+    WorkerRef,
+    WorkerSet,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    level: str  # "error" | "warning"
+    where: str
+    message: str
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        return f"[{self.level}] {self.where}: {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class ValidationReport:
+    findings: tuple
+
+    @property
+    def errors(self) -> Sequence[Finding]:
+        return [f for f in self.findings if f.level == "error"]
+
+    @property
+    def warnings(self) -> Sequence[Finding]:
+        return [f for f in self.findings if f.level == "warning"]
+
+    @property
+    def ok(self) -> bool:
+        return not self.errors
+
+    def raise_on_error(self) -> None:
+        if self.errors:
+            raise TappValidationError(self)
+
+
+class TappValidationError(ValueError):
+    def __init__(self, report: ValidationReport) -> None:
+        self.report = report
+        msgs = "; ".join(str(f) for f in report.errors)
+        super().__init__(f"tAPP validation failed: {msgs}")
+
+
+def validate_script(
+    script: TappScript,
+    *,
+    known_controllers: Optional[Sequence[str]] = None,
+    known_worker_labels: Optional[Sequence[str]] = None,
+    known_set_labels: Optional[Sequence[str]] = None,
+) -> ValidationReport:
+    """Validate a script, optionally against a live topology snapshot.
+
+    Structural rules (always errors):
+      * ``followup: default`` on the default tag itself (the paper pins the
+        default tag's followup to ``fail``);
+      * a non-default tag with ``followup: default`` (explicit or implied)
+        while the script has no default tag → warning (the scheduler will
+        treat the missing default as ``fail``).
+    Topology rules (warnings, since membership is dynamic):
+      * controller labels not present in the deployment;
+      * wrk/set labels that match nothing right now.
+    """
+    findings: List[Finding] = []
+
+    for tag in script.tags:
+        where = f"tag:{tag.tag}"
+        if tag.tag == DEFAULT_TAG and tag.followup is FollowupKind.DEFAULT:
+            findings.append(
+                Finding(
+                    "error",
+                    where,
+                    "the default tag cannot use 'followup: default' "
+                    "(it is always 'fail')",
+                )
+            )
+        if (
+            tag.tag != DEFAULT_TAG
+            and tag.effective_followup is FollowupKind.DEFAULT
+            and script.default is None
+        ):
+            findings.append(
+                Finding(
+                    "warning",
+                    where,
+                    "followup resolves to 'default' but the script defines no "
+                    "default tag; scheduling will fail when the tag is exhausted",
+                )
+            )
+        findings.extend(_validate_tag_topology(
+            tag,
+            known_controllers=known_controllers,
+            known_worker_labels=known_worker_labels,
+            known_set_labels=known_set_labels,
+        ))
+
+    return ValidationReport(findings=tuple(findings))
+
+
+def _validate_tag_topology(
+    tag: TagPolicy,
+    *,
+    known_controllers: Optional[Sequence[str]],
+    known_worker_labels: Optional[Sequence[str]],
+    known_set_labels: Optional[Sequence[str]],
+) -> List[Finding]:
+    findings: List[Finding] = []
+    for bi, block in enumerate(tag.blocks):
+        where = f"tag:{tag.tag}.block[{bi}]"
+        if (
+            block.controller is not None
+            and known_controllers is not None
+            and block.controller.label not in known_controllers
+        ):
+            findings.append(
+                Finding(
+                    "warning",
+                    where,
+                    f"controller {block.controller.label!r} is not present in "
+                    f"the current deployment",
+                )
+            )
+        for wi, item in enumerate(block.workers):
+            iwhere = f"{where}.workers[{wi}]"
+            if isinstance(item, WorkerRef):
+                if (
+                    known_worker_labels is not None
+                    and item.label not in known_worker_labels
+                ):
+                    findings.append(
+                        Finding(
+                            "warning",
+                            iwhere,
+                            f"worker label {item.label!r} matches no live worker",
+                        )
+                    )
+            elif isinstance(item, WorkerSet):
+                if (
+                    item.label is not None
+                    and known_set_labels is not None
+                    and item.label not in known_set_labels
+                ):
+                    findings.append(
+                        Finding(
+                            "warning",
+                            iwhere,
+                            f"worker set {item.label!r} currently has no members",
+                        )
+                    )
+    return findings

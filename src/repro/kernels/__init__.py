@@ -1,0 +1,1 @@
+"""Pallas TPU kernels for the data-plane hot spots (+ ops wrappers, ref oracles)."""

@@ -1,0 +1,151 @@
+"""Flash attention (forward) — Pallas TPU kernel.
+
+Tiled online-softmax attention targeting TPU v5e: the grid is
+``(batch, q_heads, q_blocks, kv_blocks)`` with the kv dimension innermost —
+TPU Pallas iterates the grid sequentially, so the output block (indexed by
+``(b, h, i)`` only) is revisited across kv steps and the running max / sum /
+accumulator live in VMEM scratch. GQA is expressed in the K/V index maps
+(``h → h // group``), so kv heads are never materialised per-q-head.
+
+Block shapes are MXU-aligned: ``(bq, d)`` and ``(bk, d)`` tiles with
+``d ∈ {64, 128}`` and ``bq = bk = 256`` by default (q/k/v tiles ≈ 256·128·2B
+= 64 KiB each; acc + m + l ≈ 160 KiB — comfortably inside the ~16 MiB VMEM).
+
+Fully-masked kv blocks in the causal case are skipped with ``pl.when``
+(they cost a grid step but no compute/loads).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref,          # inputs
+    o_ref,                        # output
+    acc_ref, m_ref, l_ref,        # scratch
+    *,
+    bq: int,
+    bk: int,
+    causal: bool,
+    scale: float,
+    kv_len: int,
+):
+    i = pl.program_id(2)   # q block
+    j = pl.program_id(3)   # kv block
+    nj = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = i * bq
+    k_start = j * bk
+
+    # Causal: skip blocks fully above the diagonal.
+    needed = (not causal) or (k_start <= q_start + bq - 1)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)      # [bq, d]
+        k = k_ref[0, 0].astype(jnp.float32)      # [bk, d]
+        v = v_ref[0, 0].astype(jnp.float32)      # [bk, d]
+
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                 # [bq, bk]
+
+        if causal:
+            rows = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        if kv_len % bk != 0:
+            cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(cols < kv_len, s, NEG_INF)
+
+        m_prev = m_ref[...]                       # [bq, 1]
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                    # [bq, bk]
+        alpha = jnp.exp(m_prev - m_new)           # [bq, 1]
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                          # [bq, d]
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "bq", "bk", "interpret"),
+)
+def flash_attention_bhsd(
+    q: jax.Array,    # [B, H, S, D]
+    k: jax.Array,    # [B, KV, T, D]
+    v: jax.Array,    # [B, KV, T, D]
+    *,
+    causal: bool = True,
+    bq: int = 256,
+    bk: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, s, d = q.shape
+    kvh, t = k.shape[1], k.shape[2]
+    group = h // kvh
+    bq = min(bq, s)
+    bk = min(bk, t)
+    s_pad = _round_up(s, bq)
+    t_pad = _round_up(t, bk)
+    if s_pad != s:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, s_pad - s), (0, 0)))
+    if t_pad != t:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, t_pad - t), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, t_pad - t), (0, 0)))
+
+    grid = (b, h, s_pad // bq, t_pad // bk)
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel,
+            bq=bq, bk=bk, causal=causal,
+            scale=1.0 / (d ** 0.5), kv_len=t,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, i, j: (b_, h_ // group, j, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, i, j: (b_, h_ // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s_pad, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :s, :]
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m

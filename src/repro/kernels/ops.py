@@ -1,0 +1,104 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Layout adaptation lives here (the models use ``[B, S, H, D]``; the kernels
+use ``[B, H, S, D]``), as does the interpret-mode switch: on a CPU backend
+(this container) the kernels execute via ``interpret=True`` — the kernel
+body runs in Python/XLA exactly as written — while on TPU they compile to
+Mosaic. The pure-jnp oracles live in :mod:`repro.kernels.ref`.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.moe_gmm import gmm
+from repro.kernels.ssd_scan import ssd_scan_bhsd
+
+
+def _interpret_default() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() == "cpu"
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(
+    q: jax.Array,    # [B, S, H, D]   (model layout)
+    k: jax.Array,    # [B, T, KV, D]
+    v: jax.Array,    # [B, T, KV, D]
+    *,
+    causal: bool = True,
+    bq: int = 256,
+    bk: int = 256,
+) -> jax.Array:
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention_bhsd(
+        qt, kt, vt, causal=causal, bq=bq, bk=bk,
+        interpret=_interpret_default(),
+    )
+    return out.transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+# MoE grouped matmul FFN
+# ---------------------------------------------------------------------------
+
+
+def moe_ffn_gmm(cfg, params: Dict, buffer: jax.Array) -> jax.Array:
+    """Expert FFN over the packed [E, C, d] buffer via grouped matmuls."""
+    interp = _interpret_default()
+    cdt = buffer.dtype
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        gate = gmm(buffer, params["w_gate"].astype(cdt), interpret=interp)
+        up = gmm(buffer, params["w_up"].astype(cdt), interpret=interp)
+        act = jax.nn.silu if cfg.mlp_kind == "swiglu" else jax.nn.gelu
+        h = (act(gate.astype(jnp.float32)) * up.astype(jnp.float32)).astype(cdt)
+    elif cfg.mlp_kind == "squared_relu":
+        h = gmm(buffer, params["w_up"].astype(cdt), interpret=interp)
+        h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(cdt)
+    else:
+        h = gmm(buffer, params["w_up"].astype(cdt), interpret=interp)
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(cdt)
+    return gmm(h, params["w_down"].astype(cdt), interpret=interp)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+
+def ssd_scan(
+    x: jax.Array,     # [B, S, H, P]  (model layout)
+    dt: jax.Array,    # [B, S, H]     (post-softplus)
+    a: jax.Array,     # [H]           (negative)
+    b_mat: jax.Array, # [B, S, G, N]
+    c_mat: jax.Array, # [B, S, G, N]
+    *,
+    chunk: int = 256,
+) -> Tuple[jax.Array, None]:
+    f32 = jnp.float32
+    dt_f = dt.astype(f32)
+    xdt = (x.astype(f32) * dt_f[..., None]).transpose(0, 2, 1, 3)   # [B,H,S,P]
+    da = (dt_f * a.astype(f32)[None, None, :]).transpose(0, 2, 1)   # [B,H,S]
+    y = ssd_scan_bhsd(
+        xdt,
+        da[:, :, None, :],
+        b_mat.transpose(0, 2, 1, 3),
+        c_mat.transpose(0, 2, 1, 3),
+        chunk=min(chunk, x.shape[1]) if x.shape[1] % min(chunk, x.shape[1]) == 0
+        else chunk,
+        interpret=_interpret_default(),
+    )
+    return y.transpose(0, 2, 1, 3), None

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references).
+
+Deliberately naive — O(S²) attention with materialised scores, einsum
+grouped matmul, quadratic SSD — so the tests compare two *independent*
+implementations.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_attention(
+    q: jax.Array,    # [B, H, S, D]
+    k: jax.Array,    # [B, KV, T, D]
+    v: jax.Array,    # [B, KV, T, D]
+    *,
+    causal: bool = True,
+) -> jax.Array:
+    b, h, s, d = q.shape
+    kvh, t = k.shape[1], k.shape[2]
+    group = h // kvh
+    kf = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    scores = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32), kf)
+    scores = scores / jnp.sqrt(jnp.float32(d))
+    if causal:
+        mask = jnp.tril(jnp.ones((s, t), dtype=bool), k=t - s)
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", probs, vf)
+    return out.astype(q.dtype)
+
+
+def ref_gmm(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: [E, C, K]; w: [E, K, N] → [E, C, N]."""
+    return jnp.einsum(
+        "eck,ekn->ecn", x.astype(jnp.float32), w.astype(jnp.float32)
+    ).astype(x.dtype)
+
+
+def ref_ssd(
+    xdt: jax.Array,   # [B, H, S, P]
+    da: jax.Array,    # [B, H, S]
+    b_mat: jax.Array, # [B, G, S, N]
+    c_mat: jax.Array, # [B, G, S, N]
+) -> jax.Array:
+    """Quadratic (full-sequence dual form) SSD: O(S²), small shapes only."""
+    bsz, h, s, p = xdt.shape
+    g = b_mat.shape[1]
+    hpg = h // g
+    bf = jnp.repeat(b_mat, hpg, axis=1).astype(jnp.float32)  # [B,H,S,N]
+    cf = jnp.repeat(c_mat, hpg, axis=1).astype(jnp.float32)
+    cum = jnp.cumsum(da.astype(jnp.float32), axis=-1)        # [B,H,S]
+    diff = cum[..., :, None] - cum[..., None, :]             # [B,H,S,S]
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    l_mat = jnp.exp(jnp.where(mask[None, None], diff, NEG_INF))
+    cb = jnp.einsum("bhln,bhsn->bhls", cf, bf)
+    return jnp.einsum("bhls,bhsp->bhlp", cb * l_mat, xdt.astype(jnp.float32))

@@ -1,0 +1,345 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+# NOTE: the two lines above MUST run before any other import (including
+# `from repro...`) — JAX locks the device count on first initialisation.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this proves, without hardware:
+  * the sharding config is coherent (lower+compile succeeds — sharding
+    mismatches, unsupported collectives, or uneven partitions fail here);
+  * the program fits (``memory_analysis()`` per-device bytes vs 16 GiB);
+  * and records the roofline inputs (``cost_analysis()`` FLOPs/bytes +
+    the collective schedule parsed from the optimized HLO).
+
+Results land in ``artifacts/dryrun/<arch>__<shape>__<mesh>.json`` and are
+aggregated by ``benchmarks/roofline_report.py`` into EXPERIMENTS.md.
+
+Usage::
+
+    python -m repro.launch.dryrun --arch smollm-135m --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all            # every applicable cell
+    python -m repro.launch.dryrun --all --mesh multi
+"""
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (
+    abstract_train_state,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+    train_state_shardings,
+)
+from repro.models.api import SHAPES, Model, ShapeSpec, shape_applicable
+from repro.optim.adamw import AdamWConfig
+from repro.roofline.analysis import model_bytes_min, model_flops, roofline_terms
+from repro.sharding.ctx import activation_sharding
+from repro.sharding.specs import (
+    ShardingPolicy,
+    batch_shardings,
+    cache_shardings,
+)
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def dryrun_cell(
+    arch: str,
+    shape_name: str,
+    mesh_kind: str = "single",
+    *,
+    policy: Optional[ShardingPolicy] = None,
+    save: bool = True,
+    verbose: bool = True,
+    tag: str = "",
+    overrides: Optional[Dict] = None,
+) -> Dict:
+    """Lower + compile one cell; return the artifact record.
+
+    ``overrides`` patches ModelConfig fields (perf variants: e.g.
+    {"kv_cache_dtype": "int8"} or {"param_dtype": "bfloat16"}).
+    """
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    if not shape_applicable(cfg, shape):
+        record = {
+            "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+            "status": "skipped",
+            "reason": "long_500k requires sub-quadratic attention "
+                      "(see DESIGN.md §Arch-applicability)",
+        }
+        if save:
+            _save(record, tag)
+        return record
+
+    if shape.kind in ("prefill", "decode"):
+        # Serving runs bf16 weights (training keeps fp32 masters).
+        cfg = dataclasses.replace(cfg, param_dtype="bfloat16")
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    policy = (policy or ShardingPolicy()).for_mesh(mesh)
+    model = Model(cfg)
+    t0 = time.time()
+
+    try:
+        act_tp = None if policy.tp_scope == "vocab" else policy.tp_axis
+        with mesh, activation_sharding(mesh, policy.dp_axes, act_tp,
+                                       vocab_axis=policy.tp_axis):
+            if shape.kind == "train":
+                lowered = _lower_train(cfg, model, shape, mesh, policy)
+            elif shape.kind == "prefill":
+                lowered = _lower_prefill(cfg, model, shape, mesh, policy)
+            else:
+                lowered = _lower_decode(cfg, model, shape, mesh, policy)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        cost = compiled.cost_analysis()
+        mem = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        terms = roofline_terms(
+            cost=cost,
+            hlo_text=hlo,
+            n_chips=mesh.size,
+            model_flops_total=model_flops(cfg, shape),
+            model_bytes_min=model_bytes_min(cfg, shape, mesh.size),
+        )
+        mem_bytes = (
+            mem.argument_size_in_bytes
+            + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes
+        )
+        # The CPU backend upcasts bf16 dot operands to f32 and its
+        # while-loop widening pass then keeps whole bf16 loop carries (KV
+        # caches, activations) as f32 temporaries — a 2× inflation that
+        # does not exist in the TPU lowering. `modeled` discounts the temp
+        # segment accordingly (documented in EXPERIMENTS.md §Dry-run).
+        mem_bytes_modeled = (
+            mem.argument_size_in_bytes
+            + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes // 2
+            - mem.alias_size_in_bytes
+        )
+        record = {
+            "arch": arch,
+            "shape": shape_name,
+            "mesh": mesh_kind,
+            "status": "ok",
+            "n_chips": mesh.size,
+            "param_count": cfg.param_count(),
+            "active_param_count": cfg.active_param_count(),
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "per_device_bytes": mem_bytes,
+                "per_device_gib": round(mem_bytes / 2**30, 3),
+                "per_device_gib_modeled": round(mem_bytes_modeled / 2**30, 3),
+                "fits_hbm": bool(mem_bytes_modeled <= 16 * 2**30),
+            },
+            "roofline": terms.to_json(),
+        }
+        if save:
+            # Persist the optimized HLO (zstd) so rooflines can be
+            # re-derived offline without recompiling.
+            import zstandard
+
+            ARTIFACTS.mkdir(parents=True, exist_ok=True)
+            suffix = f"__{tag}" if tag else ""
+            hlo_path = ARTIFACTS / (
+                f"{arch}__{shape_name}__{mesh_kind}{suffix}.hlo.zst"
+            )
+            hlo_path.write_bytes(
+                zstandard.ZstdCompressor(level=3).compress(hlo.encode())
+            )
+    except Exception as e:  # noqa: BLE001 — record the failure, don't crash --all
+        record = {
+            "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+            "status": "error",
+            "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-2000:],
+        }
+
+    if verbose:
+        _print_record(record)
+    if save:
+        _save(record, tag)
+    return record
+
+
+# ---------------------------------------------------------------------------
+# Per-kind lowering
+# ---------------------------------------------------------------------------
+
+
+#: CLI-level optimizer overrides for perf variants.
+_OPT_OVERRIDES: Dict = {"master_weights": False, "moment_dtype": "f32"}
+
+
+def _lower_train(cfg, model, shape: ShapeSpec, mesh, policy):
+    opt_cfg = AdamWConfig(
+        master_weights=_OPT_OVERRIDES.get("master_weights", False),
+        moment_dtype=_OPT_OVERRIDES.get("moment_dtype", "f32"),
+    )
+    step_fn = make_train_step(cfg, opt_cfg)
+    state = abstract_train_state(cfg, opt_cfg=opt_cfg)
+    state_sh = train_state_shardings(cfg, policy, mesh, state)
+    batch = model.input_specs(shape)
+    batch_sh = batch_shardings(cfg, policy, mesh, shape, batch)
+    return jax.jit(
+        step_fn,
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, None),
+        donate_argnums=(0,),
+    ).lower(state, batch)
+
+
+def _lower_prefill(cfg, model, shape: ShapeSpec, mesh, policy):
+    step_fn = make_prefill_step(cfg)
+    params = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    params_sh = _params_shardings(cfg, policy, mesh, params)
+    batch = model.input_specs(shape)
+    batch_sh = batch_shardings(cfg, policy, mesh, shape, batch)
+    cache = model.cache_specs(shape)
+    cache_sh = cache_shardings(cfg, policy, mesh, cache)
+    return jax.jit(
+        step_fn,
+        in_shardings=(params_sh, batch_sh, cache_sh),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(2,),
+    ).lower(params, batch, cache)
+
+
+def _lower_decode(cfg, model, shape: ShapeSpec, mesh, policy):
+    step_fn = make_decode_step(cfg)
+    params = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    params_sh = _params_shardings(cfg, policy, mesh, params)
+    inputs = model.input_specs(shape)
+    inputs_sh = batch_shardings(cfg, policy, mesh, shape, inputs)
+    cache = model.cache_specs(shape)
+    cache_sh = cache_shardings(cfg, policy, mesh, cache)
+    return jax.jit(
+        step_fn,
+        in_shardings=(params_sh, cache_sh, inputs_sh["token"], inputs_sh["position"]),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(1,),
+    ).lower(params, cache, inputs["token"], inputs["position"])
+
+
+def _params_shardings(cfg, policy, mesh, params):
+    from repro.sharding.specs import param_shardings
+
+    return param_shardings(cfg, policy, mesh, params)
+
+
+# ---------------------------------------------------------------------------
+# Reporting / CLI
+# ---------------------------------------------------------------------------
+
+
+def _print_record(r: Dict) -> None:
+    if r["status"] == "ok":
+        m = r["memory"]
+        t = r["roofline"]
+        print(
+            f"[ok] {r['arch']:>22} {r['shape']:<12} {r['mesh']:<6} "
+            f"mem/dev={m['per_device_gib']:7.3f}GiB "
+            f"(tpu~{m['per_device_gib_modeled']:.2f}) fits={m['fits_hbm']} "
+            f"compute={t['compute_s']:.4f}s memory={t['memory_s']:.4f}s "
+            f"coll={t['collective_s']:.4f}s dom={t['dominant']:<10} "
+            f"frac={t['roofline_fraction']:.3f} "
+            f"(lower {r['lower_s']}s compile {r['compile_s']}s)",
+            flush=True,
+        )
+    elif r["status"] == "skipped":
+        print(f"[skip] {r['arch']:>22} {r['shape']:<12} {r['mesh']:<6} — {r['reason']}",
+              flush=True)
+    else:
+        print(f"[ERR] {r['arch']:>22} {r['shape']:<12} {r['mesh']:<6} — {r['error']}",
+              flush=True)
+
+
+def _save(record: Dict, tag: str = "") -> None:
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    name = f"{record['arch']}__{record['shape']}__{record['mesh']}{suffix}.json"
+    (ARTIFACTS / name).write_text(json.dumps(record, indent=2))
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--arch", default=None, help="architecture id")
+    parser.add_argument("--shape", default=None, choices=list(SHAPES))
+    parser.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    parser.add_argument("--all", action="store_true", help="run every cell")
+    parser.add_argument("--tag", default="", help="artifact suffix (perf variants)")
+    parser.add_argument("--no-save", action="store_true")
+    parser.add_argument("--kv-int8", action="store_true",
+                        help="int8-quantised KV cache (perf variant)")
+    parser.add_argument("--no-tp", action="store_true",
+                        help="pure DP/FSDP policy (model axis joins data)")
+    parser.add_argument("--fsdp-all", action="store_true",
+                        help="FSDP params regardless of model size")
+    parser.add_argument("--tp-vocab", action="store_true",
+                        help="TP only for vocab (embed table + CE logits)")
+    parser.add_argument("--bf16-params", action="store_true",
+                        help="bf16 params + f32 master weights (train)")
+    parser.add_argument("--moment-int8", action="store_true",
+                        help="int8-quantised AdamW moments")
+    args = parser.parse_args()
+
+    overrides: Dict = {}
+    if args.kv_int8:
+        overrides["kv_cache_dtype"] = "int8"
+    if args.bf16_params:
+        overrides["param_dtype"] = "bfloat16"
+    policy = ShardingPolicy(
+        tp_enabled=not args.no_tp,
+        fsdp_min_params=0 if args.fsdp_all else 2_000_000_000,
+        tp_scope="vocab" if args.tp_vocab else "full",
+    )
+    _OPT_OVERRIDES["master_weights"] = args.bf16_params
+    _OPT_OVERRIDES["moment_dtype"] = "int8" if args.moment_int8 else "f32"
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+
+    failures = 0
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape in shapes:
+                rec = dryrun_cell(
+                    arch, shape, mesh_kind, save=not args.no_save,
+                    tag=args.tag, policy=policy, overrides=overrides or None,
+                )
+                if rec["status"] == "error":
+                    failures += 1
+    if failures:
+        raise SystemExit(f"{failures} cell(s) failed")
+
+
+if __name__ == "__main__":
+    main()

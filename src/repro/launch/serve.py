@@ -1,0 +1,100 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
+
+Builds a zoned replica deployment, loads a tAPP script (file or default),
+submits a synthetic request mix, and reports placement + latency stats.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import statistics
+
+import jax
+
+from repro.configs import ARCH_IDS, smoke_config
+from repro.core.scheduler.topology import DistributionPolicy
+from repro.models import Model
+from repro.runtime.serve_engine import Replica, ServingEngine
+
+DEFAULT_SCRIPT = """
+- default:
+  - workers:
+    - set:
+    strategy: platform
+    invalidate: overload
+- interactive:
+  - workers:
+    - set: edge
+    strategy: random
+    invalidate: capacity_used 75%
+  - workers:
+    - set: cloud
+  followup: default
+- batch:
+  - controller: CloudCtl
+    workers:
+    - set: cloud
+    topology_tolerance: same
+  followup: default
+"""
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="smollm_135m",
+                    help=f"one of {ARCH_IDS}")
+    ap.add_argument("--script", default=None, help="tAPP script path")
+    ap.add_argument("--replicas-per-zone", type=int, default=2)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--max-new-tokens", type=int, default=8)
+    ap.add_argument("--distribution", default="shared",
+                    choices=[p.value for p in DistributionPolicy])
+    args = ap.parse_args()
+
+    script = DEFAULT_SCRIPT
+    if args.script:
+        with open(args.script) as fh:
+            script = fh.read()
+
+    cfg = dataclasses.replace(smoke_config(args.arch), n_layers=2)
+    params = Model(cfg).init_params(jax.random.PRNGKey(0))
+
+    engine = ServingEngine(
+        distribution=DistributionPolicy.parse(args.distribution),
+        tapp_script=script,
+    )
+    engine.add_controller("EdgeCtl", zone="edge")
+    engine.add_controller("CloudCtl", zone="cloud")
+    for zone in ("edge", "cloud"):
+        for i in range(args.replicas_per_zone):
+            engine.add_replica(
+                Replica(f"{zone}-{i}", cfg, params, zone=zone, sets=[zone],
+                        slots=args.slots, max_len=64)
+            )
+
+    tags = ["interactive", "batch", None]
+    reqs = [
+        engine.submit(cfg.name, [1 + i % 13, 2, 3], tag=tags[i % 3],
+                      max_new_tokens=args.max_new_tokens)
+        for i in range(args.requests)
+    ]
+    engine.run_until_done(max_ticks=2000)
+
+    done = [r for r in reqs if r.state == "done"]
+    lat = [r.finished_tick - r.submitted_tick for r in done]
+    print(f"arch={cfg.name} requests={len(reqs)} done={len(done)}")
+    print(f"latency ticks: mean={statistics.fmean(lat):.1f} "
+          f"p50={sorted(lat)[len(lat)//2]} max={max(lat)}")
+    by_tag = {}
+    for r in done:
+        by_tag.setdefault(r.tag or "untagged", []).append(r.replica)
+    for tag, replicas in sorted(by_tag.items()):
+        zones = {z.split("-")[0] for z in replicas}
+        print(f"  {tag:>12}: zones={sorted(zones)} ({len(replicas)} reqs)")
+    print(f"gateway: {engine.gateway.stats}; stragglers flagged: "
+          f"{engine.stragglers_flagged}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,148 @@
+"""Jit-compilable train / prefill / decode steps with explicit shardings.
+
+These are the programs the dry-run lowers and the runtime executes; the
+sharding policy decides in/out shardings, GSPMD the rest.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.api import Model, ShapeSpec
+from repro.models.config import ModelConfig
+from repro.optim.adamw import (
+    AdamWConfig,
+    AdamWState,
+    adamw_init,
+    adamw_update,
+)
+from repro.sharding.specs import (
+    ShardingPolicy,
+    batch_shardings,
+    cache_shardings,
+    param_shardings,
+)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def make_train_step(
+    cfg: ModelConfig, opt_cfg: AdamWConfig
+) -> Callable[[TrainState, Dict], Tuple[TrainState, Dict]]:
+    model = Model(cfg)
+
+    def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        (loss, parts), grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch), has_aux=True
+        )(state.params)
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, grads, state.opt, state.params
+        )
+        metrics = {"loss": loss, **parts, **opt_metrics}
+        return TrainState(params=new_params, opt=new_opt), metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    model = Model(cfg)
+
+    def prefill_step(params, batch: Dict, cache):
+        return model.prefill(params, batch, cache)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    model = Model(cfg)
+
+    def decode_step(params, cache, token, position):
+        return model.decode(params, cache, token, position)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Sharded state construction
+# ---------------------------------------------------------------------------
+
+
+def abstract_train_state(
+    cfg: ModelConfig, rng=None, opt_cfg: Optional[AdamWConfig] = None
+) -> TrainState:
+    """Shape-only TrainState (no allocation) for lowering."""
+    model = Model(cfg)
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    params = jax.eval_shape(model.init_params, rng)
+    opt = jax.eval_shape(
+        functools.partial(adamw_init, opt_cfg or AdamWConfig()), params
+    )
+    return TrainState(params=params, opt=opt)
+
+
+def train_state_shardings(
+    cfg: ModelConfig, policy: ShardingPolicy, mesh: Mesh, state: TrainState
+) -> TrainState:
+    from repro.sharding.specs import param_spec, sanitize_spec
+
+    p_sh = param_shardings(cfg, policy, mesh, state.params)
+
+    def moment_shardings(tree):
+        """Moments inherit the mirrored param's spec; int8 moments are
+        {"q": param-shaped int8, "scale": param-shape[:-1]+(1,)}."""
+
+        def visit(path, leaf):
+            names = tuple(
+                str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+            )
+            if names and names[-1] in ("q", "scale"):
+                parent = names[:-1]
+                base = param_spec(cfg, policy, mesh, parent, tuple(leaf.shape))
+                if names[-1] == "scale":
+                    entries = list(base)[: len(leaf.shape) - 1] + [None]
+                    base = sanitize_spec(P(*entries), tuple(leaf.shape), mesh)
+                return NamedSharding(mesh, base)
+            spec = param_spec(cfg, policy, mesh, names, tuple(leaf.shape))
+            return NamedSharding(mesh, spec)
+
+        return jax.tree_util.tree_map_with_path(visit, tree)
+
+    m_sh = moment_shardings(state.opt.m)
+    v_sh = moment_shardings(state.opt.v)
+    master_sh = (
+        param_shardings(cfg, policy, mesh, state.opt.master)
+        if state.opt.master is not None else None
+    )
+    step_sh = NamedSharding(mesh, P())
+    return TrainState(
+        params=p_sh,
+        opt=AdamWState(step=step_sh, m=m_sh, v=v_sh, master=master_sh),
+    )
+
+
+def init_sharded_train_state(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig,
+    mesh: Mesh,
+    policy: ShardingPolicy,
+    rng: jax.Array,
+) -> TrainState:
+    """Materialise a TrainState directly into its shardings (no host copy)."""
+    model = Model(cfg)
+    abstract = abstract_train_state(cfg, rng)
+    shardings = train_state_shardings(cfg, policy, mesh, abstract)
+
+    @functools.partial(jax.jit, out_shardings=shardings)
+    def build(rng):
+        params = model.init_params(rng)
+        return TrainState(params=params, opt=adamw_init(opt_cfg, params))
+
+    with mesh:
+        return build(rng)

@@ -1,0 +1,85 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On this CPU container it runs reduced configs end-to-end; pointed at a
+TPU fleet the same entry point builds the production mesh, shards the
+state per the policy, and runs the fault-tolerant loop.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import tempfile
+
+import jax
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs import ARCH_IDS, get_config, smoke_config
+from repro.data.pipeline import DataConfig, SyntheticTokens
+from repro.launch.steps import TrainState, make_train_step
+from repro.models import Model
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.runtime.train_loop import TrainLoopConfig, run_training
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True,
+                    help=f"one of {ARCH_IDS} (aliases accepted)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config (CPU scale)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--moment-dtype", choices=["f32", "int8"], default="f32")
+    ap.add_argument("--grad-compression", choices=["none", "int8"],
+                    default="none")
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = Model(cfg)
+    opt_cfg = AdamWConfig(
+        lr=args.lr, warmup_steps=max(5, args.steps // 20),
+        total_steps=args.steps,
+        moment_dtype=args.moment_dtype,
+        compression=None if args.grad_compression == "none" else "int8",
+    )
+
+    rng = jax.random.PRNGKey(0)
+    params = model.init_params(rng)
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"{cfg.name}: {n/1e6:.2f}M params "
+          f"({'smoke' if args.smoke else 'full'} config)")
+
+    state = TrainState(params=params, opt=adamw_init(opt_cfg, params))
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=(0,))
+    pipeline = SyntheticTokens(
+        DataConfig(
+            vocab_size=cfg.vocab_size, global_batch=args.batch,
+            seq_len=args.seq,
+            frames_dim=cfg.d_model if cfg.family == "encdec" else 0,
+        )
+    )
+    ckpt = Checkpointer(
+        args.ckpt_dir or tempfile.mkdtemp(prefix=f"{args.arch}_ckpt_")
+    )
+
+    report = run_training(
+        step_fn=step_fn, state=state, pipeline=pipeline, checkpointer=ckpt,
+        config=TrainLoopConfig(
+            total_steps=args.steps,
+            checkpoint_every=max(10, args.steps // 4),
+            log_every=max(1, args.steps // 10),
+        ),
+        on_metrics=lambda s, m: print(
+            f"step {s:>5} loss {float(m['loss']):.4f} "
+            f"({m['step_time_s']*1e3:.0f} ms)"
+        ),
+    )
+    print(f"done: loss {report.losses[0]:.4f} → {report.losses[-1]:.4f}; "
+          f"restarts={report.restarts}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Model substrate: 10 assigned architectures over 4 families."""
+from repro.models.api import LONG_CONTEXT_FAMILIES, SHAPES, Model, ShapeSpec, shape_applicable
+from repro.models.config import ModelConfig
+
+__all__ = [
+    "LONG_CONTEXT_FAMILIES",
+    "Model",
+    "ModelConfig",
+    "SHAPES",
+    "ShapeSpec",
+    "shape_applicable",
+]

@@ -1,0 +1,134 @@
+"""Unified model API: one facade over the lm/hybrid/ssm/encdec families.
+
+``Model`` exposes exactly the entry points the launcher, serving engine,
+and dry-run lower:
+
+  * ``init_params(rng)``
+  * ``loss(params, batch)``             — training objective
+  * ``prefill(params, batch, cache)``   — prompt processing
+  * ``decode(params, cache, token, position)`` — incremental decode
+  * ``init_cache(batch, max_len)``
+  * ``input_specs(shape)``              — ShapeDtypeStruct stand-ins for the
+                                          multi-pod dry-run (no allocation)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, lm
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One assigned input-shape cell."""
+
+    name: str                 # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str                 # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+#: Sub-quadratic-attention families that run the long_500k cell.
+LONG_CONTEXT_FAMILIES = ("ssm", "hybrid")
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> bool:
+    """Per DESIGN.md §Arch-applicability: long_500k only for ssm/hybrid."""
+    if shape.name == "long_500k":
+        return cfg.family in LONG_CONTEXT_FAMILIES
+    return True
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig) -> None:
+        self.cfg = cfg
+
+    # -- parameters ---------------------------------------------------------
+
+    def init_params(self, rng: jax.Array) -> Dict:
+        if self.cfg.family == "encdec":
+            return encdec.init_params(self.cfg, rng)
+        return lm.init_params(self.cfg, rng)
+
+    # -- training --------------------------------------------------------------
+
+    def loss(self, params: Dict, batch: Dict) -> Tuple[jax.Array, Dict]:
+        if self.cfg.family == "encdec":
+            return encdec.loss_fn(self.cfg, params, batch)
+        return lm.loss_fn(self.cfg, params, batch)
+
+    # -- serving ------------------------------------------------------------------
+
+    def init_cache(self, batch: int, max_len: int, enc_len: int = 0) -> Dict:
+        dtype = jnp.dtype(self.cfg.compute_dtype)
+        if self.cfg.family == "encdec":
+            return encdec.init_cache(
+                self.cfg, batch, max_len, enc_len or max_len, dtype=dtype
+            )
+        return lm.init_cache(self.cfg, batch, max_len, dtype=dtype)
+
+    def prefill(self, params: Dict, batch: Dict, cache: Dict):
+        if self.cfg.family == "encdec":
+            return encdec.prefill(
+                self.cfg, params, batch["frames"], batch["tokens"], cache
+            )
+        return lm.prefill(
+            self.cfg, params, batch["tokens"], cache, embeds=batch.get("embeds")
+        )
+
+    def decode(self, params: Dict, cache: Dict, token: jax.Array, position: jax.Array):
+        if self.cfg.family == "encdec":
+            return encdec.decode_step(self.cfg, params, cache, token, position)
+        return lm.decode_step(self.cfg, params, cache, token, position)
+
+    # -- dry-run stand-ins -------------------------------------------------------------
+
+    def input_specs(self, shape: ShapeSpec) -> Dict:
+        """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+        For ``train``/``prefill`` this is the token batch (plus the stub
+        frontend embeddings for [audio]/[vlm]); for ``decode`` it is the
+        one-token step inputs — the KV cache is constructed separately via
+        :meth:`cache_specs` so the dry-run can shard it.
+        """
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+
+        if cfg.family == "encdec":
+            if shape.kind == "train" or shape.kind == "prefill":
+                return {
+                    "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16),
+                    "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                }
+            return {
+                "token": jax.ShapeDtypeStruct((b,), i32),
+                "position": jax.ShapeDtypeStruct((b,), i32),
+            }
+
+        if shape.kind in ("train", "prefill"):
+            return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        return {
+            "token": jax.ShapeDtypeStruct((b,), i32),
+            "position": jax.ShapeDtypeStruct((b,), i32),
+        }
+
+    def cache_specs(self, shape: ShapeSpec, dtype=jnp.bfloat16) -> Dict:
+        """ShapeDtypeStructs matching init_cache (for decode dry-runs)."""
+        cache = jax.eval_shape(
+            lambda: self.init_cache(shape.global_batch, shape.seq_len,
+                                    enc_len=min(shape.seq_len, 4096))
+        )
+        return cache

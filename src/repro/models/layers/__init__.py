@@ -1,0 +1,1 @@
+from repro.models.layers import attention, basic, moe, ssm  # noqa: F401

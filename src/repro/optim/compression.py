@@ -1,0 +1,71 @@
+"""Gradient compression for cross-pod data parallelism.
+
+At 512+ chips the "pod" axis all-reduce crosses DCN (~25 GB/s per pod vs
+~100 GB/s/chip aggregate ICI), so gradients are the dominant inter-pod
+traffic. Two tools:
+
+* :func:`int8_roundtrip` — blockwise-scaled int8 quantisation applied to
+  gradients *before* the (GSPMD-inserted) all-reduce consumes them. In a
+  jit'd train step XLA fuses the quantise→dequantise pair around the
+  collective's operand, which models transmitting int8 payloads (4× fewer
+  DCN bytes). Error feedback is unnecessary at int8 for AdamW in practice,
+  but an EF variant is provided for experimentation.
+
+* :class:`ErrorFeedback` — residual accumulation for more aggressive
+  (e.g. top-k) schemes: the compression error is added back to the next
+  step's gradient, preserving convergence (Stich et al.).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_BLOCK = 2048
+
+
+def _quant_leaf(g: jax.Array) -> jax.Array:
+    orig_shape = g.shape
+    orig_dtype = g.dtype
+    flat = g.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % _BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    out = deq.reshape(-1)[:n].reshape(orig_shape)
+    return out.astype(orig_dtype)
+
+
+def int8_roundtrip(grads: Any) -> Any:
+    """Blockwise int8 quantise→dequantise every gradient leaf."""
+    return jax.tree.map(_quant_leaf, grads)
+
+
+class ErrorFeedback(NamedTuple):
+    residual: Any
+
+
+def ef_init(params: Any) -> ErrorFeedback:
+    return ErrorFeedback(
+        residual=jax.tree.map(
+            lambda p: jnp.zeros_like(p, dtype=jnp.float32), params
+        )
+    )
+
+
+def ef_compress(
+    grads: Any, state: ErrorFeedback
+) -> Tuple[Any, ErrorFeedback]:
+    """int8 with error feedback: g' = Q(g + r); r ← (g + r) − g'."""
+    corrected = jax.tree.map(
+        lambda g, r: g.astype(jnp.float32) + r, grads, state.residual
+    )
+    compressed = jax.tree.map(_quant_leaf, corrected)
+    residual = jax.tree.map(lambda c, q: c - q, corrected, compressed)
+    return compressed, ErrorFeedback(residual=residual)

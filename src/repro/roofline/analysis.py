@@ -1,0 +1,346 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+Terms (seconds, per training/serving step, per chip):
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+  memory     = HLO_bytes_per_device / HBM_bandwidth
+  collective = modeled wire-bytes per chip / ICI bandwidth per chip
+
+``cost_analysis()`` of the SPMD-partitioned executable reports *per-device*
+FLOPs and bytes. Collective wire bytes are parsed from the optimized HLO
+(``compiled.as_text()``): every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction contributes its result-shape
+bytes scaled by the standard ring-algorithm factor for its group size
+(AG: (n−1)/n, AR: 2(n−1)/n, RS: (n−1)·result≈(n−1)/n·input, A2A: (n−1)/n,
+CP: 1).
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link
+ICI; ring collectives along one mesh axis drive 2 links per chip
+⇒ 100 GB/s effective per-chip collective bandwidth (documented with each
+table).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+# --- TPU v5e -----------------------------------------------------------------
+PEAK_FLOPS = 197e12           # bf16 per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_LINK_BW = 50e9            # bytes/s per link
+ICI_BW_PER_CHIP = 2 * ICI_LINK_BW   # ring along one mesh axis: 2 links
+DCN_BW_PER_POD = 25e9         # cross-pod (multi-pod dry-run context only)
+HBM_BYTES = 16 * 1024**3      # v5e HBM capacity
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+    "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+#: Ring-algorithm wire factors applied to the *result* shape bytes.
+_WIRE_FACTOR = {
+    "all-gather": lambda n: (n - 1) / n,
+    "all-reduce": lambda n: 2 * (n - 1) / n,
+    "reduce-scatter": lambda n: float(n - 1),
+    "all-to-all": lambda n: (n - 1) / n,
+    "collective-permute": lambda n: 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: int
+    group_size: int
+    wire_bytes: float
+    line: str
+
+
+@dataclasses.dataclass
+class CollectiveSummary:
+    ops: List[CollectiveOp]
+
+    @property
+    def total_result_bytes(self) -> int:
+        return sum(o.result_bytes for o in self.ops)
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(o.wire_bytes for o in self.ops)
+
+    def by_kind(self) -> Dict[str, Dict[str, float]]:
+        out: Dict[str, Dict[str, float]] = {}
+        for o in self.ops:
+            d = out.setdefault(o.kind, {"count": 0, "bytes": 0, "wire_bytes": 0.0})
+            d["count"] += 1
+            d["bytes"] += o.result_bytes
+            d["wire_bytes"] += o.wire_bytes
+        return out
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum of all TYPE[dims] array sizes appearing in a (tuple) shape str."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        size = _DTYPE_BYTES[dtype]
+        if dims:
+            for d in dims.split(","):
+                size *= int(d)
+        total += size
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))  # [num_groups, group_size]<=...
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return default
+
+
+def parse_collectives(hlo_text: str, default_group: int = 2) -> CollectiveSummary:
+    ops: List[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.search(
+            r"=\s+((?:\([^)]*\))|(?:\w+\[[0-9,]*\][^ ]*))\s+"
+            r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+            r"(-start)?\(",
+            stripped,
+        )
+        if not m:
+            continue
+        if re.search(r"(all-reduce|all-gather|all-to-all|collective-permute|reduce-scatter)-done\(", stripped):
+            continue
+        shape_text, kind = m.group(1), m.group(2)
+        result_bytes = _shape_bytes(shape_text)
+        n = _group_size(stripped, default_group)
+        wire = _WIRE_FACTOR[kind](max(2, n)) * result_bytes
+        ops.append(
+            CollectiveOp(
+                kind=kind, result_bytes=result_bytes, group_size=n,
+                wire_bytes=wire, line=stripped[:160],
+            )
+        )
+    return CollectiveSummary(ops=ops)
+
+
+# ---------------------------------------------------------------------------
+# Terms
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+    model_flops_total: float
+    model_bytes_min: float          # unavoidable per-device HBM bytes/step
+    n_chips: int
+    collective_detail: Dict[str, Dict[str, float]]
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def model_flops_per_device(self) -> float:
+        return self.model_flops_total / self.n_chips
+
+    @property
+    def useful_compute_s(self) -> float:
+        """Time the *model* FLOPs alone would take at peak."""
+        return self.model_flops_per_device / PEAK_FLOPS
+
+    @property
+    def ideal_s(self) -> float:
+        """Best achievable step time: model FLOPs at peak OR the
+        unavoidable HBM traffic (params+cache once), whichever binds.
+        Decode steps are bytes-bound by nature — without this floor the
+        roofline fraction of every decode cell would be ~0 by definition."""
+        return max(self.useful_compute_s, self.model_bytes_min / HBM_BW)
+
+    @property
+    def flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (per device) — compiled-compute usefulness."""
+        if self.flops_per_device <= 0:
+            return 0.0
+        return self.model_flops_per_device / self.flops_per_device
+
+    @property
+    def roofline_fraction(self) -> float:
+        """ideal-time / bound-time — the §Perf score for this cell."""
+        if self.bound_s <= 0:
+            return 0.0
+        return min(1.0, self.ideal_s / self.bound_s)
+
+    def to_json(self) -> Dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "wire_bytes_per_device": self.wire_bytes_per_device,
+            "model_flops_total": self.model_flops_total,
+            "model_flops_per_device": self.model_flops_per_device,
+            "model_bytes_min": self.model_bytes_min,
+            "ideal_s": self.ideal_s,
+            "flops_ratio": self.flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "n_chips": self.n_chips,
+            "collectives": self.collective_detail,
+        }
+
+
+_INSTR_RE = re.compile(r"%(\S+?) = (\S+?) ")
+_DOT_RE = re.compile(
+    r"%\S+ = (\w+)\[([0-9,]*)\]\S* dot\(%(\S+?), %(\S+?)\),.*?"
+    r"lhs_contracting_dims=\{([0-9,]*)\}"
+)
+
+
+def parse_dot_flops(hlo_text: str) -> float:
+    """Per-device matmul FLOPs parsed from the optimized HLO.
+
+    ``cost_analysis()['flops']`` systematically undercounts on the CPU
+    pipeline (fusion accounting), so the compute roofline term uses
+    ``max(cost_flops, dot_flops)``. For each ``dot``:
+    flops = 2 · prod(result dims) · prod(lhs contracting dim sizes).
+    """
+    # Shape table: instruction name → dims.
+    shapes: Dict[str, Tuple[int, ...]] = {}
+    for m in re.finditer(r"%(\S+?) = \w+\[([0-9,]*)\]", hlo_text):
+        dims = tuple(int(d) for d in m.group(2).split(",") if d)
+        shapes[m.group(1)] = dims
+    total = 0.0
+    for m in _DOT_RE.finditer(hlo_text):
+        _, result_dims, lhs, _rhs, contracting = m.groups()
+        rdims = [int(d) for d in result_dims.split(",") if d]
+        lhs_shape = shapes.get(lhs)
+        if lhs_shape is None:
+            continue
+        k = 1
+        for c in contracting.split(","):
+            if c and int(c) < len(lhs_shape):
+                k *= lhs_shape[int(c)]
+        out = 1
+        for d in rdims:
+            out *= d
+        total += 2.0 * out * k
+    return total
+
+
+def roofline_terms(
+    *,
+    cost: Dict[str, float],
+    hlo_text: str,
+    n_chips: int,
+    model_flops_total: float,
+    model_bytes_min: float = 0.0,
+) -> RooflineTerms:
+    from repro.roofline.hlo import analyze_hlo
+
+    hc = analyze_hlo(hlo_text)
+    # Trip-count-aware parsed costs vs cost_analysis (which counts loop
+    # bodies once): take the max of each.
+    flops = max(float(cost.get("flops", 0.0)), hc.dot_flops)
+    bytes_accessed = max(
+        float(cost.get("bytes accessed", 0.0)), hc.write_bytes
+    )
+    wire = hc.collective_wire_bytes
+    return RooflineTerms(
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=bytes_accessed / HBM_BW,
+        collective_s=wire / ICI_BW_PER_CHIP,
+        flops_per_device=flops,
+        bytes_per_device=bytes_accessed,
+        wire_bytes_per_device=wire,
+        model_flops_total=model_flops_total,
+        model_bytes_min=model_bytes_min,
+        n_chips=n_chips,
+        collective_detail=hc.collective_detail,
+    )
+
+
+def model_bytes_min(cfg, shape, n_chips: int) -> float:
+    """Unavoidable per-device HBM bytes per step (roofline ideal floor).
+
+    decode: read active params (bf16) + the full KV/SSM cache once;
+    prefill: params + write the cache;
+    train: read params + opt state, write params + opt state (fp32 AdamW).
+    Activation traffic is excluded (it is the optimisable part).
+    """
+    n_active = cfg.active_param_count()
+    cache = _cache_bytes(cfg, shape)
+    if shape.kind == "decode":
+        total = 2.0 * n_active + cache
+    elif shape.kind == "prefill":
+        total = 2.0 * n_active + cache
+    else:  # train: p,m,v read+write in fp32 + grads
+        total = (4.0 * 2 + 4.0 * 2 + 4.0 * 2 + 4.0) * cfg.param_count()
+    return total / n_chips
+
+
+def _cache_bytes(cfg, shape) -> float:
+    """Total KV/SSM cache bytes for this shape (bf16 KV, f32 SSM state)."""
+    b, t = shape.global_batch, shape.seq_len
+    total = 0.0
+    pattern = cfg.layer_pattern()
+    per_period_attn = sum(1 for m, _ in pattern if m == "attn")
+    per_period_mamba = sum(1 for m, _ in pattern if m == "mamba")
+    n_attn = cfg.n_periods * per_period_attn
+    n_mamba = cfg.n_periods * per_period_mamba
+    if cfg.family == "encdec":
+        n_attn = cfg.n_layers * 2  # self + cross
+    if n_attn:
+        total += n_attn * b * t * cfg.n_kv_heads * cfg.head_dim * 2 * 2
+    if n_mamba:
+        total += n_mamba * b * (
+            cfg.ssm_nheads * cfg.ssm_headdim * cfg.ssm_state * 4
+            + (cfg.ssm_conv - 1) * (cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state) * 4
+        )
+    return total
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D (serve fwd)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence.
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,228 @@
+"""Trip-count-aware HLO cost model.
+
+XLA's ``cost_analysis()`` (and any naive text scan) counts a while-loop
+body ONCE — but our models scan over layers, so the dominant dots and the
+FSDP all-gathers live inside a loop executed ``n_periods`` times. This
+module parses the optimized HLO into its computations, builds the
+call-graph multipliers (while ``body=%region`` × ``known_trip_count``,
+fusion ``calls=`` × 1), and then accounts:
+
+  * matmul FLOPs      — 2 · prod(result) · prod(contracting dims), × trips;
+  * HBM bytes         — result bytes of every materialising instruction
+                        (entry + loop regions; fusion internals excluded),
+                        × trips — a write-once proxy for buffer traffic;
+  * collective bytes  — per-op result bytes × ring wire factor, × trips.
+
+All quantities are per-device (the HLO is the SPMD-partitioned module).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COMP_START = re.compile(r"^(?:ENTRY )?%([\w\.\-]+) \(.*\) -> .* \{$")
+_WHILE_RE = re.compile(
+    r"while\(.*?condition=%([\w\.\-]+), body=%([\w\.\-]+)"
+)
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%([\w\.\-]+)")
+_DOT_RE = re.compile(
+    r"= (\w+)\[([0-9,]*)\]\S* dot\(%([\w\.\-]+), %([\w\.\-]+)\)(.*)$"
+)
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_RESULT_RE = re.compile(r"= (?:\()?(\w+)\[([0-9,]*)\]")
+_NAME_RE = re.compile(r"^(?:ROOT )?%([\w\.\-]+) =")
+_COLL_RE = re.compile(
+    r"= ((?:\([^)]*\))|(?:\w+\[[0-9,]*\]\S*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+_GROUPS_PAIR_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+_WIRE_FACTOR = {
+    "all-gather": lambda n: (n - 1) / n,
+    "all-reduce": lambda n: 2 * (n - 1) / n,
+    "reduce-scatter": lambda n: float(n - 1),
+    "all-to-all": lambda n: (n - 1) / n,
+    "collective-permute": lambda n: 1.0,
+}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in re.findall(r"(\w+)\[([0-9,]*)\]", text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        size = _DTYPE_BYTES[dtype]
+        for d in dims.split(","):
+            if d:
+                size *= int(d)
+        total += size
+    return total
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    lines: List[str]
+    called_as_fusion: bool = False
+
+
+@dataclasses.dataclass
+class HloCost:
+    dot_flops: float
+    write_bytes: float
+    collective_wire_bytes: float
+    collective_detail: Dict[str, Dict[str, float]]
+
+
+def _split_computations(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        m = _COMP_START.match(line.strip()) if stripped.endswith("{") else None
+        if m and not line.startswith(" "):
+            current = Computation(name=m.group(1), lines=[])
+            comps[current.name] = current
+            continue
+        if stripped == "}":
+            current = None
+            continue
+        if current is not None and stripped:
+            current.lines.append(stripped)
+    return comps
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps = _split_computations(text)
+
+    # Call graph: (caller, callee, multiplier).
+    multipliers: Dict[str, float] = {}
+    entry = None
+    for name, comp in comps.items():
+        for line in comp.lines:
+            for callee in _CALLS_RE.findall(line):
+                if callee in comps:
+                    comps[callee].called_as_fusion = True
+    # Entry = the computation never referenced as while body/cond or fusion.
+    referenced = set()
+    edges: List[Tuple[str, str, float]] = []
+    for name, comp in comps.items():
+        for line in comp.lines:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                tm = _TRIP_RE.search(line)
+                trips = float(tm.group(1)) if tm else 1.0
+                for callee in (cond, body):
+                    if callee in comps:
+                        edges.append((name, callee, trips))
+                        referenced.add(callee)
+            for callee in _CALLS_RE.findall(line):
+                if callee in comps:
+                    edges.append((name, callee, 1.0))
+                    referenced.add(callee)
+    roots = [n for n in comps if n not in referenced]
+
+    # Propagate multipliers from roots (DAG; cycles impossible in HLO).
+    mult: Dict[str, float] = {n: 0.0 for n in comps}
+    for r in roots:
+        mult[r] = max(mult[r], 1.0)
+    changed = True
+    iters = 0
+    while changed and iters < 200:
+        changed = False
+        iters += 1
+        for caller, callee, k in edges:
+            new = mult.get(caller, 0.0) * k
+            if new > mult.get(callee, 0.0):
+                mult[callee] = new
+                changed = True
+
+    dot_flops = 0.0
+    write_bytes = 0.0
+    wire = 0.0
+    detail: Dict[str, Dict[str, float]] = {}
+
+    for name, comp in comps.items():
+        m = mult.get(name, 0.0)
+        if m <= 0:
+            continue
+        materializes = not comp.called_as_fusion
+        for line in comp.lines:
+            dm = _DOT_RE.search(line)
+            if dm:
+                _dt, rdims, lhs, _rhs, rest = dm.groups()
+                out = 1
+                for d in rdims.split(","):
+                    if d:
+                        out *= int(d)
+                k = 1
+                cm = _LHS_CONTRACT_RE.search(rest)
+                lhs_shape = _find_shape(comp, comps, lhs)
+                if cm and lhs_shape is not None:
+                    for c in cm.group(1).split(","):
+                        if c and int(c) < len(lhs_shape):
+                            k *= lhs_shape[int(c)]
+                dot_flops += m * 2.0 * out * k
+
+            if materializes:
+                rm = _RESULT_RE.search(line)
+                if rm:
+                    write_bytes += m * _shape_bytes(line.split(" = ", 1)[1].split("(", 1)[0])
+
+            cm2 = _COLL_RE.search(line)
+            if cm2 and "-done(" not in line:
+                shape_text, kind = cm2.group(1), cm2.group(2)
+                rb = _shape_bytes(shape_text)
+                n = _group_size(line)
+                w = _WIRE_FACTOR[kind](max(2, n)) * rb
+                wire += m * w
+                d = detail.setdefault(
+                    kind, {"count": 0, "bytes": 0.0, "wire_bytes": 0.0}
+                )
+                d["count"] += m
+                d["bytes"] += m * rb
+                d["wire_bytes"] += m * w
+
+    return HloCost(
+        dot_flops=dot_flops,
+        write_bytes=write_bytes,
+        collective_wire_bytes=wire,
+        collective_detail=detail,
+    )
+
+
+def _find_shape(
+    comp: Computation, comps: Dict[str, Computation], name: str
+) -> Optional[Tuple[int, ...]]:
+    # Look for the defining line in the same computation first.
+    for line in comp.lines:
+        nm = _NAME_RE.match(line)
+        if nm and nm.group(1) == name:
+            rm = re.search(r"= (\w+)\[([0-9,]*)\]", line)
+            if rm:
+                return tuple(int(d) for d in rm.group(2).split(",") if d)
+    # Parameters: "%param_0.1 = f32[..] parameter(0)" also matches above.
+    return None
+
+
+def _group_size(line: str, default: int = 2) -> int:
+    m = _GROUPS_PAIR_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return default

@@ -1,0 +1,332 @@
+"""tAPP-scheduled serving engine (continuous batching over model replicas).
+
+The data-plane realisation of the paper's control plane:
+
+  * a **replica** = one model hosted on a device group (a mesh slice on a
+    TPU fleet; the host CPU in tests), with a fixed number of sequence
+    *slots* and a slot-batched KV cache — the tAPP *worker*;
+  * the **gateway** routes each request by its policy tag through the
+    tAPP engine against live replica state (slots in use → capacity_used,
+    health → overload, residency via worker-set labels = data locality);
+  * **continuous batching**: prefill admits a sequence into a free slot;
+    every engine tick runs ONE batched decode step per replica across all
+    active slots (fixed batch shape → no recompilation);
+  * **straggler mitigation**: tick-time EMA per replica; slow replicas
+    are reported to the watcher with saturated capacity so tAPP policies
+    route around them until they recover (the paper's ``invalidate``
+    machinery doing data-plane duty);
+  * **failure handling**: a dead replica is marked unreachable; its
+    queued work is rescheduled by the same policy evaluation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scheduler.controller import ControllerRuntime
+from repro.core.scheduler.engine import Invocation
+from repro.core.scheduler.gateway import Gateway
+from repro.core.scheduler.state import ControllerState, WorkerState
+from repro.core.scheduler.topology import DistributionPolicy
+from repro.core.scheduler.watcher import Watcher
+from repro.models.api import Model
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    model_id: str
+    tokens: np.ndarray                  # prompt [S]
+    max_new_tokens: int = 8
+    tag: Optional[str] = None
+    # lifecycle
+    state: str = "queued"               # queued | running | done | failed
+    output: List[int] = dataclasses.field(default_factory=list)
+    replica: Optional[str] = None
+    error: Optional[str] = None
+    submitted_tick: int = 0
+    finished_tick: int = 0
+
+
+@dataclasses.dataclass
+class _SlotState:
+    request: Request
+    position: int                       # next cache slot to write
+    last_token: int
+    admission: object
+
+
+class Replica:
+    """One model replica with slot-batched caches."""
+
+    def __init__(
+        self,
+        name: str,
+        cfg: ModelConfig,
+        params,
+        *,
+        zone: str = "default",
+        sets: Sequence[str] = (),
+        slots: int = 4,
+        max_len: int = 128,
+    ) -> None:
+        self.name = name
+        self.cfg = cfg
+        self.model = Model(cfg)
+        self.params = params
+        self.zone = zone
+        self.sets = frozenset(set(sets) | {cfg.name, "any"})
+        self.slots = slots
+        self.max_len = max_len
+        self.cache = self.model.init_cache(slots, max_len, enc_len=max_len)
+        self.active: Dict[int, _SlotState] = {}   # slot index -> state
+        self.alive = True
+        self._decode = jax.jit(self.model.decode)
+        self._prefill_b1 = jax.jit(
+            lambda p, b, c: self.model.prefill(p, b, c)
+        )
+        self.tick_times: List[float] = []
+
+    # -- slot management -----------------------------------------------------------
+
+    def free_slot(self) -> Optional[int]:
+        for i in range(self.slots):
+            if i not in self.active:
+                return i
+        return None
+
+    def admit(self, request: Request, admission) -> bool:
+        slot = self.free_slot()
+        if slot is None or not self.alive:
+            return False
+        prompt = jnp.asarray(request.tokens[None, :], jnp.int32)
+        small_cache = self.model.init_cache(1, self.max_len, enc_len=self.max_len)
+        batch = {"tokens": prompt}
+        if self.cfg.family == "encdec":
+            batch["frames"] = jnp.zeros(
+                (1, prompt.shape[1], self.cfg.d_model), jnp.float32
+            )
+        logits, filled = self._prefill_b1(self.params, batch, small_cache)
+        # Merge the single-sequence cache into this replica's slot.
+        self.cache = jax.tree.map(
+            lambda big, one: big.at[:, slot].set(one[:, 0]), self.cache, filled
+        )
+        first_token = int(jnp.argmax(logits[0, -1]))
+        self.active[slot] = _SlotState(
+            request=request,
+            position=len(request.tokens),
+            last_token=first_token,
+            admission=admission,
+        )
+        request.state = "running"
+        request.replica = self.name
+        request.output.append(first_token)
+        return True
+
+    # -- decode tick --------------------------------------------------------------------
+
+    def step(self) -> List[Tuple[Request, object]]:
+        """One batched decode step; returns finished (request, admission)."""
+        if not self.active or not self.alive:
+            return []
+        t0 = time.time()
+        tokens = np.zeros((self.slots,), np.int32)
+        positions = np.zeros((self.slots,), np.int32)
+        for slot, st in self.active.items():
+            tokens[slot] = st.last_token
+            positions[slot] = st.position
+        logits, self.cache = self._decode(
+            self.params, self.cache,
+            jnp.asarray(tokens), jnp.asarray(positions),
+        )
+        next_tokens = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
+        finished: List[Tuple[Request, object]] = []
+        for slot in list(self.active):
+            st = self.active[slot]
+            st.position += 1
+            st.last_token = int(next_tokens[slot])
+            st.request.output.append(st.last_token)
+            done = (
+                len(st.request.output) >= st.request.max_new_tokens
+                or st.position >= self.max_len - 1
+            )
+            if done:
+                st.request.state = "done"
+                finished.append((st.request, st.admission))
+                del self.active[slot]
+        self.tick_times.append(time.time() - t0)
+        return finished
+
+    def fail(self) -> None:
+        """Simulate a replica loss (host/ICI failure)."""
+        self.alive = False
+
+    @property
+    def load_fraction(self) -> float:
+        return len(self.active) / max(1, self.slots)
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        *,
+        distribution: DistributionPolicy = DistributionPolicy.SHARED,
+        tapp_script: Optional[str] = None,
+        straggler_factor: float = 4.0,
+        seed: int = 0,
+    ) -> None:
+        self.watcher = Watcher()
+        self.gateway = Gateway(self.watcher, distribution=distribution, seed=seed)
+        self.runtime = ControllerRuntime(self.watcher)
+        self.replicas: Dict[str, Replica] = {}
+        self.queue: List[Request] = []
+        self.done: List[Request] = []
+        self._ids = itertools.count()
+        self.tick = 0
+        self.straggler_factor = straggler_factor
+        self._ema: Dict[str, float] = {}
+        self.stragglers_flagged = 0
+        if tapp_script is not None:
+            self.watcher.load_script(tapp_script)
+
+    # -- topology -------------------------------------------------------------------
+
+    def add_controller(self, name: str, zone: str = "default") -> None:
+        self.watcher.register_controller(ControllerState(name=name, zone=zone))
+
+    def add_replica(self, replica: Replica) -> None:
+        self.replicas[replica.name] = replica
+        self.watcher.register_worker(
+            WorkerState(
+                name=replica.name,
+                zone=replica.zone,
+                sets=replica.sets,
+                capacity_slots=replica.slots,
+                resident_models=frozenset({replica.cfg.name}),
+            )
+        )
+
+    def remove_replica(self, name: str) -> None:
+        """Elastic scale-down / failure eviction."""
+        replica = self.replicas.get(name)
+        if replica is not None:
+            replica.fail()
+            for st in list(replica.active.values()):
+                st.request.state = "queued"
+                st.request.replica = None
+                st.request.output.clear()
+                self.queue.append(st.request)
+            replica.active.clear()
+        self.watcher.deregister_worker(name)
+
+    # -- requests ------------------------------------------------------------------------
+
+    def submit(
+        self,
+        model_id: str,
+        tokens: Sequence[int],
+        *,
+        tag: Optional[str] = None,
+        max_new_tokens: int = 8,
+    ) -> Request:
+        req = Request(
+            request_id=next(self._ids),
+            model_id=model_id,
+            tokens=np.asarray(tokens, np.int32),
+            max_new_tokens=max_new_tokens,
+            tag=tag,
+            submitted_tick=self.tick,
+        )
+        self.queue.append(req)
+        return req
+
+    # -- engine loop ----------------------------------------------------------------------
+
+    def step_once(self) -> None:
+        self.tick += 1
+        self._heartbeats()
+        self._admit_queued()
+        for replica in self.replicas.values():
+            finished = replica.step()
+            for request, admission in finished:
+                request.finished_tick = self.tick
+                self.runtime.complete(admission)
+                self.done.append(request)
+        self._flag_stragglers()
+
+    def run_until_done(self, max_ticks: int = 1000) -> None:
+        for _ in range(max_ticks):
+            if not self.queue and not any(
+                r.active for r in self.replicas.values()
+            ):
+                return
+            self.step_once()
+
+    # -- internals ---------------------------------------------------------------------------
+
+    def _heartbeats(self) -> None:
+        for replica in self.replicas.values():
+            if replica.name not in self.watcher.cluster.workers:
+                continue
+            self.watcher.update_worker(
+                replica.name,
+                healthy=replica.alive,
+                reachable=replica.alive,
+                capacity_used_pct=100.0 * replica.load_fraction,
+            )
+
+    def _admit_queued(self) -> None:
+        still_queued: List[Request] = []
+        for request in self.queue:
+            invocation = Invocation(
+                function=request.model_id,
+                tag=request.tag,
+                model_id=request.model_id,
+                request_id=request.request_id,
+            )
+            decision = self.gateway.route(invocation)
+            placed = False
+            if decision.scheduled and decision.worker in self.replicas:
+                replica = self.replicas[decision.worker]
+                if replica.cfg.name == request.model_id:
+                    admission = self.runtime.admit(
+                        decision.worker, decision.controller or "?"
+                    )
+                    placed = replica.admit(request, admission)
+                    if not placed:
+                        self.runtime.complete(admission)
+            if not placed:
+                request.state = "queued"
+                still_queued.append(request)
+                # Requests failed by policy (followup: fail) surface as such.
+                if decision.scheduled is False and decision.trace and (
+                    decision.trace[-1].detail.endswith("fail")
+                ):
+                    request.error = "policy-failed"
+        self.queue = still_queued
+
+    def _flag_stragglers(self) -> None:
+        for replica in self.replicas.values():
+            # Skip the first tick: it includes jit compilation, which would
+            # poison the EMA baseline (warmup exclusion).
+            if len(replica.tick_times) < 2:
+                continue
+            dt = replica.tick_times[-1]
+            ema = self._ema.get(replica.name)
+            if ema is not None and dt > self.straggler_factor * ema:
+                self.stragglers_flagged += 1
+                # Route-around: report the replica as saturated until the
+                # next healthy heartbeat shows recovered load.
+                self.watcher.update_worker(
+                    replica.name, capacity_used_pct=100.0
+                )
+            self._ema[replica.name] = (
+                dt if ema is None else 0.9 * ema + 0.1 * dt
+            )

@@ -1,0 +1,88 @@
+"""Activation-sharding context.
+
+Model code is mesh-agnostic; the launcher/dry-run wraps tracing in
+:func:`activation_sharding` so that :func:`constrain` can place
+``with_sharding_constraint`` on the hot activations (residual-stream scan
+carry, logits) with the right axis names for whichever mesh is in use.
+Outside the context (CPU unit tests) ``constrain`` is a no-op.
+
+The key constraint is **sequence parallelism on the residual stream**: the
+scan carry ``x [B, S, d]`` is sharded over the TP axis along S between
+layers, which cuts stored-activation memory (and the remat carry) by the
+TP degree; GSPMD inserts the gather where attention needs the full
+sequence.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_STATE = threading.local()
+
+AxisRef = Union[None, str, Tuple[str, ...]]  # "dp" / "tp" resolved below
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, dp_axes: Tuple[str, ...], tp_axis,
+                        vocab_axis=None):
+    """``vocab_axis`` defaults to ``tp_axis``; under tp_scope="vocab" the
+    layer carries see tp=None while logits still shard over the model axis."""
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = (mesh, tuple(dp_axes), tp_axis,
+                  vocab_axis if vocab_axis is not None else tp_axis)
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def _resolve(entry, dp_axes, tp_axis, vocab_axis):
+    if entry == "dp":
+        return dp_axes
+    if entry == "tp":
+        return tp_axis
+    if entry == "vocab":
+        return vocab_axis
+    return entry
+
+
+def current_dp_size() -> int:
+    """Product of the data-parallel axis sizes (1 outside a context)."""
+    ctx = getattr(_STATE, "ctx", None)
+    if ctx is None:
+        return 1
+    mesh, dp_axes = ctx[0], ctx[1]
+    size = 1
+    for a in dp_axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def constrain(x: jax.Array, spec_kinds: Sequence) -> jax.Array:
+    """Apply a sharding constraint if a context is active and divisible.
+
+    ``spec_kinds`` entries: "dp", "tp", None, or explicit axis names.
+    Entries that do not evenly divide their dim are dropped.
+    """
+    ctx = getattr(_STATE, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, dp_axes, tp_axis, vocab_axis = ctx
+    entries = []
+    for dim, kind in zip(x.shape, spec_kinds):
+        axes = _resolve(kind, dp_axes, tp_axis, vocab_axis)
+        if axes is None:
+            entries.append(None)
+            continue
+        names = (axes,) if isinstance(axes, str) else tuple(axes)
+        size = 1
+        for a in names:
+            size *= mesh.shape[a]
+        entries.append(axes if dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, P(*entries))
+    )

@@ -1,0 +1,203 @@
+"""Per-architecture smoke tests (reduced same-family configs, CPU).
+
+For each of the 10 assigned archs: instantiate the reduced config, run one
+forward/loss + one train step, assert output shapes and no NaNs; check
+prefill+decode consistency against the full forward.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, smoke_config
+from repro.models import Model, SHAPES, shape_applicable
+from repro.models import encdec as ed_mod
+from repro.models import lm as lm_mod
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, bsz=2, seq=16, rng=RNG):
+    toks = jax.random.randint(rng, (bsz, seq), 0, cfg.vocab_size)
+    batch = {"tokens": toks}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            rng, (bsz, seq, cfg.d_model), jnp.float32
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+class TestArchSmoke:
+    def test_loss_finite_and_shapes(self, arch):
+        cfg = smoke_config(arch)
+        model = Model(cfg)
+        params = model.init_params(RNG)
+        batch = _batch(cfg)
+        loss, metrics = model.loss(params, batch)
+        assert loss.shape == ()
+        assert bool(jnp.isfinite(loss))
+        assert bool(jnp.isfinite(metrics["ce"]))
+
+    def test_one_train_step(self, arch):
+        cfg = smoke_config(arch)
+        model = Model(cfg)
+        params = model.init_params(RNG)
+        opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+        opt = adamw_init(opt_cfg, params)
+        batch = _batch(cfg)
+
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch), has_aux=True
+        )(params)
+        new_params, new_opt, metrics = adamw_update(opt_cfg, grads, opt, params)
+        assert bool(jnp.isfinite(metrics["grad_norm"]))
+        # params actually changed
+        delta = jax.tree.reduce(
+            lambda a, leaf: a + float(jnp.sum(jnp.abs(leaf))),
+            jax.tree.map(
+                lambda a, b: (a.astype(jnp.float32) - b.astype(jnp.float32)),
+                new_params, params,
+            ),
+            0.0,
+        )
+        assert delta > 0.0
+        # no NaNs introduced
+        for leaf in jax.tree.leaves(new_params):
+            assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32))))
+
+    def test_decode_matches_forward(self, arch):
+        # capacity_factor high enough that no token is dropped: Switch-style
+        # capacity drops differ between batched prefill routing and
+        # single-token decode routing by design.
+        cfg = dataclasses.replace(
+            smoke_config(arch), compute_dtype="float32",
+            moe_capacity_factor=16.0,
+        )
+        model = Model(cfg)
+        params = model.init_params(RNG)
+        bsz, s = 2, 12
+        toks = jax.random.randint(RNG, (bsz, s + 1), 0, cfg.vocab_size)
+        if cfg.family == "encdec":
+            frames = jax.random.normal(RNG, (bsz, s, cfg.d_model), jnp.float32)
+            enc = ed_mod.encode(cfg, params, frames)
+            full = ed_mod.decode_full(cfg, params, toks, enc)[:, -1, :]
+            cache = model.init_cache(bsz, 32, enc_len=s)
+            _, cache = model.prefill(
+                params, {"frames": frames, "tokens": toks[:, :s]}, cache
+            )
+        else:
+            logits, _ = lm_mod.forward(cfg, params, toks)
+            full = logits[:, -1, :]
+            cache = model.init_cache(bsz, 32)
+            _, cache = model.prefill(params, {"tokens": toks[:, :s]}, cache)
+        step, _ = model.decode(
+            params, cache, toks[:, s], jnp.full((bsz,), s, jnp.int32)
+        )
+        err = float(jnp.max(jnp.abs(full - step[:, 0, :])))
+        scale = float(jnp.max(jnp.abs(full))) + 1e-9
+        assert err / scale < 1e-4, (arch, err, scale)
+
+    def test_shape_applicability(self, arch):
+        cfg = get_config(arch)
+        long_ok = shape_applicable(cfg, SHAPES["long_500k"])
+        assert long_ok == (cfg.family in ("ssm", "hybrid"))
+        for name in ("train_4k", "prefill_32k", "decode_32k"):
+            assert shape_applicable(cfg, SHAPES[name])
+
+
+class TestParamAccounting:
+    @pytest.mark.parametrize("arch", ARCH_IDS)
+    def test_param_breakdown_matches_init(self, arch):
+        cfg = smoke_config(arch)
+        model = Model(cfg)
+        params = model.init_params(RNG)
+        actual = sum(leaf.size for leaf in jax.tree.leaves(params))
+        expected = cfg.param_count()
+        # breakdown is analytic; allow small bookkeeping slack (pos tables,
+        # per-layer norm extras) but catch order-of-magnitude errors.
+        assert abs(actual - expected) / expected < 0.35, (arch, actual, expected)
+
+    def test_full_config_param_counts(self):
+        # Billions-scale sanity vs the assignment's named sizes.
+        expect = {
+            "qwen1_5_0_5b": 0.46, "nemotron_4_15b": 15.6, "qwen3_14b": 14.8,
+            "smollm_135m": 0.135, "chameleon_34b": 34.3,
+            "jamba_1_5_large_398b": 398.0, "whisper_small": 0.29,
+            "grok_1_314b": 316.0, "phi3_5_moe_42b": 41.9, "mamba2_2_7b": 2.7,
+        }
+        for arch, billions in expect.items():
+            n = get_config(arch).param_count() / 1e9
+            assert abs(n - billions) / billions < 0.10, (arch, n)
+
+
+class TestMoEDispatch:
+    def test_moe_output_is_gate_weighted_combination(self):
+        from repro.models.layers.moe import apply_moe, init_moe
+
+        cfg = smoke_config("phi3_5_moe_42b")
+        params = init_moe(cfg, RNG)
+        x = jax.random.normal(RNG, (4, 8, cfg.d_model), jnp.float32)
+        out, aux = apply_moe(cfg, params, x)
+        assert out.shape == x.shape
+        assert bool(jnp.all(jnp.isfinite(out)))
+        assert float(aux) > 0.0
+
+    def test_moe_capacity_drops_are_bounded(self):
+        from repro.models.layers.moe import moe_capacity
+
+        cfg = smoke_config("grok_1_314b")
+        c = moe_capacity(cfg, 1024)
+        assert c >= 1024 * cfg.moe_top_k // cfg.moe_experts
+
+
+class TestSSD:
+    def test_chunked_matches_quadratic_reference(self):
+        import numpy as np
+
+        from repro.kernels.ref import ref_ssd
+        from repro.models.layers.ssm import ssd_chunked
+
+        k = jax.random.PRNGKey(3)
+        b, s, h, p, g, n = 2, 64, 4, 8, 2, 16
+        ks = jax.random.split(k, 5)
+        x = jax.random.normal(ks[0], (b, s, h, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+        a = -jnp.exp(jax.random.normal(ks[2], (h,)))
+        B_ = jax.random.normal(ks[3], (b, s, g, n))
+        C_ = jax.random.normal(ks[4], (b, s, g, n))
+        y, _ = ssd_chunked(x, dt, a, B_, C_, chunk=16)
+        xdt = (x * dt[..., None]).transpose(0, 2, 1, 3)
+        da = (dt * a[None, None, :]).transpose(0, 2, 1)
+        y_ref = ref_ssd(
+            xdt, da, B_.transpose(0, 2, 1, 3), C_.transpose(0, 2, 1, 3)
+        ).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_state_carry_across_calls(self):
+        from repro.models.layers.ssm import ssd_chunked
+
+        k = jax.random.PRNGKey(4)
+        b, s, h, p, n = 1, 32, 2, 4, 8
+        ks = jax.random.split(k, 5)
+        x = jax.random.normal(ks[0], (b, s, h, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+        a = -jnp.exp(jax.random.normal(ks[2], (h,)))
+        B_ = jax.random.normal(ks[3], (b, s, 1, n))
+        C_ = jax.random.normal(ks[4], (b, s, 1, n))
+        y_full, st_full = ssd_chunked(x, dt, a, B_, C_, chunk=8)
+        h1 = s // 2
+        y1, st1 = ssd_chunked(x[:, :h1], dt[:, :h1], a, B_[:, :h1], C_[:, :h1], 8)
+        y2, st2 = ssd_chunked(
+            x[:, h1:], dt[:, h1:], a, B_[:, h1:], C_[:, h1:], 8,
+            initial_state=st1,
+        )
+        import numpy as np
+
+        np.testing.assert_allclose(np.asarray(y_full[:, h1:]), np.asarray(y2),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(st_full), np.asarray(st2),
+                                   rtol=1e-4, atol=1e-4)

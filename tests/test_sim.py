@@ -1,0 +1,92 @@
+"""Simulator reproduction of the paper's evaluation (§5)."""
+import statistics
+
+import pytest
+
+from repro.core.sim.scenarios import run_benchmark, run_mqtt_case
+
+
+class TestQualitativeMQTT:
+    """§5.1: vanilla fails every invocation in the unlucky deployment;
+    tAPP succeeds in every deployment."""
+
+    def test_vanilla_fails_unlucky_deployment(self):
+        results = run_mqtt_case(use_tapp=False, minutes=10, cloud_first=True)
+        assert results["data-collection"].failure_rate == 1.0
+
+    def test_vanilla_ok_lucky_deployment(self):
+        results = run_mqtt_case(use_tapp=False, minutes=10, cloud_first=False)
+        assert results["data-collection"].failure_rate == 0.0
+
+    def test_tapp_succeeds_both_deployments(self):
+        for cloud_first in (True, False):
+            results = run_mqtt_case(use_tapp=True, minutes=10,
+                                    cloud_first=cloud_first)
+            for fn, res in results.items():
+                assert res.failure_rate == 0.0, (fn, cloud_first)
+
+    def test_tapp_pins_functions_to_zones(self):
+        results = run_mqtt_case(use_tapp=True, minutes=10)
+        dc_workers = {r.worker for r in results["data-collection"].records}
+        fa_workers = {r.worker for r in results["feature-analysis"].records}
+        assert dc_workers == {"W_1"}   # MQTT tag → edge only
+        assert fa_workers == {"W_2"}   # Cloud tag → cloud only
+
+
+def _avg_over_deployments(test, scheduler, tagged=False, n=6):
+    means, stds = [], []
+    for seed in range(n):
+        _, res = run_benchmark(test, scheduler=scheduler, tagged=tagged,
+                               seed=seed)
+        s = res.summary()
+        means.append(s["mean"])
+        stds.append(s["std"])
+    return statistics.fmean(means), statistics.pstdev(means)
+
+
+class TestOverheadTests:
+    """§5.4.1: topology-aware scheduling does not hurt — and the default
+    policy outperforms vanilla on compute-style functions."""
+
+    def test_no_failures(self):
+        for sched in ("vanilla", "default", "isolated", "shared"):
+            _, res = run_benchmark("hellojs", scheduler=sched, seed=0)
+            assert res.failure_rate == 0.0
+
+    def test_default_policy_not_worse_than_vanilla(self):
+        v, _ = _avg_over_deployments("hellojs", "vanilla")
+        d, _ = _avg_over_deployments("hellojs", "default")
+        assert d <= v * 1.05
+
+    def test_matrixmult_default_beats_vanilla(self):
+        v, _ = _avg_over_deployments("matrixMult", "vanilla")
+        d, _ = _avg_over_deployments("matrixMult", "default")
+        assert d < v
+
+
+class TestDataLocality:
+    """§5.4.2: every policy beats vanilla; tagged tAPP is the most stable."""
+
+    def test_policies_beat_vanilla_on_heavy_query(self):
+        v, _ = _avg_over_deployments("data-locality", "vanilla")
+        for sched in ("default", "min_memory", "isolated", "shared"):
+            m, _ = _avg_over_deployments("data-locality", sched)
+            assert m < v, sched
+
+    def test_vanilla_has_the_worst_deployment_variance(self):
+        _, v_spread = _avg_over_deployments("data-locality", "vanilla")
+        _, t_spread = _avg_over_deployments("data-locality", "shared", tagged=True)
+        assert t_spread < v_spread / 3
+
+    def test_tagged_beats_untagged_shared_on_heavy_query(self):
+        untagged, _ = _avg_over_deployments("data-locality", "shared")
+        tagged, _ = _avg_over_deployments("data-locality", "shared", tagged=True)
+        assert tagged < untagged
+
+    def test_tagged_is_stabler_on_light_query(self):
+        # mongoDB: tagged is "a bit slower, but more stable" (paper wording).
+        for seed in (0, 1):
+            _, untagged = run_benchmark("mongoDB", scheduler="shared", seed=seed)
+            _, tagged = run_benchmark("mongoDB", scheduler="shared",
+                                      tagged=True, seed=seed)
+            assert tagged.summary()["std"] <= untagged.summary()["std"]

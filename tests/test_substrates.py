@@ -1,0 +1,264 @@
+"""Optimizer, data pipeline, checkpointing, sharding specs."""
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.data.pipeline import DataConfig, SyntheticTokens
+from repro.optim.adamw import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    lr_at,
+)
+from repro.optim.compression import ef_compress, ef_init, int8_roundtrip
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer
+# ---------------------------------------------------------------------------
+
+
+class TestAdamW:
+    def _quadratic(self):
+        target = jnp.asarray([1.5, -2.0, 0.5])
+        params = {"w": jnp.zeros(3)}
+
+        def loss(p):
+            return jnp.sum((p["w"] - target) ** 2)
+
+        return params, loss, target
+
+    def test_converges_on_quadratic(self):
+        params, loss, target = self._quadratic()
+        cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1,
+                          total_steps=300, schedule="constant")
+        state = adamw_init(cfg, params)
+        for _ in range(300):
+            grads = jax.grad(loss)(params)
+            params, state, _ = adamw_update(cfg, grads, state, params)
+        assert float(loss(params)) < 1e-3
+
+    def test_int8_moments_track_f32(self):
+        params, loss, _ = self._quadratic()
+        cfg32 = AdamWConfig(lr=0.05, weight_decay=0.0, warmup_steps=1,
+                            total_steps=100, schedule="constant")
+        cfg8 = AdamWConfig(lr=0.05, weight_decay=0.0, warmup_steps=1,
+                           total_steps=100, schedule="constant",
+                           moment_dtype="int8")
+        p32, s32 = dict(params), adamw_init(cfg32, params)
+        p8, s8 = dict(params), adamw_init(cfg8, params)
+        for _ in range(100):
+            g32 = jax.grad(loss)(p32)
+            p32, s32, _ = adamw_update(cfg32, g32, s32, p32)
+            g8 = jax.grad(loss)(p8)
+            p8, s8, _ = adamw_update(cfg8, g8, s8, p8)
+        assert float(loss(p8)) < 1e-2
+        np.testing.assert_allclose(
+            np.asarray(p8["w"]), np.asarray(p32["w"]), atol=0.05
+        )
+
+    def test_grad_clip(self):
+        tree = {"a": jnp.full((4,), 100.0)}
+        clipped, norm = clip_by_global_norm(tree, 1.0)
+        assert float(norm) == pytest.approx(200.0)
+        assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+    def test_schedule_shapes(self):
+        cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          min_lr_ratio=0.1)
+        assert float(lr_at(cfg, jnp.asarray(0))) < 0.2
+        assert float(lr_at(cfg, jnp.asarray(10))) == pytest.approx(1.0, rel=0.15)
+        assert float(lr_at(cfg, jnp.asarray(99))) == pytest.approx(0.1, rel=0.15)
+
+    def test_weight_decay_shrinks(self):
+        params = {"w": jnp.full((4,), 10.0)}
+        cfg = AdamWConfig(lr=0.1, weight_decay=0.5, warmup_steps=1,
+                          schedule="constant")
+        state = adamw_init(cfg, params)
+        grads = {"w": jnp.zeros(4)}
+        new, _, _ = adamw_update(cfg, grads, state, params)
+        assert float(new["w"][0]) < 10.0
+
+
+class TestCompression:
+    @given(st.integers(min_value=1, max_value=5000))
+    @settings(max_examples=20, deadline=None)
+    def test_int8_roundtrip_error_bounded(self, n):
+        x = jax.random.normal(jax.random.PRNGKey(n), (n,))
+        out = int8_roundtrip({"g": x})["g"]
+        blockmax = float(jnp.max(jnp.abs(x)))
+        assert float(jnp.max(jnp.abs(out - x))) <= blockmax / 127.0 + 1e-6
+
+    def test_error_feedback_reduces_bias(self):
+        g = jnp.asarray([1e-4] * 512)  # tiny uniform gradient
+        state = ef_init({"g": g})
+        total = jnp.zeros_like(g)
+        for _ in range(50):
+            compressed, state = ef_compress({"g": g}, state)
+            total = total + compressed["g"]
+        # with EF, the accumulated compressed signal tracks 50*g
+        np.testing.assert_allclose(
+            np.asarray(total), np.asarray(50 * g), rtol=0.05
+        )
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+
+class TestData:
+    def cfg(self, **kw):
+        return DataConfig(vocab_size=997, global_batch=8, seq_len=64, **kw)
+
+    def test_deterministic_by_step(self):
+        p = SyntheticTokens(self.cfg())
+        a = p.batch_at(5)
+        b = p.batch_at(5)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+        c = p.batch_at(6)
+        assert not np.array_equal(a["tokens"], c["tokens"])
+
+    def test_host_sharding_partitions_batch(self):
+        p = SyntheticTokens(self.cfg())
+        full = p.batch_at(3)["tokens"]
+        parts = [
+            p.batch_at(3, host_index=i, host_count=4)["tokens"]
+            for i in range(4)
+        ]
+        np.testing.assert_array_equal(np.concatenate(parts, 0), full)
+
+    def test_tokens_in_vocab(self):
+        p = SyntheticTokens(self.cfg())
+        t = p.batch_at(0)["tokens"]
+        assert t.min() >= 0 and t.max() < 997
+
+    def test_frames_emitted(self):
+        p = SyntheticTokens(self.cfg(frames_dim=32))
+        b = p.batch_at(0)
+        assert b["frames"].shape == (8, 64, 32)
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+
+class TestCheckpointer:
+    def tree(self):
+        return {
+            "params": {"w": jnp.arange(12.0).reshape(3, 4)},
+            "step": jnp.asarray(7),
+        }
+
+    def test_roundtrip(self, tmp_path):
+        ck = Checkpointer(str(tmp_path))
+        tree = self.tree()
+        ck.save(10, tree, extra={"note": "hi"})
+        restored, step, extra = ck.restore(tree)
+        assert step == 10 and extra["note"] == "hi"
+        np.testing.assert_array_equal(
+            np.asarray(restored["params"]["w"]), np.asarray(tree["params"]["w"])
+        )
+
+    def test_latest_and_gc(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), keep_last=2)
+        tree = self.tree()
+        for s in (1, 2, 3, 4):
+            ck.save(s, tree)
+        assert ck.latest_step() == 4
+        kept = sorted(p.name for p in tmp_path.glob("step_*") if p.is_dir())
+        assert len(kept) == 2
+
+    def test_uncommitted_invisible(self, tmp_path):
+        ck = Checkpointer(str(tmp_path))
+        ck.save(1, self.tree())
+        # simulate crash: directory exists but marker removed
+        (tmp_path / "step_000000001.COMMITTED").unlink()
+        assert ck.latest_step() is None
+
+    def test_async_save(self, tmp_path):
+        ck = Checkpointer(str(tmp_path))
+        ck.save(2, self.tree(), blocking=False)
+        ck.wait()
+        assert ck.latest_step() == 2
+
+    def test_restore_specific_step(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), keep_last=5)
+        tree = self.tree()
+        ck.save(1, tree)
+        tree2 = {"params": {"w": tree["params"]["w"] * 2}, "step": jnp.asarray(8)}
+        ck.save(2, tree2)
+        restored, step, _ = ck.restore(tree, step=1)
+        np.testing.assert_array_equal(
+            np.asarray(restored["params"]["w"]), np.asarray(tree["params"]["w"])
+        )
+
+
+# ---------------------------------------------------------------------------
+# Sharding specs
+# ---------------------------------------------------------------------------
+
+
+class TestShardingSpecs:
+    def test_sanitize_drops_nondivisible(self):
+        from jax.sharding import PartitionSpec as P
+
+        from repro.launch.mesh import make_debug_mesh
+        from repro.sharding.specs import sanitize_spec
+
+        mesh = make_debug_mesh((1, 1), ("data", "model"))
+        spec = sanitize_spec(P("data", "model"), (5, 7), mesh)
+        # axis size 1 divides everything
+        assert spec == P("data", "model")
+
+    @given(
+        dims=st.tuples(st.integers(1, 64), st.integers(1, 64)),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_sanitize_always_divides(self, dims):
+        from jax.sharding import PartitionSpec as P
+
+        from repro.launch.mesh import make_debug_mesh
+        from repro.sharding.specs import _axis_size, sanitize_spec
+
+        mesh = make_debug_mesh((1, 1), ("data", "model"))
+        spec = sanitize_spec(P("data", "model"), dims, mesh)
+        for dim, axes in zip(dims, list(spec)):
+            if axes is not None:
+                assert dim % _axis_size(mesh, axes) == 0
+
+    def test_param_spec_rules(self):
+        from jax.sharding import PartitionSpec as P
+
+        from repro.configs import get_config
+        from repro.launch.mesh import make_debug_mesh
+        from repro.sharding.specs import ShardingPolicy, param_spec
+
+        cfg = get_config("qwen3_14b")
+        mesh = make_debug_mesh((1, 1), ("data", "model"))
+        policy = ShardingPolicy().for_mesh(mesh)
+        # embed table vocab-parallel
+        spec = param_spec(cfg, policy, mesh, ("embed", "table"), (151936, 5120))
+        assert spec[0] == "model"
+        # column parallel
+        spec = param_spec(cfg, policy, mesh, ("blocks", "pos0", "attn", "wq"),
+                          (40, 5120, 5120))
+        assert spec == P(None, ("data",), "model")
+        # row parallel
+        spec = param_spec(cfg, policy, mesh, ("blocks", "pos0", "attn", "wo"),
+                          (40, 5120, 5120))
+        assert spec == P(None, "model", ("data",))
+        # norm scales replicated
+        spec = param_spec(cfg, policy, mesh, ("final_norm", "scale"), (5120,))
+        assert spec == P(None)

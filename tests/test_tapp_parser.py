@@ -1,0 +1,182 @@
+"""tAPP language: parser, serializer, validator."""
+import pytest
+
+from repro.core.tapp import (
+    DEFAULT_TAG,
+    CapacityUsed,
+    FollowupKind,
+    MaxConcurrentInvocations,
+    Overload,
+    Strategy,
+    TappParseError,
+    TopologyTolerance,
+    WorkerRef,
+    WorkerSet,
+    invalidate_from_text,
+    parse_tapp,
+    script_to_yaml,
+    validate_script,
+)
+
+FIG5 = """
+- default:
+  - workers:
+    - set:
+    strategy: platform
+    invalidate: overload
+- couchdb_query:
+  - workers:
+    - wrk: DB_worker1
+    - wrk: DB_worker2
+    strategy: random
+    invalidate: capacity_used 50%
+  - workers:
+    - wrk: near_DB_worker1
+    - wrk: near_DB_worker2
+    strategy: best_first
+    invalidate: max_concurrent_invocations 100
+  followup: fail
+"""
+
+FIG6 = """
+- critical:
+  - controller: LocalCtl_1
+    workers:
+    - set: edge
+    strategy: random
+  followup: fail
+- machine_learning:
+  - controller: CloudCtl
+    workers:
+    - set: cloud
+    topology_tolerance: same
+  followup: default
+- default:
+  - controller: LocalCtl_1
+    workers:
+    - set: internal
+      strategy: random
+    - set: cloud
+      strategy: random
+    strategy: best_first
+  - controller: LocalCtl_2
+    workers:
+    - set: internal
+      strategy: random
+    - set: cloud
+      strategy: random
+    strategy: best_first
+  strategy: random
+"""
+
+
+class TestParse:
+    def test_fig5(self):
+        script = parse_tapp(FIG5)
+        assert script.tag_names() == ["default", "couchdb_query"]
+        cq = script.get("couchdb_query")
+        assert len(cq.blocks) == 2
+        b0, b1 = cq.blocks
+        assert [w.label for w in b0.workers] == ["DB_worker1", "DB_worker2"]
+        assert b0.strategy is Strategy.RANDOM
+        assert b0.invalidate == CapacityUsed(50.0)
+        assert b1.strategy is Strategy.BEST_FIRST
+        assert b1.invalidate == MaxConcurrentInvocations(100)
+        assert cq.effective_followup is FollowupKind.FAIL
+
+    def test_fig6(self):
+        script = parse_tapp(FIG6)
+        crit = script.get("critical")
+        assert crit.blocks[0].controller.label == "LocalCtl_1"
+        assert crit.blocks[0].controller.topology_tolerance is TopologyTolerance.ALL
+        ml = script.get("machine_learning")
+        assert ml.blocks[0].controller.topology_tolerance is TopologyTolerance.SAME
+        assert ml.effective_followup is FollowupKind.DEFAULT
+        default = script.default
+        assert default.effective_strategy is Strategy.RANDOM
+        # default tag followup pinned to fail
+        assert default.effective_followup is FollowupKind.FAIL
+        # two blocks, each with two sets carrying inner strategies
+        sets = default.blocks[0].workers
+        assert all(isinstance(w, WorkerSet) for w in sets)
+        assert sets[0].strategy is Strategy.RANDOM
+
+    def test_blank_set_matches_all(self):
+        script = parse_tapp("- t:\n  - workers:\n    - set:\n")
+        ws = script.get("t").blocks[0].workers[0]
+        assert isinstance(ws, WorkerSet) and ws.label is None
+
+    def test_best_first_spelling_variant(self):
+        # The paper's Fig. 8 writes 'best-first'.
+        script = parse_tapp(
+            "- t:\n  - workers:\n    - wrk: a\n    strategy: best-first\n"
+        )
+        assert script.get("t").blocks[0].strategy is Strategy.BEST_FIRST
+
+    def test_default_effective_defaults(self):
+        script = parse_tapp("- t:\n  - workers:\n    - wrk: a\n")
+        tag = script.get("t")
+        assert tag.effective_strategy is Strategy.BEST_FIRST
+        assert tag.effective_followup is FollowupKind.DEFAULT
+
+
+class TestParseErrors:
+    @pytest.mark.parametrize(
+        "text",
+        [
+            "- t:\n  - workers:\n    - wrk: a\n    strategy: bogus\n",
+            "- t:\n  - workers:\n    - wrk: a\n    invalidate: sometimes\n",
+            "- t:\n  - workers:\n    - wrk: a\n  followup: retry\n",
+            "- t:\n  - strategy: random\n",                      # no workers key
+            "- t: []\n",                                          # no blocks
+            "- t:\n  - workers:\n    - wrk: a\n    - set: b\n",   # mixed wrk/set
+            "- t:\n  - workers:\n    - set: x\n    topology_tolerance: same\n",
+            "- t:\n  - workers:\n    - wrk: a\n- t:\n  - workers:\n    - wrk: b\n",
+            "not a list",
+        ],
+    )
+    def test_rejects(self, text):
+        with pytest.raises(TappParseError):
+            parse_tapp(text)
+
+    def test_capacity_bounds(self):
+        with pytest.raises(ValueError):
+            invalidate_from_text("capacity_used 150%")
+        with pytest.raises(ValueError):
+            invalidate_from_text("max_concurrent_invocations 0")
+        assert invalidate_from_text("overload") == Overload()
+
+
+class TestRoundTrip:
+    @pytest.mark.parametrize("text", [FIG5, FIG6])
+    def test_serialize_parse_identity(self, text):
+        script = parse_tapp(text)
+        again = parse_tapp(script_to_yaml(script))
+        assert again.tags == script.tags
+
+
+class TestValidate:
+    def test_default_followup_default_is_error(self):
+        script = parse_tapp(
+            "- default:\n  - workers:\n    - set:\n  followup: default\n"
+        )
+        report = validate_script(script)
+        assert not report.ok
+
+    def test_missing_default_warns(self):
+        script = parse_tapp("- t:\n  - workers:\n    - wrk: a\n")
+        report = validate_script(script)
+        assert report.ok
+        assert any("no default" in w.message for w in report.warnings)
+
+    def test_topology_warnings(self):
+        script = parse_tapp(FIG6)
+        report = validate_script(
+            script,
+            known_controllers=["LocalCtl_1"],
+            known_worker_labels=[],
+            known_set_labels=["edge"],
+        )
+        assert report.ok  # warnings only
+        msgs = " ".join(w.message for w in report.warnings)
+        assert "CloudCtl" in msgs and "cloud" in msgs

@@ -1,0 +1,189 @@
+"""Property-based tests (hypothesis) for the scheduler's invariants."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.scheduler import (
+    DistributionPolicy,
+    Invocation,
+    TappEngine,
+    coprime_order,
+    is_invalid,
+    make_cluster,
+)
+from repro.core.scheduler.invalidate import resolve_invalidate
+from repro.core.tapp import (
+    CapacityUsed,
+    TappScript,
+    parse_tapp,
+    script_to_yaml,
+)
+from repro.core.tapp.ast import (
+    Block,
+    FollowupKind,
+    Strategy,
+    TagPolicy,
+    WorkerRef,
+    WorkerSet,
+)
+
+# ---------------------------------------------------------------------------
+# coprime schedule
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(min_value=1, max_value=256), st.integers(min_value=0))
+def test_coprime_order_is_permutation(n, h):
+    assert sorted(coprime_order(n, h)) == list(range(n))
+
+
+@given(st.integers(min_value=1, max_value=64), st.integers(min_value=0))
+def test_coprime_order_deterministic(n, h):
+    assert coprime_order(n, h) == coprime_order(n, h)
+
+
+# ---------------------------------------------------------------------------
+# invalidation monotonicity
+# ---------------------------------------------------------------------------
+
+
+@given(
+    pct=st.floats(min_value=0, max_value=100),
+    threshold_a=st.floats(min_value=1, max_value=100),
+    threshold_b=st.floats(min_value=1, max_value=100),
+)
+def test_capacity_used_monotone(pct, threshold_a, threshold_b):
+    """If invalid at a high threshold, must be invalid at any lower one."""
+    lo, hi = sorted((threshold_a, threshold_b))
+    from repro.core.scheduler.state import WorkerState
+
+    w = WorkerState(name="w", capacity_used_pct=pct)
+    if is_invalid(w, CapacityUsed(hi)):
+        assert is_invalid(w, CapacityUsed(lo))
+
+
+# ---------------------------------------------------------------------------
+# random scripts: serialize∘parse identity + engine safety
+# ---------------------------------------------------------------------------
+
+_labels = st.sampled_from(["a", "b", "c", "edge", "cloud", "w0", "w1"])
+_strategies = st.sampled_from(list(Strategy)) | st.none()
+_invalidates = st.one_of(
+    st.none(),
+    st.builds(CapacityUsed, st.integers(min_value=1, max_value=100).map(float)),
+)
+
+_worker_items = st.one_of(
+    st.lists(
+        st.builds(WorkerRef, label=_labels, invalidate=_invalidates),
+        min_size=1, max_size=3,
+    ),
+    st.lists(
+        st.builds(
+            WorkerSet,
+            label=st.one_of(st.none(), _labels),
+            strategy=_strategies,
+            invalidate=_invalidates,
+        ),
+        min_size=1, max_size=2,
+    ),
+)
+
+_blocks = st.builds(
+    Block,
+    workers=_worker_items.map(tuple),
+    strategy=_strategies,
+    invalidate=_invalidates,
+)
+
+_tags = st.builds(
+    TagPolicy,
+    tag=st.sampled_from(["default", "t1", "t2", "ml"]),
+    blocks=st.lists(_blocks, min_size=1, max_size=3).map(tuple),
+    strategy=_strategies,
+    followup=st.sampled_from([None, FollowupKind.FAIL]),
+)
+
+
+@st.composite
+def _scripts(draw):
+    tags = draw(st.lists(_tags, min_size=1, max_size=4))
+    seen, unique = set(), []
+    for t in tags:
+        if t.tag not in seen:
+            seen.add(t.tag)
+            unique.append(t)
+    return TappScript(tags=tuple(unique))
+
+
+@given(_scripts())
+@settings(max_examples=60, deadline=None)
+def test_serialize_parse_roundtrip(script):
+    assert parse_tapp(script_to_yaml(script)).tags == script.tags
+
+
+@given(
+    script=_scripts(),
+    tag=st.sampled_from([None, "t1", "t2", "missing"]),
+    down=st.lists(st.booleans(), min_size=4, max_size=4),
+    policy=st.sampled_from(list(DistributionPolicy)),
+    seed=st.integers(min_value=0, max_value=99),
+)
+@settings(max_examples=100, deadline=None)
+def test_engine_never_picks_invalid_worker(script, tag, down, policy, seed):
+    """Whatever the script/cluster, a scheduled worker must be reachable,
+    and must satisfy the resolved invalidate condition of its block."""
+    cluster = make_cluster(
+        workers=[
+            dict(name="a", zone="z1", sets=["edge", "any"],
+                 capacity_slots=2, reachable=down[0]),
+            dict(name="b", zone="z1", sets=["cloud", "any"],
+                 capacity_slots=2, healthy=down[1]),
+            dict(name="w0", zone="z2", sets=["edge", "any"],
+                 capacity_slots=2, capacity_used_pct=75.0 if down[2] else 0.0),
+            dict(name="w1", zone="z2", sets=["any"], capacity_slots=2,
+                 inflight=2 if down[3] else 0),
+        ],
+        controllers=[dict(name="C1", zone="z1"), dict(name="C2", zone="z2")],
+    )
+    engine = TappEngine(policy, seed=seed)
+    decision = engine.schedule(Invocation("f", tag=tag), script, cluster)
+    if decision.scheduled:
+        worker = cluster.workers[decision.worker]
+        # Unreachability is the preliminary condition of EVERY invalidate
+        # option (paper §3.3) — a scheduled worker must be reachable.
+        # (An unhealthy worker MAY be picked under capacity_used /
+        # max_concurrent conditions: those don't consult health.)
+        assert worker.reachable
+        assert decision.controller in cluster.controllers
+
+
+@given(policy=st.sampled_from(list(DistributionPolicy)),
+       seed=st.integers(min_value=0, max_value=20))
+@settings(max_examples=30, deadline=None)
+def test_engine_fails_when_all_unreachable(policy, seed):
+    cluster = make_cluster(
+        workers=[dict(name="a", reachable=False),
+                 dict(name="b", reachable=False)],
+        controllers=[dict(name="C1")],
+    )
+    script = parse_tapp("- default:\n  - workers:\n    - set:\n")
+    decision = TappEngine(policy, seed=seed).schedule(
+        Invocation("f"), script, cluster
+    )
+    assert not decision.scheduled
+
+
+@given(
+    item=st.one_of(st.none(), _invalidates),
+    block=st.one_of(st.none(), _invalidates),
+)
+def test_resolve_invalidate_priority(item, block):
+    resolved = resolve_invalidate(item, block)
+    if item is not None:
+        assert resolved == item
+    elif block is not None:
+        assert resolved == block
+    else:
+        from repro.core.scheduler.invalidate import DEFAULT_INVALIDATE
+
+        assert resolved == DEFAULT_INVALIDATE

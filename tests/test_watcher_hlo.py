@@ -1,0 +1,163 @@
+"""Watcher elasticity/live-reload + HLO cost-model unit tests."""
+import textwrap
+
+import pytest
+
+from repro.core.scheduler import (
+    ControllerState,
+    Gateway,
+    Invocation,
+    Watcher,
+    WorkerState,
+)
+from repro.core.tapp import TappValidationError
+from repro.roofline.hlo import analyze_hlo
+
+
+class TestWatcher:
+    def _watcher(self):
+        w = Watcher()
+        w.register_controller(ControllerState(name="C", zone="z"))
+        w.register_worker(WorkerState(name="a", zone="z",
+                                      sets=frozenset({"s1", "any"})))
+        return w
+
+    def test_elastic_join_leave(self):
+        w = self._watcher()
+        v0 = w.cluster.version
+        w.register_worker(WorkerState(name="b", zone="z"))
+        assert "b" in w.cluster.workers and w.cluster.version > v0
+        w.deregister_worker("b")
+        assert "b" not in w.cluster.workers
+
+    def test_subscribers_notified(self):
+        w = self._watcher()
+        events = []
+        w.subscribe(events.append)
+        w.register_worker(WorkerState(name="b"))
+        w.load_script("- default:\n  - workers:\n    - set:\n")
+        assert events == ["topology", "script"]
+
+    def test_live_reload_versioning(self):
+        w = self._watcher()
+        s1 = w.load_script("- default:\n  - workers:\n    - set:\n")
+        v1 = w.script_version
+        s2 = w.load_script(
+            "- default:\n  - workers:\n    - set: s1\n"
+        )
+        assert w.script_version > v1
+        assert s2.get("default").blocks[0].workers[0].label == "s1"
+
+    def test_strict_reload_rejects_bad_script_keeps_old(self):
+        w = self._watcher()
+        w.load_script("- default:\n  - workers:\n    - set:\n")
+        old = w.script
+        bad = "- default:\n  - workers:\n    - set:\n  followup: default\n"
+        with pytest.raises(TappValidationError):
+            w.load_script(bad, strict=True)
+        assert w.script is old  # previous script preserved
+
+    def test_heartbeat_updates(self):
+        w = self._watcher()
+        w.update_worker("a", capacity_used_pct=88.0, inflight=3)
+        assert w.cluster.workers["a"].capacity_used_pct == 88.0
+        w.mark_unreachable("a")
+        assert not w.cluster.workers["a"].reachable
+
+    def test_snapshot_labels(self):
+        w = self._watcher()
+        snap = w.snapshot_labels()
+        assert snap["workers"]["a"]["zone"] == "z"
+        assert "s1" in snap["workers"]["a"]["sets"]
+        assert snap["controllers"]["C"]["zone"] == "z"
+
+    def test_gateway_cache_invalidation(self):
+        w = self._watcher()
+        w.load_script("- default:\n  - workers:\n    - set:\n")
+        g = Gateway(w)
+        g.route(Invocation("f"))
+        g.route(Invocation("f"))
+        reloads_before = g.stats.script_reloads
+        g.route(Invocation("f"))
+        assert g.stats.script_reloads == reloads_before  # cached
+        w.load_script("- default:\n  - workers:\n    - set: s1\n")
+        g.route(Invocation("f"))
+        assert g.stats.script_reloads == reloads_before + 1
+
+    def test_no_script_falls_back_to_vanilla(self):
+        w = self._watcher()
+        g = Gateway(w)
+        d = g.route(Invocation("f"))
+        assert d.scheduled
+        assert g.stats.vanilla_routed == 1
+        w.load_script("- default:\n  - workers:\n    - set:\n")
+        g.route(Invocation("f"))
+        assert g.stats.tapp_routed == 1
+
+
+SYNTHETIC_HLO = textwrap.dedent("""\
+    HloModule test, is_scheduled=true
+
+    %region_body (arg: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+      %p = f32[8,16]{1,0} parameter(0)
+      %dotop = f32[8,16]{1,0} dot(%p, %w16), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %w16 = f32[16,16]{1,0} parameter(1)
+      %ar = f32[8,16]{1,0} all-reduce(%dotop), replica_groups=[2,4]<=[8], to_apply=%add
+    }
+
+    %region_cond (arg: (s32[], f32[8,16])) -> pred[] {
+      %lt = pred[] compare(%i, %n), direction=LT
+    }
+
+    ENTRY %main (x: f32[8,16]) -> f32[8,16] {
+      %x = f32[8,16]{1,0} parameter(0)
+      %big = f32[8,16]{1,0} dot(%x, %w2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %w2 = f32[16,16]{1,0} parameter(1)
+      %loop = (s32[], f32[8,16]) while(%tup), condition=%region_cond, body=%region_body, backend_config={"known_trip_count":{"n":"5"}}
+      %ag = f32[8,64]{1,0} all-gather(%x), replica_groups=[1,8]<=[8], dimensions={1}
+    }
+""")
+
+
+class TestHloCostModel:
+    def test_trip_count_multiplies_loop_body(self):
+        hc = analyze_hlo(SYNTHETIC_HLO)
+        # entry dot: 2*8*16*16 = 4096; body dot × 5 trips: 5*4096
+        assert hc.dot_flops == pytest.approx(4096 + 5 * 4096)
+
+    def test_collective_wire_factors(self):
+        hc = analyze_hlo(SYNTHETIC_HLO)
+        detail = hc.collective_detail
+        # body all-reduce: bytes 8*16*4=512, group 4 → 2*(3/4)*512 = 768, ×5
+        assert detail["all-reduce"]["wire_bytes"] == pytest.approx(5 * 768)
+        # entry all-gather: 8*64*4 = 2048, group 8 → (7/8)*2048 = 1792
+        assert detail["all-gather"]["wire_bytes"] == pytest.approx(1792)
+
+    def test_counts_respect_trips(self):
+        hc = analyze_hlo(SYNTHETIC_HLO)
+        assert hc.collective_detail["all-reduce"]["count"] == 5
+        assert hc.collective_detail["all-gather"]["count"] == 1
+
+
+class TestEngineTrace:
+    def test_explain_shows_candidates_and_controller(self):
+        from repro.core.scheduler import (
+            DistributionPolicy,
+            TappEngine,
+            make_cluster,
+        )
+        from repro.core.tapp import parse_tapp
+
+        cluster = make_cluster(
+            workers=[dict(name="w0", zone="z", sets=["any"], reachable=False),
+                     dict(name="w1", zone="z", sets=["any"])],
+            controllers=[dict(name="C", zone="z")],
+        )
+        script = parse_tapp("- default:\n  - workers:\n    - set:\n")
+        d = TappEngine(DistributionPolicy.SHARED, seed=0).schedule(
+            Invocation("f"), script, cluster
+        )
+        text = d.explain()
+        assert "w1: VALID" in text
+        assert "gateway" in text  # controller resolution traced
+        assert d.worker == "w1"
