@@ -1,0 +1,19 @@
+PY := python
+export PYTHONPATH := src:.
+
+.PHONY: test bench bench-sched bench-sched-full
+
+test:
+	$(PY) -m pytest -q
+
+bench:
+	$(PY) benchmarks/run.py --quick
+
+# CI gate: scheduler microbench in smoke mode; fails if the compiled
+# fast path is slower than the reference interpreter on any row.
+bench-sched:
+	$(PY) benchmarks/run.py sched --smoke --check
+
+# Full sweep (4..1024 workers); regenerates the committed artifact.
+bench-sched-full:
+	$(PY) benchmarks/run.py sched --check --out BENCH_scheduler.json

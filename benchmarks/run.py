@@ -26,6 +26,13 @@ def _emit(rows):
 
 
 def main() -> None:
+    if len(sys.argv) > 1 and sys.argv[1] == "sched":
+        # Scheduler microbench subcommand (smoke gate / JSON artifact):
+        #   python benchmarks/run.py sched [--smoke] [--check] [--out PATH]
+        from benchmarks.scheduler_micro import main as sched_main
+
+        raise SystemExit(sched_main(sys.argv[2:]))
+
     quick = "--quick" in sys.argv
     n_dep = 3 if quick else 6
 
@@ -51,8 +58,15 @@ def main() -> None:
     print("# === scheduler microbenchmark (policy-evaluation cost) ===")
     from benchmarks.scheduler_micro import microbench
 
-    for r in microbench():
-        print(f"{r['name']},{r['us_per_call']:.1f},decision-latency")
+    for r in microbench(smoke=quick):
+        derived = "decision-latency"
+        if "speedup" in r:
+            derived = (
+                f"interp={r['us_interpreted']:.1f}us;"
+                f"batch={r['us_batch']:.1f}us;"
+                f"speedup={r['speedup']:.2f}x"
+            )
+        print(f"{r['name']},{r['us_per_call']:.1f},{derived}")
 
     print("# === serving engine (tAPP-scheduled continuous batching) ===")
     from benchmarks.serving_bench import serving_bench

@@ -2,10 +2,25 @@
 
 The paper's overhead argument (§5.4.1) rests on the policy interpreter
 being cheap relative to function execution; this measures it directly:
-tAPP policy evaluation vs vanilla co-prime, across cluster sizes.
+tAPP policy evaluation (interpreted reference vs compiled fast path vs
+batched fast path) against vanilla co-prime, across cluster sizes from
+4 to 1024 workers.
+
+Rows carry ``us_interpreted`` (the seed interpreter: fresh distribution
+views + eager trace formatting per call), ``us_compiled`` (pre-lowered
+script plan, epoch-cached views, tracing elided), ``us_batch``
+(``schedule_batch`` amortizing plan/tag dispatch over 64 invocations),
+and ``speedup`` = interpreted/compiled.
+
+Run ``python benchmarks/run.py sched --out BENCH_scheduler.json`` to
+regenerate the committed artifact, or ``make bench-sched`` for the smoke
+gate (fails when the compiled path is not faster than the interpreter).
 """
 from __future__ import annotations
 
+import argparse
+import json
+import sys
 import time
 from typing import Dict, List
 
@@ -36,6 +51,10 @@ SCRIPT = """
   followup: default
 """
 
+SIZES = (4, 16, 64, 256, 1024)
+SMOKE_SIZES = (4, 64)
+BATCH = 64
+
 
 def _cluster(n_workers: int) -> ClusterState:
     c = ClusterState()
@@ -57,31 +76,116 @@ def _time_us(fn, n: int = 2000) -> float:
     return (time.perf_counter() - t0) / n * 1e6
 
 
-def microbench() -> List[Dict]:
-    rows = []
+def microbench(*, smoke: bool = False) -> List[Dict]:
+    rows: List[Dict] = []
     script = parse_tapp(SCRIPT)
-    for n_workers in (4, 16, 64, 256):
+    sizes = SMOKE_SIZES if smoke else SIZES
+    iters = 300 if smoke else 2000
+    for n_workers in sizes:
         cluster = _cluster(n_workers)
-        engine = TappEngine(DistributionPolicy.SHARED, seed=0)
+        interp = TappEngine(DistributionPolicy.SHARED, seed=0, compiled=False)
+        comp = TappEngine(DistributionPolicy.SHARED, seed=0, compiled=True)
         vanilla = VanillaScheduler()
-        inv_tag = Invocation("fn", tag="tagged")
-        inv_plain = Invocation("fn")
-        rows.append({
-            "name": f"tapp_tagged_{n_workers}w",
-            "us_per_call": _time_us(
-                lambda: engine.schedule(inv_tag, script, cluster)
-            ),
-        })
-        rows.append({
-            "name": f"tapp_default_{n_workers}w",
-            "us_per_call": _time_us(
-                lambda: engine.schedule(inv_plain, script, cluster)
-            ),
-        })
-        rows.append({
-            "name": f"vanilla_{n_workers}w",
-            "us_per_call": _time_us(
-                lambda: vanilla.schedule(inv_plain, cluster)
-            ),
-        })
+        for label, inv in (
+            ("tagged", Invocation("fn", tag="tagged")),
+            ("default", Invocation("fn")),
+        ):
+            # The seed interpreter always produced a full trace; measure it
+            # as such so `speedup` is against the paper-faithful baseline.
+            us_interp = _time_us(
+                lambda: interp.schedule(inv, script, cluster, trace=True),
+                iters,
+            )
+            us_comp = _time_us(
+                lambda: comp.schedule(inv, script, cluster), iters
+            )
+            batch = [inv] * BATCH
+            us_batch = (
+                _time_us(
+                    lambda: comp.schedule_batch(batch, script, cluster),
+                    max(1, iters // BATCH),
+                )
+                / BATCH
+            )
+            rows.append(
+                {
+                    "name": f"tapp_{label}_{n_workers}w",
+                    "us_interpreted": us_interp,
+                    "us_compiled": us_comp,
+                    "us_batch": us_batch,
+                    "us_per_call": us_comp,
+                    "speedup": us_interp / max(1e-9, us_comp),
+                }
+            )
+        rows.append(
+            {
+                "name": f"vanilla_{n_workers}w",
+                "us_per_call": _time_us(
+                    lambda: vanilla.schedule(Invocation("fn"), cluster), iters
+                ),
+            }
+        )
     return rows
+
+
+def write_bench_json(rows: List[Dict], path: str) -> None:
+    payload = {
+        "benchmark": "scheduler_micro",
+        "unit": "us_per_decision",
+        "batch_size": BATCH,
+        "rows": rows,
+    }
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=2)
+        fh.write("\n")
+
+
+def check_rows(rows: List[Dict], *, min_speedup: float = 1.0) -> List[str]:
+    """Regression gate: compiled must beat interpreted on every tAPP row."""
+    failures = []
+    for row in rows:
+        speedup = row.get("speedup")
+        if speedup is not None and speedup < min_speedup:
+            failures.append(
+                f"{row['name']}: compiled {row['us_compiled']:.1f}us vs "
+                f"interpreted {row['us_interpreted']:.1f}us "
+                f"(speedup {speedup:.2f}x < {min_speedup:.2f}x)"
+            )
+    return failures
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--smoke", action="store_true",
+                        help="small sizes / few iterations (CI gate)")
+    parser.add_argument("--out", default=None,
+                        help="write BENCH_scheduler.json to this path")
+    parser.add_argument("--check", action="store_true",
+                        help="exit non-zero if compiled is slower than "
+                             "interpreted on any row")
+    args = parser.parse_args(argv)
+
+    rows = microbench(smoke=args.smoke)
+    for r in rows:
+        if "speedup" in r:
+            print(
+                f"{r['name']},interp={r['us_interpreted']:.1f}us,"
+                f"compiled={r['us_compiled']:.1f}us,"
+                f"batch={r['us_batch']:.1f}us,speedup={r['speedup']:.2f}x"
+            )
+        else:
+            print(f"{r['name']},{r['us_per_call']:.1f}us")
+    if args.out:
+        write_bench_json(rows, args.out)
+        print(f"# wrote {args.out}")
+    if args.check:
+        failures = check_rows(rows)
+        if failures:
+            for f in failures:
+                print(f"FAIL: {f}", file=sys.stderr)
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

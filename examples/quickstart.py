@@ -56,7 +56,8 @@ def control_plane_demo() -> None:
         decision = gateway.route(Invocation("my_fn", tag=tag))
         print(f"tag={tag!r:>12} → worker={decision.worker} "
               f"(controller={decision.controller})")
-    print(gateway.route(Invocation("my_fn", tag="critical")).explain())
+    # Observability opts into tracing; the serving hot path leaves it off.
+    print(gateway.route(Invocation("my_fn", tag="critical"), trace=True).explain())
 
 
 def data_plane_demo() -> None:

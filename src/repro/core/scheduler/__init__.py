@@ -20,10 +20,17 @@ from repro.core.scheduler.state import (
     WorkerState,
     make_cluster,
 )
-from repro.core.scheduler.strategy import coprime_order, order_candidates, stable_hash
+from repro.core.scheduler.strategy import (
+    coprime_order,
+    coprime_order_cached,
+    order_candidates,
+    stable_hash,
+)
 from repro.core.scheduler.topology import (
     DistributionPolicy,
+    ViewCacheEntry,
     WorkerView,
+    cached_view_entry,
     distribution_view,
 )
 from repro.core.scheduler.vanilla import VanillaScheduler
@@ -45,10 +52,13 @@ __all__ = [
     "TappEngine",
     "TraceEvent",
     "VanillaScheduler",
+    "ViewCacheEntry",
     "Watcher",
     "WorkerState",
     "WorkerView",
+    "cached_view_entry",
     "coprime_order",
+    "coprime_order_cached",
     "distribution_view",
     "invalid_reason",
     "is_invalid",

@@ -13,7 +13,7 @@ steer subsequent invocations away from the slow worker.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.scheduler.state import ClusterState, WorkerState
 from repro.core.scheduler.watcher import Watcher
@@ -67,6 +67,51 @@ class ControllerRuntime:
             controller=controller_name,
             invocation_id=self._next_id,
         )
+
+    def admit_many(
+        self, placements: Sequence[Tuple[str, str]]
+    ) -> List[Admission]:
+        """Batch admission for a set of (worker, controller) placements.
+
+        Issues ONE watcher update per distinct worker (instead of one per
+        invocation), which is the admission-side counterpart of
+        ``TappEngine.schedule_batch``. All placements are validated before
+        any state is mutated, so a bad placement leaves the cluster
+        untouched.
+        """
+        grouped: Dict[str, List[str]] = {}
+        for worker_name, controller_name in placements:
+            worker = self.cluster.workers.get(worker_name)
+            if worker is None:
+                raise AdmissionError(f"unknown worker {worker_name!r}")
+            if not worker.reachable:
+                raise AdmissionError(f"worker {worker_name!r} unreachable")
+            grouped.setdefault(worker_name, []).append(controller_name)
+
+        for worker_name, controller_names in grouped.items():
+            worker = self.cluster.workers[worker_name]
+            by = dict(worker.inflight_by)
+            for controller_name in controller_names:
+                by[controller_name] = by.get(controller_name, 0) + 1
+            inflight = worker.inflight + len(controller_names)
+            self._watcher.update_worker(
+                worker_name,
+                inflight=inflight,
+                inflight_by=by,
+                capacity_used_pct=_pct(inflight, worker.capacity_slots),
+            )
+
+        admissions: List[Admission] = []
+        for worker_name, controller_name in placements:
+            self._next_id += 1
+            admissions.append(
+                Admission(
+                    worker=worker_name,
+                    controller=controller_name,
+                    invocation_id=self._next_id,
+                )
+            )
+        return admissions
 
     def complete(self, admission: Admission, *, slow: bool = False) -> None:
         worker = self.cluster.workers.get(admission.worker)

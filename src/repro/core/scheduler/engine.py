@@ -3,8 +3,8 @@
 Given an invocation (function name + tag), a parsed :class:`TappScript`,
 and a cluster snapshot, the engine produces a :class:`ScheduleDecision`:
 either a (controller, worker) placement or a followup outcome, together
-with a full evaluation trace (used by tests, the simulator, and serving
-observability).
+with an optional full evaluation trace (used by tests, the simulator, and
+serving observability).
 
 Evaluation order, faithful to the paper:
 
@@ -22,23 +22,44 @@ Evaluation order, faithful to the paper:
    whose invalidate condition does not hold.
 5. All blocks exhausted → followup (``fail`` | re-evaluate ``default``;
    the default tag's own followup is always ``fail``).
+
+Two execution paths implement these semantics:
+
+* the **interpreter** (``TappEngine(compiled=False)``) — the original
+  reference implementation, which re-derives script facts and rebuilds
+  distribution views on every call;
+* the **compiled fast path** (default) — evaluates a pre-lowered
+  :class:`~repro.core.tapp.compile.CompiledScript` against epoch-cached
+  topology views (:func:`~repro.core.scheduler.topology.cached_view_entry`),
+  with tracing fully elided unless ``trace=True``.
+
+Both paths produce bit-identical placements and traces under a fixed
+seed; ``tests/test_scheduler_compile.py`` property-tests this over
+randomized scripts and clusters. Tracing defaults to **off**: the sim and
+serving hot loops pay nothing for :class:`TraceEvent` construction, while
+tests and observability pass ``trace=True`` and get the identical trace.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
 import random as _random
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.scheduler.invalidate import (
     invalid_reason,
     resolve_invalidate,
 )
 from repro.core.scheduler.state import ClusterState, ControllerState, WorkerState
-from repro.core.scheduler.strategy import order_candidates, stable_hash
+from repro.core.scheduler.strategy import (
+    coprime_order_cached,
+    order_candidates,
+    stable_hash,
+)
 from repro.core.scheduler.topology import (
     DistributionPolicy,
     WorkerView,
+    cached_view_entry,
     distribution_view,
 )
 from repro.core.tapp.ast import (
@@ -51,6 +72,12 @@ from repro.core.tapp.ast import (
     TopologyTolerance,
     WorkerRef,
     WorkerSet,
+)
+from repro.core.tapp.compile import (
+    CompiledBlock,
+    CompiledScript,
+    CompiledTag,
+    compile_script,
 )
 
 
@@ -72,7 +99,13 @@ class ScheduleDecision:
     controller: Optional[str] = None
     tag: Optional[str] = None
     used_default_fallback: bool = False
+    # The zone constraint of the block that actually scheduled (None when
+    # unrestricted); on failure, the constraint of the last block evaluated.
     zone_restriction: Optional[str] = None
+    # True iff a tAPP policy evaluated and explicitly failed the request
+    # (followup: fail exhausted, or no usable default tag). Structured
+    # replacement for sniffing the trace, which is empty on the hot path.
+    failed_by_policy: bool = False
     trace: List[TraceEvent] = dataclasses.field(default_factory=list)
 
     @property
@@ -98,6 +131,12 @@ class Invocation:
         return stable_hash(self.function)
 
 
+# Optional per-decision callback for batch scheduling: invoked immediately
+# after each decision, before the next invocation is evaluated, so callers
+# can interleave admissions and keep results identical to sequential calls.
+OnDecision = Callable[[Invocation, ScheduleDecision], None]
+
+
 class TappEngine:
     """Stateless policy evaluator (all mutable state lives in the cluster
     snapshot and in the RNG/cursors the caller owns)."""
@@ -107,10 +146,14 @@ class TappEngine:
         distribution: DistributionPolicy = DistributionPolicy.DEFAULT,
         *,
         seed: Optional[int] = None,
+        compiled: bool = True,
     ) -> None:
         self.distribution = distribution
+        self.compiled = compiled
         self._rng = _random.Random(seed)
         self._controller_cursor = 0  # round-robin for controller-less blocks
+        self._plan: Optional[CompiledScript] = None
+        self._plan_source: Optional[TappScript] = None
 
     # -- public API ----------------------------------------------------------
 
@@ -119,34 +162,437 @@ class TappEngine:
         invocation: Invocation,
         script: Optional[TappScript],
         cluster: ClusterState,
+        *,
+        trace: bool = False,
     ) -> ScheduleDecision:
         """Resolve one invocation to a worker placement."""
+        if self.compiled:
+            return self._schedule_compiled(invocation, script, cluster, trace)
+        return self._schedule_interpreted(invocation, script, cluster, trace)
+
+    def schedule_batch(
+        self,
+        invocations: Sequence[Invocation],
+        script: Optional[TappScript],
+        cluster: ClusterState,
+        *,
+        trace: bool = False,
+        on_decision: Optional[OnDecision] = None,
+    ) -> List[ScheduleDecision]:
+        """Resolve a batch of invocations against one cluster snapshot.
+
+        The compiled plan and the epoch-cached topology views are shared
+        across the whole batch; decisions are evaluated in order, with
+        ``on_decision`` fired after each one so the caller can admit the
+        placement before the next decision is made — which keeps batch
+        results bit-identical to a sequence of :meth:`schedule` calls with
+        interleaved admissions.
+        """
+        if self.compiled and script is not None and script.tags:
+            self.compiled_plan(script)  # hoist compilation out of the loop
+        decisions: List[ScheduleDecision] = []
+        for invocation in invocations:
+            decision = self.schedule(invocation, script, cluster, trace=trace)
+            if on_decision is not None:
+                on_decision(invocation, decision)
+            decisions.append(decision)
+        return decisions
+
+    def compiled_plan(self, script: TappScript) -> CompiledScript:
+        """The lowered plan for ``script``, compiled once per script object."""
+        if script is not self._plan_source:
+            self._plan = compile_script(script)
+            self._plan_source = script
+        assert self._plan is not None
+        return self._plan
+
+    # ======================================================================
+    # Compiled fast path
+    # ======================================================================
+
+    def _schedule_compiled(
+        self,
+        invocation: Invocation,
+        script: Optional[TappScript],
+        cluster: ClusterState,
+        trace: bool,
+    ) -> ScheduleDecision:
         decision = ScheduleDecision(outcome=Outcome.FAILED)
+        tr = decision.trace if trace else None
         if script is None or not script.tags:
-            decision.trace.append(
-                TraceEvent("tag", "no tAPP script: caller should use vanilla fallback")
+            if tr is not None:
+                tr.append(
+                    TraceEvent(
+                        "tag", "no tAPP script: caller should use vanilla fallback"
+                    )
+                )
+            return decision
+
+        plan = self.compiled_plan(script)
+        tag_name = invocation.tag or DEFAULT_TAG
+        ctag = plan.tags.get(tag_name)
+        if ctag is None:
+            if tr is not None:
+                tr.append(
+                    TraceEvent(
+                        "tag",
+                        f"tag {tag_name!r} not in script; falling back to "
+                        f"{DEFAULT_TAG!r}",
+                    )
+                )
+            ctag = plan.default
+            if ctag is None:
+                if tr is not None:
+                    tr.append(
+                        TraceEvent("tag", "no default tag either: fail")
+                    )
+                decision.failed_by_policy = True
+                return decision
+
+        return self._c_tag(
+            invocation, ctag, plan, cluster, decision, tr,
+            is_fallback=False, zone_override=None,
+        )
+
+    def _c_tag(
+        self,
+        invocation: Invocation,
+        ctag: CompiledTag,
+        plan: CompiledScript,
+        cluster: ClusterState,
+        decision: ScheduleDecision,
+        tr: Optional[List[TraceEvent]],
+        *,
+        is_fallback: bool,
+        zone_override: Optional[str],
+    ) -> ScheduleDecision:
+        decision.tag = ctag.tag
+        decision.used_default_fallback = is_fallback
+        if tr is not None:
+            tr.append(
+                TraceEvent(
+                    "tag",
+                    f"evaluating tag {ctag.tag!r} "
+                    f"(strategy={ctag.strategy.value}, "
+                    f"followup={ctag.followup.value})",
+                )
             )
+
+        for block_index, cblock in self._c_ordered(
+            ctag.enumerated, ctag.strategy, invocation.hash
+        ):
+            placed = self._c_block(
+                invocation, cblock, block_index, cluster, decision, tr,
+                zone_override,
+            )
+            if placed is not None:
+                controller, worker = placed
+                decision.outcome = Outcome.SCHEDULED
+                decision.controller = controller
+                decision.worker = worker
+                return decision
+
+        # All blocks exhausted → followup.
+        if tr is not None:
+            tr.append(
+                TraceEvent(
+                    "followup",
+                    f"tag {ctag.tag!r} exhausted → {ctag.followup.value}",
+                )
+            )
+        if ctag.followup is FollowupKind.DEFAULT and not is_fallback:
+            # Paper §3.4: `topology_tolerance: same` pins the default-tag
+            # fallback to the designated controller's zone. The label table
+            # is precompiled; only the live zone lookup happens here.
+            sticky_zone = zone_override
+            for label in ctag.sticky_same_labels:
+                designated = cluster.controllers.get(label)
+                if designated is not None:
+                    sticky_zone = designated.zone
+                    if tr is not None:
+                        tr.append(
+                            TraceEvent(
+                                "followup",
+                                f"tolerance=same → default restricted to "
+                                f"zone {sticky_zone!r}",
+                            )
+                        )
+                    break
+            default_tag = plan.default
+            if default_tag is not None and default_tag.tag != ctag.tag:
+                return self._c_tag(
+                    invocation, default_tag, plan, cluster, decision, tr,
+                    is_fallback=True, zone_override=sticky_zone,
+                )
+            if tr is not None:
+                tr.append(
+                    TraceEvent("followup", "no usable default tag: fail")
+                )
+            decision.failed_by_policy = True
+        else:
+            decision.failed_by_policy = True
+        decision.outcome = Outcome.FAILED
+        return decision
+
+    def _c_block(
+        self,
+        invocation: Invocation,
+        cblock: CompiledBlock,
+        block_index: int,
+        cluster: ClusterState,
+        decision: ScheduleDecision,
+        tr: Optional[List[TraceEvent]],
+        zone_override: Optional[str],
+    ) -> Optional[Tuple[str, str]]:
+        if cblock.controller is None:
+            # No controller clause: the gateway tries the available
+            # controllers starting at the round-robin cursor (§5.4.1).
+            controllers = [c for c in cluster.controllers.values() if c.available]
+            if not controllers:
+                if tr is not None:
+                    tr.append(
+                        TraceEvent(
+                            "controller",
+                            f"block[{block_index}]: no available controller",
+                        )
+                    )
+                return None
+            start = self._controller_cursor
+            self._controller_cursor += 1
+            n = len(controllers)
+            for offset in range(n):
+                controller = controllers[(start + offset) % n]
+                if tr is not None:
+                    tr.append(
+                        TraceEvent(
+                            "controller",
+                            f"block[{block_index}]: gateway → {controller.name!r}",
+                        )
+                    )
+                placed = self._c_block_on(
+                    invocation, cblock, controller, zone_override, cluster, tr
+                )
+                if placed is not None:
+                    decision.zone_restriction = zone_override
+                    return placed
+            return None
+
+        controller, zone_restriction = self._c_resolve_controller(
+            cblock, block_index, cluster, tr
+        )
+        if controller is None:
+            return None
+        effective = zone_restriction or zone_override
+        decision.zone_restriction = effective
+        return self._c_block_on(
+            invocation, cblock, controller, effective, cluster, tr
+        )
+
+    def _c_resolve_controller(
+        self,
+        cblock: CompiledBlock,
+        block_index: int,
+        cluster: ClusterState,
+        tr: Optional[List[TraceEvent]],
+    ) -> Tuple[Optional[ControllerState], Optional[str]]:
+        clause = cblock.controller
+        assert clause is not None
+
+        def note(text: str) -> None:
+            if tr is not None:
+                tr.append(
+                    TraceEvent("controller", f"block[{block_index}]: {text}")
+                )
+
+        designated = cluster.controllers.get(clause.label)
+        if designated is not None and designated.available:
+            note(f"designated controller {clause.label!r} available")
+            return designated, None
+
+        designated_zone = designated.zone if designated is not None else None
+        tol = clause.topology_tolerance
+        if tol is TopologyTolerance.NONE:
+            note(
+                f"controller {clause.label!r} unavailable, tolerance=none → "
+                f"block invalid"
+            )
+            return None, None
+        alternative = self._round_robin_controller(cluster)
+        if alternative is None:
+            note("no alternative controller available")
+            return None, None
+        if tol is TopologyTolerance.SAME:
+            if designated_zone is None:
+                note(
+                    f"controller {clause.label!r} unknown and tolerance=same → "
+                    f"cannot resolve its zone, block invalid"
+                )
+                return None, None
+            note(
+                f"controller {clause.label!r} unavailable, tolerance=same → "
+                f"{alternative.name!r} restricted to zone {designated_zone!r}"
+            )
+            return alternative, designated_zone
+        note(
+            f"controller {clause.label!r} unavailable, tolerance=all → "
+            f"{alternative.name!r}"
+        )
+        return alternative, None
+
+    def _c_block_on(
+        self,
+        invocation: Invocation,
+        cblock: CompiledBlock,
+        controller: ControllerState,
+        zone_restriction: Optional[str],
+        cluster: ClusterState,
+        tr: Optional[List[TraceEvent]],
+    ) -> Optional[Tuple[str, str]]:
+        entry = cached_view_entry(
+            cluster,
+            controller.zone,
+            self.distribution,
+            controller_name=controller.name,
+            zone_restriction=zone_restriction,
+        )
+        fhash = invocation.hash
+
+        if not cblock.uses_sets:
+            by_name = entry.by_name
+            for item in self._c_ordered(cblock.wrks, cblock.strategy, fhash):
+                view = by_name.get(item.label)
+                if view is None:
+                    # Unknown label or filtered out by the zone restriction
+                    # ⇒ outside this controller's distribution view.
+                    if tr is not None:
+                        tr.append(
+                            TraceEvent(
+                                "candidate",
+                                f"{item.label}: outside controller "
+                                f"{controller.name!r}'s distribution view",
+                            )
+                        )
+                    continue
+                placed = self._c_try(item, view, controller, tr)
+                if placed is not None:
+                    return placed
+            return None
+
+        # Set list: block-level strategy orders the *set items*; each set's
+        # inner strategy orders its members, local tier first. Member lists
+        # come from the epoch-cached per-set expansion.
+        for item in self._c_ordered(cblock.sets, cblock.strategy, fhash):
+            local, foreign = entry.set_members(item.label)
+            inner = item.strategy
+            if inner is Strategy.RANDOM:
+                # Shuffle both tiers eagerly (matching the interpreter's RNG
+                # consumption order) only once this set item is reached.
+                local = list(local)
+                self._rng.shuffle(local)
+                foreign = list(foreign)
+                self._rng.shuffle(foreign)
+                groups: Tuple[Sequence[WorkerView], ...] = (local, foreign)
+            elif inner is Strategy.PLATFORM:
+                groups = (
+                    [local[i] for i in coprime_order_cached(len(local), fhash)],
+                    [foreign[i] for i in coprime_order_cached(len(foreign), fhash)],
+                )
+            else:  # BEST_FIRST: view order (local-first, insertion order)
+                groups = (local, foreign)
+            for group in groups:
+                for view in group:
+                    placed = self._c_try(item, view, controller, tr)
+                    if placed is not None:
+                        return placed
+        return None
+
+    def _c_try(
+        self,
+        item,  # CompiledWrk | CompiledSet
+        view: WorkerView,
+        controller: ControllerState,
+        tr: Optional[List[TraceEvent]],
+    ) -> Optional[Tuple[str, str]]:
+        """Check one candidate; fast path does no string work at all."""
+        worker = view.worker
+        if tr is None:
+            if item.invalid(worker) or view.saturated:
+                return None
+            return controller.name, worker.name
+        reason = invalid_reason(worker, item.condition)
+        if reason is None and view.saturated:
+            reason = (
+                f"controller entitlement saturated "
+                f"({worker.inflight}/{view.slot_cap} slots)"
+            )
+        if reason is None:
+            tr.append(
+                TraceEvent(
+                    "candidate",
+                    f"{worker.name}: VALID (zone={worker.zone}, "
+                    f"inflight={worker.inflight}/{worker.capacity_slots})",
+                )
+            )
+            return controller.name, worker.name
+        tr.append(
+            TraceEvent("candidate", f"{worker.name}: invalid — {reason}")
+        )
+        return None
+
+    def _c_ordered(self, items: Sequence, strategy: Strategy, fhash: int):
+        """Order pre-compiled items; mirrors order_candidates RNG-for-RNG."""
+        if strategy is Strategy.BEST_FIRST or not items:
+            return items
+        if strategy is Strategy.PLATFORM:
+            return [items[i] for i in coprime_order_cached(len(items), fhash)]
+        shuffled = list(items)
+        self._rng.shuffle(shuffled)
+        return shuffled
+
+    # ======================================================================
+    # Interpreter (reference path; `TappEngine(compiled=False)`)
+    # ======================================================================
+
+    def _schedule_interpreted(
+        self,
+        invocation: Invocation,
+        script: Optional[TappScript],
+        cluster: ClusterState,
+        trace: bool,
+    ) -> ScheduleDecision:
+        decision = ScheduleDecision(outcome=Outcome.FAILED)
+        tr = decision.trace if trace else None
+        if script is None or not script.tags:
+            if tr is not None:
+                tr.append(
+                    TraceEvent(
+                        "tag", "no tAPP script: caller should use vanilla fallback"
+                    )
+                )
             return decision
 
         tag_name = invocation.tag or DEFAULT_TAG
         policy = script.get(tag_name)
         if policy is None:
-            decision.trace.append(
-                TraceEvent(
-                    "tag",
-                    f"tag {tag_name!r} not in script; falling back to "
-                    f"{DEFAULT_TAG!r}",
+            if tr is not None:
+                tr.append(
+                    TraceEvent(
+                        "tag",
+                        f"tag {tag_name!r} not in script; falling back to "
+                        f"{DEFAULT_TAG!r}",
+                    )
                 )
-            )
             policy = script.default
             tag_name = DEFAULT_TAG
             if policy is None:
-                decision.trace.append(
-                    TraceEvent("tag", "no default tag either: fail")
-                )
+                if tr is not None:
+                    tr.append(
+                        TraceEvent("tag", "no default tag either: fail")
+                    )
+                decision.failed_by_policy = True
                 return decision
 
-        return self._evaluate_tag(invocation, policy, script, cluster, decision)
+        return self._evaluate_tag(invocation, policy, script, cluster, decision, tr)
 
     # -- tag evaluation -------------------------------------------------------
 
@@ -157,20 +603,22 @@ class TappEngine:
         script: TappScript,
         cluster: ClusterState,
         decision: ScheduleDecision,
+        tr: Optional[List[TraceEvent]],
         *,
         is_fallback: bool = False,
         zone_override: Optional[str] = None,
     ) -> ScheduleDecision:
         decision.tag = policy.tag
         decision.used_default_fallback = is_fallback
-        decision.trace.append(
-            TraceEvent(
-                "tag",
-                f"evaluating tag {policy.tag!r} "
-                f"(strategy={policy.effective_strategy.value}, "
-                f"followup={policy.effective_followup.value})",
+        if tr is not None:
+            tr.append(
+                TraceEvent(
+                    "tag",
+                    f"evaluating tag {policy.tag!r} "
+                    f"(strategy={policy.effective_strategy.value}, "
+                    f"followup={policy.effective_followup.value})",
+                )
             )
-        )
 
         blocks = order_candidates(
             list(enumerate(policy.blocks)),
@@ -180,7 +628,7 @@ class TappEngine:
         )
         for block_index, block in blocks:
             placed = self._evaluate_block(
-                invocation, block, block_index, cluster, decision,
+                invocation, block, block_index, cluster, decision, tr,
                 zone_override=zone_override,
             )
             if placed is not None:
@@ -192,9 +640,12 @@ class TappEngine:
 
         # All blocks exhausted → followup.
         followup = policy.effective_followup
-        decision.trace.append(
-            TraceEvent("followup", f"tag {policy.tag!r} exhausted → {followup.value}")
-        )
+        if tr is not None:
+            tr.append(
+                TraceEvent(
+                    "followup", f"tag {policy.tag!r} exhausted → {followup.value}"
+                )
+            )
         if followup is FollowupKind.DEFAULT and not is_fallback:
             # Paper §3.4 (followup × topology_tolerance interaction): when a
             # tag with `topology_tolerance: same` falls back to the default
@@ -210,13 +661,14 @@ class TappEngine:
                     designated = cluster.controllers.get(block.controller.label)
                     if designated is not None:
                         sticky_zone = designated.zone
-                        decision.trace.append(
-                            TraceEvent(
-                                "followup",
-                                f"tolerance=same → default restricted to "
-                                f"zone {sticky_zone!r}",
+                        if tr is not None:
+                            tr.append(
+                                TraceEvent(
+                                    "followup",
+                                    f"tolerance=same → default restricted to "
+                                    f"zone {sticky_zone!r}",
+                                )
                             )
-                        )
                         break
             default_policy = script.default
             if default_policy is not None and default_policy.tag != policy.tag:
@@ -226,12 +678,17 @@ class TappEngine:
                     script,
                     cluster,
                     decision,
+                    tr,
                     is_fallback=True,
                     zone_override=sticky_zone,
                 )
-            decision.trace.append(
-                TraceEvent("followup", "no usable default tag: fail")
-            )
+            if tr is not None:
+                tr.append(
+                    TraceEvent("followup", "no usable default tag: fail")
+                )
+            decision.failed_by_policy = True
+        else:
+            decision.failed_by_policy = True
         decision.outcome = Outcome.FAILED
         return decision
 
@@ -244,6 +701,7 @@ class TappEngine:
         block_index: int,
         cluster: ClusterState,
         decision: ScheduleDecision,
+        tr: Optional[List[TraceEvent]],
         *,
         zone_override: Optional[str] = None,
     ) -> Optional[Tuple[str, str]]:
@@ -256,43 +714,47 @@ class TappEngine:
             # which passes the invocation to a different controller").
             controllers = [c for c in cluster.controllers.values() if c.available]
             if not controllers:
-                decision.trace.append(
-                    TraceEvent(
-                        "controller",
-                        f"block[{block_index}]: no available controller",
+                if tr is not None:
+                    tr.append(
+                        TraceEvent(
+                            "controller",
+                            f"block[{block_index}]: no available controller",
+                        )
                     )
-                )
                 return None
             start = self._controller_cursor
             self._controller_cursor += 1
             for offset in range(len(controllers)):
                 controller = controllers[(start + offset) % len(controllers)]
-                decision.trace.append(
-                    TraceEvent(
-                        "controller",
-                        f"block[{block_index}]: gateway → {controller.name!r}",
+                if tr is not None:
+                    tr.append(
+                        TraceEvent(
+                            "controller",
+                            f"block[{block_index}]: gateway → {controller.name!r}",
+                        )
                     )
-                )
                 placed = self._evaluate_block_on(
-                    invocation, block, controller, zone_override, cluster,
-                    decision,
+                    invocation, block, controller, zone_override, cluster, tr
                 )
                 if placed is not None:
+                    # The scheduling block ran unrestricted (modulo any
+                    # followup sticky zone) — record *its* constraint, not a
+                    # stale value from an earlier failed block.
+                    decision.zone_restriction = zone_override
                     return placed
             return None
 
         controller, zone_restriction, note = self._resolve_controller(
             block, cluster
         )
-        decision.trace.append(
-            TraceEvent("controller", f"block[{block_index}]: {note}")
-        )
+        if tr is not None:
+            tr.append(TraceEvent("controller", f"block[{block_index}]: {note}"))
         if controller is None:
             return None
         zone_restriction = zone_restriction or zone_override
         decision.zone_restriction = zone_restriction
         return self._evaluate_block_on(
-            invocation, block, controller, zone_restriction, cluster, decision
+            invocation, block, controller, zone_restriction, cluster, tr
         )
 
     def _evaluate_block_on(
@@ -302,7 +764,7 @@ class TappEngine:
         controller: ControllerState,
         zone_restriction: Optional[str],
         cluster: ClusterState,
-        decision: ScheduleDecision,
+        tr: Optional[List[TraceEvent]],
     ) -> Optional[Tuple[str, str]]:
         views = distribution_view(
             cluster,
@@ -319,13 +781,14 @@ class TappEngine:
         for worker, condition in candidates:
             view = view_map.get(worker.name)
             if view is None:
-                decision.trace.append(
-                    TraceEvent(
-                        "candidate",
-                        f"{worker.name}: outside controller "
-                        f"{controller.name!r}'s distribution view",
+                if tr is not None:
+                    tr.append(
+                        TraceEvent(
+                            "candidate",
+                            f"{worker.name}: outside controller "
+                            f"{controller.name!r}'s distribution view",
+                        )
                     )
-                )
                 continue
             reason = invalid_reason(worker, condition)
             if reason is None and view.saturated:
@@ -334,17 +797,19 @@ class TappEngine:
                     f"({worker.inflight}/{view.slot_cap} slots)"
                 )
             if reason is None:
-                decision.trace.append(
-                    TraceEvent(
-                        "candidate",
-                        f"{worker.name}: VALID (zone={worker.zone}, "
-                        f"inflight={worker.inflight}/{worker.capacity_slots})",
+                if tr is not None:
+                    tr.append(
+                        TraceEvent(
+                            "candidate",
+                            f"{worker.name}: VALID (zone={worker.zone}, "
+                            f"inflight={worker.inflight}/{worker.capacity_slots})",
+                        )
                     )
-                )
                 return controller.name, worker.name
-            decision.trace.append(
-                TraceEvent("candidate", f"{worker.name}: invalid — {reason}")
-            )
+            if tr is not None:
+                tr.append(
+                    TraceEvent("candidate", f"{worker.name}: invalid — {reason}")
+                )
         return None
 
     def _resolve_controller(

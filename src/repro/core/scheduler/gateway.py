@@ -70,16 +70,62 @@ class Gateway:
 
     # -- routing --------------------------------------------------------------------
 
-    def route(self, invocation: Invocation) -> ScheduleDecision:
+    def route(
+        self, invocation: Invocation, *, trace: bool = False
+    ) -> ScheduleDecision:
         self.stats.routed += 1
         script = self._script()
         cluster = self._watcher.cluster
         if script is None or not script.tags:
-            decision = self._vanilla.schedule(invocation, cluster)
+            decision = self._vanilla.schedule(invocation, cluster, trace=trace)
             self.stats.vanilla_routed += 1
         else:
-            decision = self._engine.schedule(invocation, script, cluster)
+            decision = self._engine.schedule(
+                invocation, script, cluster, trace=trace
+            )
             self.stats.tapp_routed += 1
         if not decision.scheduled:
             self.stats.failed += 1
         return decision
+
+    def route_batch(
+        self,
+        invocations,
+        *,
+        trace: bool = False,
+        on_decision=None,
+    ):
+        """Route a batch of invocations against one script/snapshot pull.
+
+        The script version check and plan compilation happen once for the
+        whole batch; decisions are made in order and ``on_decision`` fires
+        after each one (before the next is evaluated), so callers that
+        admit placements inside the callback get results identical to a
+        sequence of :meth:`route` calls.
+        """
+        script = self._script()
+        cluster = self._watcher.cluster
+
+        def _account(invocation: Invocation, decision: ScheduleDecision) -> None:
+            self.stats.routed += 1
+            if script is None or not script.tags:
+                self.stats.vanilla_routed += 1
+            else:
+                self.stats.tapp_routed += 1
+            if not decision.scheduled:
+                self.stats.failed += 1
+            if on_decision is not None:
+                on_decision(invocation, decision)
+
+        if script is None or not script.tags:
+            decisions = []
+            for invocation in invocations:
+                decision = self._vanilla.schedule(
+                    invocation, cluster, trace=trace
+                )
+                _account(invocation, decision)
+                decisions.append(decision)
+            return decisions
+        return self._engine.schedule_batch(
+            invocations, script, cluster, trace=trace, on_decision=_account
+        )

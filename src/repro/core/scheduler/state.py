@@ -108,6 +108,20 @@ class ClusterState:
     workers: Dict[str, WorkerState] = dataclasses.field(default_factory=dict)
     controllers: Dict[str, ControllerState] = dataclasses.field(default_factory=dict)
     version: int = 0
+    # Bumped only on *structural* changes (membership, zones, sets,
+    # reachability/health, capacity) — never on inflight counters. The
+    # compiled scheduling fast path memoizes distribution views per epoch;
+    # see :mod:`repro.core.scheduler.topology`.
+    topology_epoch: int = 0
+    view_cache: Dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False
+    )
+
+    def bump_topology_epoch(self) -> None:
+        """Invalidate all memoized topology views (structural change)."""
+        self.topology_epoch += 1
+        if self.view_cache:
+            self.view_cache.clear()
 
     # -- membership ---------------------------------------------------------
 
@@ -116,20 +130,24 @@ class ClusterState:
             raise ValueError(f"duplicate worker {worker.name!r}")
         self.workers[worker.name] = worker
         self.version += 1
+        self.bump_topology_epoch()
 
     def remove_worker(self, name: str) -> None:
         self.workers.pop(name, None)
         self.version += 1
+        self.bump_topology_epoch()
 
     def add_controller(self, controller: ControllerState) -> None:
         if controller.name in self.controllers:
             raise ValueError(f"duplicate controller {controller.name!r}")
         self.controllers[controller.name] = controller
         self.version += 1
+        self.bump_topology_epoch()
 
     def remove_controller(self, name: str) -> None:
         self.controllers.pop(name, None)
         self.version += 1
+        self.bump_topology_epoch()
 
     # -- queries -------------------------------------------------------------
 

@@ -14,9 +14,10 @@ engine then applies invalidation in that order, which uniformly implements
 """
 from __future__ import annotations
 
+import functools
 import hashlib
 import random as _random
-from typing import List, Optional, Sequence, TypeVar
+from typing import List, Optional, Sequence, Tuple, TypeVar
 
 from repro.core.tapp.ast import Strategy
 
@@ -42,14 +43,16 @@ def _coprime_step(hash_value: int, n: int) -> int:
     return candidates[hash_value % len(candidates)]
 
 
-def coprime_order(n: int, hash_value: int) -> List[int]:
-    """OpenWhisk co-prime schedule: primary ``hash % n``, then step cycles.
+@functools.lru_cache(maxsize=8192)
+def coprime_order_cached(n: int, hash_value: int) -> Tuple[int, ...]:
+    """Memoized co-prime schedule.
 
-    The step size is co-prime with ``n`` so the cycle visits every index
-    exactly once.
+    The permutation is a pure function of ``(n, hash)``; real deployments
+    see a bounded set of functions and cluster sizes, so the co-prime step
+    search (O(n log n)) amortizes to a dict hit on the scheduling hot path.
     """
     if n <= 0:
-        return []
+        return ()
     primary = hash_value % n
     step = _coprime_step(hash_value, n)
     order, idx = [], primary
@@ -58,7 +61,16 @@ def coprime_order(n: int, hash_value: int) -> List[int]:
         idx = (idx + step) % n
     # Co-primality guarantees a full cycle; assert in debug builds.
     assert len(set(order)) == n, (n, step, order)
-    return order
+    return tuple(order)
+
+
+def coprime_order(n: int, hash_value: int) -> List[int]:
+    """OpenWhisk co-prime schedule: primary ``hash % n``, then step cycles.
+
+    The step size is co-prime with ``n`` so the cycle visits every index
+    exactly once.
+    """
+    return list(coprime_order_cached(n, hash_value))
 
 
 def order_candidates(
@@ -80,5 +92,5 @@ def order_candidates(
         rng.shuffle(shuffled)
         return shuffled
     if strategy is Strategy.PLATFORM:
-        return [items[i] for i in coprime_order(len(items), function_hash)]
+        return [items[i] for i in coprime_order_cached(len(items), function_hash)]
     raise ValueError(f"unknown strategy {strategy!r}")

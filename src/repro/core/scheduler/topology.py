@@ -150,3 +150,70 @@ def _entitlement(
 
 def views_by_name(views: Sequence[WorkerView]) -> Dict[str, WorkerView]:
     return {v.worker.name: v for v in views}
+
+
+# ---------------------------------------------------------------------------
+# Epoch-cached views (the compiled fast path)
+# ---------------------------------------------------------------------------
+
+
+class ViewCacheEntry:
+    """A memoized distribution view plus derived lookup structures.
+
+    The entry holds *live* :class:`WorkerState` references, so volatile
+    load signals (inflight, capacity_used_pct) are always fresh; only the
+    view's *shape* — membership, zoning, tiering, slot caps — is frozen,
+    which is exactly what ``ClusterState.topology_epoch`` versions.
+    Health/reachability are also read live (the invalidate predicates see
+    them through the worker reference), though the watcher conservatively
+    bumps the epoch on those transitions as well.
+    Set-member expansions are resolved lazily per set label and retain the
+    view's local-tier-first candidate order.
+    """
+
+    __slots__ = ("views", "by_name", "_set_members")
+
+    def __init__(self, views: List[WorkerView]) -> None:
+        self.views = views
+        self.by_name: Dict[str, WorkerView] = {v.worker.name: v for v in views}
+        self._set_members: Dict = {}
+
+    def set_members(self, label):
+        """(local views, foreign views) matching a tAPP set label."""
+        hit = self._set_members.get(label)
+        if hit is None:
+            members = [v for v in self.views if v.worker.in_set(label)]
+            hit = (
+                [v for v in members if v.local],
+                [v for v in members if not v.local],
+            )
+            self._set_members[label] = hit
+        return hit
+
+
+def cached_view_entry(
+    cluster: ClusterState,
+    controller_zone: str,
+    policy: DistributionPolicy,
+    *,
+    controller_name: str = "",
+    zone_restriction: Optional[str] = None,
+) -> ViewCacheEntry:
+    """Memoized :func:`distribution_view` keyed by ``(controller, policy,
+    zone_restriction)``; the cache lives on the cluster snapshot and is
+    cleared whenever ``topology_epoch`` bumps, so inflight-counter churn
+    (admissions/completions) never causes a rebuild."""
+    key = (controller_zone, controller_name, policy, zone_restriction)
+    entry = cluster.view_cache.get(key)
+    if entry is None:
+        entry = ViewCacheEntry(
+            distribution_view(
+                cluster,
+                controller_zone,
+                policy,
+                controller_name=controller_name,
+                zone_restriction=zone_restriction,
+            )
+        )
+        cluster.view_cache[key] = entry
+    return entry

@@ -26,7 +26,7 @@ from repro.core.scheduler.engine import (
     TraceEvent,
 )
 from repro.core.scheduler.state import ClusterState, WorkerState
-from repro.core.scheduler.strategy import coprime_order
+from repro.core.scheduler.strategy import coprime_order_cached
 
 
 class VanillaScheduler:
@@ -36,53 +36,66 @@ class VanillaScheduler:
         self._controller_cursor = 0
 
     def schedule(
-        self, invocation: Invocation, cluster: ClusterState
+        self,
+        invocation: Invocation,
+        cluster: ClusterState,
+        *,
+        trace: bool = False,
     ) -> ScheduleDecision:
         decision = ScheduleDecision(outcome=Outcome.FAILED, tag=None)
+        tr = decision.trace if trace else None
         controllers = [c for c in cluster.controllers.values() if c.available]
         if not controllers:
-            decision.trace.append(
-                TraceEvent("controller", "no available controller")
-            )
+            if tr is not None:
+                tr.append(TraceEvent("controller", "no available controller"))
             return decision
         controller = controllers[self._controller_cursor % len(controllers)]
         self._controller_cursor += 1
-        decision.trace.append(
-            TraceEvent(
-                "controller", f"round-robin → {controller.name!r} (vanilla gateway)"
+        if tr is not None:
+            tr.append(
+                TraceEvent(
+                    "controller",
+                    f"round-robin → {controller.name!r} (vanilla gateway)",
+                )
             )
-        )
 
         workers: List[WorkerState] = list(cluster.workers.values())
         if not workers:
-            decision.trace.append(TraceEvent("candidate", "no workers"))
+            if tr is not None:
+                tr.append(TraceEvent("candidate", "no workers"))
             return decision
 
-        for idx in coprime_order(len(workers), invocation.hash):
+        for idx in coprime_order_cached(len(workers), invocation.hash):
             worker = workers[idx]
             if not worker.reachable:
-                decision.trace.append(
-                    TraceEvent("candidate", f"{worker.name}: unreachable")
-                )
+                if tr is not None:
+                    tr.append(
+                        TraceEvent("candidate", f"{worker.name}: unreachable")
+                    )
                 continue
             if worker.overloaded:
-                decision.trace.append(
-                    TraceEvent(
-                        "candidate",
-                        f"{worker.name}: overloaded "
-                        f"({worker.inflight}/{worker.capacity_slots})",
+                if tr is not None:
+                    tr.append(
+                        TraceEvent(
+                            "candidate",
+                            f"{worker.name}: overloaded "
+                            f"({worker.inflight}/{worker.capacity_slots})",
+                        )
                     )
-                )
                 continue
             decision.outcome = Outcome.SCHEDULED
             decision.controller = controller.name
             decision.worker = worker.name
-            decision.trace.append(
-                TraceEvent("candidate", f"{worker.name}: VALID (co-prime home)")
-            )
+            if tr is not None:
+                tr.append(
+                    TraceEvent(
+                        "candidate", f"{worker.name}: VALID (co-prime home)"
+                    )
+                )
             return decision
 
-        decision.trace.append(
-            TraceEvent("followup", "all workers overloaded → fail (vanilla)")
-        )
+        if tr is not None:
+            tr.append(
+                TraceEvent("followup", "all workers overloaded → fail (vanilla)")
+            )
         return decision

@@ -23,6 +23,26 @@ from repro.core.tapp.validate import ValidationReport, validate_script
 
 Subscriber = Callable[[str], None]  # event kind: "topology" | "script"
 
+# Worker fields whose transitions invalidate the epoch-cached views.
+# zone/sets/capacity_slots change the view *shape*; health, reachability,
+# and residency are read live through WorkerState references (the cached
+# views stay correct without a rebuild) but are invalidated conservatively,
+# so any future policy that filters them out of the view stays safe. These
+# are rare transitions; inflight counters and load percentages are the
+# per-decision churn and never bump the epoch, so admissions and
+# completions stay cache-hit.
+_STRUCTURAL_WORKER_FIELDS = frozenset(
+    {
+        "zone",
+        "sets",
+        "capacity_slots",
+        "reachable",
+        "healthy",
+        "resident_models",
+        "memory_bytes",
+    }
+)
+
 
 class Watcher:
     def __init__(self, cluster: Optional[ClusterState] = None) -> None:
@@ -72,18 +92,28 @@ class Watcher:
         self._notify("topology")
 
     def update_worker(self, name: str, **fields) -> None:
-        """Apply a heartbeat (load/health/residency update)."""
+        """Apply a heartbeat (load/health/residency update).
+
+        Structural transitions (zone/set/capacity/health/reachability)
+        invalidate the epoch-cached topology views; pure load updates
+        (inflight counters, capacity percentages) do not.
+        """
         with self._lock:
             worker = self._cluster.workers.get(name)
             if worker is None:
                 raise KeyError(f"unknown worker {name!r}")
+            structural = False
             for key, value in fields.items():
                 if not hasattr(worker, key):
                     raise AttributeError(f"WorkerState has no field {key!r}")
                 if key in ("sets", "resident_models"):
                     value = frozenset(value)
+                if key in _STRUCTURAL_WORKER_FIELDS and getattr(worker, key) != value:
+                    structural = True
                 setattr(worker, key, value)
             self._cluster.version += 1
+            if structural:
+                self._cluster.bump_topology_epoch()
 
     def mark_unreachable(self, name: str) -> None:
         self.update_worker(name, reachable=False)

@@ -259,7 +259,18 @@ class Simulation:
         while self._events:
             time, _, kind, payload = heapq.heappop(self._events)
             if kind == "submit":
-                self._on_submit(time, payload)
+                # Coalesce heap-adjacent submits at the same timestamp into
+                # one batch so the scheduler shares a single snapshot/plan
+                # resolution (results are identical to one-by-one: decisions
+                # and admissions interleave in the same order).
+                batch = [payload]
+                while (
+                    self._events
+                    and self._events[0][2] == "submit"
+                    and self._events[0][0] == time
+                ):
+                    batch.append(heapq.heappop(self._events)[3])
+                self._on_submit_batch(time, batch)
             elif kind == "start":
                 self._on_start(time, payload)
             elif kind == "finish":
@@ -270,7 +281,9 @@ class Simulation:
 
     # -- event handlers -------------------------------------------------------------
 
-    def _on_submit(self, time: float, payload: Dict) -> None:
+    def _begin_submit(
+        self, time: float, payload: Dict
+    ) -> Tuple[Invocation, RequestRecord]:
         profile: FunctionProfile = payload["profile"]
         record = RequestRecord(
             request_id=payload["rid"],
@@ -279,7 +292,39 @@ class Simulation:
             submitted=time,
         )
         self.records.append(record)
+        invocation = Invocation(
+            function=profile.name, tag=profile.tag, request_id=record.request_id
+        )
+        return invocation, record
 
+    def _on_submit(self, time: float, payload: Dict) -> None:
+        invocation, record = self._begin_submit(time, payload)
+        decision = self.scheduler(invocation, self.watcher.cluster)
+        self._finish_submit(time, payload, record, decision)
+
+    def _on_submit_batch(self, time: float, payloads: List[Dict]) -> None:
+        schedule_batch = getattr(self.scheduler, "schedule_batch", None)
+        if schedule_batch is None or len(payloads) == 1:
+            for payload in payloads:
+                self._on_submit(time, payload)
+            return
+        prepared = [self._begin_submit(time, p) for p in payloads]
+        pending = iter(zip(payloads, prepared))
+
+        def _place(_invocation: Invocation, decision: ScheduleDecision) -> None:
+            payload, (_, record) = next(pending)
+            self._finish_submit(time, payload, record, decision)
+
+        schedule_batch([inv for inv, _ in prepared], on_decision=_place)
+
+    def _finish_submit(
+        self,
+        time: float,
+        payload: Dict,
+        record: RequestRecord,
+        decision: ScheduleDecision,
+    ) -> None:
+        profile: FunctionProfile = payload["profile"]
         overhead = (
             self.config.scheduler_overhead_tapp
             if self.is_tapp
@@ -287,10 +332,6 @@ class Simulation:
         )
         if self.is_tapp and profile.tag is not None:
             overhead += self.config.tag_resolution_overhead
-        invocation = Invocation(
-            function=profile.name, tag=profile.tag, request_id=record.request_id
-        )
-        decision = self.scheduler(invocation, self.watcher.cluster)
         now = time + overhead
 
         if not decision.scheduled or decision.worker is None:
@@ -415,11 +456,20 @@ def _link_key(a: str, b: str) -> Tuple[str, str]:
 
 
 def gateway_scheduler(gateway) -> SchedulerFn:
-    """Adapt a :class:`Gateway` to the simulator's scheduler signature."""
+    """Adapt a :class:`Gateway` to the simulator's scheduler signature.
+
+    The adapter also exposes ``schedule_batch`` so the simulator can route
+    same-timestamp submits through :meth:`Gateway.route_batch` (one
+    script/snapshot resolution per batch).
+    """
 
     def schedule(invocation: Invocation, _cluster: ClusterState) -> ScheduleDecision:
         return gateway.route(invocation)
 
+    def schedule_batch(invocations, *, on_decision=None):
+        return gateway.route_batch(invocations, on_decision=on_decision)
+
+    schedule.schedule_batch = schedule_batch  # type: ignore[attr-defined]
     return schedule
 
 

@@ -1,0 +1,213 @@
+"""Script compilation: lower a parsed :class:`TappScript` to execution plans.
+
+The interpreter in :mod:`repro.core.scheduler.engine` re-derives, on every
+scheduling decision, facts that are pure functions of the script text:
+effective strategies/followups, the wrk-vs-set shape of each block, the
+resolved invalidate condition of each worker item (item ▸ block ▸ platform
+default), and the ``topology_tolerance: same`` sticky-zone scan performed
+on followup. Compilation hoists all of that to script-load time, so the
+per-decision cost is amortized-O(candidates tried):
+
+* each tag becomes a :class:`CompiledTag` with its effective strategy,
+  effective followup, and the ordered sticky-zone label table;
+* each block becomes a :class:`CompiledBlock` pre-split into either a
+  wrk-list (:class:`CompiledWrk`) or a set-list (:class:`CompiledSet`),
+  with the block-level strategy defaulted;
+* each worker item carries its resolved :class:`Invalidate` condition AND
+  a pre-bound ``invalid(worker) -> bool`` closure, eliminating the
+  per-candidate ``isinstance`` dispatch of :func:`is_invalid`.
+
+Compilation is semantics-preserving by construction: the compiled
+evaluator (``TappEngine`` with ``compiled=True``) produces bit-identical
+placements and traces to the interpreter under a fixed RNG seed — this is
+property-tested in ``tests/test_scheduler_compile.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.core.tapp.ast import (
+    DEFAULT_TAG,
+    Block,
+    CapacityUsed,
+    ControllerClause,
+    FollowupKind,
+    Invalidate,
+    MaxConcurrentInvocations,
+    Overload,
+    Strategy,
+    TagPolicy,
+    TappScript,
+    TopologyTolerance,
+    WorkerRef,
+    WorkerSet,
+)
+
+# ``invalid(worker) -> bool``; takes anything WorkerState-shaped.
+InvalidFn = Callable[[object], bool]
+
+
+def compile_invalidate(condition: Invalidate) -> InvalidFn:
+    """Pre-bind an invalidate condition to a branch-free predicate.
+
+    Matches :func:`repro.core.scheduler.invalidate.is_invalid` exactly,
+    including the preliminary unreachability condition (paper §3.3), but
+    resolves the condition type once at compile time instead of per
+    candidate.
+    """
+    if isinstance(condition, Overload):
+        def invalid(w) -> bool:
+            return (
+                (not w.reachable)
+                or (not w.healthy)
+                or w.inflight >= w.capacity_slots
+            )
+        return invalid
+    if isinstance(condition, CapacityUsed):
+        threshold = condition.percent
+
+        def invalid(w) -> bool:
+            return (not w.reachable) or w.capacity_used_pct >= threshold
+        return invalid
+    if isinstance(condition, MaxConcurrentInvocations):
+        limit = condition.limit
+
+        def invalid(w) -> bool:
+            return (not w.reachable) or (w.inflight + w.queued) >= limit
+        return invalid
+    raise TypeError(f"unknown invalidate condition {condition!r}")
+
+
+def _resolve(
+    item_level: Optional[Invalidate], block_level: Optional[Invalidate]
+) -> Invalidate:
+    """Item ▸ block ▸ platform default (same rule as resolve_invalidate)."""
+    if item_level is not None:
+        return item_level
+    if block_level is not None:
+        return block_level
+    return Overload()
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledWrk:
+    """A ``wrk: label`` item with its condition resolved and pre-bound."""
+
+    label: str
+    condition: Invalidate
+    invalid: InvalidFn
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledSet:
+    """A ``set: label`` item with inner strategy + condition pre-resolved."""
+
+    label: Optional[str]
+    strategy: Strategy  # inner member-selection strategy (platform default)
+    condition: Invalidate
+    invalid: InvalidFn
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledBlock:
+    """One workers-block, pre-split by shape with strategy defaulted."""
+
+    index: int  # position in the tag's source order (trace identity)
+    controller: Optional[ControllerClause]
+    strategy: Strategy  # effective block-level item strategy
+    uses_sets: bool
+    wrks: Tuple[CompiledWrk, ...] = ()
+    sets: Tuple[CompiledSet, ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledTag:
+    """Per-tag execution plan."""
+
+    tag: str
+    strategy: Strategy          # effective block-selection strategy
+    followup: FollowupKind      # effective followup (default tag → fail)
+    blocks: Tuple[CompiledBlock, ...]
+    # Base ordering fed to the block-selection strategy: (index, block)
+    # pairs in source order, mirroring the interpreter's enumerate().
+    enumerated: Tuple[Tuple[int, CompiledBlock], ...]
+    # topology_tolerance:same sticky-zone table (paper §3.4): controller
+    # labels, in block source order, whose zone pins a followup-to-default
+    # evaluation. The first label present in the live cluster wins.
+    sticky_same_labels: Tuple[str, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledScript:
+    """A fully lowered tAPP script, keyed for O(1) tag dispatch."""
+
+    source: TappScript
+    tags: Dict[str, CompiledTag]
+    default: Optional[CompiledTag]
+
+
+def _compile_block(index: int, block: Block) -> CompiledBlock:
+    strategy = block.strategy or Strategy.BEST_FIRST
+    if block.uses_sets:
+        sets = tuple(
+            CompiledSet(
+                label=item.label,
+                strategy=item.strategy or Strategy.PLATFORM,
+                condition=(cond := _resolve(item.invalidate, block.invalidate)),
+                invalid=compile_invalidate(cond),
+            )
+            for item in block.workers
+            if isinstance(item, WorkerSet)
+        )
+        return CompiledBlock(
+            index=index,
+            controller=block.controller,
+            strategy=strategy,
+            uses_sets=True,
+            sets=sets,
+        )
+    wrks = tuple(
+        CompiledWrk(
+            label=item.label,
+            condition=(cond := _resolve(item.invalidate, block.invalidate)),
+            invalid=compile_invalidate(cond),
+        )
+        for item in block.workers
+        if isinstance(item, WorkerRef)
+    )
+    return CompiledBlock(
+        index=index,
+        controller=block.controller,
+        strategy=strategy,
+        uses_sets=False,
+        wrks=wrks,
+    )
+
+
+def _compile_tag(policy: TagPolicy) -> CompiledTag:
+    blocks = tuple(
+        _compile_block(i, b) for i, b in enumerate(policy.blocks)
+    )
+    sticky = tuple(
+        b.controller.label
+        for b in policy.blocks
+        if b.controller is not None
+        and b.controller.topology_tolerance is TopologyTolerance.SAME
+    )
+    return CompiledTag(
+        tag=policy.tag,
+        strategy=policy.effective_strategy,
+        followup=policy.effective_followup,
+        blocks=blocks,
+        enumerated=tuple(enumerate(blocks)),
+        sticky_same_labels=sticky,
+    )
+
+
+def compile_script(script: TappScript) -> CompiledScript:
+    """Lower a parsed script into per-tag execution plans."""
+    tags = {t.tag: _compile_tag(t) for t in script.tags}
+    return CompiledScript(
+        source=script, tags=tags, default=tags.get(DEFAULT_TAG)
+    )

@@ -47,7 +47,12 @@ from repro.launch.steps import (
 )
 from repro.models.api import SHAPES, Model, ShapeSpec, shape_applicable
 from repro.optim.adamw import AdamWConfig
-from repro.roofline.analysis import model_bytes_min, model_flops, roofline_terms
+from repro.roofline.analysis import (
+    model_bytes_min,
+    model_flops,
+    normalize_cost,
+    roofline_terms,
+)
 from repro.sharding.ctx import activation_sharding
 from repro.sharding.specs import (
     ShardingPolicy,
@@ -112,7 +117,7 @@ def dryrun_cell(
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
 
-        cost = compiled.cost_analysis()
+        cost = normalize_cost(compiled.cost_analysis())
         mem = compiled.memory_analysis()
         hlo = compiled.as_text()
         terms = roofline_terms(

@@ -261,6 +261,19 @@ def parse_dot_flops(hlo_text: str) -> float:
     return total
 
 
+def normalize_cost(cost) -> Dict[str, float]:
+    """Normalize ``Compiled.cost_analysis()`` across JAX versions.
+
+    Older JAX returns a one-element list of per-computation dicts; newer
+    JAX returns the dict directly. Empty/None becomes an empty dict.
+    """
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        return dict(cost[0]) if cost else {}
+    return cost
+
+
 def roofline_terms(
     *,
     cost: Dict[str, float],
@@ -271,6 +284,7 @@ def roofline_terms(
 ) -> RooflineTerms:
     from repro.roofline.hlo import analyze_hlo
 
+    cost = normalize_cost(cost)
     hc = analyze_hlo(hlo_text)
     # Trip-count-aware parsed costs vs cost_analysis (which counts loop
     # bodies once): take the max of each.

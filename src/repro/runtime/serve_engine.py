@@ -283,15 +283,23 @@ class ServingEngine:
             )
 
     def _admit_queued(self) -> None:
+        if not self.queue:
+            return
         still_queued: List[Request] = []
-        for request in self.queue:
-            invocation = Invocation(
+        requests = list(self.queue)
+        invocations = [
+            Invocation(
                 function=request.model_id,
                 tag=request.tag,
                 model_id=request.model_id,
                 request_id=request.request_id,
             )
-            decision = self.gateway.route(invocation)
+            for request in requests
+        ]
+        pending = iter(requests)
+
+        def _place(_invocation, decision) -> None:
+            request = next(pending)
             placed = False
             if decision.scheduled and decision.worker in self.replicas:
                 replica = self.replicas[decision.worker]
@@ -306,10 +314,15 @@ class ServingEngine:
                 request.state = "queued"
                 still_queued.append(request)
                 # Requests failed by policy (followup: fail) surface as such.
-                if decision.scheduled is False and decision.trace and (
-                    decision.trace[-1].detail.endswith("fail")
-                ):
+                if decision.failed_by_policy:
                     request.error = "policy-failed"
+
+        # One batched routing pass per tick: the script version check, plan
+        # compilation, and epoch-cached views are shared across the queue,
+        # while the per-decision callback admits each placement before the
+        # next decision (so capacity effects are observed, exactly as the
+        # previous request-at-a-time loop did).
+        self.gateway.route_batch(invocations, on_decision=_place)
         self.queue = still_queued
 
     def _flag_stragglers(self) -> None:

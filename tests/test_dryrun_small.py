@@ -30,7 +30,7 @@ _SCRIPT = textwrap.dedent(
     from repro.sharding.specs import (
         ShardingPolicy, batch_shardings, cache_shardings, param_shardings,
     )
-    from repro.roofline.analysis import roofline_terms
+    from repro.roofline.analysis import normalize_cost, roofline_terms
 
     arch = {arch!r}
     cfg = dataclasses.replace(
@@ -51,9 +51,10 @@ _SCRIPT = textwrap.dedent(
         lowered = jax.jit(step, in_shardings=(st_sh, b_sh),
                           out_shardings=(st_sh, None)).lower(state, batch)
         compiled = lowered.compile()
-        results["train_flops"] = compiled.cost_analysis().get("flops", 0)
+        cost = normalize_cost(compiled.cost_analysis())
+        results["train_flops"] = cost.get("flops", 0)
         terms = roofline_terms(
-            cost=compiled.cost_analysis(), hlo_text=compiled.as_text(),
+            cost=cost, hlo_text=compiled.as_text(),
             n_chips=8, model_flops_total=1.0,
         )
         results["train_collective_wire"] = terms.wire_bytes_per_device

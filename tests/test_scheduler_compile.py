@@ -1,0 +1,500 @@
+"""Compiled-vs-interpreted equivalence for the tAPP fast path.
+
+The compiled engine (`TappEngine(compiled=True)`, the default) must
+produce bit-identical placements AND traces to the reference interpreter
+under a fixed seed, across randomized scripts, clusters, strategies, and
+live-state churn. Also covers the epoch-cached topology views and the
+`zone_restriction` regression.
+"""
+import random
+
+import pytest
+
+from repro.core.scheduler import (
+    ClusterState,
+    ControllerState,
+    DistributionPolicy,
+    Invocation,
+    TappEngine,
+    WorkerState,
+    cached_view_entry,
+    make_cluster,
+)
+from repro.core.scheduler.watcher import Watcher
+from repro.core.tapp import compile_script, parse_tapp
+from repro.core.tapp.ast import (
+    Block,
+    CapacityUsed,
+    ControllerClause,
+    FollowupKind,
+    MaxConcurrentInvocations,
+    Overload,
+    Strategy,
+    TagPolicy,
+    TappScript,
+    TopologyTolerance,
+    WorkerRef,
+    WorkerSet,
+)
+
+ZONES = ("edge", "cloud", "far")
+SET_LABELS = ("edge", "cloud", "far", "gpu", "any")
+STRATEGIES = (None, Strategy.BEST_FIRST, Strategy.RANDOM, Strategy.PLATFORM)
+CONDITIONS = (
+    None,
+    Overload(),
+    CapacityUsed(50),
+    CapacityUsed(80),
+    MaxConcurrentInvocations(2),
+    MaxConcurrentInvocations(8),
+)
+
+
+# ---------------------------------------------------------------------------
+# Randomized generators (plain `random`, seeded per trial — deterministic)
+# ---------------------------------------------------------------------------
+
+
+def random_cluster(rng: random.Random) -> ClusterState:
+    cluster = ClusterState()
+    for i in range(rng.randint(1, 3)):
+        cluster.add_controller(
+            ControllerState(
+                name=f"C{i}",
+                zone=rng.choice(ZONES),
+                healthy=rng.random() > 0.2,
+                reachable=rng.random() > 0.1,
+            )
+        )
+    for i in range(rng.randint(1, 12)):
+        sets = frozenset(
+            l for l in SET_LABELS if rng.random() > 0.5
+        )
+        cluster.add_worker(
+            WorkerState(
+                name=f"w{i}",
+                zone=rng.choice(ZONES),
+                sets=sets,
+                capacity_slots=rng.choice((1, 2, 4, 16)),
+                inflight=rng.randint(0, 4),
+                queued=rng.randint(0, 3),
+                capacity_used_pct=rng.choice((0.0, 40.0, 60.0, 90.0, 100.0)),
+                healthy=rng.random() > 0.25,
+                reachable=rng.random() > 0.15,
+            )
+        )
+    return cluster
+
+
+def random_block(rng: random.Random) -> Block:
+    controller = None
+    if rng.random() > 0.5:
+        controller = ControllerClause(
+            label=rng.choice(("C0", "C1", "C9")),  # C9: sometimes unknown
+            topology_tolerance=rng.choice(tuple(TopologyTolerance)),
+        )
+    if rng.random() > 0.5:
+        workers = tuple(
+            WorkerRef(
+                label=rng.choice(("w0", "w1", "w2", "w5", "ghost")),
+                invalidate=rng.choice(CONDITIONS),
+            )
+            for _ in range(rng.randint(1, 3))
+        )
+    else:
+        workers = tuple(
+            WorkerSet(
+                label=rng.choice((None,) + SET_LABELS),
+                strategy=rng.choice(STRATEGIES),
+                invalidate=rng.choice(CONDITIONS),
+            )
+            for _ in range(rng.randint(1, 3))
+        )
+    return Block(
+        workers=workers,
+        controller=controller,
+        strategy=rng.choice(STRATEGIES),
+        invalidate=rng.choice(CONDITIONS),
+    )
+
+
+def random_script(rng: random.Random) -> TappScript:
+    tags = []
+    if rng.random() > 0.2:  # usually include a default tag
+        tags.append(
+            TagPolicy(
+                tag="default",
+                blocks=tuple(random_block(rng) for _ in range(rng.randint(1, 2))),
+                strategy=rng.choice(STRATEGIES),
+            )
+        )
+    for name in ("alpha", "beta"):
+        if rng.random() > 0.4:
+            tags.append(
+                TagPolicy(
+                    tag=name,
+                    blocks=tuple(
+                        random_block(rng) for _ in range(rng.randint(1, 3))
+                    ),
+                    strategy=rng.choice(STRATEGIES),
+                    followup=rng.choice((None, FollowupKind.FAIL, FollowupKind.DEFAULT)),
+                )
+            )
+    if not tags:
+        tags.append(
+            TagPolicy(tag="default", blocks=(random_block(rng),))
+        )
+    return TappScript(tags=tuple(tags))
+
+
+def mutate_cluster(rng: random.Random, watcher: Watcher) -> None:
+    """Random live-state churn: load updates, health flips, membership."""
+    cluster = watcher.cluster
+    roll = rng.random()
+    names = list(cluster.workers)
+    if roll < 0.5 and names:
+        # Volatile load update (must NOT invalidate cached views).
+        name = rng.choice(names)
+        w = cluster.workers[name]
+        watcher.update_worker(
+            name,
+            inflight=rng.randint(0, 5),
+            queued=rng.randint(0, 3),
+            capacity_used_pct=rng.choice((0.0, 55.0, 85.0, 100.0)),
+            inflight_by={"C0": rng.randint(0, 2)},
+        )
+    elif roll < 0.7 and names:
+        # Structural health/reachability transition.
+        name = rng.choice(names)
+        watcher.update_worker(
+            name,
+            healthy=rng.random() > 0.3,
+            reachable=rng.random() > 0.2,
+        )
+    elif roll < 0.85:
+        # Membership: add a worker.
+        idx = len(names)
+        watcher.register_worker(
+            WorkerState(
+                name=f"n{idx}_{rng.randint(0, 999)}",
+                zone=rng.choice(ZONES),
+                sets=frozenset(l for l in SET_LABELS if rng.random() > 0.5),
+                capacity_slots=rng.choice((1, 4)),
+            )
+        )
+    elif names:
+        watcher.deregister_worker(rng.choice(names))
+
+
+def assert_decisions_equal(d1, d2, context: str) -> None:
+    assert d1.outcome == d2.outcome, context
+    assert d1.worker == d2.worker, context
+    assert d1.controller == d2.controller, context
+    assert d1.tag == d2.tag, context
+    assert d1.used_default_fallback == d2.used_default_fallback, context
+    assert d1.zone_restriction == d2.zone_restriction, context
+    assert d1.failed_by_policy == d2.failed_by_policy, context
+    assert d1.trace == d2.trace, (
+        context,
+        "\n-- interpreted --\n" + d1.explain(),
+        "\n-- compiled --\n" + d2.explain(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Equivalence
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", list(DistributionPolicy))
+def test_compiled_matches_interpreter_randomized(policy):
+    """Placements, traces, RNG streams, and cursors stay bit-identical over
+    decision sequences with interleaved cluster churn."""
+    for trial in range(30):
+        rng = random.Random(1000 * list(DistributionPolicy).index(policy) + trial)
+        script = random_script(rng)
+        watcher_i = Watcher(random_cluster(random.Random(trial)))
+        watcher_c = Watcher(random_cluster(random.Random(trial)))
+        interp = TappEngine(policy, seed=trial, compiled=False)
+        comp = TappEngine(policy, seed=trial, compiled=True)
+        mut_i, mut_c = random.Random(trial + 7), random.Random(trial + 7)
+        for step in range(12):
+            tag = rng.choice((None, "default", "alpha", "beta", "unknown"))
+            inv = Invocation(function=rng.choice(("fn_a", "fn_b")), tag=tag)
+            d1 = interp.schedule(inv, script, watcher_i.cluster, trace=True)
+            d2 = comp.schedule(inv, script, watcher_c.cluster, trace=True)
+            assert_decisions_equal(
+                d1, d2, f"policy={policy} trial={trial} step={step} inv={inv}"
+            )
+            mutate_cluster(mut_i, watcher_i)
+            mutate_cluster(mut_c, watcher_c)
+
+
+def test_compiled_trace_off_same_placement():
+    rng = random.Random(42)
+    for trial in range(10):
+        script = random_script(rng)
+        cluster1 = random_cluster(random.Random(trial))
+        cluster2 = random_cluster(random.Random(trial))
+        traced = TappEngine(DistributionPolicy.SHARED, seed=5)
+        fast = TappEngine(DistributionPolicy.SHARED, seed=5)
+        for _ in range(6):
+            inv = Invocation("fn", tag=rng.choice((None, "alpha")))
+            d1 = traced.schedule(inv, script, cluster1, trace=True)
+            d2 = fast.schedule(inv, script, cluster2)  # default: no trace
+            assert d2.trace == []
+            assert (d1.outcome, d1.worker, d1.controller, d1.zone_restriction) == (
+                d2.outcome, d2.worker, d2.controller, d2.zone_restriction
+            )
+
+
+def test_schedule_batch_matches_sequential():
+    rng = random.Random(9)
+    script = random_script(rng)
+    cluster_a = random_cluster(random.Random(3))
+    cluster_b = random_cluster(random.Random(3))
+    seq = TappEngine(DistributionPolicy.DEFAULT, seed=1)
+    bat = TappEngine(DistributionPolicy.DEFAULT, seed=1)
+    invs = [
+        Invocation(f"fn{i % 3}", tag=rng.choice((None, "alpha", "beta")))
+        for i in range(20)
+    ]
+    sequential = [seq.schedule(i, script, cluster_a, trace=True) for i in invs]
+    seen = []
+    batched = bat.schedule_batch(
+        invs, script, cluster_b, trace=True,
+        on_decision=lambda inv, d: seen.append(inv),
+    )
+    assert seen == invs  # callback fired per decision, in order
+    for i, (d1, d2) in enumerate(zip(sequential, batched)):
+        assert_decisions_equal(d1, d2, f"batch idx={i}")
+
+
+def test_compile_script_shapes():
+    script = parse_tapp(
+        """
+- default:
+  - workers:
+    - set:
+    strategy: platform
+- edge:
+  - controller: EdgeCtl
+    workers:
+    - wrk: w0
+      invalidate: capacity_used 50%
+    - wrk: w1
+    topology_tolerance: same
+    invalidate: max_concurrent_invocations 4
+  followup: default
+"""
+    )
+    plan = compile_script(script)
+    assert set(plan.tags) == {"default", "edge"}
+    assert plan.default is plan.tags["default"]
+    edge = plan.tags["edge"]
+    assert edge.followup is FollowupKind.DEFAULT
+    assert edge.sticky_same_labels == ("EdgeCtl",)
+    block = edge.blocks[0]
+    assert not block.uses_sets
+    # Item-level condition overrides block-level; block-level fills the rest.
+    assert block.wrks[0].condition == CapacityUsed(50)
+    assert block.wrks[1].condition == MaxConcurrentInvocations(4)
+    # Pre-bound predicates agree with the conditions.
+    w = WorkerState(name="x", capacity_used_pct=60.0, inflight=1, queued=1)
+    assert block.wrks[0].invalid(w)
+    assert not block.wrks[1].invalid(w)
+    d = plan.tags["default"].blocks[0]
+    assert d.uses_sets and d.sets[0].strategy is Strategy.PLATFORM
+
+
+# ---------------------------------------------------------------------------
+# Epoch-cached topology views
+# ---------------------------------------------------------------------------
+
+
+class TestTopologyEpoch:
+    def _watcher(self):
+        cluster = make_cluster(
+            workers=[
+                dict(name="e0", zone="edge", sets=["edge", "any"]),
+                dict(name="c0", zone="cloud", sets=["cloud", "any"]),
+            ],
+            controllers=[dict(name="C0", zone="edge")],
+        )
+        return Watcher(cluster)
+
+    def test_load_updates_do_not_bump_epoch(self):
+        w = self._watcher()
+        epoch = w.cluster.topology_epoch
+        w.update_worker("e0", inflight=3, capacity_used_pct=75.0,
+                        inflight_by={"C0": 3})
+        assert w.cluster.topology_epoch == epoch
+
+    def test_structural_updates_bump_epoch(self):
+        w = self._watcher()
+        epoch = w.cluster.topology_epoch
+        w.update_worker("e0", healthy=False)
+        assert w.cluster.topology_epoch == epoch + 1
+        w.update_worker("e0", zone="cloud")
+        assert w.cluster.topology_epoch == epoch + 2
+        # No-op write of the same value is not a transition.
+        w.update_worker("e0", zone="cloud")
+        assert w.cluster.topology_epoch == epoch + 2
+
+    def test_membership_bumps_epoch_and_clears_cache(self):
+        w = self._watcher()
+        entry = cached_view_entry(
+            w.cluster, "edge", DistributionPolicy.SHARED, controller_name="C0"
+        )
+        assert (
+            cached_view_entry(
+                w.cluster, "edge", DistributionPolicy.SHARED, controller_name="C0"
+            )
+            is entry
+        )
+        w.register_worker(WorkerState(name="e1", zone="edge"))
+        fresh = cached_view_entry(
+            w.cluster, "edge", DistributionPolicy.SHARED, controller_name="C0"
+        )
+        assert fresh is not entry
+        assert "e1" in fresh.by_name
+
+    def test_view_entry_reads_live_load(self):
+        w = self._watcher()
+        entry = cached_view_entry(
+            w.cluster, "edge", DistributionPolicy.SHARED, controller_name="C0"
+        )
+        view = entry.by_name["e0"]
+        assert not view.saturated
+        w.update_worker("e0", inflight=16, inflight_by={"C0": 16})
+        # Same cached entry object, but the live WorkerState shows the load.
+        assert entry.by_name["e0"] is view
+        assert view.saturated
+
+    def test_set_members_cached_and_ordered_local_first(self):
+        w = self._watcher()
+        entry = cached_view_entry(
+            w.cluster, "edge", DistributionPolicy.SHARED, controller_name="C0"
+        )
+        local, foreign = entry.set_members("any")
+        assert [v.worker.name for v in local] == ["e0"]
+        assert [v.worker.name for v in foreign] == ["c0"]
+        assert entry.set_members("any") == (local, foreign)
+
+
+# ---------------------------------------------------------------------------
+# Batch admission
+# ---------------------------------------------------------------------------
+
+
+def test_admit_many_equals_sequential_admissions():
+    from repro.core.scheduler import AdmissionError, ControllerRuntime
+
+    def fresh():
+        cluster = make_cluster(
+            workers=[
+                dict(name="w0", zone="z", capacity_slots=8),
+                dict(name="w1", zone="z", capacity_slots=8),
+            ],
+            controllers=[dict(name="C0", zone="z"), dict(name="C1", zone="z")],
+        )
+        return Watcher(cluster)
+
+    placements = [("w0", "C0"), ("w0", "C1"), ("w1", "C0"), ("w0", "C0")]
+
+    w_seq, w_bat = fresh(), fresh()
+    seq_rt, bat_rt = ControllerRuntime(w_seq), ControllerRuntime(w_bat)
+    seq = [seq_rt.admit(w, c) for w, c in placements]
+    bat = bat_rt.admit_many(placements)
+
+    assert [(a.worker, a.controller) for a in bat] == placements
+    assert [a.invocation_id for a in bat] == [a.invocation_id for a in seq]
+    for name in ("w0", "w1"):
+        ws, wb = w_seq.cluster.workers[name], w_bat.cluster.workers[name]
+        assert (ws.inflight, ws.inflight_by, ws.capacity_used_pct) == (
+            wb.inflight, wb.inflight_by, wb.capacity_used_pct
+        )
+    # Completion releases batch tickets exactly like sequential ones.
+    for a in bat:
+        bat_rt.complete(a)
+    assert w_bat.cluster.workers["w0"].inflight == 0
+
+    # Validate-before-mutate: a bad placement leaves the cluster untouched.
+    w_err = fresh()
+    err_rt = ControllerRuntime(w_err)
+    with pytest.raises(AdmissionError):
+        err_rt.admit_many([("w0", "C0"), ("ghost", "C0")])
+    assert w_err.cluster.workers["w0"].inflight == 0
+
+
+# ---------------------------------------------------------------------------
+# zone_restriction regression (overwritten by earlier failed blocks)
+# ---------------------------------------------------------------------------
+
+
+SCRIPT_ZONE = """
+- default:
+  - workers:
+    - set:
+- t:
+  - controller: EdgeCtl
+    workers:
+    - set:
+    topology_tolerance: same
+  - workers:
+    - set:
+  followup: fail
+"""
+
+
+@pytest.mark.parametrize("compiled", [False, True])
+class TestZoneRestrictionReflectsSchedulingBlock:
+    def _cluster(self):
+        return make_cluster(
+            workers=[
+                dict(name="e0", zone="edge", sets=["any"], reachable=False),
+                dict(name="c0", zone="cloud", sets=["any"]),
+            ],
+            controllers=[
+                dict(name="EdgeCtl", zone="edge", healthy=False),
+                dict(name="CloudCtl", zone="cloud"),
+            ],
+        )
+
+    def test_scheduled_block_restriction_wins(self, compiled):
+        # Block 1 (tolerance=same → restricted to 'edge') fails: e0 is
+        # unreachable. Block 2 has no controller clause and schedules c0
+        # unrestricted — the decision must NOT report the stale 'edge'
+        # restriction from the failed block.
+        cluster = self._cluster()
+        engine = TappEngine(
+            DistributionPolicy.SHARED, seed=0, compiled=compiled
+        )
+        d = engine.schedule(
+            Invocation("f", tag="t"), parse_tapp(SCRIPT_ZONE), cluster,
+            trace=True,
+        )
+        assert d.scheduled and d.worker == "c0"
+        assert d.zone_restriction is None
+
+    def test_failure_keeps_last_evaluated_restriction(self, compiled):
+        # Remove the rescue block: with only the restricted block, failure
+        # reports the last evaluated restriction (diagnostic value).
+        script = parse_tapp(
+            """
+- t:
+  - controller: EdgeCtl
+    workers:
+    - set:
+    topology_tolerance: same
+  followup: fail
+"""
+        )
+        cluster = self._cluster()
+        engine = TappEngine(
+            DistributionPolicy.SHARED, seed=0, compiled=compiled
+        )
+        d = engine.schedule(Invocation("f", tag="t"), script, cluster)
+        assert not d.scheduled
+        assert d.zone_restriction == "edge"
+        assert d.failed_by_policy

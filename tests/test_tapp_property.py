@@ -1,4 +1,7 @@
 """Property-based tests (hypothesis) for the scheduler's invariants."""
+import pytest
+
+pytest.importorskip("hypothesis")  # dev-only dep; see requirements-dev.txt
 import hypothesis.strategies as st
 from hypothesis import given, settings
 

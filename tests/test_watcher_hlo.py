@@ -155,7 +155,7 @@ class TestEngineTrace:
         )
         script = parse_tapp("- default:\n  - workers:\n    - set:\n")
         d = TappEngine(DistributionPolicy.SHARED, seed=0).schedule(
-            Invocation("f"), script, cluster
+            Invocation("f"), script, cluster, trace=True
         )
         text = d.explain()
         assert "w1: VALID" in text
