@@ -1,7 +1,7 @@
 PY := python
 export PYTHONPATH := src:.
 
-.PHONY: test bench bench-sched bench-sched-full
+.PHONY: test bench bench-sched bench-sched-full bench-serve
 
 test:
 	$(PY) -m pytest -q
@@ -17,3 +17,8 @@ bench-sched:
 # Full sweep (4..1024 workers); regenerates the committed artifact.
 bench-sched-full:
 	$(PY) benchmarks/run.py sched --check --out BENCH_scheduler.json
+
+# Serving-engine benchmark (tAPP-scheduled continuous batching on small
+# CPU replicas); regenerates the committed artifact.
+bench-serve:
+	$(PY) benchmarks/run.py serve --out BENCH_serving.json

@@ -33,6 +33,13 @@ def main() -> None:
 
         raise SystemExit(sched_main(sys.argv[2:]))
 
+    if len(sys.argv) > 1 and sys.argv[1] == "serve":
+        # Serving-engine benchmark subcommand (JSON artifact):
+        #   python benchmarks/run.py serve [--out PATH]
+        from benchmarks.serving_bench import main as serve_main
+
+        raise SystemExit(serve_main(sys.argv[2:]))
+
     quick = "--quick" in sys.argv
     n_dep = 3 if quick else 6
 

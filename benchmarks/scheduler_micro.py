@@ -51,9 +51,37 @@ SCRIPT = """
   followup: default
 """
 
+# Constraint-heavy variant: every worker item stacks invalidate + affinity
+# and/or anti-affinity clauses, so each candidate check runs the full
+# constraint-layer conjunction against the running-function multiset. The
+# gate requires this to stay within CONSTRAINED_FACTOR of the plain tagged
+# script — per-decision cost must not grow with constraint count.
+CONSTRAINED_SCRIPT = """
+- default:
+  - workers:
+    - set:
+    strategy: platform
+    invalidate: overload
+- constrained:
+  - workers:
+    - set: east
+      affinity: [svc_cache]
+    strategy: random
+    invalidate: capacity_used 80%
+    anti-affinity: [noisy_batch]
+  - workers:
+    - set: west
+      anti-affinity: [noisy_batch, noisy_etl]
+    invalidate: max_concurrent_invocations 12
+  - workers:
+    - set:
+  followup: default
+"""
+
 SIZES = (4, 16, 64, 256, 1024)
 SMOKE_SIZES = (4, 64)
 BATCH = 64
+CONSTRAINED_FACTOR = 2.0  # constrained compiled vs plain compiled, same size
 
 
 def _cluster(n_workers: int) -> ClusterState:
@@ -62,8 +90,22 @@ def _cluster(n_workers: int) -> ClusterState:
     c.add_controller(ControllerState(name="C2", zone="west"))
     for i in range(n_workers):
         zone = "east" if i % 2 == 0 else "west"
+        # Mixed running-function multisets so the affinity predicates do
+        # real accept/reject work instead of short-circuiting uniformly.
+        running = {}
+        if i % 3 == 0:
+            running["svc_cache"] = 1
+        if i % 5 == 2:
+            running["noisy_batch"] = 2
+        if i % 7 == 3:
+            running["noisy_etl"] = 1
         c.add_worker(
-            WorkerState(name=f"w{i}", zone=zone, sets=frozenset({zone, "any"}))
+            WorkerState(
+                name=f"w{i}",
+                zone=zone,
+                sets=frozenset({zone, "any"}),
+                running_functions=running,
+            )
         )
     return c
 
@@ -79,30 +121,36 @@ def _time_us(fn, n: int = 2000) -> float:
 def microbench(*, smoke: bool = False) -> List[Dict]:
     rows: List[Dict] = []
     script = parse_tapp(SCRIPT)
+    constrained = parse_tapp(CONSTRAINED_SCRIPT)
     sizes = SMOKE_SIZES if smoke else SIZES
     iters = 300 if smoke else 2000
     for n_workers in sizes:
         cluster = _cluster(n_workers)
-        interp = TappEngine(DistributionPolicy.SHARED, seed=0, compiled=False)
-        comp = TappEngine(DistributionPolicy.SHARED, seed=0, compiled=True)
         vanilla = VanillaScheduler()
-        for label, inv in (
-            ("tagged", Invocation("fn", tag="tagged")),
-            ("default", Invocation("fn")),
+        for label, scr, inv in (
+            ("tagged", script, Invocation("fn", tag="tagged")),
+            ("default", script, Invocation("fn")),
+            ("constrained", constrained, Invocation("fn", tag="constrained")),
         ):
+            # Fresh engines per row: the compiled-plan cache is per script
+            # object, so alternating scripts on one engine would recompile.
+            interp = TappEngine(
+                DistributionPolicy.SHARED, seed=0, compiled=False
+            )
+            comp = TappEngine(DistributionPolicy.SHARED, seed=0, compiled=True)
             # The seed interpreter always produced a full trace; measure it
             # as such so `speedup` is against the paper-faithful baseline.
             us_interp = _time_us(
-                lambda: interp.schedule(inv, script, cluster, trace=True),
+                lambda: interp.schedule(inv, scr, cluster, trace=True),
                 iters,
             )
             us_comp = _time_us(
-                lambda: comp.schedule(inv, script, cluster), iters
+                lambda: comp.schedule(inv, scr, cluster), iters
             )
             batch = [inv] * BATCH
             us_batch = (
                 _time_us(
-                    lambda: comp.schedule_batch(batch, script, cluster),
+                    lambda: comp.schedule_batch(batch, scr, cluster),
                     max(1, iters // BATCH),
                 )
                 / BATCH
@@ -141,8 +189,16 @@ def write_bench_json(rows: List[Dict], path: str) -> None:
 
 
 def check_rows(rows: List[Dict], *, min_speedup: float = 1.0) -> List[str]:
-    """Regression gate: compiled must beat interpreted on every tAPP row."""
+    """Regression gates.
+
+    1. The compiled path must beat the interpreted reference on every
+       tAPP row.
+    2. Flat constraint cost: the constraint-heavy compiled script must
+       stay within ``CONSTRAINED_FACTOR`` of the plain tagged script's
+       us/decision at the same cluster size.
+    """
     failures = []
+    by_name = {row["name"]: row for row in rows}
     for row in rows:
         speedup = row.get("speedup")
         if speedup is not None and speedup < min_speedup:
@@ -151,6 +207,20 @@ def check_rows(rows: List[Dict], *, min_speedup: float = 1.0) -> List[str]:
                 f"interpreted {row['us_interpreted']:.1f}us "
                 f"(speedup {speedup:.2f}x < {min_speedup:.2f}x)"
             )
+        name = row["name"]
+        if name.startswith("tapp_constrained_"):
+            plain = by_name.get(
+                name.replace("tapp_constrained_", "tapp_tagged_")
+            )
+            if plain is not None:
+                budget = CONSTRAINED_FACTOR * plain["us_compiled"]
+                if row["us_compiled"] > budget:
+                    failures.append(
+                        f"{name}: constraint-heavy compiled "
+                        f"{row['us_compiled']:.1f}us exceeds "
+                        f"{CONSTRAINED_FACTOR:.1f}x plain tagged "
+                        f"({plain['us_compiled']:.1f}us)"
+                    )
     return failures
 
 

@@ -4,10 +4,15 @@ continuous batching on CPU-hosted small replicas.
 Not a paper table per se, but the data-plane companion of the paper's
 evaluation: it shows the scheduling layer keeping replicas busy and
 routing around load, measured in engine ticks (deterministic).
+
+Run ``python benchmarks/run.py serve --out BENCH_serving.json`` (or
+``make bench-serve``) to record the committed artifact.
 """
 from __future__ import annotations
 
+import argparse
 import dataclasses
+import json
 import statistics
 import time
 from typing import Dict, List
@@ -35,6 +40,21 @@ SCRIPT = """
   followup: default
 """
 
+# Constraint-layer variant: interactive requests spread via self
+# anti-affinity (prefer a replica not already serving the model) before
+# falling back to the load-based policy above.
+SPREAD_SCRIPT = SCRIPT + """
+- spread:
+  - workers:
+    - set:
+    strategy: platform
+    invalidate: capacity_used 75%
+    anti-affinity: [smollm-135m]
+  - workers:
+    - set:
+  followup: default
+"""
+
 
 def _mk_replica(name, zone, sets, params, cfg, slots=4):
     return Replica(name, cfg, params, zone=zone, sets=sets, slots=slots,
@@ -46,8 +66,18 @@ def serving_bench() -> List[Dict]:
     params = Model(cfg).init_params(jax.random.PRNGKey(0))
 
     rows = []
-    for policy in (DistributionPolicy.SHARED, DistributionPolicy.ISOLATED):
-        engine = ServingEngine(distribution=policy, tapp_script=SCRIPT)
+    configs = (
+        (f"serving_{DistributionPolicy.SHARED.value}",
+         DistributionPolicy.SHARED, SCRIPT, "interactive"),
+        (f"serving_{DistributionPolicy.ISOLATED.value}",
+         DistributionPolicy.ISOLATED, SCRIPT, "interactive"),
+        # Anti-affinity spread: constraint-layer policy doing data-plane
+        # duty (prefer replicas not already serving the model).
+        ("serving_shared_antiaffinity",
+         DistributionPolicy.SHARED, SPREAD_SCRIPT, "spread"),
+    )
+    for name, policy, script, tag in configs:
+        engine = ServingEngine(distribution=policy, tapp_script=script)
         engine.add_controller("EdgeCtl", zone="edge")
         engine.add_controller("CloudCtl", zone="cloud")
         engine.add_replica(_mk_replica("e0", "edge", ["edge"], params, cfg))
@@ -57,7 +87,7 @@ def serving_bench() -> List[Dict]:
         reqs = [
             engine.submit(
                 "smollm-135m", [1 + i % 7, 2, 3],
-                tag="interactive" if i % 2 == 0 else None,
+                tag=tag if i % 2 == 0 else None,
                 max_new_tokens=6,
             )
             for i in range(n_requests)
@@ -69,7 +99,7 @@ def serving_bench() -> List[Dict]:
         latencies = [r.finished_tick - r.submitted_tick for r in done]
         tokens = sum(len(r.output) for r in done)
         rows.append({
-            "name": f"serving_{policy.value}",
+            "name": name,
             "us_per_call": wall / max(1, tokens) * 1e6,
             "derived": (
                 f"done={len(done)}/{n_requests};"
@@ -78,3 +108,32 @@ def serving_bench() -> List[Dict]:
             ),
         })
     return rows
+
+
+def write_bench_json(rows: List[Dict], path: str) -> None:
+    payload = {
+        "benchmark": "serving_bench",
+        "unit": "us_per_token",
+        "rows": rows,
+    }
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=2)
+        fh.write("\n")
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default=None,
+                        help="write BENCH_serving.json to this path")
+    args = parser.parse_args(argv)
+    rows = serving_bench()
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f}us,{r['derived']}")
+    if args.out:
+        write_bench_json(rows, args.out)
+        print(f"# wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -6,7 +6,9 @@ Three request classes (the paper's ①②③) over an edge+cloud deployment:
   * untagged (generic)    → local-first with cloud spill (default tag).
 
 Also demonstrates: replica failure → automatic re-routing; live policy
-reload flipping the ML class to the edge without restarting anything.
+reload flipping the ML class to the edge without restarting anything;
+and the constraint layer's anti-affinity spread with `trace=True`
+explain output.
 
 Run: PYTHONPATH=src python examples/serve_topology.py
 """
@@ -15,6 +17,7 @@ import dataclasses
 import jax
 
 from repro.configs import smoke_config
+from repro.core.scheduler.engine import Invocation
 from repro.core.scheduler.topology import DistributionPolicy
 from repro.models import Model
 from repro.runtime.serve_engine import Replica, ServingEngine
@@ -55,6 +58,21 @@ FLIPPED = CASE_STUDY_SCRIPT.replace(
     "- controller: CloudCtl\n    workers:\n    - set: cloud",
     "- controller: LocalCtl_1\n    workers:\n    - set: edge",
 )
+
+# Constraint layer v2: `spread` requests avoid replicas already serving
+# the model (self anti-affinity = spread semantics), spilling to any
+# replica once all host one.
+SPREAD_SCRIPT = CASE_STUDY_SCRIPT + """
+- spread:
+  - workers:
+    - set:
+    strategy: best_first
+    invalidate: capacity_used 75%
+    anti-affinity: [smollm-135m]
+  - workers:
+    - set:
+  followup: default
+"""
 
 
 def main() -> None:
@@ -106,6 +124,19 @@ def main() -> None:
                          max_new_tokens=3) for _ in range(3)]
     engine.run_until_done()
     print(f"ml after reload: replicas {[r.replica for r in ml2]}")
+
+    print("\n== anti-affinity spread (constraint layer v2) ==")
+    engine.watcher.load_script(SPREAD_SCRIPT)
+    spread = [engine.submit("smollm-135m", [4, 2], tag="spread",
+                            max_new_tokens=8) for _ in range(3)]
+    engine.step_once()  # admit + first decode tick; replicas now host work
+    print(f"spread placements: {[r.replica for r in spread]}")
+    probe = Invocation(function="smollm-135m", tag="spread",
+                       model_id="smollm-135m")
+    decision = engine.gateway.route(probe, trace=True)
+    print("probe decision with trace=True explain output:")
+    print(decision.explain())
+    engine.run_until_done()
     print(f"gateway stats: {engine.gateway.stats}")
 
 

@@ -1,4 +1,16 @@
 """Topology-aware function-execution scheduler (the paper's control plane)."""
+from repro.core.scheduler.constraints import (
+    DEFAULT_INVALIDATE,
+    ConstraintSpec,
+    compile_spec,
+    constraint_reason,
+    invalid_reason,
+    is_invalid,
+    resolve_constraints,
+    resolve_invalidate,
+    spec_predicate,
+    spec_violated,
+)
 from repro.core.scheduler.controller import Admission, AdmissionError, ControllerRuntime
 from repro.core.scheduler.engine import (
     Invocation,
@@ -8,12 +20,6 @@ from repro.core.scheduler.engine import (
     TraceEvent,
 )
 from repro.core.scheduler.gateway import Gateway, GatewayStats
-from repro.core.scheduler.invalidate import (
-    DEFAULT_INVALIDATE,
-    invalid_reason,
-    is_invalid,
-    resolve_invalidate,
-)
 from repro.core.scheduler.state import (
     ClusterState,
     ControllerState,
@@ -40,10 +46,16 @@ __all__ = [
     "Admission",
     "AdmissionError",
     "ClusterState",
+    "ConstraintSpec",
     "ControllerRuntime",
     "ControllerState",
     "DEFAULT_INVALIDATE",
     "DistributionPolicy",
+    "compile_spec",
+    "constraint_reason",
+    "resolve_constraints",
+    "spec_predicate",
+    "spec_violated",
     "Gateway",
     "GatewayStats",
     "Invocation",

@@ -26,6 +26,9 @@ class Admission:
     worker: str
     controller: str
     invocation_id: int
+    # Function name for the running-function multiset (affinity signal);
+    # empty string = untracked (legacy callers).
+    function: str = ""
 
 
 class AdmissionError(RuntimeError):
@@ -47,7 +50,9 @@ class ControllerRuntime:
     def cluster(self) -> ClusterState:
         return self._watcher.cluster
 
-    def admit(self, worker_name: str, controller_name: str) -> Admission:
+    def admit(
+        self, worker_name: str, controller_name: str, *, function: str = ""
+    ) -> Admission:
         worker = self.cluster.workers.get(worker_name)
         if worker is None:
             raise AdmissionError(f"unknown worker {worker_name!r}")
@@ -56,59 +61,80 @@ class ControllerRuntime:
         self._next_id += 1
         by = dict(worker.inflight_by)
         by[controller_name] = by.get(controller_name, 0) + 1
-        self._watcher.update_worker(
-            worker_name,
+        fields: Dict = dict(
             inflight=worker.inflight + 1,
             inflight_by=by,
             capacity_used_pct=_pct(worker.inflight + 1, worker.capacity_slots),
         )
+        if function:
+            running = dict(worker.running_functions)
+            running[function] = running.get(function, 0) + 1
+            fields["running_functions"] = running
+        self._watcher.update_worker(worker_name, **fields)
         return Admission(
             worker=worker_name,
             controller=controller_name,
             invocation_id=self._next_id,
+            function=function,
         )
 
     def admit_many(
-        self, placements: Sequence[Tuple[str, str]]
+        self, placements: Sequence[Tuple]
     ) -> List[Admission]:
-        """Batch admission for a set of (worker, controller) placements.
+        """Batch admission for ``(worker, controller[, function])`` placements.
 
         Issues ONE watcher update per distinct worker (instead of one per
         invocation), which is the admission-side counterpart of
-        ``TappEngine.schedule_batch``. All placements are validated before
-        any state is mutated, so a bad placement leaves the cluster
-        untouched.
+        ``TappEngine.schedule_batch``; the per-worker running-function
+        multiset is updated in the same write, so batch admissions leave
+        state identical to the equivalent sequence of :meth:`admit` calls.
+        All placements are validated before any state is mutated, so a bad
+        placement leaves the cluster untouched.
         """
-        grouped: Dict[str, List[str]] = {}
-        for worker_name, controller_name in placements:
+        normalized: List[Tuple[str, str, str]] = []
+        for placement in placements:
+            worker_name, controller_name = placement[0], placement[1]
+            function = placement[2] if len(placement) > 2 else ""
             worker = self.cluster.workers.get(worker_name)
             if worker is None:
                 raise AdmissionError(f"unknown worker {worker_name!r}")
             if not worker.reachable:
                 raise AdmissionError(f"worker {worker_name!r} unreachable")
-            grouped.setdefault(worker_name, []).append(controller_name)
+            normalized.append((worker_name, controller_name, function))
 
-        for worker_name, controller_names in grouped.items():
+        grouped: Dict[str, List[Tuple[str, str]]] = {}
+        for worker_name, controller_name, function in normalized:
+            grouped.setdefault(worker_name, []).append((controller_name, function))
+
+        for worker_name, admits in grouped.items():
             worker = self.cluster.workers[worker_name]
             by = dict(worker.inflight_by)
-            for controller_name in controller_names:
+            running = dict(worker.running_functions)
+            tracked = False
+            for controller_name, function in admits:
                 by[controller_name] = by.get(controller_name, 0) + 1
-            inflight = worker.inflight + len(controller_names)
-            self._watcher.update_worker(
-                worker_name,
+                if function:
+                    running[function] = running.get(function, 0) + 1
+                    tracked = True
+            inflight = worker.inflight + len(admits)
+            fields: Dict = dict(
                 inflight=inflight,
                 inflight_by=by,
                 capacity_used_pct=_pct(inflight, worker.capacity_slots),
             )
+            if tracked:
+                fields["running_functions"] = running
+            self._watcher.update_worker(worker_name, **fields)
 
         admissions: List[Admission] = []
-        for worker_name, controller_name in placements:
+        for worker_name, controller_name, function in normalized:
             self._next_id += 1
             admissions.append(
                 Admission(
                     worker=worker_name,
                     controller=controller_name,
                     invocation_id=self._next_id,
+                    function=function,
                 )
             )
         return admissions
@@ -125,6 +151,14 @@ class ControllerRuntime:
             inflight_by=by,
             capacity_used_pct=_pct(inflight, worker.capacity_slots),
         )
+        if admission.function:
+            running = dict(worker.running_functions)
+            remaining = running.get(admission.function, 1) - 1
+            if remaining > 0:
+                running[admission.function] = remaining
+            else:
+                running.pop(admission.function, None)
+            fields["running_functions"] = running
         if slow:
             # Straggler signal: report the worker as fully loaded so
             # capacity_used-based policies route around it until the next

@@ -19,7 +19,9 @@ Evaluation order, faithful to the paper:
    gateway-chosen controller (round-robin cursor).
 4. Per block: expand worker items against the controller's distribution
    view, order candidates by block/set strategy, and pick the first one
-   whose invalidate condition does not hold.
+   whose resolved constraint set (invalidate condition + affinity /
+   anti-affinity clauses; see :mod:`repro.core.scheduler.constraints`)
+   does not invalidate it.
 5. All blocks exhausted → followup (``fail`` | re-evaluate ``default``;
    the default tag's own followup is always ``fail``).
 
@@ -44,11 +46,20 @@ from __future__ import annotations
 import dataclasses
 import enum
 import random as _random
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import (
+    TYPE_CHECKING,
+    Callable,
+    Dict,
+    List,
+    Optional,
+    Sequence,
+    Tuple,
+)
 
-from repro.core.scheduler.invalidate import (
-    invalid_reason,
-    resolve_invalidate,
+from repro.core.scheduler.constraints import (
+    ConstraintSpec,
+    constraint_reason,
+    resolve_constraints,
 )
 from repro.core.scheduler.state import ClusterState, ControllerState, WorkerState
 from repro.core.scheduler.strategy import (
@@ -73,12 +84,15 @@ from repro.core.tapp.ast import (
     WorkerRef,
     WorkerSet,
 )
-from repro.core.tapp.compile import (
-    CompiledBlock,
-    CompiledScript,
-    CompiledTag,
-    compile_script,
-)
+if TYPE_CHECKING:  # imported lazily at runtime (in compiled_plan):
+    # tapp.compile lowers through the scheduler-side constraint layer, so
+    # keeping this edge out of import time leaves tapp ↔ scheduler free of
+    # module-scope cycles in either load order.
+    from repro.core.tapp.compile import (
+        CompiledBlock,
+        CompiledScript,
+        CompiledTag,
+    )
 
 
 class Outcome(enum.Enum):
@@ -198,9 +212,11 @@ class TappEngine:
             decisions.append(decision)
         return decisions
 
-    def compiled_plan(self, script: TappScript) -> CompiledScript:
+    def compiled_plan(self, script: TappScript) -> "CompiledScript":
         """The lowered plan for ``script``, compiled once per script object."""
         if script is not self._plan_source:
+            from repro.core.tapp.compile import compile_script
+
             self._plan = compile_script(script)
             self._plan_source = script
         assert self._plan is not None
@@ -519,7 +535,7 @@ class TappEngine:
             if item.invalid(worker) or view.saturated:
                 return None
             return controller.name, worker.name
-        reason = invalid_reason(worker, item.condition)
+        reason = constraint_reason(worker, item.spec)
         if reason is None and view.saturated:
             reason = (
                 f"controller entitlement saturated "
@@ -778,7 +794,7 @@ class TappEngine:
         candidates = self._expand_block_candidates(
             invocation, block, views, view_map
         )
-        for worker, condition in candidates:
+        for worker, spec in candidates:
             view = view_map.get(worker.name)
             if view is None:
                 if tr is not None:
@@ -790,7 +806,7 @@ class TappEngine:
                         )
                     )
                 continue
-            reason = invalid_reason(worker, condition)
+            reason = constraint_reason(worker, spec)
             if reason is None and view.saturated:
                 reason = (
                     f"controller entitlement saturated "
@@ -880,7 +896,7 @@ class TappEngine:
         views: Sequence[WorkerView],
         view_map: Dict[str, WorkerView],
     ):
-        """Yield (worker, resolved invalidate condition) in trial order."""
+        """Yield (worker, resolved ConstraintSpec) in trial order."""
         if not block.uses_sets:
             # Explicit wrk list: the block-level strategy orders the list.
             items = order_candidates(
@@ -896,9 +912,9 @@ class TappEngine:
                     # Unknown label ⇒ treated as unreachable: emit a stub so the
                     # trace shows why it was skipped.
                     ghost = WorkerState(name=item.label, reachable=False)
-                    yield ghost, resolve_invalidate(item.invalidate, block.invalidate)
+                    yield ghost, resolve_constraints(item, block)
                     continue
-                yield view.worker, resolve_invalidate(item.invalidate, block.invalidate)
+                yield view.worker, resolve_constraints(item, block)
             return
 
         # Set list: block-level strategy orders the *set items*; each set's
@@ -921,6 +937,6 @@ class TappEngine:
             ) + order_candidates(
                 foreign, inner, rng=self._rng, function_hash=invocation.hash
             )
-            condition = resolve_invalidate(item.invalidate, block.invalidate)
+            spec = resolve_constraints(item, block)
             for worker in ordered:
-                yield worker, condition
+                yield worker, spec

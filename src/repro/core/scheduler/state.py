@@ -38,6 +38,11 @@ class WorkerState:
         invalidate condition for every policy (paper §3.3).
       resident_models: model ids whose weights are resident (data locality:
         scheduling onto a non-resident worker incurs a cold start).
+      running_functions: multiset of admitted (buffered + executing)
+        invocations by function name — the signal the affinity /
+        anti-affinity constraints read. Fed by the controller runtime on
+        admit/complete; volatile like ``inflight`` (never bumps the
+        topology epoch).
       memory_bytes / memory_used_bytes: HBM capacity bookkeeping.
       perf_factor: relative execution-speed multiplier (1.0 = nominal);
         the simulator uses it for heterogeneous workers and stragglers.
@@ -49,6 +54,7 @@ class WorkerState:
     capacity_slots: int = 16
     inflight: int = 0
     inflight_by: Dict[str, int] = dataclasses.field(default_factory=dict)
+    running_functions: Dict[str, int] = dataclasses.field(default_factory=dict)
     queued: int = 0
     capacity_used_pct: float = 0.0
     healthy: bool = True
@@ -80,6 +86,10 @@ class WorkerState:
     def inflight_for(self, controller: str) -> int:
         """Admissions by one controller (its entitlement consumption)."""
         return self.inflight_by.get(controller, 0)
+
+    def running_count(self, function: str) -> int:
+        """Admitted invocations of ``function`` currently on this worker."""
+        return self.running_functions.get(function, 0)
 
 
 @dataclasses.dataclass

@@ -28,9 +28,10 @@ Subscriber = Callable[[str], None]  # event kind: "topology" | "script"
 # and residency are read live through WorkerState references (the cached
 # views stay correct without a rebuild) but are invalidated conservatively,
 # so any future policy that filters them out of the view stays safe. These
-# are rare transitions; inflight counters and load percentages are the
-# per-decision churn and never bump the epoch, so admissions and
-# completions stay cache-hit.
+# are rare transitions; inflight counters, load percentages, and the
+# running-function multiset (the affinity signal) are the per-decision
+# churn and never bump the epoch, so admissions and completions stay
+# cache-hit.
 _STRUCTURAL_WORKER_FIELDS = frozenset(
     {
         "zone",

@@ -57,6 +57,12 @@ class FunctionProfile:
     data_roundtrips: int = 1              # queries per invocation
     requires: Optional[str] = None        # resource reachable only in some zones
     tag: Optional[str] = None             # tAPP policy tag attached to requests
+    # Co-location interference (noisy-neighbour model): execution time is
+    # scaled by (1 + sensitivity * co_runners), where co_runners counts
+    # admitted invocations of *other* functions on the worker at start time
+    # (cache/membus pressure from dissimilar workloads; instances of the
+    # same function share working sets and are not charged).
+    interference_sensitivity: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -173,6 +179,12 @@ class SimResult:
             if r.worker:
                 counts[r.worker] = counts.get(r.worker, 0) + 1
         return counts
+
+    def for_function(self, function: str) -> "SimResult":
+        """The sub-result of one function's requests (per-class summaries)."""
+        return SimResult(
+            records=[r for r in self.records if r.function == function]
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -358,7 +370,9 @@ class Simulation:
         now += self.network.get_rtt(self.config.gateway_zone, ctl_zone)
         now += self.network.get_rtt(ctl_zone, worker.zone)
 
-        admission = self.runtime.admit(decision.worker, decision.controller or "?")
+        admission = self.runtime.admit(
+            decision.worker, decision.controller or "?", function=profile.name
+        )
         state = {"payload": payload, "record": record, "admission": admission}
         queue = self._queues.setdefault(decision.worker, [])
         # `inflight` counts all admitted (buffered) work — the paper's
@@ -400,9 +414,20 @@ class Simulation:
             self._push(time + duration, "finish", state)
             return
 
-        # Execution time with heterogeneity + jitter.
+        # Execution time with heterogeneity + jitter + co-location
+        # interference (anti-affinity policies exist to dodge the latter).
         jitter = 1.0 + self.rng.uniform(-profile.exec_jitter, profile.exec_jitter)
-        duration += profile.exec_time * jitter / max(1e-6, worker.perf_factor)
+        slowdown = 1.0
+        if profile.interference_sensitivity > 0.0:
+            co_runners = sum(
+                count
+                for fn, count in worker.running_functions.items()
+                if fn != profile.name
+            )
+            slowdown = 1.0 + profile.interference_sensitivity * co_runners
+        duration += (
+            profile.exec_time * jitter * slowdown / max(1e-6, worker.perf_factor)
+        )
 
         # Data locality: RTTs + payload transfer from the data zone. Link
         # bandwidth is shared by concurrent transfers on the same zone pair

@@ -316,6 +316,170 @@ def run_benchmark(
     return sim, result
 
 
+# ---------------------------------------------------------------------------
+# Co-location / interference scenario family (constraint layer v2)
+# ---------------------------------------------------------------------------
+#
+# The affinity/anti-affinity extension (arXiv:2407.14572) targets workloads
+# the original paper cannot express: *what else runs on the worker* matters.
+# Two racks of identical workers; a latency-sensitive API function suffers
+# noisy-neighbour interference from a batch cruncher (cache/membus
+# pressure), and a join function wants to co-locate with the cache-warmer
+# that holds its working set.
+
+ZONE_RACK_A = "rack_a"
+ZONE_RACK_B = "rack_b"
+
+
+def colocation_cluster() -> Watcher:
+    """Two racks × two workers, one controller per rack."""
+    cluster = ClusterState()
+    cluster.add_controller(ControllerState(name="RackACtl", zone=ZONE_RACK_A))
+    cluster.add_controller(ControllerState(name="RackBCtl", zone=ZONE_RACK_B))
+    for i in range(4):
+        zone = ZONE_RACK_A if i < 2 else ZONE_RACK_B
+        cluster.add_worker(
+            WorkerState(
+                name=f"w{i}",
+                zone=zone,
+                sets=frozenset({zone, "any"}),
+                capacity_slots=4,
+            )
+        )
+    return Watcher(cluster)
+
+
+def colocation_network() -> NetworkModel:
+    """Rack-to-rack hops are cheap; interference, not topology, dominates."""
+    return NetworkModel(
+        rtt={
+            (ZONE_RACK_A, ZONE_RACK_A): 0.0005,
+            (ZONE_RACK_A, ZONE_RACK_B): 0.002,
+            (ZONE_RACK_B, ZONE_RACK_B): 0.0005,
+        },
+        bandwidth={},
+        default_bandwidth=1e9,
+    )
+
+
+def colocation_profiles() -> Dict[str, FunctionProfile]:
+    return {
+        # Latency-sensitive: each co-running foreign invocation multiplies
+        # its 20ms service time (cache-thrash victim).
+        "latency_api": FunctionProfile(
+            name="latency_api", exec_time=0.020, cold_start_time=0.25,
+            interference_sensitivity=4.0, tag="latency",
+        ),
+        # Noisy neighbour: long CPU burns, insensitive itself.
+        "batch_crunch": FunctionProfile(
+            name="batch_crunch", exec_time=0.8, cold_start_time=0.25,
+            tag="batch",
+        ),
+        # Affinity pair: the warmer pins a working set; the join wants to
+        # land where a warmer instance is running.
+        "cache_warmer": FunctionProfile(
+            name="cache_warmer", exec_time=1.5, cold_start_time=0.25,
+            tag="warm",
+        ),
+        "feature_join": FunctionProfile(
+            name="feature_join", exec_time=0.030, cold_start_time=0.25,
+            tag="join",
+        ),
+    }
+
+
+#: Baseline: constraint-free default policy — the scheduler is blind to
+#: co-location, so latency_api lands next to batch_crunch.
+COLOCATION_BLANK_SCRIPT = """
+- default:
+  - workers:
+    - set:
+    strategy: platform
+    invalidate: overload
+"""
+
+#: Constraint-layer policy: anti-affinity keeps the interference victims
+#: away from the cruncher (spilling to loaded-but-quiet workers first),
+#: and affinity steers the join onto a warmer-hosting worker.
+COLOCATION_SCRIPT = """
+- default:
+  - workers:
+    - set:
+    strategy: platform
+    invalidate: overload
+- latency:
+  - workers:
+    - set:
+    strategy: platform
+    invalidate: capacity_used 90%
+    anti-affinity: [batch_crunch]
+  followup: default
+- batch:
+  - workers:
+    - set:
+    strategy: best_first
+    invalidate: overload
+    anti-affinity: [latency_api]
+  followup: default
+- warm:
+  - workers:
+    - set:
+    strategy: platform
+    invalidate: overload
+- join:
+  - workers:
+    - set:
+    strategy: platform
+    invalidate: overload
+    affinity: [cache_warmer]
+  followup: default
+"""
+
+
+def colocation_workload(
+    *, requests_per_user: int = 50
+) -> List[WorkloadSpec]:
+    return [
+        WorkloadSpec("latency_api", users=4,
+                     requests_per_user=requests_per_user, ramp_up=1.0),
+        WorkloadSpec("batch_crunch", users=4,
+                     requests_per_user=max(1, requests_per_user // 4),
+                     ramp_up=1.0),
+        WorkloadSpec("cache_warmer", users=1,
+                     requests_per_user=max(1, requests_per_user // 5),
+                     pause=0.2),
+        WorkloadSpec("feature_join", users=2,
+                     requests_per_user=requests_per_user, ramp_up=1.0),
+    ]
+
+
+def run_colocation_case(
+    *, constrained: bool, seed: int = 0, requests_per_user: int = 50
+) -> Tuple[Simulation, "SimResult"]:
+    """Run the interference workload with/without the affinity constraints.
+
+    Returns (sim, result); split per-class stats via
+    ``result.for_function(...)``.
+    """
+    watcher = colocation_cluster()
+    gateway = Gateway(
+        watcher, distribution=DistributionPolicy.SHARED, seed=seed
+    )
+    watcher.load_script(
+        COLOCATION_SCRIPT if constrained else COLOCATION_BLANK_SCRIPT
+    )
+    sim = Simulation(
+        watcher,
+        gateway_scheduler(gateway),
+        colocation_network(),
+        colocation_profiles(),
+        SimConfig(seed=seed, gateway_zone=ZONE_RACK_A),
+        is_tapp=True,
+    )
+    result = sim.run(colocation_workload(requests_per_user=requests_per_user))
+    return sim, result
+
+
 def run_mqtt_case(
     *, use_tapp: bool, minutes: int = 30, seed: int = 0, cloud_first: bool = True
 ) -> Dict[str, "SimResult"]:

@@ -4,13 +4,22 @@ Grammar (paper, Fig. 4)::
 
     app        ::= tag*
     tag        ::= policy_tag : block+  strategy?  followup?
-    block      ::= controller?  workers  strategy?  invalidate?
+    block      ::= controller?  workers  strategy?  constraint*
     controller ::= controller: label  (topology_tolerance: all|same|none)?
-    workers    ::= workers: (wrk: label  invalidate?)+
-                 | workers: (set: label?  strategy?  invalidate?)+
+    workers    ::= workers: (wrk: label  constraint*)+
+                 | workers: (set: label?  strategy?  constraint*)+
     strategy   ::= strategy: random | platform | best_first
+    constraint ::= invalidate | affinity | anti-affinity
     invalidate ::= invalidate: capacity_used n% | max_concurrent_invocations n | overload
+    affinity   ::= affinity: fn (, fn)*            -- all must be running there
+    anti-affinity ::= anti-affinity: fn (, fn)*    -- none may be running there
     followup   ::= followup: default | fail
+
+The ``affinity``/``anti-affinity`` clauses are the constraint-layer-v2
+extension (the authors' follow-up, arXiv:2407.14572): they constrain *what
+else is running* on a worker, evaluated against the live per-worker
+running-function multiset. At most one of each clause per level; item-level
+clauses override block-level ones (same resolution rule as ``invalidate``).
 
 The special ``default`` tag is the policy for untagged functions and the target of
 ``followup: default``; its own followup is always ``fail`` (paper §3.3).
@@ -125,6 +134,77 @@ Invalidate = Union[Overload, CapacityUsed, MaxConcurrentInvocations]
 
 
 # ---------------------------------------------------------------------------
+# Affinity constraints (constraint layer v2; arXiv:2407.14572 semantics)
+# ---------------------------------------------------------------------------
+
+
+def _check_function_list(kind: str, functions: Tuple[str, ...]) -> None:
+    if not functions:
+        raise ValueError(f"{kind} requires at least one function name")
+    for fn in functions:
+        if not isinstance(fn, str) or not fn.strip():
+            raise ValueError(f"{kind} function names must be non-empty strings")
+    if len(set(functions)) != len(functions):
+        raise ValueError(f"duplicate function in {kind} list: {functions}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Affinity:
+    """``affinity: <fn, ...>`` — co-location requirement.
+
+    A worker is valid only if **every** listed function currently has at
+    least one running (admitted) instance on it. Affinity gates on the live
+    per-worker multiset, so a function listed here that is running nowhere
+    makes the clause unsatisfiable — scripts should pair it with a fallback
+    block or ``followup`` for bootstrap.
+    """
+
+    functions: Tuple[str, ...]
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "functions", tuple(self.functions))
+        _check_function_list("affinity", self.functions)
+
+    def describe(self) -> str:
+        return "affinity " + ", ".join(self.functions)
+
+
+@dataclasses.dataclass(frozen=True)
+class AntiAffinity:
+    """``anti-affinity: <fn, ...>`` — interference avoidance.
+
+    A worker is invalid if **any** listed function currently has a running
+    (admitted) instance on it. Listing a function's own name yields spread
+    semantics: no two instances co-locate while alternatives exist.
+    """
+
+    functions: Tuple[str, ...]
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "functions", tuple(self.functions))
+        _check_function_list("anti-affinity", self.functions)
+
+    def describe(self) -> str:
+        return "anti-affinity " + ", ".join(self.functions)
+
+
+def affinity_from_value(kind: str, value) -> Tuple[str, ...]:
+    """Parse an affinity function list from YAML: list form or comma string."""
+    if isinstance(value, str):
+        names = [part.strip() for part in value.split(",")]
+    elif isinstance(value, (list, tuple)):
+        names = [str(part).strip() for part in value]
+    else:
+        raise ValueError(
+            f"{kind} expects a function list (e.g. '[fnA, fnB]' or "
+            f"'fnA, fnB'); got {type(value).__name__}"
+        )
+    if any(not n for n in names):
+        raise ValueError(f"{kind} contains an empty function name")
+    return tuple(names)
+
+
+# ---------------------------------------------------------------------------
 # Worker items
 # ---------------------------------------------------------------------------
 
@@ -135,6 +215,8 @@ class WorkerRef:
 
     label: str
     invalidate: Optional[Invalidate] = None
+    affinity: Optional[Affinity] = None
+    anti_affinity: Optional[AntiAffinity] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -143,12 +225,14 @@ class WorkerSet:
 
     ``label is None`` (blank set) selects *all* workers visible to the
     controller. Sets may carry their own inner selection strategy and
-    invalidate condition (paper §3.3).
+    constraint clauses (paper §3.3; affinity extension).
     """
 
     label: Optional[str] = None
     strategy: Optional[Strategy] = None
     invalidate: Optional[Invalidate] = None
+    affinity: Optional[Affinity] = None
+    anti_affinity: Optional[AntiAffinity] = None
 
 
 WorkerItem = Union[WorkerRef, WorkerSet]
@@ -173,6 +257,8 @@ class Block:
     controller: Optional[ControllerClause] = None
     strategy: Optional[Strategy] = None
     invalidate: Optional[Invalidate] = None
+    affinity: Optional[Affinity] = None
+    anti_affinity: Optional[AntiAffinity] = None
 
     def __post_init__(self) -> None:
         if not self.workers:

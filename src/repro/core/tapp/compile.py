@@ -3,9 +3,10 @@
 The interpreter in :mod:`repro.core.scheduler.engine` re-derives, on every
 scheduling decision, facts that are pure functions of the script text:
 effective strategies/followups, the wrk-vs-set shape of each block, the
-resolved invalidate condition of each worker item (item ▸ block ▸ platform
-default), and the ``topology_tolerance: same`` sticky-zone scan performed
-on followup. Compilation hoists all of that to script-load time, so the
+resolved constraint set of each worker item (item ▸ block ▸ platform
+default — invalidate condition plus affinity / anti-affinity clauses),
+and the ``topology_tolerance: same`` sticky-zone scan performed on
+followup. Compilation hoists all of that to script-load time, so the
 per-decision cost is amortized-O(candidates tried):
 
 * each tag becomes a :class:`CompiledTag` with its effective strategy,
@@ -13,9 +14,12 @@ per-decision cost is amortized-O(candidates tried):
 * each block becomes a :class:`CompiledBlock` pre-split into either a
   wrk-list (:class:`CompiledWrk`) or a set-list (:class:`CompiledSet`),
   with the block-level strategy defaulted;
-* each worker item carries its resolved :class:`Invalidate` condition AND
-  a pre-bound ``invalid(worker) -> bool`` closure, eliminating the
-  per-candidate ``isinstance`` dispatch of :func:`is_invalid`.
+* each worker item carries its resolved
+  :class:`~repro.core.scheduler.constraints.ConstraintSpec` AND a
+  pre-bound ``invalid(worker) -> bool`` closure lowered by the constraint
+  layer (:func:`~repro.core.scheduler.constraints.compile_spec`),
+  eliminating per-candidate dispatch no matter how many constraint kinds
+  the item stacks.
 
 Compilation is semantics-preserving by construction: the compiled
 evaluator (``TappEngine`` with ``compiled=True``) produces bit-identical
@@ -25,17 +29,20 @@ property-tested in ``tests/test_scheduler_compile.py``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Tuple
+from typing import TYPE_CHECKING, Dict, Optional, Tuple
+
+if TYPE_CHECKING:  # the constraint layer lives scheduler-side; importing it
+    # at module scope would close a cycle (scheduler.constraints needs
+    # tapp.ast, whose package init loads this module). Lowering happens at
+    # script-compile time, when everything is loaded — see _constraints().
+    from repro.core.scheduler.constraints import ConstraintSpec, InvalidFn
 
 from repro.core.tapp.ast import (
     DEFAULT_TAG,
     Block,
-    CapacityUsed,
     ControllerClause,
     FollowupKind,
     Invalidate,
-    MaxConcurrentInvocations,
-    Overload,
     Strategy,
     TagPolicy,
     TappScript,
@@ -44,69 +51,55 @@ from repro.core.tapp.ast import (
     WorkerSet,
 )
 
-# ``invalid(worker) -> bool``; takes anything WorkerState-shaped.
-InvalidFn = Callable[[object], bool]
+__all__ = [
+    "CompiledBlock",
+    "CompiledScript",
+    "CompiledSet",
+    "CompiledTag",
+    "CompiledWrk",
+    "compile_invalidate",
+    "compile_script",
+]
 
 
-def compile_invalidate(condition: Invalidate) -> InvalidFn:
-    """Pre-bind an invalidate condition to a branch-free predicate.
+def _constraints():
+    from repro.core.scheduler import constraints
 
-    Matches :func:`repro.core.scheduler.invalidate.is_invalid` exactly,
-    including the preliminary unreachability condition (paper §3.3), but
-    resolves the condition type once at compile time instead of per
-    candidate.
-    """
-    if isinstance(condition, Overload):
-        def invalid(w) -> bool:
-            return (
-                (not w.reachable)
-                or (not w.healthy)
-                or w.inflight >= w.capacity_slots
-            )
-        return invalid
-    if isinstance(condition, CapacityUsed):
-        threshold = condition.percent
-
-        def invalid(w) -> bool:
-            return (not w.reachable) or w.capacity_used_pct >= threshold
-        return invalid
-    if isinstance(condition, MaxConcurrentInvocations):
-        limit = condition.limit
-
-        def invalid(w) -> bool:
-            return (not w.reachable) or (w.inflight + w.queued) >= limit
-        return invalid
-    raise TypeError(f"unknown invalidate condition {condition!r}")
+    return constraints
 
 
-def _resolve(
-    item_level: Optional[Invalidate], block_level: Optional[Invalidate]
-) -> Invalidate:
-    """Item ▸ block ▸ platform default (same rule as resolve_invalidate)."""
-    if item_level is not None:
-        return item_level
-    if block_level is not None:
-        return block_level
-    return Overload()
+def compile_invalidate(condition: Invalidate) -> "InvalidFn":
+    """Pre-bind an invalidate condition (re-export of the constraint layer)."""
+    return _constraints().compile_invalidate(condition)
 
 
 @dataclasses.dataclass(frozen=True)
 class CompiledWrk:
-    """A ``wrk: label`` item with its condition resolved and pre-bound."""
+    """A ``wrk: label`` item with its constraints resolved and pre-bound."""
 
     label: str
-    condition: Invalidate
+    spec: ConstraintSpec
     invalid: InvalidFn
+
+    @property
+    def condition(self) -> Invalidate:
+        """The resolved invalidate condition (legacy accessor)."""
+        return self.spec.invalidate
 
 
 @dataclasses.dataclass(frozen=True)
 class CompiledSet:
-    """A ``set: label`` item with inner strategy + condition pre-resolved."""
+    """A ``set: label`` item with strategy + constraints pre-resolved."""
 
     label: Optional[str]
     strategy: Strategy  # inner member-selection strategy (platform default)
-    condition: Invalidate
+    spec: ConstraintSpec
     invalid: InvalidFn
+
+    @property
+    def condition(self) -> Invalidate:
+        """The resolved invalidate condition (legacy accessor)."""
+        return self.spec.invalidate
 
 
 @dataclasses.dataclass(frozen=True)
@@ -148,14 +141,15 @@ class CompiledScript:
 
 
 def _compile_block(index: int, block: Block) -> CompiledBlock:
+    layer = _constraints()
     strategy = block.strategy or Strategy.BEST_FIRST
     if block.uses_sets:
         sets = tuple(
             CompiledSet(
                 label=item.label,
                 strategy=item.strategy or Strategy.PLATFORM,
-                condition=(cond := _resolve(item.invalidate, block.invalidate)),
-                invalid=compile_invalidate(cond),
+                spec=(spec := layer.resolve_constraints(item, block)),
+                invalid=layer.compile_spec(spec),
             )
             for item in block.workers
             if isinstance(item, WorkerSet)
@@ -170,8 +164,8 @@ def _compile_block(index: int, block: Block) -> CompiledBlock:
     wrks = tuple(
         CompiledWrk(
             label=item.label,
-            condition=(cond := _resolve(item.invalidate, block.invalidate)),
-            invalid=compile_invalidate(cond),
+            spec=(spec := layer.resolve_constraints(item, block)),
+            invalid=layer.compile_spec(spec),
         )
         for item in block.workers
         if isinstance(item, WorkerRef)

@@ -31,6 +31,8 @@ from typing import Any, List, Mapping, Optional, Sequence, Tuple
 import yaml
 
 from repro.core.tapp.ast import (
+    Affinity,
+    AntiAffinity,
     Block,
     ControllerClause,
     FollowupKind,
@@ -42,6 +44,7 @@ from repro.core.tapp.ast import (
     WorkerItem,
     WorkerRef,
     WorkerSet,
+    affinity_from_value,
     invalidate_from_text,
 )
 
@@ -55,7 +58,10 @@ class TappParseError(ValueError):
 
 
 _TAG_LEVEL_KEYS = {"strategy", "followup"}
-_BLOCK_KEYS = {"controller", "topology_tolerance", "workers", "strategy", "invalidate"}
+_CONSTRAINT_KEYS = {"invalidate", "affinity", "anti-affinity"}
+_BLOCK_KEYS = (
+    {"controller", "topology_tolerance", "workers", "strategy"} | _CONSTRAINT_KEYS
+)
 
 
 def parse_tapp(text: str) -> TappScript:
@@ -200,6 +206,7 @@ def _parse_block(item: Mapping[str, Any], path: str) -> Block:
     invalidate = (
         _parse_invalidate(item["invalidate"], path) if "invalidate" in item else None
     )
+    affinity, anti_affinity = _parse_affinities(item, path)
     workers = _parse_workers(item["workers"], f"{path}.workers")
     try:
         return Block(
@@ -207,6 +214,8 @@ def _parse_block(item: Mapping[str, Any], path: str) -> Block:
             controller=controller,
             strategy=strategy,
             invalidate=invalidate,
+            affinity=affinity,
+            anti_affinity=anti_affinity,
         )
     except ValueError as e:
         raise TappParseError(str(e), path) from e
@@ -230,7 +239,7 @@ def _parse_workers(body: Any, path: str) -> Tuple[WorkerItem, ...]:
             )
         keys = set(entry.keys())
         if "wrk" in keys:
-            extra = keys - {"wrk", "invalidate"}
+            extra = keys - ({"wrk"} | _CONSTRAINT_KEYS)
             if extra:
                 raise TappParseError(f"unknown wrk keys {sorted(extra)}", ipath)
             label = entry["wrk"]
@@ -241,9 +250,14 @@ def _parse_workers(body: Any, path: str) -> Tuple[WorkerItem, ...]:
                 if "invalidate" in entry
                 else None
             )
-            items.append(WorkerRef(label=label, invalidate=inv))
+            aff, anti = _parse_affinities(entry, ipath)
+            items.append(
+                WorkerRef(
+                    label=label, invalidate=inv, affinity=aff, anti_affinity=anti
+                )
+            )
         elif "set" in keys:
-            extra = keys - {"set", "strategy", "invalidate"}
+            extra = keys - ({"set", "strategy"} | _CONSTRAINT_KEYS)
             if extra:
                 raise TappParseError(f"unknown set keys {sorted(extra)}", ipath)
             label = entry["set"]
@@ -262,7 +276,16 @@ def _parse_workers(body: Any, path: str) -> Tuple[WorkerItem, ...]:
                 if "invalidate" in entry
                 else None
             )
-            items.append(WorkerSet(label=label, strategy=strat, invalidate=inv))
+            aff, anti = _parse_affinities(entry, ipath)
+            items.append(
+                WorkerSet(
+                    label=label,
+                    strategy=strat,
+                    invalidate=inv,
+                    affinity=aff,
+                    anti_affinity=anti,
+                )
+            )
         else:
             raise TappParseError(
                 f"workers item must have a 'wrk' or 'set' key; got {sorted(keys)}",
@@ -299,3 +322,24 @@ def _parse_invalidate(value: Any, path: str) -> Invalidate:
         return invalidate_from_text(str(value))
     except ValueError as e:
         raise TappParseError(str(e), path) from e
+
+
+def _parse_affinities(
+    entry: Mapping[str, Any], path: str
+) -> Tuple[Optional[Affinity], Optional[AntiAffinity]]:
+    """Parse the optional affinity / anti-affinity clauses of one mapping."""
+    affinity: Optional[Affinity] = None
+    anti: Optional[AntiAffinity] = None
+    if "affinity" in entry:
+        try:
+            affinity = Affinity(affinity_from_value("affinity", entry["affinity"]))
+        except ValueError as e:
+            raise TappParseError(str(e), path) from e
+    if "anti-affinity" in entry:
+        try:
+            anti = AntiAffinity(
+                affinity_from_value("anti-affinity", entry["anti-affinity"])
+            )
+        except ValueError as e:
+            raise TappParseError(str(e), path) from e
+    return affinity, anti

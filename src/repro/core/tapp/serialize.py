@@ -21,6 +21,16 @@ from repro.core.tapp.ast import (
 )
 
 
+def _constraints_to_obj(item, obj: Dict[str, Any]) -> None:
+    """Emit the optional constraint clauses of a block or worker item."""
+    if item.invalidate is not None:
+        obj["invalidate"] = _inv_to_text(item.invalidate)
+    if item.affinity is not None:
+        obj["affinity"] = list(item.affinity.functions)
+    if item.anti_affinity is not None:
+        obj["anti-affinity"] = list(item.anti_affinity.functions)
+
+
 def script_to_obj(script: TappScript) -> List[Dict[str, Any]]:
     return [_tag_to_obj(tag) for tag in script.tags]
 
@@ -48,21 +58,18 @@ def _block_to_obj(block: Block) -> Dict[str, Any]:
     for item in block.workers:
         if isinstance(item, WorkerRef):
             w: Dict[str, Any] = {"wrk": item.label}
-            if item.invalidate is not None:
-                w["invalidate"] = _inv_to_text(item.invalidate)
+            _constraints_to_obj(item, w)
             workers.append(w)
         elif isinstance(item, WorkerSet):
             w = {"set": item.label}
             if item.strategy is not None:
                 w["strategy"] = item.strategy.value
-            if item.invalidate is not None:
-                w["invalidate"] = _inv_to_text(item.invalidate)
+            _constraints_to_obj(item, w)
             workers.append(w)
     obj["workers"] = workers
     if block.strategy is not None:
         obj["strategy"] = block.strategy.value
-    if block.invalidate is not None:
-        obj["invalidate"] = _inv_to_text(block.invalidate)
+    _constraints_to_obj(block, obj)
     return obj
 
 

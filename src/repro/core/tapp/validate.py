@@ -21,6 +21,24 @@ from repro.core.tapp.ast import (
 )
 
 
+def _affinity_conflicts(item, block) -> Sequence[str]:
+    """Functions required present AND absent by the *effective* constraints.
+
+    Effective clauses follow the same item ▸ block resolution rule the
+    engine applies, so a conflict here means the worker item can never be
+    valid while either function runs — almost certainly a script bug.
+    """
+    affinity = item.affinity if item.affinity is not None else block.affinity
+    anti = (
+        item.anti_affinity
+        if item.anti_affinity is not None
+        else block.anti_affinity
+    )
+    if affinity is None or anti is None:
+        return ()
+    return sorted(set(affinity.functions) & set(anti.functions))
+
+
 @dataclasses.dataclass(frozen=True)
 class Finding:
     level: str  # "error" | "warning"
@@ -139,6 +157,17 @@ def _validate_tag_topology(
             )
         for wi, item in enumerate(block.workers):
             iwhere = f"{where}.workers[{wi}]"
+            conflicts = _affinity_conflicts(item, block)
+            if conflicts:
+                findings.append(
+                    Finding(
+                        "warning",
+                        iwhere,
+                        f"functions {conflicts} appear in both the effective "
+                        f"affinity and anti-affinity lists; the item is "
+                        f"unsatisfiable whenever they run",
+                    )
+                )
             if isinstance(item, WorkerRef):
                 if (
                     known_worker_labels is not None

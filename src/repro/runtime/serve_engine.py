@@ -305,7 +305,9 @@ class ServingEngine:
                 replica = self.replicas[decision.worker]
                 if replica.cfg.name == request.model_id:
                     admission = self.runtime.admit(
-                        decision.worker, decision.controller or "?"
+                        decision.worker,
+                        decision.controller or "?",
+                        function=request.model_id,
                     )
                     placed = replica.admit(request, admission)
                     if not placed:

@@ -3,20 +3,27 @@ import pytest
 
 from repro.core.scheduler import (
     ClusterState,
+    ConstraintSpec,
     ControllerState,
     DistributionPolicy,
     Invocation,
     TappEngine,
     VanillaScheduler,
     WorkerState,
+    compile_spec,
+    constraint_reason,
     coprime_order,
     distribution_view,
     invalid_reason,
     is_invalid,
     make_cluster,
+    spec_predicate,
+    spec_violated,
     stable_hash,
 )
 from repro.core.tapp import (
+    Affinity,
+    AntiAffinity,
     CapacityUsed,
     MaxConcurrentInvocations,
     Overload,
@@ -75,6 +82,103 @@ class TestInvalidate:
         w = WorkerState(name="w", inflight=40, queued=60)
         assert is_invalid(w, MaxConcurrentInvocations(100))
         assert not is_invalid(w, MaxConcurrentInvocations(101))
+
+
+class TestConstraintLayer:
+    """The predicate IR: spec resolution, evaluation paths agree, reasons."""
+
+    def specs(self):
+        return [
+            ConstraintSpec(),
+            ConstraintSpec(invalidate=CapacityUsed(50)),
+            ConstraintSpec(affinity=Affinity(("warm",))),
+            ConstraintSpec(anti_affinity=AntiAffinity(("noisy",))),
+            ConstraintSpec(
+                invalidate=MaxConcurrentInvocations(4),
+                affinity=Affinity(("warm", "cache")),
+                anti_affinity=AntiAffinity(("noisy", "batch")),
+            ),
+        ]
+
+    def workers(self):
+        return [
+            WorkerState(name="idle"),
+            WorkerState(name="gone", reachable=False),
+            WorkerState(name="hot", capacity_used_pct=80.0, inflight=3,
+                        queued=2),
+            WorkerState(name="warmhost",
+                        running_functions={"warm": 1, "cache": 2}),
+            WorkerState(name="noisyhost",
+                        running_functions={"warm": 1, "cache": 1, "noisy": 1}),
+        ]
+
+    def test_all_evaluation_paths_agree(self):
+        """IR.violated == lowered closure == (reason is not None)."""
+        for spec in self.specs():
+            lowered = compile_spec(spec)
+            predicate = spec_predicate(spec)
+            for w in self.workers():
+                expected = spec_violated(w, spec)
+                assert lowered(w) == expected, (spec, w.name)
+                assert predicate.violated(w) == expected, (spec, w.name)
+                assert (constraint_reason(w, spec) is not None) == expected, (
+                    spec, w.name,
+                )
+
+    def test_unreachable_is_preliminary_for_every_spec(self):
+        gone = WorkerState(name="gone", reachable=False,
+                           running_functions={"warm": 1})
+        for spec in self.specs():
+            assert spec_violated(gone, spec)
+            assert constraint_reason(gone, spec) == "unreachable"
+
+    def test_affinity_requires_all_listed(self):
+        spec = ConstraintSpec(affinity=Affinity(("warm", "cache")))
+        only_warm = WorkerState(name="w", running_functions={"warm": 3})
+        both = WorkerState(name="w", running_functions={"warm": 1, "cache": 1})
+        assert spec_violated(only_warm, spec)
+        assert "cache" in constraint_reason(only_warm, spec)
+        assert not spec_violated(both, spec)
+
+    def test_anti_affinity_rejects_any_listed(self):
+        spec = ConstraintSpec(anti_affinity=AntiAffinity(("noisy", "batch")))
+        w = WorkerState(name="w", running_functions={"batch": 2})
+        assert spec_violated(w, spec)
+        assert "batch" in constraint_reason(w, spec)
+        assert not spec_violated(WorkerState(name="w"), spec)
+
+    def test_self_anti_affinity_spreads(self):
+        """Listing a function's own name keeps a second instance off the
+        worker — the spread idiom."""
+        script = parse_tapp(
+            "- f:\n  - workers:\n    - set:\n"
+            "    anti-affinity: [f]\n  followup: fail\n"
+        )
+        cluster = two_zone_cluster()
+        engine = TappEngine(DistributionPolicy.SHARED, seed=0)
+        first = engine.schedule(Invocation("f", tag="f"), script, cluster)
+        assert first.scheduled
+        cluster.workers[first.worker].running_functions = {"f": 1}
+        second = engine.schedule(Invocation("f", tag="f"), script, cluster)
+        assert second.scheduled and second.worker != first.worker
+
+    def test_engine_respects_affinity_via_script(self):
+        script = parse_tapp(
+            "- t:\n  - workers:\n    - set:\n"
+            "    affinity: [svc]\n  followup: fail\n"
+        )
+        cluster = two_zone_cluster()
+        engine = TappEngine(DistributionPolicy.SHARED, seed=0)
+        d = engine.schedule(
+            Invocation("f", tag="t"), script, cluster, trace=True
+        )
+        assert not d.scheduled and d.failed_by_policy  # svc runs nowhere
+        assert any(
+            "affinity: requires 'svc' running" in e.detail for e in d.trace
+        )
+        cluster.workers["c0"].running_functions = {"svc": 1}
+        d = engine.schedule(Invocation("f", tag="t"), script, cluster)
+        assert d.scheduled and d.worker == "c0"
 
 
 class TestDistributionPolicies:

@@ -23,6 +23,8 @@ from repro.core.scheduler import (
 from repro.core.scheduler.watcher import Watcher
 from repro.core.tapp import compile_script, parse_tapp
 from repro.core.tapp.ast import (
+    Affinity,
+    AntiAffinity,
     Block,
     CapacityUsed,
     ControllerClause,
@@ -48,6 +50,19 @@ CONDITIONS = (
     MaxConcurrentInvocations(2),
     MaxConcurrentInvocations(8),
 )
+RUNNING_FNS = ("fn_a", "fn_b", "svc_cache", "noisy")
+AFFINITIES = (
+    None,
+    None,  # weighted towards unconstrained items
+    Affinity(("fn_a",)),
+    Affinity(("svc_cache", "fn_b")),
+)
+ANTI_AFFINITIES = (
+    None,
+    None,
+    AntiAffinity(("noisy",)),
+    AntiAffinity(("fn_a", "noisy")),
+)
 
 
 # ---------------------------------------------------------------------------
@@ -70,6 +85,9 @@ def random_cluster(rng: random.Random) -> ClusterState:
         sets = frozenset(
             l for l in SET_LABELS if rng.random() > 0.5
         )
+        running = {
+            fn: rng.randint(1, 3) for fn in RUNNING_FNS if rng.random() > 0.6
+        }
         cluster.add_worker(
             WorkerState(
                 name=f"w{i}",
@@ -81,6 +99,7 @@ def random_cluster(rng: random.Random) -> ClusterState:
                 capacity_used_pct=rng.choice((0.0, 40.0, 60.0, 90.0, 100.0)),
                 healthy=rng.random() > 0.25,
                 reachable=rng.random() > 0.15,
+                running_functions=running,
             )
         )
     return cluster
@@ -98,6 +117,8 @@ def random_block(rng: random.Random) -> Block:
             WorkerRef(
                 label=rng.choice(("w0", "w1", "w2", "w5", "ghost")),
                 invalidate=rng.choice(CONDITIONS),
+                affinity=rng.choice(AFFINITIES),
+                anti_affinity=rng.choice(ANTI_AFFINITIES),
             )
             for _ in range(rng.randint(1, 3))
         )
@@ -107,6 +128,8 @@ def random_block(rng: random.Random) -> Block:
                 label=rng.choice((None,) + SET_LABELS),
                 strategy=rng.choice(STRATEGIES),
                 invalidate=rng.choice(CONDITIONS),
+                affinity=rng.choice(AFFINITIES),
+                anti_affinity=rng.choice(ANTI_AFFINITIES),
             )
             for _ in range(rng.randint(1, 3))
         )
@@ -115,6 +138,8 @@ def random_block(rng: random.Random) -> Block:
         controller=controller,
         strategy=rng.choice(STRATEGIES),
         invalidate=rng.choice(CONDITIONS),
+        affinity=rng.choice(AFFINITIES),
+        anti_affinity=rng.choice(ANTI_AFFINITIES),
     )
 
 
@@ -153,7 +178,9 @@ def mutate_cluster(rng: random.Random, watcher: Watcher) -> None:
     roll = rng.random()
     names = list(cluster.workers)
     if roll < 0.5 and names:
-        # Volatile load update (must NOT invalidate cached views).
+        # Volatile load update (must NOT invalidate cached views). Includes
+        # the running-function multiset: the affinity signal is per-decision
+        # churn, same as the inflight counters.
         name = rng.choice(names)
         w = cluster.workers[name]
         watcher.update_worker(
@@ -162,6 +189,11 @@ def mutate_cluster(rng: random.Random, watcher: Watcher) -> None:
             queued=rng.randint(0, 3),
             capacity_used_pct=rng.choice((0.0, 55.0, 85.0, 100.0)),
             inflight_by={"C0": rng.randint(0, 2)},
+            running_functions={
+                fn: rng.randint(1, 3)
+                for fn in RUNNING_FNS
+                if rng.random() > 0.5
+            },
         )
     elif roll < 0.7 and names:
         # Structural health/reachability transition.
@@ -268,6 +300,139 @@ def test_schedule_batch_matches_sequential():
     assert seen == invs  # callback fired per decision, in order
     for i, (d1, d2) in enumerate(zip(sequential, batched)):
         assert_decisions_equal(d1, d2, f"batch idx={i}")
+
+
+# ---------------------------------------------------------------------------
+# Stateful constraints: batch scheduling vs sequential with admissions
+# ---------------------------------------------------------------------------
+
+
+AFFINITY_SCRIPT = """
+- default:
+  - workers:
+    - set:
+    strategy: platform
+    invalidate: overload
+- spread:
+  - workers:
+    - set:
+    strategy: best_first
+    invalidate: overload
+    anti-affinity: [fn_s]
+  - workers:
+    - set:
+  followup: default
+- pinned:
+  - workers:
+    - set:
+    strategy: best_first
+    invalidate: overload
+    affinity: [fn_s]
+  followup: default
+"""
+
+
+def _affinity_watcher():
+    return Watcher(
+        make_cluster(
+            workers=[
+                dict(name=f"w{i}", zone="z", capacity_slots=8)
+                for i in range(4)
+            ],
+            controllers=[dict(name="C0", zone="z")],
+        )
+    )
+
+
+@pytest.mark.parametrize("compiled", [False, True])
+def test_schedule_batch_stateful_affinity_matches_sequential(compiled):
+    """Affinity/anti-affinity read state that earlier placements in the
+    SAME batch mutate (admissions fired from on_decision): batch results
+    must stay bit-identical to sequential schedule+admit calls."""
+    from repro.core.scheduler import ControllerRuntime
+
+    script = parse_tapp(AFFINITY_SCRIPT)
+    invs = [
+        Invocation("fn_s", tag="spread", request_id=i) for i in range(6)
+    ] + [
+        Invocation("fn_p", tag="pinned", request_id=10 + i) for i in range(3)
+    ] + [
+        Invocation("fn_s", tag="spread", request_id=20)
+    ]
+
+    w_seq = _affinity_watcher()
+    seq_engine = TappEngine(DistributionPolicy.SHARED, seed=3, compiled=compiled)
+    seq_rt = ControllerRuntime(w_seq)
+    sequential = []
+    for inv in invs:
+        d = seq_engine.schedule(inv, script, w_seq.cluster, trace=True)
+        if d.scheduled:
+            seq_rt.admit(d.worker, d.controller, function=inv.function)
+        sequential.append(d)
+
+    w_bat = _affinity_watcher()
+    bat_engine = TappEngine(DistributionPolicy.SHARED, seed=3, compiled=compiled)
+    bat_rt = ControllerRuntime(w_bat)
+
+    def _admit(inv, decision):
+        if decision.scheduled:
+            bat_rt.admit(
+                decision.worker, decision.controller, function=inv.function
+            )
+
+    batched = bat_engine.schedule_batch(
+        invs, script, w_bat.cluster, trace=True, on_decision=_admit
+    )
+
+    for i, (d1, d2) in enumerate(zip(sequential, batched)):
+        assert_decisions_equal(d1, d2, f"stateful batch idx={i}")
+    for name in w_seq.cluster.workers:
+        ws = w_seq.cluster.workers[name]
+        wb = w_bat.cluster.workers[name]
+        assert ws.running_functions == wb.running_functions, name
+        assert ws.inflight == wb.inflight, name
+
+    # The policy did real work: the first four spread invocations must land
+    # on four distinct workers (anti-affinity seeing same-batch placements),
+    # and pinned ones only where fn_s already runs.
+    spread_workers = [d.worker for d in batched[:4]]
+    assert len(set(spread_workers)) == 4
+    for d in batched[6:9]:
+        assert d.scheduled
+        assert w_bat.cluster.workers[d.worker].running_count("fn_s") > 0
+
+
+def test_compiled_constraint_shapes():
+    """Affinity clauses resolve item ▸ block and lower into the pre-bound
+    invalid() closure."""
+    script = parse_tapp(
+        """
+- t:
+  - workers:
+    - wrk: w0
+      affinity: [warm]
+    - wrk: w1
+    invalidate: capacity_used 50%
+    anti-affinity: [noisy]
+"""
+    )
+    plan = compile_script(script)
+    block = plan.tags["t"].blocks[0]
+    w0, w1 = block.wrks
+    assert w0.spec.affinity == Affinity(("warm",))
+    assert w0.spec.anti_affinity == AntiAffinity(("noisy",))  # block-level
+    assert w1.spec.affinity is None
+    assert w1.spec.anti_affinity == AntiAffinity(("noisy",))
+    assert w0.condition == CapacityUsed(50)  # legacy accessor still works
+
+    idle = WorkerState(name="x")
+    warm = WorkerState(name="y", running_functions={"warm": 1})
+    noisy = WorkerState(name="z", running_functions={"warm": 1, "noisy": 2})
+    assert w0.invalid(idle)        # affinity unmet
+    assert not w0.invalid(warm)
+    assert w0.invalid(noisy)       # anti-affinity hit
+    assert not w1.invalid(idle)    # no affinity requirement
+    assert w1.invalid(noisy)
 
 
 def test_compile_script_shapes():

@@ -3,7 +3,11 @@ import statistics
 
 import pytest
 
-from repro.core.sim.scenarios import run_benchmark, run_mqtt_case
+from repro.core.sim.scenarios import (
+    run_benchmark,
+    run_colocation_case,
+    run_mqtt_case,
+)
 
 
 class TestQualitativeMQTT:
@@ -82,6 +86,41 @@ class TestDataLocality:
         untagged, _ = _avg_over_deployments("data-locality", "shared")
         tagged, _ = _avg_over_deployments("data-locality", "shared", tagged=True)
         assert tagged < untagged
+
+    def test_colocation_constraints_cut_interference(self):
+        """Constraint layer v2: anti-affinity shields the latency-sensitive
+        function from the noisy batch cruncher, and affinity co-locates the
+        join with its cache warmer."""
+        blank_means, constrained_means = [], []
+        for seed in (0, 1):
+            _, blank = run_colocation_case(
+                constrained=False, seed=seed, requests_per_user=30
+            )
+            _, constrained = run_colocation_case(
+                constrained=True, seed=seed, requests_per_user=30
+            )
+            assert blank.failure_rate == 0.0
+            assert constrained.failure_rate == 0.0
+            blank_means.append(
+                blank.for_function("latency_api").summary()["mean"]
+            )
+            constrained_means.append(
+                constrained.for_function("latency_api").summary()["mean"]
+            )
+            # Affinity: the join concentrates on cache_warmer workers.
+            warm_hosts = set(
+                constrained.for_function("cache_warmer").per_worker_counts()
+            )
+            join_counts = constrained.for_function(
+                "feature_join"
+            ).per_worker_counts()
+            cohosted = sum(
+                n for w, n in join_counts.items() if w in warm_hosts
+            )
+            assert cohosted / sum(join_counts.values()) > 0.5
+        assert statistics.fmean(constrained_means) < statistics.fmean(
+            blank_means
+        )
 
     def test_tagged_is_stabler_on_light_query(self):
         # mongoDB: tagged is "a bit slower, but more stable" (paper wording).

@@ -3,6 +3,8 @@ import pytest
 
 from repro.core.tapp import (
     DEFAULT_TAG,
+    Affinity,
+    AntiAffinity,
     CapacityUsed,
     FollowupKind,
     MaxConcurrentInvocations,
@@ -17,6 +19,24 @@ from repro.core.tapp import (
     script_to_yaml,
     validate_script,
 )
+
+AFFINITY_SCRIPT = """
+- latency:
+  - workers:
+    - set: edge
+      affinity: [cache_warmer]
+    - set: cloud
+      anti-affinity: noisy, batch
+    anti-affinity: [batch]
+  followup: default
+- spread:
+  - workers:
+    - wrk: w0
+      anti-affinity: [spread_fn]
+    - wrk: w1
+    affinity: [svc]
+  followup: fail
+"""
 
 FIG5 = """
 - default:
@@ -113,6 +133,20 @@ class TestParse:
         )
         assert script.get("t").blocks[0].strategy is Strategy.BEST_FIRST
 
+    def test_affinity_clauses(self):
+        script = parse_tapp(AFFINITY_SCRIPT)
+        latency = script.get("latency").blocks[0]
+        assert latency.anti_affinity == AntiAffinity(("batch",))
+        edge, cloud = latency.workers
+        assert edge.affinity == Affinity(("cache_warmer",))
+        assert edge.anti_affinity is None
+        # Comma-string form parses like the list form.
+        assert cloud.anti_affinity == AntiAffinity(("noisy", "batch"))
+        spread = script.get("spread").blocks[0]
+        assert spread.affinity == Affinity(("svc",))
+        assert spread.workers[0].anti_affinity == AntiAffinity(("spread_fn",))
+        assert spread.workers[1].anti_affinity is None
+
     def test_default_effective_defaults(self):
         script = parse_tapp("- t:\n  - workers:\n    - wrk: a\n")
         tag = script.get("t")
@@ -133,6 +167,10 @@ class TestParseErrors:
             "- t:\n  - workers:\n    - set: x\n    topology_tolerance: same\n",
             "- t:\n  - workers:\n    - wrk: a\n- t:\n  - workers:\n    - wrk: b\n",
             "not a list",
+            "- t:\n  - workers:\n    - wrk: a\n    affinity: []\n",
+            "- t:\n  - workers:\n    - wrk: a\n    affinity: 7\n",
+            "- t:\n  - workers:\n    - wrk: a\n      anti-affinity: [x, x]\n",
+            "- t:\n  - workers:\n    - wrk: a\n    anti-affinity: 'a,,b'\n",
         ],
     )
     def test_rejects(self, text):
@@ -148,7 +186,7 @@ class TestParseErrors:
 
 
 class TestRoundTrip:
-    @pytest.mark.parametrize("text", [FIG5, FIG6])
+    @pytest.mark.parametrize("text", [FIG5, FIG6, AFFINITY_SCRIPT])
     def test_serialize_parse_identity(self, text):
         script = parse_tapp(text)
         again = parse_tapp(script_to_yaml(script))
@@ -168,6 +206,25 @@ class TestValidate:
         report = validate_script(script)
         assert report.ok
         assert any("no default" in w.message for w in report.warnings)
+
+    def test_contradictory_affinity_warns(self):
+        script = parse_tapp(
+            "- t:\n  - workers:\n    - set:\n      affinity: [x, y]\n"
+            "    anti-affinity: [y]\n  followup: fail\n"
+        )
+        report = validate_script(script)
+        assert report.ok  # warning, not error
+        assert any("unsatisfiable" in w.message for w in report.warnings)
+
+    def test_item_override_clears_conflict(self):
+        # Item-level anti-affinity overrides the block's conflicting one.
+        script = parse_tapp(
+            "- t:\n  - workers:\n    - set:\n      affinity: [x]\n"
+            "      anti-affinity: [z]\n    anti-affinity: [x]\n"
+            "  followup: fail\n"
+        )
+        report = validate_script(script)
+        assert not any("unsatisfiable" in w.message for w in report.warnings)
 
     def test_topology_warnings(self):
         script = parse_tapp(FIG6)

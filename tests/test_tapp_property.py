@@ -12,8 +12,8 @@ from repro.core.scheduler import (
     coprime_order,
     is_invalid,
     make_cluster,
+    resolve_invalidate,
 )
-from repro.core.scheduler.invalidate import resolve_invalidate
 from repro.core.tapp import (
     CapacityUsed,
     TappScript,
@@ -21,10 +21,16 @@ from repro.core.tapp import (
     script_to_yaml,
 )
 from repro.core.tapp.ast import (
+    Affinity,
+    AntiAffinity,
     Block,
+    ControllerClause,
     FollowupKind,
+    MaxConcurrentInvocations,
+    Overload,
     Strategy,
     TagPolicy,
+    TopologyTolerance,
     WorkerRef,
     WorkerSet,
 )
@@ -124,6 +130,98 @@ def test_serialize_parse_roundtrip(script):
     assert parse_tapp(script_to_yaml(script)).tags == script.tags
 
 
+# ---------------------------------------------------------------------------
+# full-grammar round-trip: every clause the language defines, including the
+# constraint-layer-v2 affinity extension
+# ---------------------------------------------------------------------------
+
+_fn_names = st.sampled_from(
+    ["fn_a", "fn_b", "svc_cache", "noisy_batch", "latency_api"]
+)
+_fn_lists = st.lists(_fn_names, min_size=1, max_size=3, unique=True).map(tuple)
+_affinities = st.one_of(st.none(), st.builds(Affinity, _fn_lists))
+_anti_affinities = st.one_of(st.none(), st.builds(AntiAffinity, _fn_lists))
+_full_invalidates = st.one_of(
+    st.none(),
+    st.just(Overload()),
+    st.builds(CapacityUsed, st.integers(min_value=1, max_value=100).map(float)),
+    st.builds(
+        MaxConcurrentInvocations, st.integers(min_value=1, max_value=500)
+    ),
+)
+_controllers = st.one_of(
+    st.none(),
+    st.builds(
+        ControllerClause,
+        label=st.sampled_from(["Ctl0", "Ctl1", "EdgeCtl"]),
+        topology_tolerance=st.sampled_from(list(TopologyTolerance)),
+    ),
+)
+
+_full_worker_items = st.one_of(
+    st.lists(
+        st.builds(
+            WorkerRef,
+            label=_labels,
+            invalidate=_full_invalidates,
+            affinity=_affinities,
+            anti_affinity=_anti_affinities,
+        ),
+        min_size=1, max_size=3,
+    ),
+    st.lists(
+        st.builds(
+            WorkerSet,
+            label=st.one_of(st.none(), _labels),
+            strategy=_strategies,
+            invalidate=_full_invalidates,
+            affinity=_affinities,
+            anti_affinity=_anti_affinities,
+        ),
+        min_size=1, max_size=3,
+    ),
+)
+
+_full_blocks = st.builds(
+    Block,
+    workers=_full_worker_items.map(tuple),
+    controller=_controllers,
+    strategy=_strategies,
+    invalidate=_full_invalidates,
+    affinity=_affinities,
+    anti_affinity=_anti_affinities,
+)
+
+_full_tags = st.builds(
+    TagPolicy,
+    tag=st.sampled_from(["default", "t1", "t2", "ml", "latency"]),
+    blocks=st.lists(_full_blocks, min_size=1, max_size=3).map(tuple),
+    strategy=_strategies,
+    followup=st.sampled_from([None, FollowupKind.FAIL, FollowupKind.DEFAULT]),
+)
+
+
+@st.composite
+def _full_scripts(draw):
+    tags = draw(st.lists(_full_tags, min_size=1, max_size=5))
+    seen, unique = set(), []
+    for t in tags:
+        if t.tag not in seen:
+            seen.add(t.tag)
+            unique.append(t)
+    return TappScript(tags=tuple(unique))
+
+
+@pytest.mark.slow
+@given(_full_scripts())
+@settings(max_examples=300, deadline=None)
+def test_full_grammar_serialize_parse_roundtrip(script):
+    """parse ∘ serialize is the identity over the FULL grammar: controller
+    clauses with every tolerance, every invalidate kind, affinity and
+    anti-affinity at block and item level, strategies, and followups."""
+    assert parse_tapp(script_to_yaml(script)).tags == script.tags
+
+
 @given(
     script=_scripts(),
     tag=st.sampled_from([None, "t1", "t2", "missing"]),
@@ -187,6 +285,6 @@ def test_resolve_invalidate_priority(item, block):
     elif block is not None:
         assert resolved == block
     else:
-        from repro.core.scheduler.invalidate import DEFAULT_INVALIDATE
+        from repro.core.scheduler import DEFAULT_INVALIDATE
 
         assert resolved == DEFAULT_INVALIDATE
