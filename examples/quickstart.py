@@ -1,8 +1,10 @@
-"""Quickstart: the paper's contribution in 60 lines.
+"""Quickstart: the paper's contribution in 60 lines, on the Platform API.
 
-Builds a two-zone serverless topology, loads a tAPP script, and routes
-tagged invocations — then shows the same policy engine placing real
-inference requests on JAX model replicas.
+Declares a two-zone serverless deployment as a `ClusterSpec`, applies a
+tAPP policy through the platform's apply/dry-run lifecycle, and runs
+tagged invocations through the unified invoke→admit→complete flow —
+then shows the same policy engine placing real inference requests on
+JAX model replicas.
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,12 +13,11 @@ import dataclasses
 import jax
 
 from repro.configs import smoke_config
-from repro.core.scheduler import (
-    ControllerState,
-    Gateway,
-    Invocation,
-    Watcher,
-    WorkerState,
+from repro.core.platform import (
+    ClusterSpec,
+    ControllerSpec,
+    TappPlatform,
+    WorkerSpec,
 )
 from repro.core.scheduler.topology import DistributionPolicy
 from repro.models import Model
@@ -37,27 +38,36 @@ SCRIPT = """
   followup: fail
 """
 
+SPEC = ClusterSpec(
+    controllers=(
+        ControllerSpec("EdgeCtl", zone="edge"),
+        ControllerSpec("CloudCtl", zone="cloud"),
+    ),
+    workers=(
+        WorkerSpec("w-edge", zone="edge", sets=("edge", "any")),
+        WorkerSpec("w-cloud", zone="cloud", sets=("cloud", "any")),
+    ),
+)
+
 
 def control_plane_demo() -> None:
-    print("== control plane: tAPP routing ==")
-    watcher = Watcher()
-    watcher.register_controller(ControllerState(name="EdgeCtl", zone="edge"))
-    watcher.register_controller(ControllerState(name="CloudCtl", zone="cloud"))
-    watcher.register_worker(
-        WorkerState(name="w-edge", zone="edge", sets=frozenset({"edge", "any"}))
-    )
-    watcher.register_worker(
-        WorkerState(name="w-cloud", zone="cloud", sets=frozenset({"cloud", "any"}))
-    )
-    watcher.load_script(SCRIPT)
-    gateway = Gateway(watcher, distribution=DistributionPolicy.SHARED)
+    print("== control plane: one platform, one policy lifecycle ==")
+    platform = TappPlatform(SPEC, distribution=DistributionPolicy.SHARED)
+
+    # Policies are deployment artifacts: validated + dry-run against the
+    # live topology, compiled, then atomically swapped (rollback-able).
+    handle = platform.apply_policy(SCRIPT, strict=True)
+    print(f"policy v{handle.version} active, tags={list(handle.tag_names)}")
 
     for tag in ("critical", None):
-        decision = gateway.route(Invocation("my_fn", tag=tag))
-        print(f"tag={tag!r:>12} → worker={decision.worker} "
-              f"(controller={decision.controller})")
-    # Observability opts into tracing; the serving hot path leaves it off.
-    print(gateway.route(Invocation("my_fn", tag="critical"), trace=True).explain())
+        placement = platform.invoke("my_fn", tag=tag)
+        print(f"tag={tag!r:>12} → worker={placement.worker} "
+              f"(controller={placement.controller})")
+        placement.complete()  # retire the running-function ticket
+
+    # Observability is typed: explain() probes without admitting.
+    print(platform.explain("my_fn", tag="critical").render())
+    print(platform.stats())
 
 
 def data_plane_demo() -> None:

@@ -5,10 +5,11 @@ Three request classes (the paper's ①②③) over an edge+cloud deployment:
   * ``machine_learning``  → cloud replicas, zone-tolerant fallback;
   * untagged (generic)    → local-first with cloud spill (default tag).
 
-Also demonstrates: replica failure → automatic re-routing; live policy
-reload flipping the ML class to the edge without restarting anything;
-and the constraint layer's anti-affinity spread with `trace=True`
-explain output.
+Also demonstrates: replica failure → automatic re-routing; the platform
+policy lifecycle (live apply flipping the ML class to the edge without
+restarting anything, then `rollback()` restoring the previous policy);
+and the constraint layer's anti-affinity spread with the typed
+`explain()` report.
 
 Run: PYTHONPATH=src python examples/serve_topology.py
 """
@@ -17,7 +18,6 @@ import dataclasses
 import jax
 
 from repro.configs import smoke_config
-from repro.core.scheduler.engine import Invocation
 from repro.core.scheduler.topology import DistributionPolicy
 from repro.models import Model
 from repro.runtime.serve_engine import Replica, ServingEngine
@@ -118,26 +118,35 @@ def main() -> None:
     print(f"ml after failure: replicas {[r.replica for r in ml]} "
           f"(all done: {all(r.state == 'done' for r in ml)})")
 
-    print("\n== live policy reload: ML flipped to the edge (no restart) ==")
-    engine.watcher.load_script(FLIPPED)
+    print("\n== live policy apply: ML flipped to the edge (no restart) ==")
+    flipped = engine.platform.apply_policy(FLIPPED)
     ml2 = [engine.submit("smollm-135m", [9], tag="machine_learning",
                          max_new_tokens=3) for _ in range(3)]
     engine.run_until_done()
-    print(f"ml after reload: replicas {[r.replica for r in ml2]}")
+    print(f"ml after apply (policy v{flipped.version}): "
+          f"replicas {[r.replica for r in ml2]}")
+
+    print("\n== rollback: previous policy restored bit-for-bit ==")
+    restored = engine.platform.rollback()
+    ml3 = [engine.submit("smollm-135m", [9], tag="machine_learning",
+                         max_new_tokens=3) for _ in range(3)]
+    engine.run_until_done()
+    print(f"ml after rollback (policy v{restored.version}): "
+          f"replicas {[r.replica for r in ml3]}")
 
     print("\n== anti-affinity spread (constraint layer v2) ==")
-    engine.watcher.load_script(SPREAD_SCRIPT)
+    engine.platform.apply_policy(SPREAD_SCRIPT)
     spread = [engine.submit("smollm-135m", [4, 2], tag="spread",
                             max_new_tokens=8) for _ in range(3)]
     engine.step_once()  # admit + first decode tick; replicas now host work
     print(f"spread placements: {[r.replica for r in spread]}")
-    probe = Invocation(function="smollm-135m", tag="spread",
-                       model_id="smollm-135m")
-    decision = engine.gateway.route(probe, trace=True)
-    print("probe decision with trace=True explain output:")
-    print(decision.explain())
+    report = engine.platform.explain("smollm-135m", tag="spread",
+                                     model_id="smollm-135m")
+    print("typed explain() report:")
+    print(report.render())
+    print(f"per-worker rejections: {report.rejections()}")
     engine.run_until_done()
-    print(f"gateway stats: {engine.gateway.stats}")
+    print(f"platform stats: {engine.platform.stats()}")
 
 
 if __name__ == "__main__":

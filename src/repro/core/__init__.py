@@ -5,6 +5,6 @@ simulator (``repro.core.sim``).
 The data plane that these schedule — models, kernels, sharding, serving —
 lives in the sibling subpackages of :mod:`repro`.
 """
-from repro.core import scheduler, sim, tapp
+from repro.core import platform, scheduler, sim, tapp
 
-__all__ = ["scheduler", "sim", "tapp"]
+__all__ = ["platform", "scheduler", "sim", "tapp"]

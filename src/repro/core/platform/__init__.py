@@ -1,0 +1,45 @@
+"""The Platform API: the paper's tAPP platform behind one typed façade.
+
+>>> from repro.core.platform import ClusterSpec, ControllerSpec, TappPlatform, WorkerSpec
+>>> platform = TappPlatform(ClusterSpec(
+...     controllers=(ControllerSpec("EdgeCtl", zone="edge"),),
+...     workers=(WorkerSpec("w0", zone="edge", sets=("edge", "any")),),
+... ))
+>>> platform.apply_policy("- default:\\n  - workers:\\n    - set:\\n")
+... # doctest: +SKIP
+>>> placement = platform.invoke("my_fn")  # doctest: +SKIP
+>>> placement.complete()                  # doctest: +SKIP
+"""
+from repro.core.platform.explain import (
+    BlockReport,
+    CandidateReport,
+    ExplainReport,
+    build_explain_report,
+)
+from repro.core.platform.facade import (
+    Placement,
+    PlatformStats,
+    TappPlatform,
+)
+from repro.core.platform.policy import (
+    PolicyDryRun,
+    PolicyError,
+    PolicyHandle,
+)
+from repro.core.platform.specs import ClusterSpec, ControllerSpec, WorkerSpec
+
+__all__ = [
+    "BlockReport",
+    "CandidateReport",
+    "ClusterSpec",
+    "ControllerSpec",
+    "ExplainReport",
+    "Placement",
+    "PlatformStats",
+    "PolicyDryRun",
+    "PolicyError",
+    "PolicyHandle",
+    "TappPlatform",
+    "WorkerSpec",
+    "build_explain_report",
+]

@@ -1,0 +1,176 @@
+"""Typed scheduling explanations built from the engine's trace machinery.
+
+``TappPlatform.explain`` evaluates an invocation with tracing on and
+lifts the flat :class:`~repro.core.scheduler.engine.TraceEvent` stream
+into a structured report: per-block controller resolution notes and
+per-worker candidate verdicts (valid, or the first violated constraint),
+plus the tag/followup narration. The trace strings stay the single
+source of truth — this module only parses the shapes the engine and the
+vanilla baseline emit, so interpreter, compiled, and vanilla paths all
+explain identically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.scheduler.engine import (
+    Invocation,
+    ScheduleDecision,
+    TraceEvent,
+)
+
+_BLOCK_RE = re.compile(r"^block\[(\d+)\]: (.*)$", re.S)
+
+
+@dataclasses.dataclass(frozen=True)
+class CandidateReport:
+    """One worker's verdict inside one block evaluation."""
+
+    worker: str
+    valid: bool
+    reason: Optional[str]  # first violated constraint; None when valid
+    detail: str            # the raw trace detail
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        verdict = "valid" if self.valid else f"rejected — {self.reason}"
+        return f"{self.worker}: {verdict}"
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockReport:
+    """One scheduling block's evaluation: controller resolution + verdicts."""
+
+    index: Optional[int]   # block index in the tag (None: vanilla baseline)
+    controller_notes: Tuple[str, ...]
+    candidates: Tuple[CandidateReport, ...]
+
+    @property
+    def rejected(self) -> Tuple[CandidateReport, ...]:
+        return tuple(c for c in self.candidates if not c.valid)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExplainReport:
+    """The full structured answer to "why did/didn't this schedule?"."""
+
+    invocation: Invocation
+    scheduled: bool
+    worker: Optional[str]
+    controller: Optional[str]
+    tag: Optional[str]
+    used_default_fallback: bool
+    zone_restriction: Optional[str]
+    failed_by_policy: bool
+    blocks: Tuple[BlockReport, ...]
+    notes: Tuple[str, ...]          # tag / followup narration, in order
+    trace: Tuple[TraceEvent, ...]   # the raw events, for provenance
+
+    def rejections(self) -> Dict[str, str]:
+        """worker → last rejection reason across every block evaluated."""
+        out: Dict[str, str] = {}
+        for block in self.blocks:
+            for candidate in block.candidates:
+                if not candidate.valid and candidate.reason is not None:
+                    out[candidate.worker] = candidate.reason
+        return out
+
+    def render(self) -> str:
+        """Human-readable summary (the structured sibling of `explain()`)."""
+        head = (
+            f"{self.invocation.function!r} tag={self.invocation.tag!r} → "
+            + (
+                f"worker={self.worker} controller={self.controller}"
+                if self.scheduled
+                else "NOT SCHEDULED"
+                + (" (failed by policy)" if self.failed_by_policy else "")
+            )
+        )
+        lines = [head]
+        for note in self.notes:
+            lines.append(f"  · {note}")
+        for block in self.blocks:
+            label = "block" if block.index is None else f"block[{block.index}]"
+            for note in block.controller_notes:
+                lines.append(f"  {label}: {note}")
+            for candidate in block.candidates:
+                lines.append(f"    {candidate}")
+        return "\n".join(lines)
+
+
+def _parse_candidate(detail: str) -> CandidateReport:
+    worker, _, rest = detail.partition(": ")
+    if rest.startswith("VALID"):
+        return CandidateReport(worker=worker, valid=True, reason=None,
+                               detail=detail)
+    reason = rest
+    if reason.startswith("invalid — "):
+        reason = reason[len("invalid — "):]
+    return CandidateReport(worker=worker, valid=False, reason=reason,
+                           detail=detail)
+
+
+def build_explain_report(
+    invocation: Invocation, decision: ScheduleDecision
+) -> ExplainReport:
+    """Lift a traced decision into the typed per-block/per-worker report."""
+    blocks: List[BlockReport] = []
+    notes: List[str] = []
+    cur_index: Optional[int] = None
+    cur_notes: List[str] = []
+    cur_candidates: List[CandidateReport] = []
+    started = False
+
+    def flush() -> None:
+        nonlocal cur_notes, cur_candidates, started
+        if started:
+            blocks.append(
+                BlockReport(
+                    index=cur_index,
+                    controller_notes=tuple(cur_notes),
+                    candidates=tuple(cur_candidates),
+                )
+            )
+        cur_notes, cur_candidates, started = [], [], False
+
+    for event in decision.trace:
+        if event.kind == "controller":
+            match = _BLOCK_RE.match(event.detail)
+            index = int(match.group(1)) if match else None
+            note = match.group(2) if match else event.detail
+            # A controller event opens a new block report unless it is a
+            # continuation of the same block (the gateway retrying the next
+            # round-robin controller inside one controller-less block).
+            if started and index != cur_index:
+                flush()
+            started = True
+            cur_index = index
+            cur_notes.append(note)
+        elif event.kind == "candidate":
+            started = True
+            if ": " in event.detail:
+                cur_candidates.append(_parse_candidate(event.detail))
+            else:
+                # Worker-less narration ("no workers") — a block note, not
+                # a pseudo-worker rejection.
+                cur_notes.append(event.detail)
+        else:  # "tag" | "followup"
+            flush()
+            cur_index = None
+            notes.append(event.detail)
+    flush()
+
+    return ExplainReport(
+        invocation=invocation,
+        scheduled=decision.scheduled,
+        worker=decision.worker,
+        controller=decision.controller,
+        tag=decision.tag,
+        used_default_fallback=decision.used_default_fallback,
+        zone_restriction=decision.zone_restriction,
+        failed_by_policy=decision.failed_by_policy,
+        blocks=tuple(blocks),
+        notes=tuple(notes),
+        trace=tuple(decision.trace),
+    )

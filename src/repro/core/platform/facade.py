@@ -1,0 +1,599 @@
+"""``TappPlatform`` — the paper's platform (§4) behind one typed API.
+
+The paper's contribution is a *system*: gateway (§4.3), watcher (§4.2),
+per-zone controllers, and live tAPP reload (§4.5) working together. This
+façade owns that wiring so callers stop hand-assembling it:
+
+* **declarative construction** — a :class:`ClusterSpec` builds the live
+  topology; lifecycle methods (``add_worker``, ``drain``,
+  ``mark_unhealthy``) route through the watcher, so epoch-based view
+  invalidation stays correct no matter who mutates the deployment;
+* **policy lifecycle** — ``apply_policy`` validates, dry-runs against
+  the live topology, compiles, and atomically swaps a versioned
+  :class:`PolicyHandle`; ``rollback`` restores the previous policy from
+  a bounded history;
+* **unified invocation flow** — ``invoke`` / ``invoke_batch`` route
+  *and* admit in one step and hand back a :class:`Placement` whose
+  ``complete()`` retires the running-function ticket (the affinity
+  signal), collapsing the gateway/controller two-step;
+* **observability** — ``explain`` returns a typed per-block/per-worker
+  rejection report, ``stats`` a point-in-time snapshot, and
+  ``subscribe`` a feed of platform events.
+
+The underlying parts remain importable for tests and power users, but
+``TappPlatform`` is the only module that should construct them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import deque
+from typing import (
+    Callable,
+    Deque,
+    Iterable,
+    List,
+    Mapping,
+    Optional,
+    Sequence,
+    Union,
+)
+
+from repro.core.platform.explain import ExplainReport, build_explain_report
+from repro.core.platform.policy import (
+    PolicyDryRun,
+    PolicyError,
+    PolicyHandle,
+)
+from repro.core.platform.specs import ClusterSpec, ControllerSpec, WorkerSpec
+from repro.core.scheduler.controller import ControllerRuntime
+from repro.core.scheduler.engine import Invocation, ScheduleDecision
+from repro.core.scheduler.gateway import Gateway
+from repro.core.scheduler.state import (
+    ClusterState,
+    ControllerState,
+    WorkerState,
+)
+from repro.core.scheduler.topology import DistributionPolicy
+from repro.core.scheduler.watcher import Watcher
+from repro.core.tapp.ast import TappScript
+from repro.core.tapp.compile import compile_script
+from repro.core.tapp.parser import parse_tapp
+from repro.core.tapp.validate import validate_script
+
+#: Platform event kinds forwarded to subscribers: the watcher's
+#: "topology" / "script", plus "policy" (apply) and "rollback".
+Subscriber = Callable[[str], None]
+
+PolicyInput = Union[str, TappScript]
+
+
+class _Ledger:
+    """Mutable admit/complete counters shared with live placements."""
+
+    __slots__ = ("admitted", "completed")
+
+    def __init__(self) -> None:
+        self.admitted = 0
+        self.completed = 0
+
+
+class Placement:
+    """The result of one unified invoke: decision + admission ticket.
+
+    ``complete()`` retires the ticket (releasing the slot and the
+    running-function multiset entry the affinity constraints read); it is
+    idempotent, and a no-op for placements that were never admitted
+    (policy failure / no valid worker). A plain ``__slots__`` class: one
+    is created per invocation on the serving hot path, so construction
+    cost is kept at raw-attribute-write level.
+    """
+
+    __slots__ = ("invocation", "decision", "admitted", "completed",
+                 "_watcher", "_ledger")
+
+    def __init__(
+        self,
+        invocation: Invocation,
+        decision: ScheduleDecision,
+        admitted: bool,
+        watcher: Watcher,
+        ledger: _Ledger,
+    ) -> None:
+        self.invocation = invocation
+        self.decision = decision
+        self.admitted = admitted
+        self.completed = False
+        self._watcher = watcher
+        self._ledger = ledger
+
+    @property
+    def scheduled(self) -> bool:
+        return self.decision.scheduled
+
+    @property
+    def worker(self) -> Optional[str]:
+        return self.decision.worker
+
+    @property
+    def controller(self) -> Optional[str]:
+        return self.decision.controller
+
+    @property
+    def tag(self) -> Optional[str]:
+        return self.decision.tag
+
+    @property
+    def failed_by_policy(self) -> bool:
+        return self.decision.failed_by_policy
+
+    def complete(self, *, slow: bool = False) -> None:
+        if self.completed or not self.admitted:
+            return
+        self.completed = True
+        self._watcher.record_completion(
+            self.decision.worker,
+            self.decision.controller or "?",
+            self.invocation.function,
+            slow=slow,
+        )
+        self._ledger.completed += 1
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (
+            f"Placement(function={self.invocation.function!r}, "
+            f"tag={self.invocation.tag!r}, worker={self.worker!r}, "
+            f"controller={self.controller!r}, admitted={self.admitted}, "
+            f"completed={self.completed})"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class PlatformStats:
+    """Point-in-time platform snapshot (routing + admissions + topology)."""
+
+    routed: int
+    tapp_routed: int
+    vanilla_routed: int
+    failed: int
+    script_reloads: int
+    admitted: int
+    completed: int
+    inflight: int
+    workers: int
+    controllers: int
+    policy_version: Optional[int]
+    topology_epoch: int
+
+
+class TappPlatform:
+    """One serverless platform instance: watcher + gateway + controllers."""
+
+    def __init__(
+        self,
+        spec: Optional[Union[ClusterSpec, ClusterState]] = None,
+        *,
+        distribution: DistributionPolicy = DistributionPolicy.DEFAULT,
+        seed: Optional[int] = None,
+        compiled: bool = True,
+        policy: Optional[PolicyInput] = None,
+        strict_policies: bool = False,
+        max_policy_history: int = 8,
+    ) -> None:
+        if isinstance(spec, ClusterState):
+            cluster = spec
+        elif spec is not None:
+            cluster = spec.build()
+        else:
+            cluster = None
+        self._watcher = Watcher(cluster)
+        self._gateway = Gateway(
+            self._watcher,
+            distribution=distribution,
+            seed=seed,
+            compiled=compiled,
+        )
+        self._runtime = ControllerRuntime(self._watcher)
+        self._ledger = _Ledger()
+        self._strict_policies = strict_policies
+        self._active: Optional[PolicyHandle] = None
+        self._history: Deque[PolicyHandle] = deque(maxlen=max_policy_history)
+        # Serialises whole policy transitions (publish + handle/history
+        # bookkeeping + plan priming), not just the watcher's swap, so
+        # concurrent applies cannot leave `policy` pointing at a handle
+        # that is not the published script.
+        self._policy_lock = threading.Lock()
+        self._subscribers: List[Subscriber] = []
+        self._watcher.subscribe(self._emit)
+        if policy is not None:
+            self.apply_policy(policy, strict=strict_policies)
+
+    @classmethod
+    def from_watcher(
+        cls,
+        watcher: Watcher,
+        *,
+        distribution: DistributionPolicy = DistributionPolicy.DEFAULT,
+        seed: Optional[int] = None,
+        compiled: bool = True,
+    ) -> "TappPlatform":
+        """Wrap an existing watcher (the legacy-shim migration path)."""
+        platform = cls.__new__(cls)
+        platform._watcher = watcher
+        platform._gateway = Gateway(
+            watcher, distribution=distribution, seed=seed, compiled=compiled
+        )
+        platform._runtime = ControllerRuntime(watcher)
+        platform._ledger = _Ledger()
+        platform._strict_policies = False
+        platform._active = None
+        platform._history = deque(maxlen=8)
+        platform._policy_lock = threading.Lock()
+        platform._subscribers = []
+        watcher.subscribe(platform._emit)
+        return platform
+
+    # -- events ----------------------------------------------------------------
+
+    def subscribe(self, callback: Subscriber) -> None:
+        """Receive platform events: "topology", "script", "policy",
+        "rollback" (watcher events are forwarded)."""
+        self._subscribers.append(callback)
+
+    def _emit(self, kind: str) -> None:
+        for cb in list(self._subscribers):
+            cb(kind)
+
+    # -- component access (read-mostly; never construct these yourself) --------
+
+    @property
+    def watcher(self) -> Watcher:
+        return self._watcher
+
+    @property
+    def gateway(self) -> Gateway:
+        return self._gateway
+
+    @property
+    def runtime(self) -> ControllerRuntime:
+        return self._runtime
+
+    @property
+    def cluster(self) -> ClusterState:
+        return self._watcher.cluster
+
+    # -- topology lifecycle -----------------------------------------------------
+
+    def add_worker(
+        self, spec: Union[WorkerSpec, WorkerState, Mapping, None] = None, **fields
+    ) -> None:
+        """Register a worker (spec, live state, mapping, or kwargs)."""
+        if spec is None:
+            spec = WorkerSpec(**fields)
+        if isinstance(spec, WorkerState):
+            worker = spec
+        else:
+            worker = WorkerSpec.coerce(spec).build()
+        self._watcher.register_worker(worker)
+
+    def remove_worker(self, name: str) -> None:
+        self._watcher.deregister_worker(name)
+
+    def add_controller(
+        self,
+        spec: Union[ControllerSpec, ControllerState, Mapping, str, None] = None,
+        **fields,
+    ) -> None:
+        if spec is None:
+            spec = ControllerSpec(**fields)
+        elif isinstance(spec, str):
+            spec = ControllerSpec(name=spec, **fields)
+        if isinstance(spec, ControllerState):
+            controller = spec
+        else:
+            controller = ControllerSpec.coerce(spec).build()
+        self._watcher.register_controller(controller)
+
+    def remove_controller(self, name: str) -> None:
+        self._watcher.deregister_controller(name)
+
+    def drain(self, name: str) -> None:
+        """Stop new admissions on a worker; running work keeps completing.
+
+        Clears both health and reachability: unreachability is the
+        *preliminary* invalidate condition of every policy (paper §3.3),
+        so a drained worker is rejected no matter which ``invalidate``
+        clause a script uses (``capacity_used`` and
+        ``max_concurrent_invocations`` never consult health), and the
+        admission ledger refuses new tickets outright — while completions
+        still retire, which is what distinguishes a drain from a loss.
+        """
+        self._watcher.mark_drained(name)
+
+    def restore(self, name: str) -> None:
+        """Undo :meth:`drain` / :meth:`mark_unhealthy` /
+        :meth:`mark_unreachable` (subscribers see the "topology" event,
+        same as the marking side)."""
+        self._watcher.mark_restored(name)
+
+    def mark_unhealthy(self, name: str) -> None:
+        self._watcher.mark_unhealthy(name)
+
+    def mark_unreachable(self, name: str) -> None:
+        self._watcher.mark_unreachable(name)
+
+    def heartbeat(self, name: str, **fields) -> None:
+        """Report live worker state (load / health / residency update)."""
+        self._watcher.update_worker(name, **fields)
+
+    # -- policy lifecycle ---------------------------------------------------------
+
+    @property
+    def policy(self) -> Optional[PolicyHandle]:
+        return self._active
+
+    @property
+    def policy_history(self) -> Sequence[PolicyHandle]:
+        """Previously-active policies, oldest first (bounded)."""
+        return tuple(self._history)
+
+    def _dry_run_from_report(self, report) -> PolicyDryRun:
+        cluster = self._watcher.cluster
+        return PolicyDryRun(
+            report=report,
+            known_zones=tuple(cluster.zones()),
+            known_sets=tuple(cluster.set_labels()),
+            known_controllers=tuple(cluster.controller_names()),
+        )
+
+    def dry_run_policy(self, policy: PolicyInput) -> PolicyDryRun:
+        """Validate a script against the live topology without applying it."""
+        script, _ = self._coerce_policy(policy)
+        cluster = self._watcher.cluster
+        report = validate_script(
+            script,
+            known_controllers=cluster.controller_names(),
+            known_worker_labels=cluster.worker_names(),
+            known_set_labels=cluster.set_labels(),
+        )
+        return self._dry_run_from_report(report)
+
+    def apply_policy(
+        self, policy: PolicyInput, *, strict: Optional[bool] = None
+    ) -> PolicyHandle:
+        """Validate → dry-run → compile → atomically swap a new policy.
+
+        The swap is all-or-nothing AND race-free: the dry-run gate, the
+        compile check, and the swap all run under the watcher's lock (via
+        ``publish_script``'s gate hook), so the script is never gated
+        against a stale topology snapshot. A parse error, a blocking
+        dry-run finding, or a failing compile leaves the active policy,
+        the watcher's published script, and the history untouched.
+        ``strict`` additionally rejects topology/constraint warnings
+        (unknown controllers, worker labels, or set labels; contradictory
+        affinity lists); it defaults to the platform's ``strict_policies``
+        setting.
+        """
+        if strict is None:
+            strict = self._strict_policies
+        script, source = self._coerce_policy(policy)
+        gated: dict = {}
+        compiled_path = self._gateway.compiled
+
+        def _gate(report) -> None:
+            dry_run = self._dry_run_from_report(report)
+            gated["dry_run"] = dry_run
+            dry_run.raise_for(strict=strict)
+            # Compile before the swap: a failing lowering must not
+            # un-publish the previous script (the engine would otherwise
+            # recompile lazily on the next decision and blow up
+            # mid-traffic). The interpreter path never lowers, so it
+            # skips the check rather than rejecting scripts it would run.
+            if compiled_path:
+                gated["plan"] = compile_script(script)
+
+        with self._policy_lock:
+            published = self._watcher.publish_script(script, gate=_gate)
+            if compiled_path:
+                # The published script shares `script.tags`, so the gate's
+                # plan is its plan — seed the engine cache instead of
+                # recompiling on the first decision after the swap.
+                self._gateway.prime(published, gated["plan"])
+            handle = PolicyHandle(
+                version=published.version,
+                script=published,
+                source=source,
+                dry_run=gated["dry_run"],
+            )
+            if self._active is not None:
+                self._history.append(self._active)
+            self._active = handle
+        self._emit("policy")
+        return handle
+
+    def rollback(self) -> Optional[PolicyHandle]:
+        """Restore the previous policy (bit-identical decisions).
+
+        The restored script is re-published under a fresh version number;
+        its content — and therefore every scheduling decision it produces —
+        is identical to when it was last active. Rolling back past the
+        oldest retained policy raises; rolling back a platform whose
+        previous state was "no policy" restores the vanilla fallback.
+        """
+        with self._policy_lock:
+            if self._active is None and not self._history:
+                raise PolicyError("no policy history to roll back to")
+            if not self._history:
+                # Active policy but empty history → back to "no script".
+                self._active = None
+                self._watcher.clear_script()
+                self._emit("rollback")
+                return None
+            previous = self._history.pop()
+            published = self._watcher.publish_script(
+                previous.script, strict=True
+            )
+            if self._gateway.compiled:
+                # Same compile-then-prime discipline as apply_policy, so
+                # the first decision after the rollback stays
+                # compilation-free too.
+                self._gateway.prime(published, compile_script(previous.script))
+            self._active = dataclasses.replace(
+                previous, version=published.version, script=published
+            )
+        self._emit("rollback")
+        return self._active
+
+    def clear_policy(self) -> None:
+        """Remove the policy → vanilla fallback (paper §4.3). The cleared
+        policy stays in history, so :meth:`rollback` restores it."""
+        with self._policy_lock:
+            if self._active is not None:
+                self._history.append(self._active)
+                self._active = None
+            self._watcher.clear_script()
+
+    @staticmethod
+    def _coerce_policy(policy: PolicyInput):
+        if isinstance(policy, TappScript):
+            return policy, policy.source
+        script = parse_tapp(policy)
+        return script, policy
+
+    # -- unified invocation flow ---------------------------------------------------
+
+    def invoke(
+        self,
+        function: Union[str, Invocation],
+        *,
+        tag: Optional[str] = None,
+        model_id: Optional[str] = None,
+        request_id: int = 0,
+        trace: bool = False,
+    ) -> Placement:
+        """Route **and** admit one invocation; returns its :class:`Placement`.
+
+        This is the paper's full request path in one call: the gateway
+        resolves the policy tag to a (controller, worker) pair, and the
+        admission is recorded immediately so the very next decision sees
+        the slot occupancy and running-function multiset this one created.
+        Unscheduled invocations return an un-admitted placement (check
+        ``scheduled`` / ``failed_by_policy``).
+        """
+        if isinstance(function, Invocation):
+            if tag is not None or model_id is not None or request_id != 0:
+                raise TypeError(
+                    "pass either a pre-built Invocation or the field "
+                    "keywords, not both (the keywords would be silently "
+                    "ignored)"
+                )
+            invocation = function
+        else:
+            invocation = Invocation(
+                function=function,
+                tag=tag,
+                model_id=model_id,
+                request_id=request_id,
+            )
+        return self.place(invocation, self._gateway.route(invocation,
+                                                          trace=trace))
+
+    def invoke_batch(
+        self,
+        invocations: Iterable[Union[str, Invocation]],
+        *,
+        trace: bool = False,
+        on_placement: Optional[Callable[[Placement], None]] = None,
+    ) -> List[Placement]:
+        """Route + admit a batch against one script/snapshot resolution.
+
+        Each invocation is admitted before the next is routed (and
+        ``on_placement`` fires in between), so results are bit-identical
+        to a sequence of :meth:`invoke` calls — including policies whose
+        affinity constraints read the placements made earlier in the same
+        batch.
+        """
+        invs = [
+            inv if isinstance(inv, Invocation) else Invocation(function=inv)
+            for inv in invocations
+        ]
+        placements: List[Placement] = []
+
+        def _admit(invocation: Invocation, decision: ScheduleDecision) -> None:
+            placement = self.place(invocation, decision)
+            placements.append(placement)
+            if on_placement is not None:
+                on_placement(placement)
+
+        self._gateway.route_batch(invs, trace=trace, on_decision=_admit)
+        return placements
+
+    def place(
+        self, invocation: Invocation, decision: ScheduleDecision
+    ) -> Placement:
+        """Admit a routed decision and hand back its ticket.
+
+        The single admission point behind :meth:`invoke` /
+        :meth:`invoke_batch`; also usable directly with an
+        externally-routed decision (legacy scheduler adapters).
+        """
+        worker = decision.worker
+        ledger = self._ledger
+        if worker is not None:
+            self._watcher.record_admission(
+                worker, decision.controller or "?", invocation.function
+            )
+            ledger.admitted += 1
+        return Placement(invocation, decision, worker is not None,
+                         self._watcher, ledger)
+
+    # -- observability ---------------------------------------------------------------
+
+    def explain(
+        self,
+        function: Union[str, Invocation],
+        *,
+        tag: Optional[str] = None,
+        model_id: Optional[str] = None,
+    ) -> ExplainReport:
+        """Why would this invocation schedule where it does (or fail)?
+
+        Evaluates the invocation with tracing on and lifts the trace into
+        a typed per-block / per-worker rejection report. Side-effect-free:
+        nothing is admitted, gateway stats are untouched, and the engine's
+        RNG stream / controller cursors are restored afterwards, so
+        explaining between two real invokes never changes the second one.
+        """
+        if isinstance(function, Invocation):
+            if tag is not None or model_id is not None:
+                raise TypeError(
+                    "pass either a pre-built Invocation or the field "
+                    "keywords, not both (the keywords would be silently "
+                    "ignored)"
+                )
+            invocation = function
+        else:
+            invocation = Invocation(function=function, tag=tag,
+                                    model_id=model_id)
+        decision = self._gateway.probe(invocation)
+        return build_explain_report(invocation, decision)
+
+    def stats(self) -> PlatformStats:
+        cluster = self._watcher.cluster
+        gw = self._gateway.stats
+        return PlatformStats(
+            routed=gw.routed,
+            tapp_routed=gw.tapp_routed,
+            vanilla_routed=gw.vanilla_routed,
+            failed=gw.failed,
+            script_reloads=gw.script_reloads,
+            admitted=self._ledger.admitted,
+            completed=self._ledger.completed,
+            inflight=sum(w.inflight for w in cluster.workers.values()),
+            workers=len(cluster.workers),
+            controllers=len(cluster.controllers),
+            policy_version=(
+                self._active.version if self._active is not None else None
+            ),
+            topology_epoch=cluster.topology_epoch,
+        )

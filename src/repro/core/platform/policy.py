@@ -1,0 +1,118 @@
+"""Policy lifecycle types: dry-run reports, versioned handles, errors.
+
+The platform treats a tAPP script like a deployment artifact: it is
+parsed, **dry-run against the live topology** (unknown controllers /
+worker labels / set labels, contradictory affinity lists), compiled, and
+only then atomically swapped in — with a bounded history so ``rollback``
+can restore the previous policy bit-for-bit. This is where the static
+checking of the reachability line of work (arXiv:2407.14159) gets an
+ergonomic home: the findings surface *before* the script starts steering
+live traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+from repro.core.tapp.ast import TappScript
+from repro.core.tapp.validate import Finding, ValidationReport
+
+
+class PolicyError(ValueError):
+    """A policy could not be applied / rolled back."""
+
+    def __init__(self, message: str, findings: Sequence[Finding] = ()) -> None:
+        self.findings = tuple(findings)
+        if self.findings:
+            detail = "; ".join(str(f) for f in self.findings)
+            message = f"{message}: {detail}"
+        super().__init__(message)
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyDryRun:
+    """What applying a script *would* do, checked against live topology."""
+
+    report: ValidationReport
+    # Topology snapshot the script was checked against (for the record).
+    known_zones: Tuple[str, ...]
+    known_sets: Tuple[str, ...]
+    known_controllers: Tuple[str, ...]
+
+    @property
+    def findings(self) -> Tuple[Finding, ...]:
+        return tuple(self.report.findings)
+
+    @property
+    def errors(self) -> Tuple[Finding, ...]:
+        return tuple(self.report.errors)
+
+    @property
+    def warnings(self) -> Tuple[Finding, ...]:
+        return tuple(self.report.warnings)
+
+    @property
+    def topology_findings(self) -> Tuple[Finding, ...]:
+        """References that match nothing in the live deployment."""
+        return tuple(
+            f for f in self.report.findings if f.category == "topology"
+        )
+
+    @property
+    def constraint_findings(self) -> Tuple[Finding, ...]:
+        """Unsatisfiable constraint combinations (affinity ∩ anti-affinity)."""
+        return tuple(
+            f for f in self.report.findings if f.category == "constraint"
+        )
+
+    @property
+    def ok(self) -> bool:
+        """No structural errors (lenient mode: warnings are advisory)."""
+        return self.report.ok
+
+    def ok_strict(self) -> bool:
+        """No errors AND no topology/constraint findings.
+
+        Strict mode treats a dangling reference as a deploy blocker rather
+        than a runtime no-match — the right default for production rollouts
+        where set membership is not expected to be in flux.
+        """
+        return self.ok and not self.topology_findings and not self.constraint_findings
+
+    def blocking(self, *, strict: bool) -> Tuple[Finding, ...]:
+        """The findings that reject the apply under the given mode."""
+        if strict:
+            return tuple(
+                self.errors + self.topology_findings + self.constraint_findings
+            )
+        return self.errors
+
+    def raise_for(self, *, strict: bool) -> None:
+        blocking = self.blocking(strict=strict)
+        if blocking:
+            raise PolicyError("policy rejected by dry-run", blocking)
+
+    def render(self) -> str:
+        lines = [
+            f"dry-run against zones={list(self.known_zones)} "
+            f"sets={list(self.known_sets)} "
+            f"controllers={list(self.known_controllers)}"
+        ]
+        if not self.findings:
+            lines.append("no findings")
+        lines.extend(str(f) for f in self.findings)
+        return "\n".join(lines)
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyHandle:
+    """One applied policy version (what ``rollback`` restores)."""
+
+    version: int               # the watcher's script version when published
+    script: TappScript         # the published (version-stamped) script
+    source: Optional[str]      # YAML text when applied from text
+    dry_run: PolicyDryRun      # the report the apply was gated on
+
+    @property
+    def tag_names(self) -> Tuple[str, ...]:
+        return tuple(t.tag for t in self.script.tags)

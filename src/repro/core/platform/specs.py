@@ -1,0 +1,132 @@
+"""Declarative cluster construction for the platform façade.
+
+A :class:`ClusterSpec` is the serialisable description of a deployment —
+workers with their zones/sets/capacities and the per-zone controllers —
+that :class:`~repro.core.platform.TappPlatform` turns into live state.
+It replaces the ad-hoc ``make_cluster`` + field-mutation pattern: specs
+are frozen values, so a deployment can be permuted (the paper's
+redeploy-every-N-repetitions methodology), diffed, or embedded in a
+scenario table, and the *live* mutable state only ever exists behind the
+watcher.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Iterable, Mapping, Tuple, Union
+
+from repro.core.scheduler.state import (
+    ClusterState,
+    ControllerState,
+    WorkerState,
+)
+
+_DEFAULT_MEMORY = 16 * 1024**3
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerSpec:
+    """Declarative description of one worker (model replica / invoker)."""
+
+    name: str
+    zone: str = "default"
+    sets: Tuple[str, ...] = ()
+    capacity_slots: int = 16
+    resident_models: Tuple[str, ...] = ()
+    memory_bytes: int = _DEFAULT_MEMORY
+    perf_factor: float = 1.0
+
+    def build(self) -> WorkerState:
+        return WorkerState(
+            name=self.name,
+            zone=self.zone,
+            sets=frozenset(self.sets),
+            capacity_slots=self.capacity_slots,
+            resident_models=frozenset(self.resident_models),
+            memory_bytes=self.memory_bytes,
+            perf_factor=self.perf_factor,
+        )
+
+    @classmethod
+    def coerce(
+        cls, value: Union["WorkerSpec", WorkerState, Mapping]
+    ) -> "WorkerSpec":
+        if isinstance(value, cls):
+            return value
+        if isinstance(value, WorkerState):
+            return cls(
+                name=value.name,
+                zone=value.zone,
+                sets=tuple(sorted(value.sets)),
+                capacity_slots=value.capacity_slots,
+                resident_models=tuple(sorted(value.resident_models)),
+                memory_bytes=value.memory_bytes,
+                perf_factor=value.perf_factor,
+            )
+        fields = dict(value)
+        for key in ("sets", "resident_models"):
+            if key in fields:
+                fields[key] = tuple(fields[key])
+        return cls(**fields)
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerSpec:
+    """Declarative description of one per-zone controller."""
+
+    name: str
+    zone: str = "default"
+
+    def build(self) -> ControllerState:
+        return ControllerState(name=self.name, zone=self.zone)
+
+    @classmethod
+    def coerce(
+        cls, value: Union["ControllerSpec", ControllerState, Mapping]
+    ) -> "ControllerSpec":
+        if isinstance(value, cls):
+            return value
+        if isinstance(value, ControllerState):
+            return cls(name=value.name, zone=value.zone)
+        return cls(**dict(value))
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """A whole deployment: controllers + workers, in registration order.
+
+    Registration order matters to the vanilla baseline (its co-prime home
+    depends on it), which is why :meth:`shuffled` exists: one seed = one
+    deployment permutation, reproducing the paper's methodology of
+    redeploying the platform between repetitions.
+    """
+
+    workers: Tuple[WorkerSpec, ...] = ()
+    controllers: Tuple[ControllerSpec, ...] = ()
+
+    @classmethod
+    def of(
+        cls,
+        workers: Iterable[Union[WorkerSpec, WorkerState, Mapping]] = (),
+        controllers: Iterable[Union[ControllerSpec, ControllerState, Mapping]] = (),
+    ) -> "ClusterSpec":
+        """Coerce plain dicts / live states into a spec (config-file path)."""
+        return cls(
+            workers=tuple(WorkerSpec.coerce(w) for w in workers),
+            controllers=tuple(ControllerSpec.coerce(c) for c in controllers),
+        )
+
+    def shuffled(self, seed: int) -> "ClusterSpec":
+        """The same deployment with worker registration order permuted."""
+        workers = list(self.workers)
+        random.Random(seed).shuffle(workers)
+        return dataclasses.replace(self, workers=tuple(workers))
+
+    def build(self) -> ClusterState:
+        """Materialise live cluster state (duplicate names raise here)."""
+        cluster = ClusterState()
+        for controller in self.controllers:
+            cluster.add_controller(controller.build())
+        for worker in self.workers:
+            cluster.add_worker(worker.build())
+        return cluster

@@ -1,13 +1,26 @@
-"""Topology-aware function-execution scheduler (the paper's control plane)."""
+"""Topology-aware function-execution scheduler (the paper's control plane).
+
+The curated public surface of the scheduling layer. Application code
+should normally sit one level higher, on
+:class:`repro.core.platform.TappPlatform`, which owns the wiring of
+watcher + gateway + controller runtime; the names exported here are the
+building blocks (state, engine, constraint layer, topology views) that
+the platform composes and tests exercise directly.
+
+Legacy constraint helpers (``is_invalid``, ``invalid_reason``,
+``resolve_invalidate``) predate the composable constraint layer; they
+remain importable via a module-level ``__getattr__`` that emits a
+``DeprecationWarning`` — use :mod:`repro.core.scheduler.constraints`
+(``resolve_constraints`` / ``constraint_reason`` / ``compile_spec``).
+"""
+import warnings as _warnings
+
 from repro.core.scheduler.constraints import (
     DEFAULT_INVALIDATE,
     ConstraintSpec,
     compile_spec,
     constraint_reason,
-    invalid_reason,
-    is_invalid,
     resolve_constraints,
-    resolve_invalidate,
     spec_predicate,
     spec_violated,
 )
@@ -51,11 +64,6 @@ __all__ = [
     "ControllerState",
     "DEFAULT_INVALIDATE",
     "DistributionPolicy",
-    "compile_spec",
-    "constraint_reason",
-    "resolve_constraints",
-    "spec_predicate",
-    "spec_violated",
     "Gateway",
     "GatewayStats",
     "Invocation",
@@ -69,13 +77,36 @@ __all__ = [
     "WorkerState",
     "WorkerView",
     "cached_view_entry",
+    "compile_spec",
+    "constraint_reason",
     "coprime_order",
     "coprime_order_cached",
     "distribution_view",
-    "invalid_reason",
-    "is_invalid",
     "make_cluster",
     "order_candidates",
-    "resolve_invalidate",
+    "resolve_constraints",
+    "spec_predicate",
+    "spec_violated",
     "stable_hash",
 ]
+
+# Legacy shims kept importable (with a deprecation signal) for one more
+# release cycle; deliberately NOT in __all__.
+_DEPRECATED = ("is_invalid", "invalid_reason", "resolve_invalidate")
+
+
+def __getattr__(name: str):
+    if name in _DEPRECATED:
+        _warnings.warn(
+            f"repro.core.scheduler.{name} is deprecated; use the constraint "
+            f"layer (repro.core.scheduler.constraints: resolve_constraints / "
+            f"constraint_reason / compile_spec) instead",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        from repro.core.scheduler import constraints
+
+        return getattr(constraints, name)
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}"
+    )

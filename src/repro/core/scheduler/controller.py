@@ -13,7 +13,7 @@ steer subsequent invocations away from the slow worker.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Sequence, Tuple
 
 from repro.core.scheduler.state import ClusterState, WorkerState
 from repro.core.scheduler.watcher import Watcher
@@ -53,24 +53,13 @@ class ControllerRuntime:
     def admit(
         self, worker_name: str, controller_name: str, *, function: str = ""
     ) -> Admission:
-        worker = self.cluster.workers.get(worker_name)
-        if worker is None:
-            raise AdmissionError(f"unknown worker {worker_name!r}")
-        if not worker.reachable:
-            raise AdmissionError(f"worker {worker_name!r} unreachable")
+        try:
+            self._watcher.record_admission(worker_name, controller_name, function)
+        except KeyError:
+            raise AdmissionError(f"unknown worker {worker_name!r}") from None
+        except ValueError:
+            raise AdmissionError(f"worker {worker_name!r} unreachable") from None
         self._next_id += 1
-        by = dict(worker.inflight_by)
-        by[controller_name] = by.get(controller_name, 0) + 1
-        fields: Dict = dict(
-            inflight=worker.inflight + 1,
-            inflight_by=by,
-            capacity_used_pct=_pct(worker.inflight + 1, worker.capacity_slots),
-        )
-        if function:
-            running = dict(worker.running_functions)
-            running[function] = running.get(function, 0) + 1
-            fields["running_functions"] = running
-        self._watcher.update_worker(worker_name, **fields)
         return Admission(
             worker=worker_name,
             controller=controller_name,
@@ -83,13 +72,10 @@ class ControllerRuntime:
     ) -> List[Admission]:
         """Batch admission for ``(worker, controller[, function])`` placements.
 
-        Issues ONE watcher update per distinct worker (instead of one per
-        invocation), which is the admission-side counterpart of
-        ``TappEngine.schedule_batch``; the per-worker running-function
-        multiset is updated in the same write, so batch admissions leave
-        state identical to the equivalent sequence of :meth:`admit` calls.
-        All placements are validated before any state is mutated, so a bad
-        placement leaves the cluster untouched.
+        The admission-side counterpart of ``TappEngine.schedule_batch``:
+        every placement is validated before any state is mutated, so a bad
+        placement leaves the cluster untouched, and the recorded state is
+        identical to the equivalent sequence of :meth:`admit` calls.
         """
         normalized: List[Tuple[str, str, str]] = []
         for placement in placements:
@@ -102,33 +88,12 @@ class ControllerRuntime:
                 raise AdmissionError(f"worker {worker_name!r} unreachable")
             normalized.append((worker_name, controller_name, function))
 
-        grouped: Dict[str, List[Tuple[str, str]]] = {}
-        for worker_name, controller_name, function in normalized:
-            grouped.setdefault(worker_name, []).append((controller_name, function))
-
-        for worker_name, admits in grouped.items():
-            worker = self.cluster.workers[worker_name]
-            by = dict(worker.inflight_by)
-            running = dict(worker.running_functions)
-            tracked = False
-            for controller_name, function in admits:
-                by[controller_name] = by.get(controller_name, 0) + 1
-                if function:
-                    running[function] = running.get(function, 0) + 1
-                    tracked = True
-            inflight = worker.inflight + len(admits)
-            fields: Dict = dict(
-                inflight=inflight,
-                inflight_by=by,
-                capacity_used_pct=_pct(inflight, worker.capacity_slots),
-            )
-            if tracked:
-                fields["running_functions"] = running
-            self._watcher.update_worker(worker_name, **fields)
-
         admissions: List[Admission] = []
         for worker_name, controller_name, function in normalized:
             self._next_id += 1
+            self._watcher.record_admission(
+                worker_name, controller_name, function
+            )
             admissions.append(
                 Admission(
                     worker=worker_name,
@@ -140,31 +105,12 @@ class ControllerRuntime:
         return admissions
 
     def complete(self, admission: Admission, *, slow: bool = False) -> None:
-        worker = self.cluster.workers.get(admission.worker)
-        if worker is None:
-            return  # worker evicted while running; nothing to release
-        inflight = max(0, worker.inflight - 1)
-        by = dict(worker.inflight_by)
-        by[admission.controller] = max(0, by.get(admission.controller, 1) - 1)
-        fields: Dict = dict(
-            inflight=inflight,
-            inflight_by=by,
-            capacity_used_pct=_pct(inflight, worker.capacity_slots),
+        self._watcher.record_completion(
+            admission.worker,
+            admission.controller,
+            admission.function,
+            slow=slow,
         )
-        if admission.function:
-            running = dict(worker.running_functions)
-            remaining = running.get(admission.function, 1) - 1
-            if remaining > 0:
-                running[admission.function] = remaining
-            else:
-                running.pop(admission.function, None)
-            fields["running_functions"] = running
-        if slow:
-            # Straggler signal: report the worker as fully loaded so
-            # capacity_used-based policies route around it until the next
-            # healthy heartbeat clears the flag.
-            fields["capacity_used_pct"] = 100.0
-        self._watcher.update_worker(admission.worker, **fields)
 
     def heartbeat(self, worker_name: str, *, healthy: bool = True) -> None:
         worker = self.cluster.workers.get(worker_name)

@@ -212,6 +212,16 @@ class TappEngine:
             decisions.append(decision)
         return decisions
 
+    def scheduling_state(self):
+        """Snapshot the mutable decision state (RNG stream + controller
+        cursor) so a probe/what-if evaluation can be rolled back."""
+        return self._rng.getstate(), self._controller_cursor
+
+    def restore_scheduling_state(self, state) -> None:
+        rng_state, cursor = state
+        self._rng.setstate(rng_state)
+        self._controller_cursor = cursor
+
     def compiled_plan(self, script: TappScript) -> "CompiledScript":
         """The lowered plan for ``script``, compiled once per script object."""
         if script is not self._plan_source:
@@ -221,6 +231,18 @@ class TappEngine:
             self._plan_source = script
         assert self._plan is not None
         return self._plan
+
+    def adopt_plan(self, script: TappScript, plan: "CompiledScript") -> None:
+        """Pre-seed the plan cache with an externally-compiled plan.
+
+        The platform's policy apply compiles the script once as its
+        lowering check; adopting that plan here means the first decision
+        after the swap does not recompile. The caller guarantees ``plan``
+        was lowered from the same tag content as ``script`` (the watcher's
+        published script shares the source script's ``tags`` tuple).
+        """
+        self._plan = plan
+        self._plan_source = script
 
     # ======================================================================
     # Compiled fast path

@@ -44,9 +44,10 @@ class Gateway:
         *,
         distribution: DistributionPolicy = DistributionPolicy.DEFAULT,
         seed: Optional[int] = None,
+        compiled: bool = True,
     ) -> None:
         self._watcher = watcher
-        self._engine = TappEngine(distribution, seed=seed)
+        self._engine = TappEngine(distribution, seed=seed, compiled=compiled)
         self._vanilla = VanillaScheduler()
         self._cached_script: Optional[TappScript] = None
         self._cached_version = -1
@@ -87,6 +88,44 @@ class Gateway:
         if not decision.scheduled:
             self.stats.failed += 1
         return decision
+
+    @property
+    def compiled(self) -> bool:
+        """Whether this gateway's engine runs the compiled fast path."""
+        return self._engine.compiled
+
+    def prime(self, script: TappScript, plan) -> None:
+        """Seed the engine's plan cache for a freshly-published script so
+        the first routed decision does not pay compilation (no-op on the
+        interpreter path)."""
+        if self._engine.compiled:
+            self._engine.adopt_plan(script, plan)
+
+    def probe(self, invocation: Invocation) -> ScheduleDecision:
+        """Evaluate an invocation with a full trace, without counting it.
+
+        The observability path behind ``TappPlatform.explain``: identical
+        policy evaluation to :meth:`route` (same engine), but genuinely
+        side-effect-free — no stats accounting (the authoritative watcher
+        script is read directly rather than through the reload-counting
+        cache), and the engine's RNG stream and round-robin controller
+        cursors are restored afterwards, so a probe between two real
+        decisions never changes what the second one picks (seeded runs
+        stay reproducible even under ``strategy: random``).
+        """
+        script = self._watcher.script
+        cluster = self._watcher.cluster
+        if script is None or not script.tags:
+            state = self._vanilla.scheduling_state()
+            try:
+                return self._vanilla.schedule(invocation, cluster, trace=True)
+            finally:
+                self._vanilla.restore_scheduling_state(state)
+        state = self._engine.scheduling_state()
+        try:
+            return self._engine.schedule(invocation, script, cluster, trace=True)
+        finally:
+            self._engine.restore_scheduling_state(state)
 
     def route_batch(
         self,

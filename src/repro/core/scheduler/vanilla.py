@@ -35,6 +35,13 @@ class VanillaScheduler:
     def __init__(self) -> None:
         self._controller_cursor = 0
 
+    def scheduling_state(self):
+        """Snapshot the round-robin cursor (probe/what-if rollback)."""
+        return self._controller_cursor
+
+    def restore_scheduling_state(self, state) -> None:
+        self._controller_cursor = state
+
     def schedule(
         self,
         invocation: Invocation,

@@ -124,6 +124,91 @@ class Watcher:
         self.update_worker(name, healthy=False)
         self._notify("topology")
 
+    def mark_drained(self, name: str) -> None:
+        """Clear health AND reachability in one transition (graceful
+        drain): unreachability is the preliminary invalidate condition of
+        every policy, so no script admits onto the worker, while
+        :meth:`record_completion` still retires its running tickets."""
+        self.update_worker(name, healthy=False, reachable=False)
+        self._notify("topology")
+
+    def mark_restored(self, name: str) -> None:
+        """Clear health + reachability flags (recovery / undrain) — the
+        symmetric notification to :meth:`mark_unhealthy` /
+        :meth:`mark_unreachable`."""
+        self.update_worker(name, healthy=True, reachable=True)
+        self._notify("topology")
+
+    # -- admission ledger fast path ---------------------------------------------
+    #
+    # Admissions and completions touch only volatile load fields (inflight
+    # counters, the per-controller split, the running-function multiset,
+    # capacity percentage) — never the structural fields that invalidate
+    # epoch-cached views. These two methods are the per-decision hot path
+    # the controller runtime uses: one lock hold, in-place counter updates,
+    # no structural scan. Heartbeats and topology transitions still go
+    # through :meth:`update_worker`.
+
+    def record_admission(
+        self, name: str, controller: str, function: str = ""
+    ) -> None:
+        """Record one admitted invocation (raises ``KeyError`` for an
+        unknown worker, ``ValueError`` for an unreachable one — the
+        preliminary condition of every policy, paper §3.3)."""
+        cluster = self._cluster
+        with self._lock:
+            worker = cluster.workers[name]
+            if not worker.reachable:
+                raise ValueError(f"worker {name!r} unreachable")
+            inflight = worker.inflight + 1
+            worker.inflight = inflight
+            by = worker.inflight_by
+            by[controller] = by.get(controller, 0) + 1
+            if function:
+                running = worker.running_functions
+                running[function] = running.get(function, 0) + 1
+            slots = worker.capacity_slots
+            if 0 < inflight < slots:
+                worker.capacity_used_pct = 100.0 * inflight / slots
+            else:
+                worker.capacity_used_pct = 100.0
+            cluster.version += 1
+
+    def record_completion(
+        self,
+        name: str,
+        controller: str,
+        function: str = "",
+        *,
+        slow: bool = False,
+    ) -> None:
+        with self._lock:
+            worker = self._cluster.workers.get(name)
+            if worker is None:
+                return  # worker evicted while running; nothing to release
+            worker.inflight = max(0, worker.inflight - 1)
+            by = worker.inflight_by
+            by[controller] = max(0, by.get(controller, 1) - 1)
+            if function:
+                running = worker.running_functions
+                remaining = running.get(function, 1) - 1
+                if remaining > 0:
+                    running[function] = remaining
+                else:
+                    running.pop(function, None)
+            slots = worker.capacity_slots
+            if slow:
+                # Straggler signal: report the worker as fully loaded so
+                # capacity_used-based policies route around it until the
+                # next healthy heartbeat clears the flag.
+                worker.capacity_used_pct = 100.0
+            else:
+                worker.capacity_used_pct = (
+                    100.0 if slots <= 0
+                    else min(100.0, 100.0 * worker.inflight / slots)
+                )
+            self._cluster.version += 1
+
     # -- script store (live reload, §4.5) ---------------------------------------
 
     @property
@@ -145,7 +230,26 @@ class Watcher:
         (the live system keeps the previous script — no partial state);
         topology warnings never block, since set membership is dynamic.
         """
-        script = parse_tapp(yaml_text)
+        return self.publish_script(parse_tapp(yaml_text), strict=strict)
+
+    def publish_script(
+        self, script: TappScript, *, strict: bool = True, gate=None
+    ) -> TappScript:
+        """Validate + atomically publish an already-parsed tAPP script.
+
+        The platform's policy lifecycle (apply / dry-run / rollback) builds
+        on this: validation, the caller's acceptance check, and the
+        version-bumped swap all happen under one lock, so readers either
+        see the previous script or the complete new one — never partial
+        state, and never a script gated against a stale topology.
+
+        ``gate`` is an optional callable invoked with the
+        :class:`~repro.core.tapp.validate.ValidationReport` while the lock
+        is held (the lock is reentrant, so the callable may read this
+        watcher's cluster); raising from it aborts the publish with nothing
+        swapped. When ``gate`` is given it replaces the default ``strict``
+        error check.
+        """
         with self._lock:
             report = validate_script(
                 script,
@@ -154,7 +258,9 @@ class Watcher:
                 known_set_labels=self._cluster.set_labels(),
             )
             self._last_report = report
-            if strict:
+            if gate is not None:
+                gate(report)
+            elif strict:
                 report.raise_on_error()
             self._script_version += 1
             self._script = TappScript(

@@ -28,9 +28,10 @@ import heapq
 import itertools
 import random
 import statistics
+import warnings
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
-from repro.core.scheduler.controller import ControllerRuntime
+from repro.core.platform import Placement, TappPlatform
 from repro.core.scheduler.engine import Invocation, ScheduleDecision
 from repro.core.scheduler.state import ClusterState
 from repro.core.scheduler.vanilla import VanillaScheduler
@@ -212,25 +213,63 @@ class SimConfig:
 
 
 class Simulation:
-    """Closed-loop discrete-event simulation of one deployment + workload."""
+    """Closed-loop discrete-event simulation of one deployment + workload.
+
+    The primary constructor takes a :class:`TappPlatform` — the simulator
+    drives the exact invoke→admit→complete flow the serving runtime uses.
+    The seed-era ``Simulation(watcher, scheduler_fn, ...)`` signature is
+    kept as a deprecated shim: the watcher is wrapped in a platform, the
+    scheduler function only overrides routing, and admissions still flow
+    through the platform.
+    """
 
     def __init__(
         self,
-        watcher: Watcher,
-        scheduler: SchedulerFn,
-        network: NetworkModel,
-        profiles: Mapping[str, FunctionProfile],
+        platform: "TappPlatform | Watcher",
+        *args,
+        network: Optional[NetworkModel] = None,
+        profiles: Optional[Mapping[str, FunctionProfile]] = None,
         config: Optional[SimConfig] = None,
-        *,
         is_tapp: bool = True,
+        scheduler: Optional[SchedulerFn] = None,
     ) -> None:
-        self.watcher = watcher
-        self.scheduler = scheduler
+        if isinstance(platform, Watcher):
+            warnings.warn(
+                "Simulation(watcher, scheduler, ...) is deprecated; "
+                "construct a repro.core.platform.TappPlatform and pass it "
+                "as the first argument",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            if args and callable(args[0]):
+                scheduler, args = args[0], args[1:]
+            platform = TappPlatform.from_watcher(platform)
+        elif args and callable(args[0]):
+            raise TypeError(
+                "scheduler functions combine with a Watcher first argument "
+                "(deprecated) or the scheduler= keyword — a TappPlatform "
+                "routes by itself"
+            )
+        if len(args) > 3:
+            raise TypeError(
+                f"Simulation takes at most (network, profiles, config) "
+                f"positionally after the platform; got {len(args)} extra "
+                f"arguments"
+            )
+        if args:
+            network = args[0]
+        if len(args) > 1:
+            profiles = args[1]
+        if len(args) > 2:
+            config = args[2]
+        if network is None or profiles is None:
+            raise TypeError("Simulation requires network and profiles")
+        self.platform = platform
+        self.scheduler = scheduler  # legacy routing override (None: platform)
         self.network = network
         self.profiles = dict(profiles)
         self.config = config or SimConfig()
         self.is_tapp = is_tapp
-        self.runtime = ControllerRuntime(watcher)
         self.rng = random.Random(self.config.seed)
         self._warm: Dict[Tuple[str, str], float] = {}  # (worker, fn) -> last end
         self._queues: Dict[str, List] = {}             # worker -> FIFO of pending
@@ -238,6 +277,15 @@ class Simulation:
         self._events: List = []
         self._seq = itertools.count()
         self.records: List[RequestRecord] = []
+
+    @property
+    def watcher(self) -> Watcher:
+        """The platform's watcher (compat accessor)."""
+        return self.platform.watcher
+
+    @property
+    def cluster(self) -> ClusterState:
+        return self.platform.cluster
 
     # -- event helpers -----------------------------------------------------------
 
@@ -311,32 +359,62 @@ class Simulation:
 
     def _on_submit(self, time: float, payload: Dict) -> None:
         invocation, record = self._begin_submit(time, payload)
-        decision = self.scheduler(invocation, self.watcher.cluster)
-        self._finish_submit(time, payload, record, decision)
+        placement = self._route_one(invocation)
+        self._finish_submit(time, payload, record, placement)
+
+    def _route_one(self, invocation: Invocation) -> Placement:
+        if self.scheduler is None:
+            return self.platform.invoke(invocation)
+        # Legacy adapter: external routing, platform-side admission.
+        decision = self.scheduler(invocation, self.platform.cluster)
+        return self.platform.place(invocation, decision)
 
     def _on_submit_batch(self, time: float, payloads: List[Dict]) -> None:
-        schedule_batch = getattr(self.scheduler, "schedule_batch", None)
-        if schedule_batch is None or len(payloads) == 1:
-            for payload in payloads:
-                self._on_submit(time, payload)
+        if len(payloads) == 1:
+            self._on_submit(time, payloads[0])
             return
         prepared = [self._begin_submit(time, p) for p in payloads]
+        invocations = [inv for inv, _ in prepared]
         pending = iter(zip(payloads, prepared))
 
-        def _place(_invocation: Invocation, decision: ScheduleDecision) -> None:
-            payload, (_, record) = next(pending)
-            self._finish_submit(time, payload, record, decision)
+        if self.scheduler is None:
+            def _on_placement(placement: Placement) -> None:
+                payload, (_, record) = next(pending)
+                self._finish_submit(time, payload, record, placement)
 
-        schedule_batch([inv for inv, _ in prepared], on_decision=_place)
+            # One batched routing pass: script version check, plan, and
+            # epoch-cached views shared; each placement is admitted (and
+            # its sim bookkeeping done) before the next decision is made,
+            # so results are identical to one-by-one submits.
+            self.platform.invoke_batch(
+                invocations, on_placement=_on_placement
+            )
+            return
+
+        schedule_batch = getattr(self.scheduler, "schedule_batch", None)
+        if schedule_batch is None:
+            for payload, (invocation, record) in zip(payloads, prepared):
+                placement = self._route_one(invocation)
+                self._finish_submit(time, payload, record, placement)
+            return
+
+        def _place(invocation: Invocation, decision: ScheduleDecision) -> None:
+            payload, (_, record) = next(pending)
+            self._finish_submit(
+                time, payload, record, self.platform.place(invocation, decision)
+            )
+
+        schedule_batch(invocations, on_decision=_place)
 
     def _finish_submit(
         self,
         time: float,
         payload: Dict,
         record: RequestRecord,
-        decision: ScheduleDecision,
+        placement: Placement,
     ) -> None:
         profile: FunctionProfile = payload["profile"]
+        decision = placement.decision
         overhead = (
             self.config.scheduler_overhead_tapp
             if self.is_tapp
@@ -355,14 +433,15 @@ class Simulation:
         record.scheduled = True
         record.worker = decision.worker
         record.controller = decision.controller
-        worker = self.watcher.cluster.workers[decision.worker]
+        cluster = self.platform.cluster
+        worker = cluster.workers[decision.worker]
 
         # Request path: gateway → controller (zone hop) → worker (zone hop).
         # Vanilla's topology-blind worker choice pays cross-zone
         # controller→worker hops that tAPP's local-first ordering avoids —
         # this is the §5.4.1 effect (default policy beating vanilla).
         ctl = (
-            self.watcher.cluster.controllers.get(decision.controller)
+            cluster.controllers.get(decision.controller)
             if decision.controller
             else None
         )
@@ -370,10 +449,7 @@ class Simulation:
         now += self.network.get_rtt(self.config.gateway_zone, ctl_zone)
         now += self.network.get_rtt(ctl_zone, worker.zone)
 
-        admission = self.runtime.admit(
-            decision.worker, decision.controller or "?", function=profile.name
-        )
-        state = {"payload": payload, "record": record, "admission": admission}
+        state = {"payload": payload, "record": record, "placement": placement}
         queue = self._queues.setdefault(decision.worker, [])
         # `inflight` counts all admitted (buffered) work — the paper's
         # "concurrent invocations"; executing work = inflight - queued.
@@ -386,8 +462,11 @@ class Simulation:
     def _on_start(self, time: float, state: Dict) -> None:
         record: RequestRecord = state["record"]
         profile: FunctionProfile = self.profiles[record.function]
-        worker = self.watcher.cluster.workers.get(record.worker)
+        worker = self.platform.cluster.workers.get(record.worker)
         if worker is None:  # evicted while queued
+            # Retire the orphaned ticket (a watcher no-op for a gone
+            # worker, but it keeps the admitted/completed ledger honest).
+            state["placement"].complete()
             record.completed = time
             record.error = "worker-evicted"
             self._finish_user_chain(time, state["payload"], record)
@@ -448,7 +527,7 @@ class Simulation:
 
     def _on_finish(self, time: float, state: Dict) -> None:
         record: RequestRecord = state["record"]
-        self.runtime.complete(state["admission"])
+        state["placement"].complete()
         record.completed = time
         link = state.pop("link", None)
         if link is not None:
@@ -481,12 +560,17 @@ def _link_key(a: str, b: str) -> Tuple[str, str]:
 
 
 def gateway_scheduler(gateway) -> SchedulerFn:
-    """Adapt a :class:`Gateway` to the simulator's scheduler signature.
+    """Deprecated: adapt a :class:`Gateway` to the legacy scheduler signature.
 
-    The adapter also exposes ``schedule_batch`` so the simulator can route
-    same-timestamp submits through :meth:`Gateway.route_batch` (one
-    script/snapshot resolution per batch).
+    New code should construct a :class:`~repro.core.platform.TappPlatform`
+    and pass it to :class:`Simulation` directly — the platform routes AND
+    admits in one step, so no adapter is needed.
     """
+    warnings.warn(
+        "gateway_scheduler is deprecated; pass a TappPlatform to Simulation",
+        DeprecationWarning,
+        stacklevel=2,
+    )
 
     def schedule(invocation: Invocation, _cluster: ClusterState) -> ScheduleDecision:
         return gateway.route(invocation)
@@ -499,6 +583,13 @@ def gateway_scheduler(gateway) -> SchedulerFn:
 
 
 def vanilla_scheduler(vanilla: Optional[VanillaScheduler] = None) -> SchedulerFn:
+    """Deprecated: a policy-free :class:`TappPlatform` routes vanilla."""
+    warnings.warn(
+        "vanilla_scheduler is deprecated; a TappPlatform with no policy "
+        "applied routes through the same vanilla fallback",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     v = vanilla or VanillaScheduler()
 
     def schedule(invocation: Invocation, cluster: ClusterState) -> ScheduleDecision:

@@ -13,18 +13,19 @@ from __future__ import annotations
 
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.scheduler.gateway import Gateway
-from repro.core.scheduler.state import ClusterState, ControllerState, WorkerState
+from repro.core.platform import (
+    ClusterSpec,
+    ControllerSpec,
+    TappPlatform,
+    WorkerSpec,
+)
 from repro.core.scheduler.topology import DistributionPolicy
-from repro.core.scheduler.watcher import Watcher
 from repro.core.sim.core import (
     FunctionProfile,
     NetworkModel,
     SimConfig,
     Simulation,
     WorkloadSpec,
-    gateway_scheduler,
-    vanilla_scheduler,
 )
 
 # Zones of the quantitative cluster (§5.3): the data (MongoDB, terrain
@@ -42,7 +43,7 @@ ZONE_CLOUD = "cloud"
 # ---------------------------------------------------------------------------
 
 
-def benchmark_cluster(*, deployment_seed: int = 0) -> Watcher:
+def benchmark_cluster(*, deployment_seed: int = 0) -> ClusterSpec:
     """§5.3: 1 controller + 1 worker in France, 1 controller + 2 workers in
     East US. Worker slots model Standard_DS1_v2 (1 vCPU) invoker pools.
 
@@ -53,29 +54,20 @@ def benchmark_cluster(*, deployment_seed: int = 0) -> Watcher:
     seed is one such deployment: vanilla's co-prime primary depends on the
     order, tAPP's topology-aware choice does not.
     """
-    import random as _random
-
-    cluster = ClusterState()
-    cluster.add_controller(ControllerState(name="FranceCtl", zone=ZONE_FRANCE))
-    cluster.add_controller(ControllerState(name="EastCtl", zone=ZONE_EAST))
-    workers = [
-        WorkerState(
-            name="fr-w0", zone=ZONE_FRANCE, sets=frozenset({"france", "any"}),
-            capacity_slots=2,
+    return ClusterSpec(
+        controllers=(
+            ControllerSpec("FranceCtl", zone=ZONE_FRANCE),
+            ControllerSpec("EastCtl", zone=ZONE_EAST),
         ),
-        WorkerState(
-            name="us-w0", zone=ZONE_EAST, sets=frozenset({"east", "any"}),
-            capacity_slots=2,
+        workers=(
+            WorkerSpec("fr-w0", zone=ZONE_FRANCE, sets=("france", "any"),
+                       capacity_slots=2),
+            WorkerSpec("us-w0", zone=ZONE_EAST, sets=("east", "any"),
+                       capacity_slots=2),
+            WorkerSpec("us-w1", zone=ZONE_EAST, sets=("east", "any"),
+                       capacity_slots=2),
         ),
-        WorkerState(
-            name="us-w1", zone=ZONE_EAST, sets=frozenset({"east", "any"}),
-            capacity_slots=2,
-        ),
-    ]
-    _random.Random(deployment_seed).shuffle(workers)
-    for w in workers:
-        cluster.add_worker(w)
-    return Watcher(cluster)
+    ).shuffled(deployment_seed)
 
 
 def benchmark_network() -> NetworkModel:
@@ -95,7 +87,7 @@ def benchmark_network() -> NetworkModel:
     )
 
 
-def mqtt_cluster(*, cloud_first: bool = True) -> Watcher:
+def mqtt_cluster(*, cloud_first: bool = True) -> ClusterSpec:
     """§5.1: edge zone (controller + worker + broker/db) and cloud zone
     (controller + worker). The broker is reachable only from the edge.
 
@@ -106,20 +98,17 @@ def mqtt_cluster(*, cloud_first: bool = True) -> Watcher:
     qualitative benchmark runs both orders to show vanilla is
     deployment-dependent while tAPP succeeds under either.
     """
-    cluster = ClusterState()
-    cluster.add_controller(ControllerState(name="LocalCtl", zone=ZONE_EDGE))
-    cluster.add_controller(ControllerState(name="CloudCtl", zone=ZONE_CLOUD))
-    edge = WorkerState(
-        name="W_1", zone=ZONE_EDGE, sets=frozenset({"edge", "any"}),
-        capacity_slots=4,
+    edge = WorkerSpec("W_1", zone=ZONE_EDGE, sets=("edge", "any"),
+                      capacity_slots=4)
+    cloud = WorkerSpec("W_2", zone=ZONE_CLOUD, sets=("cloud", "any"),
+                       capacity_slots=4)
+    return ClusterSpec(
+        controllers=(
+            ControllerSpec("LocalCtl", zone=ZONE_EDGE),
+            ControllerSpec("CloudCtl", zone=ZONE_CLOUD),
+        ),
+        workers=(cloud, edge) if cloud_first else (edge, cloud),
     )
-    cloud = WorkerState(
-        name="W_2", zone=ZONE_CLOUD, sets=frozenset({"cloud", "any"}),
-        capacity_slots=4,
-    )
-    for w in ((cloud, edge) if cloud_first else (edge, cloud)):
-        cluster.add_worker(w)
-    return Watcher(cluster)
 
 
 def mqtt_network() -> NetworkModel:
@@ -280,37 +269,35 @@ def run_benchmark(
     seed: int = 0,
 ) -> Tuple[Simulation, "SimResult"]:
     """Run one §5.2 test on a fresh §5.3 deployment. Returns (sim, result)."""
-    watcher = benchmark_cluster(deployment_seed=seed)
+    spec = benchmark_cluster(deployment_seed=seed)
     profiles = adhoc_profiles(tagged)
     network = benchmark_network()
     config = SimConfig(seed=seed, gateway_zone=ZONE_EAST)
 
     if scheduler == "vanilla":
-        sched = vanilla_scheduler()
-        sim = Simulation(watcher, sched, network, profiles, config, is_tapp=False)
+        # A policy-free platform routes through the vanilla fallback.
+        platform = TappPlatform(spec, seed=seed)
+        sim = Simulation(platform, network, profiles, config, is_tapp=False)
     else:
         policy = DistributionPolicy.parse(scheduler)
-        gateway = Gateway(watcher, distribution=policy, seed=seed)
+        platform = TappPlatform(spec, distribution=policy, seed=seed)
         if script is not None:
-            watcher.load_script(script)
+            platform.apply_policy(script)
         elif tagged:
-            watcher.load_script(DATA_LOCALITY_SCRIPT)
+            platform.apply_policy(DATA_LOCALITY_SCRIPT)
         # No script + untagged → gateway falls back to vanilla logic but the
         # run still pays the tAPP platform overhead (§5.4.1 methodology),
         # with topology-prioritised worker order. We emulate the co-located
         # preference by loading a minimal blank-set default script.
         else:
-            watcher.load_script(
+            platform.apply_policy(
                 "- default:\n"
                 "  - workers:\n"
                 "    - set:\n"
                 "    strategy: platform\n"
                 "    invalidate: overload\n"
             )
-        sim = Simulation(
-            watcher, gateway_scheduler(gateway), network, profiles, config,
-            is_tapp=True,
-        )
+        sim = Simulation(platform, network, profiles, config, is_tapp=True)
 
     result = sim.run([WORKLOADS[test]])
     return sim, result
@@ -331,22 +318,23 @@ ZONE_RACK_A = "rack_a"
 ZONE_RACK_B = "rack_b"
 
 
-def colocation_cluster() -> Watcher:
+def colocation_cluster() -> ClusterSpec:
     """Two racks × two workers, one controller per rack."""
-    cluster = ClusterState()
-    cluster.add_controller(ControllerState(name="RackACtl", zone=ZONE_RACK_A))
-    cluster.add_controller(ControllerState(name="RackBCtl", zone=ZONE_RACK_B))
-    for i in range(4):
-        zone = ZONE_RACK_A if i < 2 else ZONE_RACK_B
-        cluster.add_worker(
-            WorkerState(
-                name=f"w{i}",
-                zone=zone,
-                sets=frozenset({zone, "any"}),
+    return ClusterSpec(
+        controllers=(
+            ControllerSpec("RackACtl", zone=ZONE_RACK_A),
+            ControllerSpec("RackBCtl", zone=ZONE_RACK_B),
+        ),
+        workers=tuple(
+            WorkerSpec(
+                f"w{i}",
+                zone=(ZONE_RACK_A if i < 2 else ZONE_RACK_B),
+                sets=((ZONE_RACK_A if i < 2 else ZONE_RACK_B), "any"),
                 capacity_slots=4,
             )
-        )
-    return Watcher(cluster)
+            for i in range(4)
+        ),
+    )
 
 
 def colocation_network() -> NetworkModel:
@@ -461,16 +449,14 @@ def run_colocation_case(
     Returns (sim, result); split per-class stats via
     ``result.for_function(...)``.
     """
-    watcher = colocation_cluster()
-    gateway = Gateway(
-        watcher, distribution=DistributionPolicy.SHARED, seed=seed
-    )
-    watcher.load_script(
-        COLOCATION_SCRIPT if constrained else COLOCATION_BLANK_SCRIPT
+    platform = TappPlatform(
+        colocation_cluster(),
+        distribution=DistributionPolicy.SHARED,
+        seed=seed,
+        policy=COLOCATION_SCRIPT if constrained else COLOCATION_BLANK_SCRIPT,
     )
     sim = Simulation(
-        watcher,
-        gateway_scheduler(gateway),
+        platform,
         colocation_network(),
         colocation_profiles(),
         SimConfig(seed=seed, gateway_zone=ZONE_RACK_A),
@@ -484,23 +470,26 @@ def run_mqtt_case(
     *, use_tapp: bool, minutes: int = 30, seed: int = 0, cloud_first: bool = True
 ) -> Dict[str, "SimResult"]:
     """§5.1 qualitative case: one pipeline invocation per minute."""
-    watcher = mqtt_cluster(cloud_first=cloud_first)
+    spec = mqtt_cluster(cloud_first=cloud_first)
     profiles = mqtt_profiles()
     network = mqtt_network()
     config = SimConfig(seed=seed, gateway_zone=ZONE_CLOUD)
 
     if use_tapp:
-        gateway = Gateway(watcher, distribution=DistributionPolicy.SHARED, seed=seed)
-        watcher.load_script(MQTT_SCRIPT)
-        sched = gateway_scheduler(gateway)
+        platform = TappPlatform(
+            spec, distribution=DistributionPolicy.SHARED, seed=seed,
+            policy=MQTT_SCRIPT,
+        )
         is_tapp = True
     else:
-        sched = vanilla_scheduler()
+        platform = TappPlatform(spec, seed=seed)
         is_tapp = False
 
+    # One platform across the three pipeline stages: scheduler cursors and
+    # cluster state carry over, exactly like one live deployment would.
     results: Dict[str, "SimResult"] = {}
     for fn in ("data-collection", "feature-extraction", "feature-analysis"):
-        sim = Simulation(watcher, sched, network, profiles, config, is_tapp=is_tapp)
+        sim = Simulation(platform, network, profiles, config, is_tapp=is_tapp)
         workload = [
             WorkloadSpec(function=fn, users=1, requests_per_user=minutes, pause=60.0)
         ]

@@ -44,6 +44,12 @@ class Finding:
     level: str  # "error" | "warning"
     where: str
     message: str
+    # What kind of rule produced the finding: "structure" (grammar-level
+    # invariants), "topology" (references that match nothing in the live
+    # deployment), or "constraint" (unsatisfiable constraint combinations).
+    # The platform's strict policy mode promotes non-structure warnings to
+    # rejections; plain validation treats all warnings as advisory.
+    category: str = "structure"
 
     def __str__(self) -> str:  # pragma: no cover - cosmetic
         return f"[{self.level}] {self.where}: {self.message}"
@@ -153,6 +159,7 @@ def _validate_tag_topology(
                     where,
                     f"controller {block.controller.label!r} is not present in "
                     f"the current deployment",
+                    category="topology",
                 )
             )
         for wi, item in enumerate(block.workers):
@@ -166,6 +173,7 @@ def _validate_tag_topology(
                         f"functions {conflicts} appear in both the effective "
                         f"affinity and anti-affinity lists; the item is "
                         f"unsatisfiable whenever they run",
+                        category="constraint",
                     )
                 )
             if isinstance(item, WorkerRef):
@@ -178,6 +186,7 @@ def _validate_tag_topology(
                             "warning",
                             iwhere,
                             f"worker label {item.label!r} matches no live worker",
+                            category="topology",
                         )
                     )
             elif isinstance(item, WorkerSet):
@@ -191,6 +200,7 @@ def _validate_tag_topology(
                             "warning",
                             iwhere,
                             f"worker set {item.label!r} currently has no members",
+                            category="topology",
                         )
                     )
     return findings

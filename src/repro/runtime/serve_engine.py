@@ -29,10 +29,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.platform import TappPlatform, WorkerSpec
 from repro.core.scheduler.controller import ControllerRuntime
 from repro.core.scheduler.engine import Invocation
 from repro.core.scheduler.gateway import Gateway
-from repro.core.scheduler.state import ControllerState, WorkerState
 from repro.core.scheduler.topology import DistributionPolicy
 from repro.core.scheduler.watcher import Watcher
 from repro.models.api import Model
@@ -60,7 +60,7 @@ class _SlotState:
     request: Request
     position: int                       # next cache slot to write
     last_token: int
-    admission: object
+    placement: object                   # the platform Placement ticket
 
 
 class Replica:
@@ -102,7 +102,7 @@ class Replica:
                 return i
         return None
 
-    def admit(self, request: Request, admission) -> bool:
+    def admit(self, request: Request, placement) -> bool:
         slot = self.free_slot()
         if slot is None or not self.alive:
             return False
@@ -123,7 +123,7 @@ class Replica:
             request=request,
             position=len(request.tokens),
             last_token=first_token,
-            admission=admission,
+            placement=placement,
         )
         request.state = "running"
         request.replica = self.name
@@ -133,7 +133,7 @@ class Replica:
     # -- decode tick --------------------------------------------------------------------
 
     def step(self) -> List[Tuple[Request, object]]:
-        """One batched decode step; returns finished (request, admission)."""
+        """One batched decode step; returns finished (request, placement)."""
         if not self.active or not self.alive:
             return []
         t0 = time.time()
@@ -159,7 +159,7 @@ class Replica:
             )
             if done:
                 st.request.state = "done"
-                finished.append((st.request, st.admission))
+                finished.append((st.request, st.placement))
                 del self.active[slot]
         self.tick_times.append(time.time() - t0)
         return finished
@@ -182,9 +182,7 @@ class ServingEngine:
         straggler_factor: float = 4.0,
         seed: int = 0,
     ) -> None:
-        self.watcher = Watcher()
-        self.gateway = Gateway(self.watcher, distribution=distribution, seed=seed)
-        self.runtime = ControllerRuntime(self.watcher)
+        self.platform = TappPlatform(distribution=distribution, seed=seed)
         self.replicas: Dict[str, Replica] = {}
         self.queue: List[Request] = []
         self.done: List[Request] = []
@@ -194,22 +192,36 @@ class ServingEngine:
         self._ema: Dict[str, float] = {}
         self.stragglers_flagged = 0
         if tapp_script is not None:
-            self.watcher.load_script(tapp_script)
+            self.platform.apply_policy(tapp_script)
+
+    # -- platform access (compat: the engine predates the façade) -------------------
+
+    @property
+    def watcher(self) -> Watcher:
+        return self.platform.watcher
+
+    @property
+    def gateway(self) -> Gateway:
+        return self.platform.gateway
+
+    @property
+    def runtime(self) -> ControllerRuntime:
+        return self.platform.runtime
 
     # -- topology -------------------------------------------------------------------
 
     def add_controller(self, name: str, zone: str = "default") -> None:
-        self.watcher.register_controller(ControllerState(name=name, zone=zone))
+        self.platform.add_controller(name, zone=zone)
 
     def add_replica(self, replica: Replica) -> None:
         self.replicas[replica.name] = replica
-        self.watcher.register_worker(
-            WorkerState(
+        self.platform.add_worker(
+            WorkerSpec(
                 name=replica.name,
                 zone=replica.zone,
-                sets=replica.sets,
+                sets=tuple(replica.sets),
                 capacity_slots=replica.slots,
-                resident_models=frozenset({replica.cfg.name}),
+                resident_models=(replica.cfg.name,),
             )
         )
 
@@ -219,12 +231,15 @@ class ServingEngine:
         if replica is not None:
             replica.fail()
             for st in list(replica.active.values()):
+                # Retire the ticket of the lost placement; the requeued
+                # request gets a fresh one when it is re-admitted.
+                st.placement.complete()
                 st.request.state = "queued"
                 st.request.replica = None
                 st.request.output.clear()
                 self.queue.append(st.request)
             replica.active.clear()
-        self.watcher.deregister_worker(name)
+        self.platform.remove_worker(name)
 
     # -- requests ------------------------------------------------------------------------
 
@@ -255,9 +270,9 @@ class ServingEngine:
         self._admit_queued()
         for replica in self.replicas.values():
             finished = replica.step()
-            for request, admission in finished:
+            for request, placement in finished:
                 request.finished_tick = self.tick
-                self.runtime.complete(admission)
+                placement.complete()
                 self.done.append(request)
         self._flag_stragglers()
 
@@ -272,10 +287,11 @@ class ServingEngine:
     # -- internals ---------------------------------------------------------------------------
 
     def _heartbeats(self) -> None:
+        workers = self.platform.cluster.workers
         for replica in self.replicas.values():
-            if replica.name not in self.watcher.cluster.workers:
+            if replica.name not in workers:
                 continue
-            self.watcher.update_worker(
+            self.platform.heartbeat(
                 replica.name,
                 healthy=replica.alive,
                 reachable=replica.alive,
@@ -298,33 +314,29 @@ class ServingEngine:
         ]
         pending = iter(requests)
 
-        def _place(_invocation, decision) -> None:
+        def _place(placement) -> None:
             request = next(pending)
             placed = False
-            if decision.scheduled and decision.worker in self.replicas:
-                replica = self.replicas[decision.worker]
+            if placement.scheduled and placement.worker in self.replicas:
+                replica = self.replicas[placement.worker]
                 if replica.cfg.name == request.model_id:
-                    admission = self.runtime.admit(
-                        decision.worker,
-                        decision.controller or "?",
-                        function=request.model_id,
-                    )
-                    placed = replica.admit(request, admission)
-                    if not placed:
-                        self.runtime.complete(admission)
+                    placed = replica.admit(request, placement)
             if not placed:
+                # Retire the unused ticket (no-op when never admitted) so
+                # the running-function multiset stays truthful.
+                placement.complete()
                 request.state = "queued"
                 still_queued.append(request)
                 # Requests failed by policy (followup: fail) surface as such.
-                if decision.failed_by_policy:
+                if placement.failed_by_policy:
                     request.error = "policy-failed"
 
-        # One batched routing pass per tick: the script version check, plan
-        # compilation, and epoch-cached views are shared across the queue,
-        # while the per-decision callback admits each placement before the
-        # next decision (so capacity effects are observed, exactly as the
-        # previous request-at-a-time loop did).
-        self.gateway.route_batch(invocations, on_decision=_place)
+        # One unified invoke→admit pass per tick: the script version check,
+        # plan compilation, and epoch-cached views are shared across the
+        # queue, and each placement's admission lands before the next
+        # decision is made (so capacity and affinity effects are observed,
+        # exactly as the previous request-at-a-time loop did).
+        self.platform.invoke_batch(invocations, on_placement=_place)
         self.queue = still_queued
 
     def _flag_stragglers(self) -> None:
@@ -339,7 +351,7 @@ class ServingEngine:
                 self.stragglers_flagged += 1
                 # Route-around: report the replica as saturated until the
                 # next healthy heartbeat shows recovered load.
-                self.watcher.update_worker(
+                self.platform.heartbeat(
                     replica.name, capacity_used_pct=100.0
                 )
             self._ema[replica.name] = (

@@ -1,0 +1,590 @@
+"""Platform API v1: façade construction, policy lifecycle, unified
+invoke→admit→complete flow, typed explain, stats equivalence, and the
+curated scheduler surface."""
+import warnings
+
+import pytest
+
+from repro.core.platform import (
+    ClusterSpec,
+    ControllerSpec,
+    PolicyError,
+    TappPlatform,
+    WorkerSpec,
+)
+from repro.core.scheduler import Gateway, Invocation, Watcher, make_cluster
+from repro.core.scheduler.topology import DistributionPolicy
+from repro.core.tapp import parse_tapp
+
+SPEC = ClusterSpec(
+    controllers=(
+        ControllerSpec("EdgeCtl", zone="edge"),
+        ControllerSpec("CloudCtl", zone="cloud"),
+    ),
+    workers=(
+        WorkerSpec("e0", zone="edge", sets=("edge", "any"), capacity_slots=2),
+        WorkerSpec("e1", zone="edge", sets=("edge", "any"), capacity_slots=2),
+        WorkerSpec("c0", zone="cloud", sets=("cloud", "any"), capacity_slots=4),
+    ),
+)
+
+SCRIPT = """
+- default:
+  - workers:
+    - set:
+    strategy: platform
+    invalidate: overload
+- edge_only:
+  - controller: EdgeCtl
+    workers:
+    - set: edge
+    topology_tolerance: none
+  followup: fail
+"""
+
+CLOUD_SCRIPT = """
+- default:
+  - controller: CloudCtl
+    workers:
+    - set: cloud
+    topology_tolerance: all
+"""
+
+
+def platform(**kwargs) -> TappPlatform:
+    return TappPlatform(
+        SPEC, distribution=DistributionPolicy.SHARED, seed=0, **kwargs
+    )
+
+
+# ---------------------------------------------------------------------------
+# Declarative construction + topology lifecycle
+# ---------------------------------------------------------------------------
+
+
+class TestClusterSpec:
+    def test_build_materialises_workers_and_controllers(self):
+        p = platform()
+        assert set(p.cluster.workers) == {"e0", "e1", "c0"}
+        assert set(p.cluster.controllers) == {"EdgeCtl", "CloudCtl"}
+        assert p.cluster.workers["e0"].sets == frozenset({"edge", "any"})
+
+    def test_of_coerces_dicts(self):
+        spec = ClusterSpec.of(
+            workers=[dict(name="w0", zone="z", sets=["a"])],
+            controllers=[dict(name="C", zone="z")],
+        )
+        assert spec.workers[0].sets == ("a",)
+        assert spec.build().workers["w0"].zone == "z"
+
+    def test_shuffled_permutes_registration_order(self):
+        orders = {
+            tuple(w.name for w in SPEC.shuffled(seed).workers)
+            for seed in range(8)
+        }
+        assert len(orders) > 1
+        assert all(sorted(o) == ["c0", "e0", "e1"] for o in orders)
+
+    def test_duplicate_worker_rejected_at_build(self):
+        spec = ClusterSpec(workers=(WorkerSpec("w"), WorkerSpec("w")))
+        with pytest.raises(ValueError, match="duplicate"):
+            spec.build()
+
+    def test_restore_notifies_like_drain(self):
+        p = platform()
+        events = []
+        p.subscribe(events.append)
+        p.drain("e0")
+        p.restore("e0")
+        assert events.count("topology") == 2
+
+    def test_lifecycle_routes_through_watcher_epoch(self):
+        p = platform()
+        epoch = p.cluster.topology_epoch
+        p.add_worker(WorkerSpec("e2", zone="edge", sets=("edge", "any")))
+        assert p.cluster.topology_epoch == epoch + 1
+        p.drain("e2")
+        assert p.cluster.topology_epoch == epoch + 2
+        assert not p.cluster.workers["e2"].healthy
+        p.restore("e2")
+        assert p.cluster.workers["e2"].healthy
+        p.remove_worker("e2")
+        assert "e2" not in p.cluster.workers
+
+    def test_drained_worker_not_scheduled(self):
+        p = platform(policy=SCRIPT)
+        p.drain("e0")
+        p.drain("e1")
+        placement = p.invoke("f", tag="edge_only")
+        assert not placement.scheduled and placement.failed_by_policy
+
+    def test_drain_blocks_every_invalidate_kind(self):
+        # capacity_used / max_concurrent clauses never consult health, so
+        # drain must act through the preliminary (reachability) condition.
+        script = (
+            "- cap:\n  - workers:\n    - set: edge\n"
+            "    invalidate: capacity_used 95%\n  followup: fail\n"
+            "- conc:\n  - workers:\n    - set: edge\n"
+            "    invalidate: max_concurrent_invocations 99\n  followup: fail\n"
+        )
+        p = platform(policy=script)
+        ticket = p.invoke("f", tag="cap")
+        assert ticket.scheduled  # sanity: schedulable before the drain
+        p.drain("e0")
+        p.drain("e1")
+        for tag in ("cap", "conc"):
+            placement = p.invoke("f", tag=tag)
+            assert not placement.scheduled, tag
+            assert not placement.admitted, tag
+        ticket.complete()  # running work still retires after the drain
+        assert p.stats().completed == 1
+
+
+# ---------------------------------------------------------------------------
+# Policy lifecycle: apply / dry-run / rollback
+# ---------------------------------------------------------------------------
+
+
+class TestPolicyLifecycle:
+    def test_apply_returns_versioned_handle(self):
+        p = platform()
+        h1 = p.apply_policy(SCRIPT)
+        h2 = p.apply_policy(CLOUD_SCRIPT)
+        assert h2.version > h1.version
+        assert p.policy is h2
+        assert p.policy_history == (h1,)
+
+    def test_strict_rejects_unknown_set_and_controller(self):
+        p = platform()
+        bad_set = "- t:\n  - workers:\n    - set: ghost_set\n  followup: fail\n"
+        bad_ctl = (
+            "- t:\n  - controller: GhostCtl\n    workers:\n    - set:\n"
+            "  followup: fail\n"
+        )
+        for script in (bad_set, bad_ctl):
+            with pytest.raises(PolicyError):
+                p.apply_policy(script, strict=True)
+            assert p.policy is None  # nothing swapped
+            assert p.watcher.script is None
+        # Lenient mode accepts, with the findings on the handle.
+        handle = p.apply_policy(bad_set, strict=False)
+        assert handle.dry_run.topology_findings
+
+    def test_strict_rejects_contradictory_affinity(self):
+        p = platform()
+        script = (
+            "- t:\n  - workers:\n    - set:\n"
+            "    affinity: [fn_x]\n    anti-affinity: [fn_x]\n  followup: fail\n"
+        )
+        with pytest.raises(PolicyError, match="dry-run"):
+            p.apply_policy(script, strict=True)
+        assert p.apply_policy(script, strict=False).dry_run.constraint_findings
+
+    def test_dry_run_does_not_swap(self):
+        p = platform(policy=SCRIPT)
+        version = p.policy.version
+        report = p.dry_run_policy(CLOUD_SCRIPT)
+        assert report.ok and report.ok_strict()
+        assert p.policy.version == version
+        assert "edge" in report.known_sets and "cloud" in report.known_zones
+
+    def test_failing_compile_is_all_or_nothing(self, monkeypatch):
+        import repro.core.platform.facade as facade
+
+        p = platform(policy=SCRIPT)
+        before = (p.policy, p.watcher.script, tuple(p.policy_history))
+
+        def boom(script):
+            raise RuntimeError("lowering exploded")
+
+        monkeypatch.setattr(facade, "compile_script", boom)
+        with pytest.raises(RuntimeError, match="lowering exploded"):
+            p.apply_policy(CLOUD_SCRIPT)
+        assert (p.policy, p.watcher.script, tuple(p.policy_history)) == before
+        # The previous policy still schedules.
+        monkeypatch.undo()
+        assert p.invoke("f", tag="edge_only").scheduled
+
+    def test_parse_error_is_all_or_nothing(self):
+        p = platform(policy=SCRIPT)
+        before = p.policy
+        with pytest.raises(Exception):
+            p.apply_policy("workers: [not tapp")
+        assert p.policy is before
+
+    @pytest.mark.parametrize("compiled", [True, False])
+    def test_rollback_restores_bit_identical_decisions(self, compiled):
+        probes = [
+            Invocation("f", tag="edge_only"),
+            Invocation("g", tag="edge_only"),
+            Invocation("h"),  # untagged → default tag (round-robin block)
+        ]
+
+        def decisions(p):
+            # explain() probes without admitting, so cluster state is
+            # untouched between policy generations.
+            return [
+                (r.scheduled, r.worker, r.controller, r.tag,
+                 r.zone_restriction, [e for e in r.trace])
+                for r in (p.explain(i) for i in probes)
+            ]
+
+        p = TappPlatform(
+            SPEC, distribution=DistributionPolicy.SHARED, seed=0,
+            compiled=compiled, policy=SCRIPT,
+        )
+        original = decisions(p)
+        p.apply_policy(CLOUD_SCRIPT)
+        flipped = decisions(p)
+        assert flipped != original  # the new policy really changed routing
+        restored_handle = p.rollback()
+        assert restored_handle is p.policy
+        assert decisions(p) == original
+
+    def test_rollback_to_no_policy_restores_vanilla(self):
+        p = platform()
+        p.apply_policy(SCRIPT)
+        assert p.rollback() is None
+        assert p.watcher.script is None
+        placement = p.invoke("f")
+        assert placement.scheduled  # vanilla fallback
+        assert p.stats().vanilla_routed == 1
+
+    def test_rollback_without_history_raises(self):
+        with pytest.raises(PolicyError, match="history"):
+            platform().rollback()
+
+    def test_clear_policy_is_rollbackable(self):
+        p = platform(policy=SCRIPT)
+        p.clear_policy()
+        assert p.policy is None and p.watcher.script is None
+        restored = p.rollback()
+        assert restored is not None
+        assert p.watcher.script is not None
+
+    def test_history_is_bounded(self):
+        p = TappPlatform(SPEC, max_policy_history=2)
+        handles = [p.apply_policy(SCRIPT) for _ in range(5)]
+        assert p.policy_history == tuple(handles[2:4])
+
+    def test_apply_policy_primes_compiled_plan(self):
+        # The gate's lowering check doubles as the engine's plan: the
+        # first decision after the swap must not recompile.
+        p = platform()
+        handle = p.apply_policy(SCRIPT)
+        assert p.gateway._engine._plan_source is handle.script
+
+    def test_policy_events_emitted(self):
+        events = []
+        p = platform()
+        p.subscribe(events.append)
+        p.apply_policy(SCRIPT)
+        p.apply_policy(CLOUD_SCRIPT)
+        p.rollback()
+        assert events.count("policy") == 2
+        assert events.count("rollback") == 1
+        assert "script" in events  # watcher events forwarded
+
+
+# ---------------------------------------------------------------------------
+# Unified invocation flow
+# ---------------------------------------------------------------------------
+
+
+class TestInvokeFlow:
+    def test_invoke_admits_and_complete_retires(self):
+        p = platform(policy=SCRIPT)
+        placement = p.invoke("fn_a", tag="edge_only")
+        assert placement.scheduled and placement.admitted
+        worker = p.cluster.workers[placement.worker]
+        assert worker.inflight == 1
+        assert worker.running_functions == {"fn_a": 1}
+        placement.complete()
+        assert worker.inflight == 0
+        assert worker.running_functions == {}
+        placement.complete()  # idempotent
+        assert worker.inflight == 0
+        stats = p.stats()
+        assert stats.admitted == 1 and stats.completed == 1
+
+    def test_unscheduled_placement_not_admitted(self):
+        p = platform(policy=SCRIPT)
+        p.mark_unreachable("e0")
+        p.mark_unreachable("e1")
+        placement = p.invoke("fn", tag="edge_only")
+        assert not placement.scheduled and not placement.admitted
+        assert placement.failed_by_policy
+        placement.complete()  # no-op
+        assert p.stats().admitted == 0
+
+    def test_slow_completion_flags_capacity(self):
+        p = platform(policy=SCRIPT)
+        placement = p.invoke("fn", tag="edge_only")
+        placement.complete(slow=True)
+        assert p.cluster.workers[placement.worker].capacity_used_pct == 100.0
+
+    def test_invoke_batch_matches_sequential_invokes(self):
+        spread = """
+- spread:
+  - workers:
+    - set:
+    strategy: best_first
+    invalidate: overload
+    anti-affinity: [fn_s]
+  - workers:
+    - set:
+  followup: fail
+"""
+        invs = [Invocation("fn_s", tag="spread", request_id=i)
+                for i in range(5)]
+
+        seq = platform(policy=spread)
+        sequential = [seq.invoke(i) for i in invs]
+
+        bat = platform(policy=spread)
+        batched = bat.invoke_batch(invs)
+
+        assert [(pl.worker, pl.controller, pl.scheduled) for pl in batched] \
+            == [(pl.worker, pl.controller, pl.scheduled) for pl in sequential]
+        for name in seq.cluster.workers:
+            ws = seq.cluster.workers[name]
+            wb = bat.cluster.workers[name]
+            assert (ws.inflight, ws.running_functions) == (
+                wb.inflight, wb.running_functions
+            ), name
+        # Anti-affinity saw same-batch placements: first three spread out.
+        assert len({pl.worker for pl in batched[:3]}) == 3
+
+    def test_invoke_batch_on_placement_fires_in_order(self):
+        p = platform(policy=SCRIPT)
+        seen = []
+        placements = p.invoke_batch(
+            [Invocation(f"f{i}") for i in range(4)],
+            on_placement=lambda pl: seen.append(pl),
+        )
+        assert seen == placements
+
+    def test_stats_snapshot_fields(self):
+        p = platform(policy=SCRIPT)
+        pls = [p.invoke(f"f{i}") for i in range(3)]
+        pls[0].complete()
+        stats = p.stats()
+        assert stats.routed == 3 and stats.tapp_routed == 3
+        assert stats.admitted == 3 and stats.completed == 1
+        assert stats.inflight == 2
+        assert stats.workers == 3 and stats.controllers == 2
+        assert stats.policy_version == p.policy.version
+
+
+# ---------------------------------------------------------------------------
+# Typed explain reports
+# ---------------------------------------------------------------------------
+
+
+class TestExplain:
+    def test_explain_reports_rejections_and_placement(self):
+        p = platform(policy=SCRIPT)
+        p.heartbeat("e0", healthy=False)
+        report = p.explain("fn", tag="edge_only")
+        assert report.scheduled and report.worker == "e1"
+        assert report.tag == "edge_only"
+        assert report.rejections()["e0"] == "unhealthy"
+        candidates = {
+            c.worker: c.valid for b in report.blocks for c in b.candidates
+        }
+        assert candidates == {"e0": False, "e1": True}
+        assert "e1" in report.render()
+
+    def test_explain_does_not_admit_or_count(self):
+        p = platform(policy=SCRIPT)
+        p.explain("fn", tag="edge_only")
+        stats = p.stats()
+        assert stats.routed == 0 and stats.admitted == 0
+        assert stats.script_reloads == 0  # probes bypass the reload cache
+        assert all(w.inflight == 0 for w in p.cluster.workers.values())
+
+    def test_explain_empty_cluster_has_no_pseudo_workers(self):
+        p = TappPlatform(ClusterSpec(
+            controllers=(ControllerSpec("C", zone="z"),)
+        ))
+        report = p.explain("fn")  # vanilla path emits "no workers"
+        assert not report.scheduled
+        assert report.rejections() == {}
+        assert any("no workers" in n
+                   for b in report.blocks for n in b.controller_notes)
+
+    def test_explain_failure_names_every_block(self):
+        p = platform(policy=SCRIPT)
+        for w in ("e0", "e1", "c0"):
+            p.mark_unreachable(w)
+        report = p.explain("fn", tag="edge_only")
+        assert not report.scheduled and report.failed_by_policy
+        assert set(report.rejections()) == {"e0", "e1"}
+        assert all(r == "unreachable" for r in report.rejections().values())
+        assert any("exhausted" in n for n in report.notes)
+
+    def test_explain_vanilla_fallback(self):
+        p = platform()  # no policy
+        report = p.explain("fn")
+        assert report.scheduled
+        assert report.blocks  # vanilla candidates still reported
+
+    @pytest.mark.parametrize("script", [
+        None,  # vanilla fallback (round-robin cursor)
+        "- t:\n  - workers:\n    - set:\n    strategy: random\n"
+        "  followup: fail\n",  # RNG stream + round-robin cursor
+    ], ids=["vanilla", "random-strategy"])
+    def test_explain_is_side_effect_free(self, script):
+        tag = None if script is None else "t"
+
+        def build():
+            p = TappPlatform(
+                SPEC, distribution=DistributionPolicy.SHARED, seed=7
+            )
+            if script is not None:
+                p.apply_policy(script)
+            return p
+
+        undisturbed, probed = build(), build()
+        reference = [undisturbed.invoke("f", tag=tag).worker
+                     for _ in range(4)]
+        seen = []
+        for _ in range(4):
+            probed.explain("f", tag=tag)  # must not perturb the stream
+            seen.append(probed.invoke("f", tag=tag).worker)
+        assert seen == reference
+
+
+# ---------------------------------------------------------------------------
+# Satellite: Gateway.route_batch stats equivalence
+# ---------------------------------------------------------------------------
+
+
+class TestGatewayBatchStats:
+    def _watcher(self, script):
+        watcher = Watcher(
+            make_cluster(
+                workers=[
+                    dict(name="e0", zone="edge", sets=["edge", "any"],
+                         capacity_slots=2),
+                    dict(name="c0", zone="cloud", sets=["cloud", "any"],
+                         capacity_slots=1),
+                ],
+                controllers=[dict(name="EdgeCtl", zone="edge"),
+                             dict(name="CloudCtl", zone="cloud")],
+            )
+        )
+        if script is not None:
+            watcher.load_script(script)
+        return watcher
+
+    @pytest.mark.parametrize("script", [None, SCRIPT],
+                             ids=["vanilla", "tapp"])
+    def test_route_batch_stats_equal_sequential(self, script):
+        # Mix of schedulable, vanilla, and policy-failing invocations; the
+        # edge_only ones fail once the edge worker saturates (slots=2).
+        invs = [Invocation("fn", tag="edge_only") for _ in range(4)]
+        invs += [Invocation("fn") for _ in range(3)]
+
+        g_seq = Gateway(self._watcher(script),
+                        distribution=DistributionPolicy.SHARED, seed=1)
+        rt_seq = g_seq._watcher  # admissions via watcher ledger
+        for inv in invs:
+            d = g_seq.route(inv)
+            if d.scheduled:
+                rt_seq.record_admission(d.worker, d.controller or "?",
+                                        inv.function)
+
+        g_bat = Gateway(self._watcher(script),
+                        distribution=DistributionPolicy.SHARED, seed=1)
+        rt_bat = g_bat._watcher
+
+        def admit(inv, d):
+            if d.scheduled:
+                rt_bat.record_admission(d.worker, d.controller or "?",
+                                        inv.function)
+
+        g_bat.route_batch(invs, on_decision=admit)
+
+        for field in ("routed", "tapp_routed", "vanilla_routed", "failed",
+                      "script_reloads"):
+            assert getattr(g_bat.stats, field) == getattr(g_seq.stats, field), field
+        assert g_seq.stats.routed == len(invs)
+        if script is None:
+            assert g_seq.stats.vanilla_routed == len(invs)
+            assert g_seq.stats.tapp_routed == 0
+        else:
+            assert g_seq.stats.tapp_routed == len(invs)
+            assert g_seq.stats.failed > 0  # saturation made edge_only fail
+
+
+# ---------------------------------------------------------------------------
+# Satellite: curated scheduler surface + deprecated shims
+# ---------------------------------------------------------------------------
+
+
+class TestCuratedSurface:
+    def test_curated_all_imports_cleanly(self):
+        import repro.core.scheduler as sched
+
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")  # any DeprecationWarning fails
+            for name in sched.__all__:
+                assert getattr(sched, name) is not None, name
+
+    def test_legacy_names_not_in_all(self):
+        import repro.core.scheduler as sched
+
+        for name in ("is_invalid", "invalid_reason", "resolve_invalidate"):
+            assert name not in sched.__all__
+
+    def test_legacy_shims_warn_and_still_work(self):
+        import repro.core.scheduler as sched
+        from repro.core.scheduler.state import WorkerState
+        from repro.core.tapp import Overload
+
+        with pytest.warns(DeprecationWarning, match="is_invalid"):
+            is_invalid = sched.is_invalid
+        with pytest.warns(DeprecationWarning, match="invalid_reason"):
+            invalid_reason = sched.invalid_reason
+        with pytest.warns(DeprecationWarning, match="resolve_invalidate"):
+            resolve_invalidate = sched.resolve_invalidate
+
+        w = WorkerState(name="w", reachable=False)
+        assert is_invalid(w, Overload())
+        assert invalid_reason(w, Overload()) == "unreachable"
+        assert resolve_invalidate(None, None) == Overload()
+
+    def test_unknown_attribute_raises(self):
+        import repro.core.scheduler as sched
+
+        with pytest.raises(AttributeError):
+            sched.definitely_not_a_name
+
+    def test_legacy_sim_signature_warns_and_works(self):
+        from repro.core.sim.core import (
+            NetworkModel,
+            SimConfig,
+            Simulation,
+            vanilla_scheduler,
+        )
+
+        watcher = Watcher(SPEC.build())
+        with pytest.warns(DeprecationWarning):
+            sched = vanilla_scheduler()
+            sim = Simulation(
+                watcher, sched, NetworkModel(rtt={}, bandwidth={}),
+                {}, SimConfig(), is_tapp=False,
+            )
+        assert sim.platform.watcher is watcher
+
+    def test_sim_rejects_positional_arity_mistakes(self):
+        from repro.core.sim.core import NetworkModel, SimConfig, Simulation
+
+        p = platform()
+        network = NetworkModel(rtt={}, bandwidth={})
+        with pytest.raises(TypeError, match="at most"):
+            # old positional is_tapp slot must not be silently dropped
+            Simulation(p, network, {}, SimConfig(), False)
+        with pytest.raises(TypeError, match="scheduler"):
+            Simulation(p, lambda inv, cluster: None, network, {})

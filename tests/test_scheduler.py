@@ -14,13 +14,12 @@ from repro.core.scheduler import (
     constraint_reason,
     coprime_order,
     distribution_view,
-    invalid_reason,
-    is_invalid,
     make_cluster,
     spec_predicate,
     spec_violated,
     stable_hash,
 )
+from repro.core.scheduler.constraints import invalid_reason, is_invalid
 from repro.core.tapp import (
     Affinity,
     AntiAffinity,
