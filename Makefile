@@ -1,7 +1,7 @@
 PY := python
 export PYTHONPATH := src:.
 
-.PHONY: test bench bench-sched bench-sched-full bench-serve
+.PHONY: test bench bench-sched bench-sched-full bench-check bench-serve
 
 test:
 	$(PY) -m pytest -q
@@ -9,10 +9,19 @@ test:
 bench:
 	$(PY) benchmarks/run.py --quick
 
-# CI gate: scheduler microbench in smoke mode; fails if the compiled
-# fast path is slower than the reference interpreter on any row.
+# CI gate: scheduler microbench in smoke mode; fails on any regression
+# gate (compiled vs interpreted, flat scaling 4w→1024w, saturated-cluster
+# cost, constraint-cost, façade overhead budget).
 bench-sched:
 	$(PY) benchmarks/run.py sched --smoke --check
+
+# bench-sched + comparison against the committed artifact's ratio floors
+# (>1.5x regression on speedup / scaling / saturation / façade ratios
+# fails; absolute µs are never compared across machines). Writes the
+# smoke rows to bench_scheduler_smoke.json for the CI artifact upload.
+bench-check:
+	$(PY) benchmarks/run.py sched --smoke --check \
+		--compare BENCH_scheduler.json --out bench_scheduler_smoke.json
 
 # Full sweep (4..1024 workers); regenerates the committed artifact.
 bench-sched-full:

@@ -8,13 +8,30 @@ batched fast path) against vanilla co-prime, across cluster sizes from
 
 Rows carry ``us_interpreted`` (the seed interpreter: fresh distribution
 views + eager trace formatting per call), ``us_compiled`` (pre-lowered
-script plan, epoch-cached views, tracing elided), ``us_batch``
-(``schedule_batch`` amortizing plan/tag dispatch over 64 invocations),
-and ``speedup`` = interpreted/compiled.
+script plan, epoch-cached views + candidate indexes, tracing elided),
+``us_batch`` (``schedule_batch`` amortizing plan/tag dispatch over 64
+invocations), and ``speedup`` = interpreted/compiled.
+
+Index-layer rows: ``tapp_default_{n}w_saturated`` measures decisions
+against a fully saturated cluster (every worker at capacity — the
+empty-availability-mask O(1) case), and ``tapp_default_{n}w_churn``
+measures the full decide→admit→complete cycle through the watcher
+ledger (the O(1) incremental index maintenance).
+
+Gates (``--check``): compiled beats interpreted everywhere;
+constraint-heavy ≤ ``CONSTRAINED_FACTOR``× plain; flat scaling —
+compiled per-decision at 1024w ≤ ``FLAT_FACTOR``× the 4w row for the
+tagged/default/constrained scripts; saturated ≤ ``SATURATED_FACTOR``×
+the unsaturated row; platform façade ≤ ``PLATFORM_FACTOR``× raw
+routing. ``--compare BENCH.json`` additionally enforces the committed
+artifact's *ratio floors* (speedup, scaling, saturation, façade — scale-
+free quantities, so the check is portable across machines; absolute µs
+are never compared).
 
 Run ``python benchmarks/run.py sched --out BENCH_scheduler.json`` to
-regenerate the committed artifact, or ``make bench-sched`` for the smoke
-gate (fails when the compiled path is not faster than the interpreter).
+regenerate the committed artifact, ``make bench-sched`` for the smoke
+gate, or ``make bench-check`` for the smoke gate + committed-floor
+comparison.
 """
 from __future__ import annotations
 
@@ -22,7 +39,9 @@ import argparse
 import json
 import sys
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
+
+from repro.core.scheduler.watcher import Watcher
 
 from repro.core.platform import (
     ClusterSpec,
@@ -85,14 +104,26 @@ CONSTRAINED_SCRIPT = """
 """
 
 SIZES = (4, 16, 64, 256, 1024)
-SMOKE_SIZES = (4, 64)
+# Smoke keeps the 1024w point so the flat-scaling and saturation gates
+# are enforced in CI, not only on full regenerations.
+SMOKE_SIZES = (4, 64, 1024)
 BATCH = 64
 CONSTRAINED_FACTOR = 2.0  # constrained compiled vs plain compiled, same size
-PLATFORM_FACTOR = 1.15    # TappPlatform.invoke vs raw Gateway.route
+FLAT_FACTOR = 2.0         # compiled us/decision at 1024w vs 4w, same script
+SATURATED_FACTOR = 1.5    # saturated-cluster decision vs unsaturated
+COMPARE_FACTOR = 1.5      # regression headroom vs committed ratio floors
+# The façade gate is an *absolute* budget since PR 4: invoke = route +
+# admission recording + the Placement handle, and the admission side is a
+# fixed ~2-3µs — with indexed routing at ~4-6µs even at 1024 workers, a
+# ratio gate would fail precisely because routing got faster. The budget
+# pins the façade's fixed cost; the committed facade_overhead ratio is
+# still recorded and floor-checked by --compare.
+PLATFORM_OVERHEAD_US = 6.0  # TappPlatform.invoke minus raw Gateway.route
 PLATFORM_SIZE = 1024      # representative production point for the gate
+FLAT_BASE, FLAT_TOP = 4, 1024  # the flat-scaling gate's endpoints
 
 
-def _cluster(n_workers: int) -> ClusterState:
+def _cluster(n_workers: int, *, saturated: bool = False) -> ClusterState:
     c = ClusterState()
     c.add_controller(ControllerState(name="C1", zone="east"))
     c.add_controller(ControllerState(name="C2", zone="west"))
@@ -107,14 +138,18 @@ def _cluster(n_workers: int) -> ClusterState:
             running["noisy_batch"] = 2
         if i % 7 == 3:
             running["noisy_etl"] = 1
-        c.add_worker(
-            WorkerState(
-                name=f"w{i}",
-                zone=zone,
-                sets=frozenset({zone, "any"}),
-                running_functions=running,
-            )
+        worker = WorkerState(
+            name=f"w{i}",
+            zone=zone,
+            sets=frozenset({zone, "any"}),
+            running_functions=running,
         )
+        if saturated:
+            # Every slot consumed: the `overload` invalidate rejects every
+            # candidate, i.e. the indexed path's empty-availability case.
+            worker.inflight = worker.capacity_slots
+            worker.capacity_used_pct = 100.0
+        c.add_worker(worker)
     return c
 
 
@@ -124,6 +159,31 @@ def _time_us(fn, n: int = 2000) -> float:
     for _ in range(n):
         fn()
     return (time.perf_counter() - t0) / n * 1e6
+
+
+def _floor_us(fn, n: int, reps: int = 5) -> float:
+    """Best-of-``reps`` timing with the GC parked (the `timeit` rationale).
+
+    The per-decision gates compare ~µs quantities across rows that run
+    *after* the interpreter reference has churned the allocator; GC
+    pauses triggered during a timed window are additive noise that can
+    double a 5µs measurement. Each rep's mean is taken with collection
+    disabled (collecting between reps instead), and the minimum over
+    reps is the deterministic-cost estimate a regression actually moves.
+    """
+    import gc
+
+    times = []
+    was_enabled = gc.isenabled()
+    gc.disable()
+    try:
+        for _ in range(reps):
+            gc.collect()
+            times.append(_time_us(fn, n))
+    finally:
+        if was_enabled:
+            gc.enable()
+    return min(times)
 
 
 def _paired_ratio_us(fn_a, fn_b, n: int, reps: int = 7):
@@ -158,14 +218,14 @@ def _platform_row(n_workers: int, iters: int) -> Dict:
     """The façade-overhead row: unified invoke vs raw gateway routing.
 
     ``TappPlatform.invoke`` = ``Gateway.route`` + admission recording +
-    the ``Placement`` handle; the gate pins the whole façade to
-    ``PLATFORM_FACTOR``× raw routing at the representative
-    ``PLATFORM_SIZE``-worker deployment, so the one-step flow stays
-    noise (admission recording is a fixed ~1µs; policy evaluation is
-    what scales with the cluster). Worker slots are sized so the timed
-    admissions never saturate a worker (completion is the retire path,
-    not per-decision routing — see ``make bench-serve`` for the full
-    lifecycle under load).
+    the ``Placement`` handle; the gate pins the façade's *absolute*
+    per-call cost over raw routing to ``PLATFORM_OVERHEAD_US`` at the
+    representative ``PLATFORM_SIZE``-worker deployment (admission
+    recording is a fixed ~2-3µs; policy evaluation is what used to scale
+    with the cluster, and no longer does). Worker slots are sized so the
+    timed admissions never saturate a worker (completion is the retire
+    path, not per-decision routing — see ``make bench-serve`` for the
+    full lifecycle under load).
     """
     spec = ClusterSpec(
         controllers=(
@@ -198,6 +258,7 @@ def _platform_row(n_workers: int, iters: int) -> Dict:
         "us_invoke": us_invoke,
         "us_per_call": us_invoke,
         "facade_overhead": overhead,
+        "facade_overhead_us": us_invoke - us_route,
     }
 
 
@@ -216,10 +277,10 @@ def microbench(*, smoke: bool = False) -> List[Dict]:
     # gate in every sample anyway.
     platform_row = _platform_row(PLATFORM_SIZE, iters)
     for _ in range(2):
-        if platform_row["facade_overhead"] <= 0.95 * PLATFORM_FACTOR:
+        if platform_row["facade_overhead_us"] <= 0.8 * PLATFORM_OVERHEAD_US:
             break
         retry = _platform_row(PLATFORM_SIZE, iters)
-        if retry["facade_overhead"] < platform_row["facade_overhead"]:
+        if retry["facade_overhead_us"] < platform_row["facade_overhead_us"]:
             platform_row = retry
     for n_workers in sizes:
         cluster = _cluster(n_workers)
@@ -237,16 +298,21 @@ def microbench(*, smoke: bool = False) -> List[Dict]:
             comp = TappEngine(DistributionPolicy.SHARED, seed=0, compiled=True)
             # The seed interpreter always produced a full trace; measure it
             # as such so `speedup` is against the paper-faithful baseline.
-            us_interp = _time_us(
+            # Same GC-parked floor methodology as the compiled side (fewer
+            # reps, it is the slow reference) so the ratio is honest —
+            # mixing a GC-exposed mean with a GC-parked floor would bias
+            # every speedup upward.
+            us_interp = _floor_us(
                 lambda: interp.schedule(inv, scr, cluster, trace=True),
                 iters,
+                reps=3,
             )
-            us_comp = _time_us(
+            us_comp = _floor_us(
                 lambda: comp.schedule(inv, scr, cluster), iters
             )
             batch = [inv] * BATCH
             us_batch = (
-                _time_us(
+                _floor_us(
                     lambda: comp.schedule_batch(batch, scr, cluster),
                     max(1, iters // BATCH),
                 )
@@ -262,6 +328,8 @@ def microbench(*, smoke: bool = False) -> List[Dict]:
                     "speedup": us_interp / max(1e-9, us_comp),
                 }
             )
+        rows.append(_saturated_row(n_workers, script, iters))
+        rows.append(_churn_row(n_workers, script, iters))
         rows.append(
             {
                 "name": f"vanilla_{n_workers}w",
@@ -272,6 +340,53 @@ def microbench(*, smoke: bool = False) -> List[Dict]:
         )
     rows.append(platform_row)
     return rows
+
+
+def _saturated_row(n_workers: int, script, iters: int) -> Dict:
+    """Decision cost against a fully saturated cluster (default tag).
+
+    Every worker sits at capacity, so the decision fails by policy.
+    On the indexed path this is the empty-availability-mask case: the
+    gate pins it to ``SATURATED_FACTOR``× the unsaturated row, i.e.
+    saturated workers must cost (almost) nothing to skip.
+    """
+    cluster = _cluster(n_workers, saturated=True)
+    engine = TappEngine(DistributionPolicy.SHARED, seed=0, compiled=True)
+    inv = Invocation("fn")
+    return {
+        "name": f"tapp_default_{n_workers}w_saturated",
+        "us_compiled": (
+            us := _floor_us(lambda: engine.schedule(inv, script, cluster),
+                            iters)
+        ),
+        "us_per_call": us,
+    }
+
+
+def _churn_row(n_workers: int, script, iters: int) -> Dict:
+    """Full decide→admit→complete cycle through the watcher ledger.
+
+    Exercises the O(1) incremental index maintenance: every admission
+    and completion logs one load event that the next decision's refresh
+    consumes, instead of rebuilding or rescanning candidates.
+    """
+    watcher = Watcher(_cluster(n_workers))
+    cluster = watcher.cluster
+    engine = TappEngine(DistributionPolicy.SHARED, seed=0, compiled=True)
+    inv = Invocation("fn")
+
+    def cycle():
+        decision = engine.schedule(inv, script, cluster)
+        worker = decision.worker
+        if worker is not None:
+            controller = decision.controller or "?"
+            watcher.record_admission(worker, controller, "fn")
+            watcher.record_completion(worker, controller, "fn")
+
+    return {
+        "name": f"tapp_default_{n_workers}w_churn",
+        "us_per_call": _floor_us(cycle, iters),
+    }
 
 
 def write_bench_json(rows: List[Dict], path: str) -> None:
@@ -294,19 +409,25 @@ def check_rows(rows: List[Dict], *, min_speedup: float = 1.0) -> List[str]:
     2. Flat constraint cost: the constraint-heavy compiled script must
        stay within ``CONSTRAINED_FACTOR`` of the plain tagged script's
        us/decision at the same cluster size.
-    3. Façade overhead is noise: ``TappPlatform.invoke`` (route + admit +
-       placement handle) must stay within ``PLATFORM_FACTOR`` of raw
-       ``Gateway.route`` at the same cluster size.
+    3. Flat scaling: compiled us/decision at ``FLAT_TOP`` workers must
+       stay within ``FLAT_FACTOR`` of the ``FLAT_BASE``-worker row for
+       every tAPP script (the O(1)-per-decision index-layer gate).
+    4. Saturation is free: the fully-saturated decision must stay within
+       ``SATURATED_FACTOR`` of the unsaturated one (empty availability
+       mask, no candidate rescans).
+    5. Façade overhead is noise: ``TappPlatform.invoke`` (route + admit +
+       placement handle) must cost at most ``PLATFORM_OVERHEAD_US`` more
+       than raw ``Gateway.route`` at the same cluster size.
     """
     failures = []
     by_name = {row["name"]: row for row in rows}
     for row in rows:
-        overhead = row.get("facade_overhead")
-        if overhead is not None and overhead > PLATFORM_FACTOR:
+        overhead_us = row.get("facade_overhead_us")
+        if overhead_us is not None and overhead_us > PLATFORM_OVERHEAD_US:
             failures.append(
                 f"{row['name']}: platform invoke {row['us_invoke']:.1f}us vs "
                 f"gateway route {row['us_route']:.1f}us "
-                f"({overhead:.2f}x > {PLATFORM_FACTOR:.2f}x)"
+                f"(+{overhead_us:.1f}us > {PLATFORM_OVERHEAD_US:.1f}us budget)"
             )
         speedup = row.get("speedup")
         if speedup is not None and speedup < min_speedup:
@@ -329,6 +450,107 @@ def check_rows(rows: List[Dict], *, min_speedup: float = 1.0) -> List[str]:
                         f"{CONSTRAINED_FACTOR:.1f}x plain tagged "
                         f"({plain['us_compiled']:.1f}us)"
                     )
+    # Flat scaling: per-decision cost must not grow with the cluster.
+    for label in ("tagged", "default", "constrained"):
+        base = by_name.get(f"tapp_{label}_{FLAT_BASE}w")
+        top = by_name.get(f"tapp_{label}_{FLAT_TOP}w")
+        if base is not None and top is not None:
+            budget = FLAT_FACTOR * base["us_compiled"]
+            if top["us_compiled"] > budget:
+                failures.append(
+                    f"tapp_{label}_{FLAT_TOP}w: compiled "
+                    f"{top['us_compiled']:.1f}us exceeds {FLAT_FACTOR:.1f}x "
+                    f"the {FLAT_BASE}w row ({base['us_compiled']:.1f}us) — "
+                    f"per-decision cost is scaling with the cluster"
+                )
+    # Saturation: skipping saturated workers must cost ~nothing.
+    sat = by_name.get(f"tapp_default_{FLAT_TOP}w_saturated")
+    base = by_name.get(f"tapp_default_{FLAT_TOP}w")
+    if sat is not None and base is not None:
+        budget = SATURATED_FACTOR * base["us_compiled"]
+        if sat["us_compiled"] > budget:
+            failures.append(
+                f"{sat['name']}: saturated decision "
+                f"{sat['us_compiled']:.1f}us exceeds "
+                f"{SATURATED_FACTOR:.1f}x the unsaturated row "
+                f"({base['us_compiled']:.1f}us)"
+            )
+    return failures
+
+
+def _scaling_ratio(rows_by_name: Dict[str, Dict], label: str) -> Optional[float]:
+    base = rows_by_name.get(f"tapp_{label}_{FLAT_BASE}w")
+    top = rows_by_name.get(f"tapp_{label}_{FLAT_TOP}w")
+    if base is None or top is None:
+        return None
+    return top["us_compiled"] / max(1e-9, base["us_compiled"])
+
+
+def compare_rows(
+    rows: List[Dict], committed: Dict, *, factor: float = COMPARE_FACTOR
+) -> List[str]:
+    """Fail on >``factor`` regression vs the committed artifact's floors.
+
+    Only *ratio* quantities are compared — per-row speedup
+    (interpreted/compiled), the 4w→1024w scaling ratio, the
+    saturated/unsaturated ratio, and the façade overhead — because they
+    are scale-free: CI hardware differs from the machine that produced
+    the committed artifact, so absolute µs floors would be pure noise,
+    while a real regression (an O(workers) rescan sneaking back into the
+    fast path) shifts every one of these ratios no matter the host.
+    """
+    failures: List[str] = []
+    current = {row["name"]: row for row in rows}
+    floors = {row["name"]: row for row in committed.get("rows", [])}
+    for name, row in current.items():
+        ref = floors.get(name)
+        if ref is None:
+            continue
+        if "speedup" in row and "speedup" in ref:
+            # Speedup floors are capped: the interpreter side of the
+            # ratio swings ~1.5-2x across runs (per-process hash
+            # randomization, allocator state), so committed values — in
+            # the hundreds at 1024w — are gated order-of-magnitude
+            # rather than proportionally. A real regression (an
+            # O(workers) rescan returning to the fast path) drops every
+            # mid/large-size speedup to single digits, far below the
+            # cap; the same-run flat-scaling gate in check_rows covers
+            # proportional drift.
+            floor = min(ref["speedup"] / factor, 20.0)
+            if row["speedup"] < floor:
+                failures.append(
+                    f"{name}: speedup {row['speedup']:.2f}x fell below "
+                    f"committed floor {ref['speedup']:.2f}x/{factor:.1f} "
+                    f"= {floor:.2f}x"
+                )
+        if "facade_overhead" in row and "facade_overhead" in ref:
+            ceiling = ref["facade_overhead"] * factor
+            if row["facade_overhead"] > ceiling:
+                failures.append(
+                    f"{name}: facade overhead {row['facade_overhead']:.2f}x "
+                    f"exceeds committed {ref['facade_overhead']:.2f}x "
+                    f"* {factor:.1f}"
+                )
+    for label in ("tagged", "default", "constrained"):
+        now = _scaling_ratio(current, label)
+        ref = _scaling_ratio(floors, label)
+        if now is not None and ref is not None and now > ref * factor:
+            failures.append(
+                f"tapp_{label}: scaling ratio {FLAT_BASE}w→{FLAT_TOP}w "
+                f"{now:.2f}x exceeds committed {ref:.2f}x * {factor:.1f}"
+            )
+    sat_now = current.get(f"tapp_default_{FLAT_TOP}w_saturated")
+    base_now = current.get(f"tapp_default_{FLAT_TOP}w")
+    sat_ref = floors.get(f"tapp_default_{FLAT_TOP}w_saturated")
+    base_ref = floors.get(f"tapp_default_{FLAT_TOP}w")
+    if None not in (sat_now, base_now, sat_ref, base_ref):
+        now = sat_now["us_compiled"] / max(1e-9, base_now["us_compiled"])
+        ref = sat_ref["us_compiled"] / max(1e-9, base_ref["us_compiled"])
+        if now > ref * factor and now > SATURATED_FACTOR:
+            failures.append(
+                f"saturated/unsaturated ratio {now:.2f}x exceeds committed "
+                f"{ref:.2f}x * {factor:.1f}"
+            )
     return failures
 
 
@@ -339,8 +561,11 @@ def main(argv=None) -> int:
     parser.add_argument("--out", default=None,
                         help="write BENCH_scheduler.json to this path")
     parser.add_argument("--check", action="store_true",
-                        help="exit non-zero if compiled is slower than "
-                             "interpreted on any row")
+                        help="exit non-zero if any regression gate fails "
+                             "(speedup, flat scaling, saturation, façade)")
+    parser.add_argument("--compare", default=None, metavar="BENCH_JSON",
+                        help="also fail on >1.5x regression vs the committed "
+                             "artifact's ratio floors")
     args = parser.parse_args(argv)
 
     rows = microbench(smoke=args.smoke)
@@ -362,12 +587,17 @@ def main(argv=None) -> int:
     if args.out:
         write_bench_json(rows, args.out)
         print(f"# wrote {args.out}")
+    failures: List[str] = []
     if args.check:
-        failures = check_rows(rows)
-        if failures:
-            for f in failures:
-                print(f"FAIL: {f}", file=sys.stderr)
-            return 1
+        failures += check_rows(rows)
+    if args.compare:
+        with open(args.compare) as fh:
+            committed = json.load(fh)
+        failures += compare_rows(rows, committed)
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}", file=sys.stderr)
+        return 1
     return 0
 
 

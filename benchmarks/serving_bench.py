@@ -68,22 +68,31 @@ def serving_bench() -> List[Dict]:
     rows = []
     configs = (
         (f"serving_{DistributionPolicy.SHARED.value}",
-         DistributionPolicy.SHARED, SCRIPT, "interactive"),
+         DistributionPolicy.SHARED, SCRIPT, "interactive", 24, 4),
         (f"serving_{DistributionPolicy.ISOLATED.value}",
-         DistributionPolicy.ISOLATED, SCRIPT, "interactive"),
+         DistributionPolicy.ISOLATED, SCRIPT, "interactive", 24, 4),
         # Anti-affinity spread: constraint-layer policy doing data-plane
         # duty (prefer replicas not already serving the model).
         ("serving_shared_antiaffinity",
-         DistributionPolicy.SHARED, SPREAD_SCRIPT, "spread"),
+         DistributionPolicy.SHARED, SPREAD_SCRIPT, "spread", 24, 4),
+        # Saturated cluster: far more requests than slots, so most queue
+        # admission passes evaluate the policy against fully saturated
+        # replicas — the indexed scheduler's empty-availability case; the
+        # engine's per-tick cost must not blow up while the queue drains.
+        ("serving_shared_saturated",
+         DistributionPolicy.SHARED, SCRIPT, "interactive", 64, 2),
     )
-    for name, policy, script, tag in configs:
+    for name, policy, script, tag, n_requests, slots in configs:
         engine = ServingEngine(distribution=policy, tapp_script=script)
         engine.add_controller("EdgeCtl", zone="edge")
         engine.add_controller("CloudCtl", zone="cloud")
-        engine.add_replica(_mk_replica("e0", "edge", ["edge"], params, cfg))
-        engine.add_replica(_mk_replica("c0", "cloud", ["cloud"], params, cfg))
+        engine.add_replica(
+            _mk_replica("e0", "edge", ["edge"], params, cfg, slots=slots)
+        )
+        engine.add_replica(
+            _mk_replica("c0", "cloud", ["cloud"], params, cfg, slots=slots)
+        )
 
-        n_requests = 24
         reqs = [
             engine.submit(
                 "smollm-135m", [1 + i % 7, 2, 3],

@@ -164,6 +164,9 @@ class PlatformStats:
     controllers: int
     policy_version: Optional[int]
     topology_epoch: int
+    # Volatile-load events recorded by the admission ledger / heartbeats —
+    # the stream the candidate indexes consume incrementally.
+    load_events: int = 0
 
 
 class TappPlatform:
@@ -578,6 +581,16 @@ class TappPlatform:
         decision = self._gateway.probe(invocation)
         return build_explain_report(invocation, decision)
 
+    def prewarm(self) -> int:
+        """Eagerly build the scheduler's candidate indexes for the active
+        policy against the live topology (see :meth:`Gateway.prewarm`).
+
+        Useful right after :meth:`apply_policy` or a batch of topology
+        changes, so the lazy index build does not land on the first live
+        invocation. Returns the number of block indexes warmed.
+        """
+        return self._gateway.prewarm()
+
     def stats(self) -> PlatformStats:
         cluster = self._watcher.cluster
         gw = self._gateway.stats
@@ -596,4 +609,5 @@ class TappPlatform:
                 self._active.version if self._active is not None else None
             ),
             topology_epoch=cluster.topology_epoch,
+            load_events=cluster.load_seq,
         )

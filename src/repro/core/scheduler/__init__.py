@@ -23,6 +23,7 @@ from repro.core.scheduler.constraints import (
     resolve_constraints,
     spec_predicate,
     spec_violated,
+    split_spec,
 )
 from repro.core.scheduler.controller import Admission, AdmissionError, ControllerRuntime
 from repro.core.scheduler.engine import (
@@ -42,11 +43,15 @@ from repro.core.scheduler.state import (
 from repro.core.scheduler.strategy import (
     coprime_order,
     coprime_order_cached,
+    iter_ordered,
+    iter_random,
     order_candidates,
     stable_hash,
 )
 from repro.core.scheduler.topology import (
+    BlockIndex,
     DistributionPolicy,
+    ItemIndex,
     ViewCacheEntry,
     WorkerView,
     cached_view_entry,
@@ -58,6 +63,7 @@ from repro.core.scheduler.watcher import Watcher
 __all__ = [
     "Admission",
     "AdmissionError",
+    "BlockIndex",
     "ClusterState",
     "ConstraintSpec",
     "ControllerRuntime",
@@ -67,6 +73,7 @@ __all__ = [
     "Gateway",
     "GatewayStats",
     "Invocation",
+    "ItemIndex",
     "Outcome",
     "ScheduleDecision",
     "TappEngine",
@@ -82,11 +89,14 @@ __all__ = [
     "coprime_order",
     "coprime_order_cached",
     "distribution_view",
+    "iter_ordered",
+    "iter_random",
     "make_cluster",
     "order_candidates",
     "resolve_constraints",
     "spec_predicate",
     "spec_violated",
+    "split_spec",
     "stable_hash",
 ]
 

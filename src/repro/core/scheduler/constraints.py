@@ -380,6 +380,68 @@ def constraint_reason(worker: WorkerState, spec: ConstraintSpec) -> Optional[str
     return spec_predicate(spec).reason(worker)
 
 
+def split_spec(spec: ConstraintSpec) -> Tuple[InvalidFn, InvalidFn]:
+    """Split a resolved spec into ``(static_invalid, dynamic_invalid)``.
+
+    The index layer's contract: ``compile_spec(spec)(w) ==
+    static_invalid(w) or dynamic_invalid(w)`` for every worker state.
+
+    *Static* means stable within one ``ClusterState.topology_epoch``:
+    reachability and health transitions always bump the epoch (the
+    watcher treats them as structural), so an index built per epoch may
+    evaluate them once at build time. *Dynamic* is the volatile residue —
+    slot counters, load percentages, and the running-function multiset —
+    i.e. exactly the fields the admission ledger mutates per decision
+    without bumping the epoch. Note the split follows the predicate
+    semantics: only ``overload`` consults health; ``capacity_used`` and
+    ``max_concurrent_invocations`` have reachability as their sole
+    static requirement (paper §3.3).
+    """
+    invalidate = spec.invalidate
+    if isinstance(invalidate, Overload):
+        def static_invalid(w) -> bool:
+            return (not w.reachable) or (not w.healthy)
+
+        def base_dynamic(w) -> bool:
+            return w.inflight >= w.capacity_slots
+    elif isinstance(invalidate, CapacityUsed):
+        threshold = invalidate.percent
+
+        def static_invalid(w) -> bool:
+            return not w.reachable
+
+        def base_dynamic(w) -> bool:
+            return w.capacity_used_pct >= threshold
+    elif isinstance(invalidate, MaxConcurrentInvocations):
+        limit = invalidate.limit
+
+        def static_invalid(w) -> bool:
+            return not w.reachable
+
+        def base_dynamic(w) -> bool:
+            return (w.inflight + w.queued) >= limit
+    else:
+        raise TypeError(f"unknown invalidate condition {invalidate!r}")
+
+    if spec.plain:
+        return static_invalid, base_dynamic
+
+    aff = spec.affinity.functions if spec.affinity is not None else None
+    anti = (
+        spec.anti_affinity.functions if spec.anti_affinity is not None else None
+    )
+
+    def dynamic_invalid(w) -> bool:
+        if base_dynamic(w):
+            return True
+        rf = w.running_functions
+        if aff is not None and any(rf.get(f, 0) <= 0 for f in aff):
+            return True
+        return anti is not None and any(rf.get(f, 0) > 0 for f in anti)
+
+    return static_invalid, dynamic_invalid
+
+
 def compile_spec(spec: ConstraintSpec) -> InvalidFn:
     """Lower a resolved spec to one flat pre-resolved closure.
 

@@ -64,11 +64,13 @@ from repro.core.scheduler.constraints import (
 from repro.core.scheduler.state import ClusterState, ControllerState, WorkerState
 from repro.core.scheduler.strategy import (
     coprime_order_cached,
-    order_candidates,
+    iter_ordered,
+    iter_random,
     stable_hash,
 )
 from repro.core.scheduler.topology import (
     DistributionPolicy,
+    ItemIndex,
     WorkerView,
     cached_view_entry,
     distribution_view,
@@ -139,10 +141,13 @@ class Invocation:
     # Data-plane context: which model / resource the function touches.
     model_id: Optional[str] = None
     request_id: int = 0
+    # Stable function hash, computed once at construction (it is read
+    # several times per decision — block ordering, co-prime primaries —
+    # and a per-access blake2b would dominate the indexed fast path).
+    hash: int = dataclasses.field(init=False, repr=False, compare=False)
 
-    @property
-    def hash(self) -> int:
-        return stable_hash(self.function)
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "hash", stable_hash(self.function))
 
 
 # Optional per-decision callback for batch scheduling: invoked immediately
@@ -494,6 +499,13 @@ class TappEngine:
             zone_restriction=zone_restriction,
         )
         fhash = invocation.hash
+        if tr is None:
+            # Indexed fast path: epoch-compiled candidate orders + the
+            # incrementally-maintained availability bitmask. Produces the
+            # same placement (and consumes the same RNG draws) as the
+            # traced per-candidate walk below.
+            return self._c_block_indexed(cblock, controller, entry, cluster,
+                                         fhash)
 
         if not cblock.uses_sets:
             by_name = entry.by_name
@@ -502,14 +514,13 @@ class TappEngine:
                 if view is None:
                     # Unknown label or filtered out by the zone restriction
                     # ⇒ outside this controller's distribution view.
-                    if tr is not None:
-                        tr.append(
-                            TraceEvent(
-                                "candidate",
-                                f"{item.label}: outside controller "
-                                f"{controller.name!r}'s distribution view",
-                            )
+                    tr.append(
+                        TraceEvent(
+                            "candidate",
+                            f"{item.label}: outside controller "
+                            f"{controller.name!r}'s distribution view",
                         )
+                    )
                     continue
                 placed = self._c_try(item, view, controller, tr)
                 if placed is not None:
@@ -518,18 +529,17 @@ class TappEngine:
 
         # Set list: block-level strategy orders the *set items*; each set's
         # inner strategy orders its members, local tier first. Member lists
-        # come from the epoch-cached per-set expansion.
+        # come from the epoch-cached per-set expansion. Random tiers are
+        # drawn lazily (iter_random), so RNG consumption stops at the
+        # first valid candidate on every path.
         for item in self._c_ordered(cblock.sets, cblock.strategy, fhash):
             local, foreign = entry.set_members(item.label)
             inner = item.strategy
             if inner is Strategy.RANDOM:
-                # Shuffle both tiers eagerly (matching the interpreter's RNG
-                # consumption order) only once this set item is reached.
-                local = list(local)
-                self._rng.shuffle(local)
-                foreign = list(foreign)
-                self._rng.shuffle(foreign)
-                groups: Tuple[Sequence[WorkerView], ...] = (local, foreign)
+                groups: Tuple[Sequence[WorkerView], ...] = (
+                    iter_random(local, self._rng),
+                    iter_random(foreign, self._rng),
+                )
             elif inner is Strategy.PLATFORM:
                 groups = (
                     [local[i] for i in coprime_order_cached(len(local), fhash)],
@@ -543,6 +553,67 @@ class TappEngine:
                     if placed is not None:
                         return placed
         return None
+
+    def _c_block_indexed(
+        self,
+        cblock: CompiledBlock,
+        controller: ControllerState,
+        entry,
+        cluster: ClusterState,
+        fhash: int,
+    ) -> Optional[Tuple[str, str]]:
+        """Evaluate one block against its candidate index (no tracing).
+
+        Every epoch-static fact — candidate membership, static constraint
+        halves, strategy orders — was materialized when the index was
+        built; the only per-decision work is syncing the availability
+        bitmask with the ledger's load log (O(1) per admission/completion)
+        and taking the first available position in precomputed order.
+        """
+        bindex = entry.block_index(cblock)
+        if not cblock.uses_sets:
+            idx = bindex.wrk
+            pos = self._c_pick(idx, cblock.strategy, fhash, cluster)
+            if pos is None:
+                return None
+            return controller.name, idx.workers[pos].name
+
+        sets = cblock.sets
+        n_items = len(sets)
+        strategy = cblock.strategy
+        if strategy is Strategy.BEST_FIRST or n_items <= 1:
+            item_order: Sequence[int] = range(n_items)
+        elif strategy is Strategy.PLATFORM:
+            item_order = coprime_order_cached(n_items, fhash)
+        else:  # RANDOM: same lazy draw sequence as ordering the items
+            item_order = iter_random(range(n_items), self._rng)
+        indexes = bindex.sets
+        for ipos in item_order:
+            pos = self._c_pick(indexes[ipos], sets[ipos].strategy, fhash,
+                               cluster)
+            if pos is not None:
+                idx = indexes[ipos]
+                return controller.name, idx.workers[pos].name
+        return None
+
+    def _c_pick(
+        self,
+        idx: ItemIndex,
+        strategy: Strategy,
+        fhash: int,
+        cluster: ClusterState,
+    ) -> Optional[int]:
+        """First available candidate position under ``strategy``."""
+        avail = idx.refresh(cluster)
+        if strategy is Strategy.RANDOM:
+            # Draws through the tiers even when nothing is available —
+            # the reference paths consume those draws too.
+            return idx.pick_random(avail, self._rng)
+        if not avail:
+            return None  # e.g. fully saturated: O(1), no rescan
+        if strategy is Strategy.PLATFORM:
+            return idx.pick_platform(avail, fhash)
+        return (avail & -avail).bit_length() - 1  # BEST_FIRST: lowest bit
 
     def _c_try(
         self,
@@ -578,14 +649,18 @@ class TappEngine:
         return None
 
     def _c_ordered(self, items: Sequence, strategy: Strategy, fhash: int):
-        """Order pre-compiled items; mirrors order_candidates RNG-for-RNG."""
+        """Order pre-compiled items; mirrors iter_ordered draw-for-draw.
+
+        Random orderings are lazy (one draw per item actually tried), so
+        the traced path, the interpreter, and the indexed fast path all
+        consume identical RNG streams no matter where evaluation stops.
+        """
         if strategy is Strategy.BEST_FIRST or not items:
             return items
         if strategy is Strategy.PLATFORM:
-            return [items[i] for i in coprime_order_cached(len(items), fhash)]
-        shuffled = list(items)
-        self._rng.shuffle(shuffled)
-        return shuffled
+            order = coprime_order_cached(len(items), fhash)
+            return (items[i] for i in order)
+        return iter_random(items, self._rng)
 
     # ======================================================================
     # Interpreter (reference path; `TappEngine(compiled=False)`)
@@ -658,7 +733,7 @@ class TappEngine:
                 )
             )
 
-        blocks = order_candidates(
+        blocks = iter_ordered(
             list(enumerate(policy.blocks)),
             policy.effective_strategy,
             rng=self._rng,
@@ -918,10 +993,16 @@ class TappEngine:
         views: Sequence[WorkerView],
         view_map: Dict[str, WorkerView],
     ):
-        """Yield (worker, resolved ConstraintSpec) in trial order."""
+        """Yield (worker, resolved ConstraintSpec) in trial order.
+
+        Orderings are consumed lazily (:func:`iter_ordered`): a random
+        strategy draws one candidate at a time, so stopping at the first
+        valid worker consumes exactly as many RNG draws as candidates
+        tried — the contract the compiled paths mirror.
+        """
         if not block.uses_sets:
             # Explicit wrk list: the block-level strategy orders the list.
-            items = order_candidates(
+            items = iter_ordered(
                 list(block.workers),
                 block.strategy or Strategy.BEST_FIRST,
                 rng=self._rng,
@@ -942,7 +1023,7 @@ class TappEngine:
         # Set list: block-level strategy orders the *set items*; each set's
         # inner strategy orders its members. Distribution-view tiering
         # (local-first) is preserved within each set expansion.
-        set_items = order_candidates(
+        set_items = iter_ordered(
             list(block.workers),
             block.strategy or Strategy.BEST_FIRST,
             rng=self._rng,
@@ -954,11 +1035,12 @@ class TappEngine:
             local = [v.worker for v in members if v.local]
             foreign = [v.worker for v in members if not v.local]
             inner = item.strategy or Strategy.PLATFORM  # the platform default
-            ordered = order_candidates(
-                local, inner, rng=self._rng, function_hash=invocation.hash
-            ) + order_candidates(
-                foreign, inner, rng=self._rng, function_hash=invocation.hash
-            )
             spec = resolve_constraints(item, block)
-            for worker in ordered:
+            for worker in iter_ordered(
+                local, inner, rng=self._rng, function_hash=invocation.hash
+            ):
+                yield worker, spec
+            for worker in iter_ordered(
+                foreign, inner, rng=self._rng, function_hash=invocation.hash
+            ):
                 yield worker, spec

@@ -101,6 +101,61 @@ class Gateway:
         if self._engine.compiled:
             self._engine.adopt_plan(script, plan)
 
+    def prewarm(self) -> int:
+        """Build the plan's candidate indexes against the live topology.
+
+        The indexed fast path builds views, block indexes, and
+        availability masks lazily on first use; after a policy swap or a
+        topology-epoch bump that lazy build lands on live traffic.
+        Prewarming walks every (controller × compiled block) pair of the
+        current plan — including the zone-restricted entries a
+        ``topology_tolerance: same`` clause (or its sticky followup)
+        routes through when its designated controller is unavailable —
+        so the next decision is index-warm on the unrestricted paths and
+        the statically-knowable restricted ones. Returns the number of
+        block indexes touched (0 when there is no script or on the
+        interpreter path, which has no indexes).
+        """
+        if not self._engine.compiled:
+            return 0
+        script = self._script()
+        if script is None or not script.tags:
+            return 0
+        from repro.core.scheduler.topology import cached_view_entry
+        from repro.core.tapp.ast import TopologyTolerance
+
+        cluster = self._watcher.cluster
+        plan = self._engine.compiled_plan(script)
+        # Zone restrictions that evaluation can impose: a tolerance=same
+        # clause whose designated controller is known pins candidates to
+        # that controller's zone (directly, or via the sticky followup).
+        sticky_zones = set()
+        for ctag in plan.tags.values():
+            for cblock in ctag.blocks:
+                clause = cblock.controller
+                if (
+                    clause is not None
+                    and clause.topology_tolerance is TopologyTolerance.SAME
+                ):
+                    designated = cluster.controllers.get(clause.label)
+                    if designated is not None:
+                        sticky_zones.add(designated.zone)
+        warmed = 0
+        for controller in cluster.controllers.values():
+            for restriction in (None, *sorted(sticky_zones)):
+                entry = cached_view_entry(
+                    cluster,
+                    controller.zone,
+                    self._engine.distribution,
+                    controller_name=controller.name,
+                    zone_restriction=restriction,
+                )
+                for ctag in plan.tags.values():
+                    for cblock in ctag.blocks:
+                        entry.block_index(cblock)
+                        warmed += 1
+        return warmed
+
     def probe(self, invocation: Invocation) -> ScheduleDecision:
         """Evaluate an invocation with a full trace, without counting it.
 

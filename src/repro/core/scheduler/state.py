@@ -106,6 +106,12 @@ class ControllerState:
         return self.healthy and self.reachable
 
 
+# Volatile-load log compaction threshold: when the log outgrows this, it
+# is truncated and stale index consumers fall back to a full avail-mask
+# rebuild (amortized O(1) per logged event).
+_LOAD_LOG_LIMIT = 4096
+
+
 @dataclasses.dataclass
 class ClusterState:
     """A consistent snapshot of controllers + workers.
@@ -113,6 +119,15 @@ class ClusterState:
     The scheduler never mutates entries it did not create; the watcher owns
     the authoritative copy and hands out snapshots (the paper's NFS-stored
     mapping, §4.2).
+
+    **Volatile-load contract:** mutations of the volatile worker fields
+    (inflight counters, queue depth, capacity percentage, the
+    running-function multiset) must be reported via
+    :meth:`note_worker_load` — the watcher's ledger and heartbeat paths
+    do this — so the per-epoch candidate indexes
+    (:class:`~repro.core.scheduler.topology.BlockIndex`) can refresh the
+    touched worker's availability bits in O(1) instead of rescanning.
+    Structural changes go through :meth:`bump_topology_epoch` as before.
     """
 
     workers: Dict[str, WorkerState] = dataclasses.field(default_factory=dict)
@@ -126,12 +141,48 @@ class ClusterState:
     view_cache: Dict = dataclasses.field(
         default_factory=dict, repr=False, compare=False
     )
+    # Volatile-load event log: worker names whose dynamic fields changed,
+    # in order. Candidate indexes consume it incrementally; see
+    # load_seq/note_worker_load.
+    load_log: List[str] = dataclasses.field(
+        default_factory=list, repr=False, compare=False
+    )
+    # Events dropped from the front of load_log by compaction; absolute
+    # sequence numbers are load_trimmed + offset-in-log.
+    load_trimmed: int = 0
+    # Per-epoch memo for the derived topology queries (workers_in_set /
+    # set_labels / zones); cleared with the view cache.
+    _query_cache: Dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False
+    )
 
     def bump_topology_epoch(self) -> None:
         """Invalidate all memoized topology views (structural change)."""
         self.topology_epoch += 1
         if self.view_cache:
             self.view_cache.clear()
+        if self._query_cache:
+            self._query_cache.clear()
+
+    # -- volatile-load event log --------------------------------------------
+
+    @property
+    def load_seq(self) -> int:
+        """Monotonic count of volatile-load events recorded so far."""
+        return self.load_trimmed + len(self.load_log)
+
+    def note_worker_load(self, name: str) -> None:
+        """Record that ``name``'s volatile load fields changed.
+
+        O(1) amortized: appends to the event log, compacting it once it
+        exceeds ``_LOAD_LOG_LIMIT`` (consumers whose cursor predates the
+        compaction rebuild from scratch, which the limit amortizes).
+        """
+        log = self.load_log
+        log.append(name)
+        if len(log) > _LOAD_LOG_LIMIT:
+            self.load_trimmed += len(log)
+            log.clear()
 
     # -- membership ---------------------------------------------------------
 
@@ -168,18 +219,34 @@ class ClusterState:
         return [w for w in self.workers.values() if w.zone == zone]
 
     def workers_in_set(self, label: Optional[str]) -> List[WorkerState]:
-        return [w for w in self.workers.values() if w.in_set(label)]
+        """Workers matching a tAPP set label; memoized per topology epoch
+        (set membership is structural, so epoch bumps invalidate)."""
+        hit = self._query_cache.get(("set", label))
+        if hit is None:
+            hit = tuple(w for w in self.workers.values() if w.in_set(label))
+            self._query_cache[("set", label)] = hit
+        return list(hit)
 
     def set_labels(self) -> List[str]:
-        labels: set = set()
-        for w in self.workers.values():
-            labels |= w.sets
-        return sorted(labels)
+        """All set labels in the deployment; memoized per topology epoch."""
+        hit = self._query_cache.get("set_labels")
+        if hit is None:
+            labels: set = set()
+            for w in self.workers.values():
+                labels |= w.sets
+            hit = tuple(sorted(labels))
+            self._query_cache["set_labels"] = hit
+        return list(hit)
 
     def zones(self) -> List[str]:
-        zs = {w.zone for w in self.workers.values()}
-        zs |= {c.zone for c in self.controllers.values()}
-        return sorted(zs)
+        """All zones hosting a worker or controller; memoized per epoch."""
+        hit = self._query_cache.get("zones")
+        if hit is None:
+            zs = {w.zone for w in self.workers.values()}
+            zs |= {c.zone for c in self.controllers.values()}
+            hit = tuple(sorted(zs))
+            self._query_cache["zones"] = hit
+        return list(hit)
 
     def controllers_in_zone(self, zone: str) -> List[ControllerState]:
         return [c for c in self.controllers.values() if c.zone == zone]

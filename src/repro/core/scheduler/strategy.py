@@ -11,13 +11,25 @@ Strategies are implemented as *orderings*: given the candidate items and an
 invocation context, they yield the order in which candidates are tried. The
 engine then applies invalidation in that order, which uniformly implements
 "pick first valid" for all three strategies.
+
+Orderings are consumed **lazily** (:func:`iter_ordered`). This matters
+for ``random``: a lazily-evaluated Fisher–Yates draw
+(:func:`iter_random`) yields one uniformly-chosen remaining item per
+step, so a decision that accepts the first candidate consumes O(1) RNG
+draws instead of paying a full O(n) shuffle. Both the interpreter and
+the compiled engine (including its indexed fast path) consume random
+orderings through the same draw sequence, so their RNG streams — and
+therefore placements and traces — stay bit-identical. The draw uses
+:func:`randbelow` (our own getrandbits rejection loop) rather than
+``random.Random.shuffle`` so the stream is stable across CPython
+versions.
 """
 from __future__ import annotations
 
 import functools
 import hashlib
 import random as _random
-from typing import List, Optional, Sequence, Tuple, TypeVar
+from typing import Iterable, Iterator, List, Optional, Sequence, Tuple, TypeVar
 
 from repro.core.tapp.ast import Strategy
 
@@ -73,6 +85,68 @@ def coprime_order(n: int, hash_value: int) -> List[int]:
     return list(coprime_order_cached(n, hash_value))
 
 
+def randbelow(getrandbits, n: int) -> int:
+    """Uniform int in ``[0, n)`` via getrandbits rejection sampling.
+
+    The draw discipline every random ordering in the scheduler shares;
+    implemented here (rather than leaning on ``Random._randbelow``) so
+    the consumed bit stream is identical across CPython versions and
+    across every evaluation path.
+    """
+    if n <= 1:
+        return 0
+    k = n.bit_length()
+    r = getrandbits(k)
+    while r >= n:
+        r = getrandbits(k)
+    return r
+
+
+def iter_random(items: Sequence[T], rng: _random.Random) -> Iterator[T]:
+    """Yield ``items`` in a uniformly random order, lazily.
+
+    Incremental Fisher–Yates: each step draws one :func:`randbelow` and
+    yields the item swapped into the current tail slot, so consuming the
+    first ``k`` elements costs exactly ``k`` draws (the final element is
+    free). Fully consumed, the sequence is a uniform permutation and the
+    RNG stream equals a full Fisher–Yates shuffle — which is what makes
+    partial consumption (stop at first valid candidate) free to early-out
+    without desynchronizing any other evaluation path.
+    """
+    arr = list(items)
+    getrandbits = rng.getrandbits
+    for i in range(len(arr) - 1, 0, -1):
+        j = randbelow(getrandbits, i + 1)
+        arr[i], arr[j] = arr[j], arr[i]
+        yield arr[i]
+    if arr:
+        yield arr[0]
+
+
+def iter_ordered(
+    items: Sequence[T],
+    strategy: Strategy,
+    *,
+    rng: Optional[_random.Random] = None,
+    function_hash: int = 0,
+) -> Iterable[T]:
+    """``items`` in strategy order, as a lazily-consumed iterable.
+
+    The engine's ordering entry point: ``best_first`` and ``platform``
+    consume no RNG; ``random`` draws lazily via :func:`iter_random`, so
+    RNG consumption is proportional to candidates *tried*, not candidates
+    *available*.
+    """
+    if strategy is Strategy.BEST_FIRST or not items:
+        return items
+    if strategy is Strategy.RANDOM:
+        return iter_random(items, rng or _random.Random())
+    if strategy is Strategy.PLATFORM:
+        order = coprime_order_cached(len(items), function_hash)
+        return (items[i] for i in order)
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
 def order_candidates(
     items: Sequence[T],
     strategy: Strategy,
@@ -80,17 +154,12 @@ def order_candidates(
     rng: Optional[_random.Random] = None,
     function_hash: int = 0,
 ) -> List[T]:
-    """Return ``items`` in the order the strategy would try them."""
-    items = list(items)
-    if not items:
-        return []
-    if strategy is Strategy.BEST_FIRST:
-        return items
-    if strategy is Strategy.RANDOM:
-        rng = rng or _random.Random()
-        shuffled = list(items)
-        rng.shuffle(shuffled)
-        return shuffled
-    if strategy is Strategy.PLATFORM:
-        return [items[i] for i in coprime_order_cached(len(items), function_hash)]
-    raise ValueError(f"unknown strategy {strategy!r}")
+    """Return ``items`` in the order the strategy would try them.
+
+    Eager counterpart of :func:`iter_ordered` (kept for callers that
+    want a list); materializing a ``random`` ordering consumes the full
+    draw sequence, exactly like exhausting the lazy iterator.
+    """
+    return list(
+        iter_ordered(items, strategy, rng=rng, function_hash=function_hash)
+    )

@@ -24,9 +24,10 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.scheduler.state import ClusterState, WorkerState
+from repro.core.scheduler.strategy import coprime_order_cached, randbelow
 
 
 class DistributionPolicy(enum.Enum):
@@ -171,12 +172,13 @@ class ViewCacheEntry:
     view's local-tier-first candidate order.
     """
 
-    __slots__ = ("views", "by_name", "_set_members")
+    __slots__ = ("views", "by_name", "_set_members", "_block_indexes")
 
     def __init__(self, views: List[WorkerView]) -> None:
         self.views = views
         self.by_name: Dict[str, WorkerView] = {v.worker.name: v for v in views}
         self._set_members: Dict = {}
+        self._block_indexes: Dict = {}
 
     def set_members(self, label):
         """(local views, foreign views) matching a tAPP set label."""
@@ -189,6 +191,294 @@ class ViewCacheEntry:
             )
             self._set_members[label] = hit
         return hit
+
+    def block_index(self, cblock) -> "BlockIndex":
+        """The candidate index of one compiled block under this view.
+
+        Built once per (view entry × compiled block) — i.e. at
+        ``topology_epoch`` granularity, since entries die with the epoch —
+        and keyed by block identity (compiled blocks are identity-hashed).
+        """
+        hit = self._block_indexes.get(cblock)
+        if hit is None:
+            hit = BlockIndex(self, cblock)
+            self._block_indexes[cblock] = hit
+        return hit
+
+
+# ---------------------------------------------------------------------------
+# Candidate indexes (the O(1)-per-decision layer)
+# ---------------------------------------------------------------------------
+#
+# A BlockIndex materializes, per (view entry × compiled block), everything
+# about candidate selection that is *epoch-static*: which workers are in
+# play at all (view membership, set membership, zone restriction,
+# reachability/health — the static half of the constraint split), and the
+# orders the strategies try them in (best_first = canonical position
+# order; platform = co-prime orders materialized per function hash).
+# On top sits one *availability bitmask* per worker item: bit i is set
+# iff candidate i currently passes its item's dynamic constraint residue
+# AND the controller's entitlement on it is unsaturated. The mask is
+# maintained incrementally — the admission ledger logs each touched
+# worker on ClusterState.note_worker_load, and refresh() re-derives only
+# that worker's bits — so a scheduling decision is "first set bit in
+# precomputed order" and a fully saturated cluster answers in O(1)
+# without rescanning a single invalid candidate.
+
+_CHUNK = 64  # platform-order chunk width (one int AND skips 64 candidates)
+# Per-index bound on materialized platform orders (one per distinct
+# function hash). A FaaS population can have unbounded function
+# cardinality within one topology epoch; past the cap the dict is
+# cleared and orders re-materialize on demand (they are pure functions
+# of (index shape, fhash), so eviction never affects decisions).
+_PLATFORM_ORDER_CACHE = 512
+
+
+def _draw_first_avail(arr: List[int], avail: int, rng) -> Optional[int]:
+    """First available position of one tier in lazy-Fisher–Yates order.
+
+    Draw-for-draw identical to iterating
+    :func:`~repro.core.scheduler.strategy.iter_random` over the tier and
+    rejecting unavailable candidates — which is exactly what the
+    interpreter and the traced compiled path do — so RNG streams stay in
+    lockstep across all evaluation paths. ``arr`` is the index's reusable
+    scratch permutation; the swap trail is undone before returning, so
+    the scratch stays canonical without an O(n) copy per decision.
+    """
+    n = len(arr)
+    if n == 0:
+        return None
+    getrandbits = rng.getrandbits
+    found: Optional[int] = None
+    swaps: List[Tuple[int, int]] = []
+    for i in range(n - 1, 0, -1):
+        j = randbelow(getrandbits, i + 1)
+        if j != i:
+            arr[i], arr[j] = arr[j], arr[i]
+            swaps.append((i, j))
+        p = arr[i]
+        if (avail >> p) & 1:
+            found = p
+            break
+    else:
+        p = arr[0]
+        if (avail >> p) & 1:
+            found = p
+    for i, j in reversed(swaps):
+        arr[i], arr[j] = arr[j], arr[i]
+    return found
+
+
+class ItemIndex:
+    """Pre-filtered, pre-ordered candidates of one worker item.
+
+    Positions are canonical trial order: for a ``wrk`` list, the item
+    positions in block source order; for a ``set`` item, the view's
+    members local tier first (insertion order within a tier) — so
+    ``best_first`` is literally "lowest set bit of the availability
+    mask". Statically-invalid candidates (ghost labels, unreachable or
+    — for ``overload`` — unhealthy workers) are excluded from
+    ``static_mask`` at build time and can never turn available within
+    the epoch.
+    """
+
+    __slots__ = (
+        "workers",
+        "views",
+        "dyns",
+        "n",
+        "n_local",
+        "static_mask",
+        "avail",
+        "_static_positions",
+        "_by_worker",
+        "_synced",
+        "_platform_chunks",
+        "_scratch_local",
+        "_scratch_foreign",
+    )
+
+    def __init__(self, candidates, n_local: int) -> None:
+        # candidates: sequence of (worker|None, view|None, static_fn, dyn_fn)
+        self.n = len(candidates)
+        self.n_local = n_local
+        self.workers = [c[0] for c in candidates]
+        self.views = [c[1] for c in candidates]
+        self.dyns = [c[3] for c in candidates]
+        static_mask = 0
+        static_positions: List[int] = []
+        by_worker: Dict[str, List[int]] = {}
+        for pos, (worker, _view, static_fn, _dyn) in enumerate(candidates):
+            if worker is None or static_fn(worker):
+                continue
+            static_mask |= 1 << pos
+            static_positions.append(pos)
+            by_worker.setdefault(worker.name, []).append(pos)
+        self.static_mask = static_mask
+        self._static_positions = static_positions
+        self._by_worker = {k: tuple(v) for k, v in by_worker.items()}
+        # Dynamic bits are computed on the first refresh (an index is
+        # built for a whole block at once, but an item may first be
+        # *reached* many decisions — and many ledger events — later).
+        self._synced: Optional[int] = None
+        self._platform_chunks: Dict[int, Tuple] = {}
+        self._scratch_local: Optional[List[int]] = None
+        self._scratch_foreign: Optional[List[int]] = None
+        self.avail = 0
+
+    # -- availability maintenance ------------------------------------------
+
+    def _recompute(self, positions) -> None:
+        avail = self.avail
+        workers = self.workers
+        views = self.views
+        dyns = self.dyns
+        for pos in positions:
+            worker = workers[pos]
+            if dyns[pos](worker) or views[pos].saturated:
+                avail &= ~(1 << pos)
+            else:
+                avail |= 1 << pos
+        self.avail = avail
+
+    def refresh(self, cluster: ClusterState) -> int:
+        """Bring the availability mask up to date with the load log.
+
+        O(events since last refresh), and each event costs only the
+        touched worker's positions — a decision on an otherwise idle
+        index is one integer comparison.
+        """
+        seq = cluster.load_trimmed + len(cluster.load_log)
+        synced = self._synced
+        if synced is None:
+            # First use: derive all dynamic bits from live state.
+            self._recompute(self._static_positions)
+            self._synced = seq
+            return self.avail
+        if seq == synced:
+            return self.avail
+        base = cluster.load_trimmed
+        if synced < base or seq - synced >= max(1, len(self._by_worker)):
+            # Compacted past our cursor, or more events than candidates:
+            # a full recompute is cheaper than replaying the log.
+            self._recompute(self._static_positions)
+        else:
+            log = cluster.load_log
+            by = self._by_worker
+            for i in range(synced - base, len(log)):
+                positions = by.get(log[i])
+                if positions is not None:
+                    self._recompute(positions)
+        self._synced = seq
+        return self.avail
+
+    # -- strategy picks -----------------------------------------------------
+
+    def pick_platform(self, avail: int, fhash: int) -> Optional[int]:
+        """First available position in co-prime order, chunk-skipped."""
+        chunks = self._platform_chunks.get(fhash)
+        if chunks is None:
+            chunks = self._build_platform_chunks(fhash)
+        for mask, seg in chunks:
+            if not (avail & mask):
+                continue
+            for p in seg:
+                if (avail >> p) & 1:
+                    return p
+        return None
+
+    def _build_platform_chunks(self, fhash: int) -> Tuple:
+        """Materialize the per-tier co-prime order over static survivors.
+
+        The permutation is taken over the *full* tier length (the
+        interpreter hashes into the unfiltered candidate list) and then
+        filtered, so survivor order matches the reference exactly.
+        """
+        n_local = self.n_local
+        n_foreign = self.n - n_local
+        smask = self.static_mask
+        order = [
+            p for p in coprime_order_cached(n_local, fhash) if (smask >> p) & 1
+        ]
+        order.extend(
+            n_local + p
+            for p in coprime_order_cached(n_foreign, fhash)
+            if (smask >> (n_local + p)) & 1
+        )
+        chunks = []
+        for k in range(0, len(order), _CHUNK):
+            seg = tuple(order[k:k + _CHUNK])
+            mask = 0
+            for p in seg:
+                mask |= 1 << p
+            chunks.append((mask, seg))
+        result = tuple(chunks)
+        if len(self._platform_chunks) >= _PLATFORM_ORDER_CACHE:
+            self._platform_chunks.clear()
+        self._platform_chunks[fhash] = result
+        return result
+
+    def pick_random(self, avail: int, rng) -> Optional[int]:
+        """First available position in lazy random order, local tier first.
+
+        Consumes RNG draws even when ``avail`` is empty — the reference
+        paths draw through the whole tier before moving on, and the
+        streams must stay identical.
+        """
+        local = self._scratch_local
+        if local is None:
+            local = self._scratch_local = list(range(self.n_local))
+            self._scratch_foreign = list(range(self.n_local, self.n))
+        pos = _draw_first_avail(local, avail, rng)
+        if pos is None:
+            pos = _draw_first_avail(self._scratch_foreign, avail, rng)
+        return pos
+
+
+class BlockIndex:
+    """Per-(view × compiled block) candidate indexes.
+
+    ``wrk`` holds the single :class:`ItemIndex` of a wrk-list block
+    (positions = item positions); ``sets`` holds one per set item
+    (positions = that set's members, local tier first).
+    """
+
+    __slots__ = ("wrk", "sets")
+
+    def __init__(self, entry: ViewCacheEntry, cblock) -> None:
+        if cblock.uses_sets:
+            self.wrk = None
+            self.sets = tuple(
+                _set_item_index(entry, item) for item in cblock.sets
+            )
+        else:
+            self.wrk = _wrk_item_index(entry, cblock.wrks)
+            self.sets = ()
+
+
+def _wrk_item_index(entry: ViewCacheEntry, wrks) -> ItemIndex:
+    candidates = []
+    for item in wrks:
+        view = entry.by_name.get(item.label)
+        if view is None:
+            # Ghost label, or filtered out by the zone restriction:
+            # statically invalid for the whole epoch.
+            candidates.append((None, None, None, None))
+        else:
+            candidates.append(
+                (view.worker, view, item.static_invalid, item.dyn_invalid)
+            )
+    # wrk lists are untiered: strategies order the item list as a whole.
+    return ItemIndex(candidates, n_local=len(candidates))
+
+
+def _set_item_index(entry: ViewCacheEntry, item) -> ItemIndex:
+    local, foreign = entry.set_members(item.label)
+    static_fn = item.static_invalid
+    dyn_fn = item.dyn_invalid
+    candidates = [(v.worker, v, static_fn, dyn_fn) for v in local]
+    candidates.extend((v.worker, v, static_fn, dyn_fn) for v in foreign)
+    return ItemIndex(candidates, n_local=len(local))
 
 
 def cached_view_entry(

@@ -104,17 +104,25 @@ class Watcher:
             if worker is None:
                 raise KeyError(f"unknown worker {name!r}")
             structural = False
+            volatile = False
             for key, value in fields.items():
                 if not hasattr(worker, key):
                     raise AttributeError(f"WorkerState has no field {key!r}")
                 if key in ("sets", "resident_models"):
                     value = frozenset(value)
-                if key in _STRUCTURAL_WORKER_FIELDS and getattr(worker, key) != value:
-                    structural = True
+                if key in _STRUCTURAL_WORKER_FIELDS:
+                    if getattr(worker, key) != value:
+                        structural = True
+                else:
+                    volatile = True
                 setattr(worker, key, value)
             self._cluster.version += 1
             if structural:
                 self._cluster.bump_topology_epoch()
+            elif volatile:
+                # Load-only update: candidate indexes refresh this worker's
+                # availability bits incrementally instead of rebuilding.
+                self._cluster.note_worker_load(name)
 
     def mark_unreachable(self, name: str) -> None:
         self.update_worker(name, reachable=False)
@@ -146,8 +154,11 @@ class Watcher:
     # capacity percentage) — never the structural fields that invalidate
     # epoch-cached views. These two methods are the per-decision hot path
     # the controller runtime uses: one lock hold, in-place counter updates,
-    # no structural scan. Heartbeats and topology transitions still go
-    # through :meth:`update_worker`.
+    # no structural scan. Each records the worker on the cluster's
+    # volatile-load log (``note_worker_load``), which is how the per-epoch
+    # candidate indexes learn — in O(1) — that exactly this worker's
+    # availability bits need refreshing. Heartbeats and topology
+    # transitions still go through :meth:`update_worker`.
 
     def record_admission(
         self, name: str, controller: str, function: str = ""
@@ -173,6 +184,7 @@ class Watcher:
             else:
                 worker.capacity_used_pct = 100.0
             cluster.version += 1
+            cluster.note_worker_load(name)
 
     def record_completion(
         self,
@@ -208,6 +220,7 @@ class Watcher:
                     else min(100.0, 100.0 * worker.inflight / slots)
                 )
             self._cluster.version += 1
+            self._cluster.note_worker_load(name)
 
     # -- script store (live reload, §4.5) ---------------------------------------
 

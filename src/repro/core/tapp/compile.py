@@ -73,13 +73,23 @@ def compile_invalidate(condition: Invalidate) -> "InvalidFn":
     return _constraints().compile_invalidate(condition)
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class CompiledWrk:
-    """A ``wrk: label`` item with its constraints resolved and pre-bound."""
+    """A ``wrk: label`` item with its constraints resolved and pre-bound.
+
+    ``invalid`` is the fused closure (reachability ∧ invalidate ∧
+    affinity); ``static_invalid`` / ``dyn_invalid`` are its epoch-static
+    vs. volatile halves (:func:`~repro.core.scheduler.constraints.split_spec`)
+    consumed by the per-epoch candidate indexes. Identity-hashed
+    (``eq=False``): compiled items key the per-view index caches, so
+    hashing must be O(1) on the decision hot path.
+    """
 
     label: str
     spec: ConstraintSpec
     invalid: InvalidFn
+    static_invalid: InvalidFn
+    dyn_invalid: InvalidFn
 
     @property
     def condition(self) -> Invalidate:
@@ -87,7 +97,7 @@ class CompiledWrk:
         return self.spec.invalidate
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class CompiledSet:
     """A ``set: label`` item with strategy + constraints pre-resolved."""
 
@@ -95,6 +105,8 @@ class CompiledSet:
     strategy: Strategy  # inner member-selection strategy (platform default)
     spec: ConstraintSpec
     invalid: InvalidFn
+    static_invalid: InvalidFn
+    dyn_invalid: InvalidFn
 
     @property
     def condition(self) -> Invalidate:
@@ -102,9 +114,14 @@ class CompiledSet:
         return self.spec.invalidate
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class CompiledBlock:
-    """One workers-block, pre-split by shape with strategy defaulted."""
+    """One workers-block, pre-split by shape with strategy defaulted.
+
+    Identity-hashed (``eq=False``): the epoch-cached view entries key
+    their :class:`~repro.core.scheduler.topology.BlockIndex` caches by
+    the block object itself.
+    """
 
     index: int  # position in the tag's source order (trace identity)
     controller: Optional[ControllerClause]
@@ -150,6 +167,8 @@ def _compile_block(index: int, block: Block) -> CompiledBlock:
                 strategy=item.strategy or Strategy.PLATFORM,
                 spec=(spec := layer.resolve_constraints(item, block)),
                 invalid=layer.compile_spec(spec),
+                static_invalid=(halves := layer.split_spec(spec))[0],
+                dyn_invalid=halves[1],
             )
             for item in block.workers
             if isinstance(item, WorkerSet)
@@ -166,6 +185,8 @@ def _compile_block(index: int, block: Block) -> CompiledBlock:
             label=item.label,
             spec=(spec := layer.resolve_constraints(item, block)),
             invalid=layer.compile_spec(spec),
+            static_invalid=(halves := layer.split_spec(spec))[0],
+            dyn_invalid=halves[1],
         )
         for item in block.workers
         if isinstance(item, WorkerRef)

@@ -588,3 +588,43 @@ class TestCuratedSurface:
             Simulation(p, network, {}, SimConfig(), False)
         with pytest.raises(TypeError, match="scheduler"):
             Simulation(p, lambda inv, cluster: None, network, {})
+
+
+# ---------------------------------------------------------------------------
+# Index-layer wiring: prewarm + ledger event counter
+# ---------------------------------------------------------------------------
+
+
+class TestIndexWiring:
+    def test_prewarm_builds_block_indexes(self):
+        p = platform(policy=SCRIPT)
+        warmed = p.prewarm()
+        # 2 controllers x (1 default block + 1 edge_only block).
+        assert warmed == 4
+        # The epoch-cached entries now hold the block indexes.
+        total = sum(
+            len(entry._block_indexes) for entry in p.cluster.view_cache.values()
+        )
+        assert total == 4
+        # Prewarmed decisions match a cold platform's decisions.
+        cold = platform(policy=SCRIPT)
+        for i in range(6):
+            assert (
+                p.invoke(f"fn{i}").worker == cold.invoke(f"fn{i}").worker
+            )
+
+    def test_prewarm_noop_without_policy_or_compiled(self):
+        assert platform().prewarm() == 0
+        assert platform(policy=SCRIPT, compiled=False).prewarm() == 0
+
+    def test_stats_count_load_events(self):
+        p = platform(policy=SCRIPT)
+        assert p.stats().load_events == 0
+        placement = p.invoke("fn")
+        assert p.stats().load_events == 1  # the admission
+        placement.complete()
+        assert p.stats().load_events == 2  # the completion
+        p.heartbeat("e0", capacity_used_pct=12.5)
+        assert p.stats().load_events == 3  # volatile heartbeat
+        p.heartbeat("e0", healthy=True)  # structural no-op: not an event
+        assert p.stats().load_events == 3

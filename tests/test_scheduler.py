@@ -368,3 +368,70 @@ class TestVanilla:
         cluster.workers[home].inflight = cluster.workers[home].capacity_slots
         second = v.schedule(Invocation("f"), cluster).worker
         assert second != home
+
+
+# ---------------------------------------------------------------------------
+# Satellites: cached Invocation.hash + per-epoch memoized cluster queries
+# ---------------------------------------------------------------------------
+
+
+class TestInvocationHash:
+    def test_hash_matches_stable_hash(self):
+        inv = Invocation("my_function")
+        assert inv.hash == stable_hash("my_function")
+
+    def test_hash_computed_once_at_construction(self):
+        # The frozen dataclass stores the hash as a real field (set in
+        # __post_init__), not a per-access property recomputing blake2b.
+        inv = Invocation("fn")
+        assert inv.__dict__["hash"] == stable_hash("fn")
+
+    def test_hash_excluded_from_equality_and_repr(self):
+        a, b = Invocation("fn", tag="t"), Invocation("fn", tag="t")
+        assert a == b
+        assert "hash" not in repr(a)
+
+    def test_replace_recomputes(self):
+        import dataclasses as _dc
+
+        inv = _dc.replace(Invocation("fn"), function="other")
+        assert inv.hash == stable_hash("other")
+
+
+class TestClusterQueryMemoization:
+    def _cluster(self):
+        return make_cluster(
+            workers=[
+                dict(name="e0", zone="edge", sets=["edge", "any"]),
+                dict(name="c0", zone="cloud", sets=["cloud", "any"]),
+            ],
+            controllers=[dict(name="C0", zone="edge")],
+        )
+
+    def test_queries_memoized_within_epoch(self):
+        cluster = self._cluster()
+        assert cluster.set_labels() == ["any", "cloud", "edge"]
+        assert cluster.zones() == ["cloud", "edge"]
+        assert [w.name for w in cluster.workers_in_set("any")] == ["e0", "c0"]
+        # Cached tuples back the repeated calls (fresh lists returned).
+        first = cluster.workers_in_set("any")
+        second = cluster.workers_in_set("any")
+        assert first == second and first is not second
+        assert ("set", "any") in cluster._query_cache
+
+    def test_epoch_bump_invalidates(self):
+        cluster = self._cluster()
+        cluster.set_labels(), cluster.zones(), cluster.workers_in_set("any")
+        cluster.add_worker(WorkerState(name="g0", zone="gpuzone", sets=frozenset({"gpu"})))
+        assert "gpu" in cluster.set_labels()
+        assert "gpuzone" in cluster.zones()
+        assert [w.name for w in cluster.workers_in_set("gpu")] == ["g0"]
+
+    def test_structural_worker_update_invalidates_via_watcher(self):
+        from repro.core.scheduler import Watcher
+
+        watcher = Watcher(self._cluster())
+        cluster = watcher.cluster
+        assert cluster.set_labels() == ["any", "cloud", "edge"]
+        watcher.update_worker("e0", sets=["edge", "any", "hot"])
+        assert "hot" in cluster.set_labels()

@@ -473,6 +473,232 @@ def test_compile_script_shapes():
 
 
 # ---------------------------------------------------------------------------
+# Indexed fast path: ledger churn, saturation, epoch bumps
+# ---------------------------------------------------------------------------
+
+
+def assert_placements_equal(d1, d2, context: str) -> None:
+    """Trace-free comparison (the indexed fast path carries no trace)."""
+    assert d1.outcome == d2.outcome, context
+    assert d1.worker == d2.worker, context
+    assert d1.controller == d2.controller, context
+    assert d1.tag == d2.tag, context
+    assert d1.used_default_fallback == d2.used_default_fallback, context
+    assert d1.zone_restriction == d2.zone_restriction, context
+    assert d1.failed_by_policy == d2.failed_by_policy, context
+
+
+@pytest.mark.parametrize("policy", list(DistributionPolicy))
+def test_indexed_matches_interpreter_under_ledger_churn(policy):
+    """Interpreter (traced), compiled traced, and compiled *indexed*
+    (trace=False) engines stay bit-identical — placements AND RNG
+    streams — while admissions/completions churn through the watcher
+    ledger, workers saturate and free up, and topology epochs bump."""
+    for trial in range(25):
+        rng = random.Random(5000 + 31 * list(DistributionPolicy).index(policy) + trial)
+        script = random_script(rng)
+        watchers = [Watcher(random_cluster(random.Random(trial))) for _ in range(3)]
+        engines = [
+            TappEngine(policy, seed=trial, compiled=False),
+            TappEngine(policy, seed=trial, compiled=True),
+            TappEngine(policy, seed=trial, compiled=True),
+        ]
+        outstanding = []  # (worker, controller, function) tickets
+        for step in range(40):
+            tag = rng.choice((None, "default", "alpha", "beta", "unknown"))
+            fn = rng.choice(("fn_a", "fn_b", "svc_cache"))
+            inv = Invocation(function=fn, tag=tag)
+            ctx = f"policy={policy} trial={trial} step={step} inv={inv}"
+            d_interp = engines[0].schedule(
+                inv, script, watchers[0].cluster, trace=True
+            )
+            d_traced = engines[1].schedule(
+                inv, script, watchers[1].cluster, trace=True
+            )
+            d_indexed = engines[2].schedule(
+                inv, script, watchers[2].cluster
+            )  # trace=False → indexed fast path
+            assert_decisions_equal(d_interp, d_traced, ctx)
+            assert d_indexed.trace == []
+            assert_placements_equal(d_interp, d_indexed, ctx)
+
+            # Admit the placement on every replica of the cluster, so the
+            # index's availability bits are exercised by the ledger.
+            if d_interp.scheduled:
+                for w in watchers:
+                    w.record_admission(
+                        d_interp.worker, d_interp.controller or "?", fn
+                    )
+                outstanding.append(
+                    (d_interp.worker, d_interp.controller or "?", fn)
+                )
+
+            roll = rng.random()
+            if roll < 0.35 and outstanding:
+                # Complete a random outstanding ticket on all replicas.
+                ticket = outstanding.pop(rng.randrange(len(outstanding)))
+                for w in watchers:
+                    w.record_completion(*ticket)
+            elif roll < 0.45:
+                # Structural churn: epoch bump (indexes rebuilt). Draw the
+                # worker's shape once, then build one fresh (unshared)
+                # WorkerState per cluster replica.
+                name = f"x{trial}_{step}"
+                zone = rng.choice(ZONES)
+                sets = frozenset(l for l in SET_LABELS if rng.random() > 0.5)
+                slots = rng.choice((1, 2, 4))
+                for w in watchers:
+                    w.register_worker(
+                        WorkerState(
+                            name=name, zone=zone, sets=sets,
+                            capacity_slots=slots,
+                        )
+                    )
+            elif roll < 0.55:
+                names = list(watchers[0].cluster.workers)
+                if names:
+                    victim = rng.choice(names)
+                    for w in watchers:
+                        w.deregister_worker(victim)
+                    outstanding = [t for t in outstanding if t[0] != victim]
+            elif roll < 0.7:
+                # Volatile heartbeat (no epoch bump; index bits refresh).
+                names = list(watchers[0].cluster.workers)
+                if names:
+                    name = rng.choice(names)
+                    fields = dict(
+                        capacity_used_pct=rng.choice((0.0, 55.0, 85.0, 100.0)),
+                        queued=rng.randint(0, 3),
+                    )
+                    for w in watchers:
+                        w.update_worker(name, **fields)
+
+
+@pytest.mark.parametrize("compiled", [False, True])
+def test_full_saturation_then_release_bit_identical(compiled):
+    """Saturating every worker makes decisions fail on all paths; a
+    single completion revives exactly the freed worker everywhere."""
+    script = parse_tapp(
+        """
+- default:
+  - workers:
+    - set:
+    strategy: platform
+    invalidate: overload
+"""
+    )
+    watcher = Watcher(
+        make_cluster(
+            workers=[
+                dict(name=f"w{i}", zone="z", sets=["any"], capacity_slots=2)
+                for i in range(6)
+            ],
+            controllers=[dict(name="C0", zone="z")],
+        )
+    )
+    ref = TappEngine(DistributionPolicy.SHARED, seed=0, compiled=False)
+    eng = TappEngine(DistributionPolicy.SHARED, seed=0, compiled=compiled)
+    inv = Invocation("fn")
+
+    placed = []
+    while True:
+        d_ref = ref.schedule(inv, script, watcher.cluster, trace=True)
+        d = eng.schedule(inv, script, watcher.cluster)
+        assert (d.outcome, d.worker) == (d_ref.outcome, d_ref.worker)
+        if not d.scheduled:
+            break
+        watcher.record_admission(d.worker, d.controller or "?", "fn")
+        placed.append((d.worker, d.controller or "?"))
+    assert len(placed) == 12  # 6 workers x 2 slots, all consumed
+    assert d.failed_by_policy
+
+    # Saturated cluster: repeated decisions keep failing identically (and
+    # on the indexed path this is the O(1) empty-mask case).
+    for _ in range(5):
+        d_ref = ref.schedule(inv, script, watcher.cluster, trace=True)
+        d = eng.schedule(inv, script, watcher.cluster)
+        assert not d.scheduled and not d_ref.scheduled
+
+    # One completion frees exactly one slot; both paths find it.
+    worker, controller = placed[7]
+    watcher.record_completion(worker, controller, "fn")
+    d_ref = ref.schedule(inv, script, watcher.cluster, trace=True)
+    d = eng.schedule(inv, script, watcher.cluster)
+    assert d_ref.scheduled and d.scheduled
+    assert d.worker == worker == d_ref.worker
+
+
+def test_index_refresh_survives_load_log_compaction():
+    """Blowing past the load-log limit forces the full-rebuild fallback;
+    availability stays correct."""
+    from repro.core.scheduler.state import _LOAD_LOG_LIMIT
+
+    script = parse_tapp(
+        "- default:\n  - workers:\n    - set:\n    invalidate: overload\n"
+    )
+    watcher = Watcher(
+        make_cluster(
+            workers=[
+                dict(name="w0", zone="z", sets=["any"], capacity_slots=1),
+                dict(name="w1", zone="z", sets=["any"], capacity_slots=1),
+            ],
+            controllers=[dict(name="C0", zone="z")],
+        )
+    )
+    eng = TappEngine(DistributionPolicy.SHARED, seed=0, compiled=True)
+    inv = Invocation("fn")
+    d = eng.schedule(inv, script, watcher.cluster)
+    assert d.worker == "w0"
+    # Saturate w0, then churn the log far past the compaction limit.
+    watcher.record_admission("w0", "C0", "fn")
+    for _ in range(_LOAD_LOG_LIMIT + 10):
+        watcher.record_admission("w1", "C0", "fn")
+        watcher.record_completion("w1", "C0", "fn")
+    assert watcher.cluster.load_trimmed > 0  # compaction actually happened
+    d = eng.schedule(inv, script, watcher.cluster)
+    assert d.worker == "w1"
+    watcher.record_completion("w0", "C0", "fn")
+    d = eng.schedule(inv, script, watcher.cluster)
+    assert d.worker == "w0"
+
+
+def test_split_spec_halves_agree_with_compiled_spec():
+    """static(w) ∨ dynamic(w) == compile_spec(spec)(w) over randomized
+    specs and worker states (the index-layer soundness contract)."""
+    from repro.core.scheduler.constraints import (
+        ConstraintSpec,
+        compile_spec,
+        split_spec,
+    )
+
+    rng = random.Random(99)
+    for trial in range(300):
+        spec = ConstraintSpec(
+            invalidate=rng.choice(tuple(c for c in CONDITIONS if c is not None)),
+            affinity=rng.choice(AFFINITIES),
+            anti_affinity=rng.choice(ANTI_AFFINITIES),
+        )
+        worker = WorkerState(
+            name="w",
+            capacity_slots=rng.choice((1, 2, 4)),
+            inflight=rng.randint(0, 5),
+            queued=rng.randint(0, 3),
+            capacity_used_pct=rng.choice((0.0, 40.0, 60.0, 90.0, 100.0)),
+            healthy=rng.random() > 0.3,
+            reachable=rng.random() > 0.3,
+            running_functions={
+                fn: rng.randint(1, 2) for fn in RUNNING_FNS if rng.random() > 0.5
+            },
+        )
+        static_fn, dyn_fn = split_spec(spec)
+        fused = compile_spec(spec)
+        assert (static_fn(worker) or dyn_fn(worker)) == fused(worker), (
+            spec,
+            worker,
+        )
+
+
+# ---------------------------------------------------------------------------
 # Epoch-cached topology views
 # ---------------------------------------------------------------------------
 
