@@ -1,10 +1,15 @@
 PY := python
 export PYTHONPATH := src:.
 
-.PHONY: test bench bench-sched bench-sched-full bench-check bench-serve
+.PHONY: test lint bench bench-sched bench-sched-full bench-check bench-serve
 
 test:
 	$(PY) -m pytest -q
+
+# Correctness lint (ruff.toml: syntax errors, bad comparisons, undefined
+# names). `pip install ruff` (requirements-dev.txt) to run locally.
+lint:
+	ruff check src benchmarks examples tests
 
 bench:
 	$(PY) benchmarks/run.py --quick

@@ -20,7 +20,9 @@ from typing import Dict, List
 import jax
 
 from repro.configs import smoke_config
+from repro.core.platform import ClusterSpec, ControllerSpec, FederationSpec
 from repro.core.scheduler.topology import DistributionPolicy
+from repro.core.sim.core import NetworkModel
 from repro.models import Model
 from repro.runtime.serve_engine import Replica, ServingEngine
 
@@ -61,6 +63,18 @@ def _mk_replica(name, zone, sets, params, cfg, slots=4):
                    max_len=64)
 
 
+def _federation_spec() -> FederationSpec:
+    """Two-entry edge/cloud federation; controllers live in the slices."""
+    return FederationSpec.of(
+        {
+            "edge": ClusterSpec(controllers=(ControllerSpec("EdgeCtl"),)),
+            "cloud": ClusterSpec(controllers=(ControllerSpec("CloudCtl"),)),
+        },
+        network=NetworkModel(rtt={("edge", "cloud"): 0.030}, bandwidth={}),
+        default_entry="edge",
+    )
+
+
 def serving_bench() -> List[Dict]:
     cfg = dataclasses.replace(smoke_config("smollm_135m"), n_layers=2)
     params = Model(cfg).init_params(jax.random.PRNGKey(0))
@@ -81,11 +95,25 @@ def serving_bench() -> List[Dict]:
         # engine's per-tick cost must not blow up while the queue drains.
         ("serving_shared_saturated",
          DistributionPolicy.SHARED, SCRIPT, "interactive", 64, 2),
+        # Cross-zone federation: two per-zone entrypoints, requests
+        # entering both zones; small slot counts saturate each zone's
+        # replica so the interactive class spills across zones (the
+        # forwarding walk + FederatedPlacement path on the hot loop).
+        ("serving_federated",
+         DistributionPolicy.SHARED, SCRIPT, "interactive", 24, 2),
     )
     for name, policy, script, tag, n_requests, slots in configs:
-        engine = ServingEngine(distribution=policy, tapp_script=script)
-        engine.add_controller("EdgeCtl", zone="edge")
-        engine.add_controller("CloudCtl", zone="cloud")
+        federated = name == "serving_federated"
+        if federated:
+            # Controllers come from the federation spec's zone slices.
+            engine = ServingEngine(
+                distribution=policy, tapp_script=script,
+                federation=_federation_spec(),
+            )
+        else:
+            engine = ServingEngine(distribution=policy, tapp_script=script)
+            engine.add_controller("EdgeCtl", zone="edge")
+            engine.add_controller("CloudCtl", zone="cloud")
         engine.add_replica(
             _mk_replica("e0", "edge", ["edge"], params, cfg, slots=slots)
         )
@@ -98,6 +126,9 @@ def serving_bench() -> List[Dict]:
                 "smollm-135m", [1 + i % 7, 2, 3],
                 tag=tag if i % 2 == 0 else None,
                 max_new_tokens=6,
+                entry_zone=(
+                    ("edge" if i % 3 else "cloud") if federated else None
+                ),
             )
             for i in range(n_requests)
         ]
@@ -107,14 +138,21 @@ def serving_bench() -> List[Dict]:
         done = [r for r in reqs if r.state == "done"]
         latencies = [r.finished_tick - r.submitted_tick for r in done]
         tokens = sum(len(r.output) for r in done)
+        derived = (
+            f"done={len(done)}/{n_requests};"
+            f"mean_ticks={statistics.fmean(latencies):.1f};"
+            f"ticks={engine.tick}"
+        )
+        if federated:
+            stats = engine.platform.stats()
+            derived += (
+                f";forwards={stats.forwards}"
+                f";attempts={stats.forward_attempts}"
+            )
         rows.append({
             "name": name,
             "us_per_call": wall / max(1, tokens) * 1e6,
-            "derived": (
-                f"done={len(done)}/{n_requests};"
-                f"mean_ticks={statistics.fmean(latencies):.1f};"
-                f"ticks={engine.tick}"
-            ),
+            "derived": derived,
         })
     return rows
 

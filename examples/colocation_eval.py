@@ -5,11 +5,15 @@ on our simulator): a latency-sensitive API function shares a two-rack
 cluster with a noisy batch cruncher, and a join function wants to land
 next to the cache-warmer holding its working set.
 
-Two policies over identical deployments and workloads:
-  * blank    — the constraint-free default policy (topology-aware, but
-               blind to what else runs on a worker);
-  * tapp+aff — anti-affinity keeps latency_api off batch_crunch workers,
-               affinity steers feature_join onto cache_warmer workers.
+Three policies over identical deployments and workloads:
+  * blank     — the constraint-free default policy (topology-aware, but
+                blind to what else runs on a worker);
+  * tapp+aff  — anti-affinity keeps latency_api off batch_crunch workers,
+                affinity steers feature_join onto cache_warmer workers;
+  * tapp+fed  — the same constrained policy driven through a two-entry
+                TappFederation (each workload class enters at its own
+                rack's gateway and spills across racks only when its
+                rack declines — Deployment API v2).
 
 Run: PYTHONPATH=src python examples/colocation_eval.py
 """
@@ -21,11 +25,15 @@ N_DEPLOYMENTS = 4
 FUNCTIONS = ("latency_api", "batch_crunch", "feature_join")
 
 
-def collect(constrained: bool):
+def collect(constrained: bool, federated: bool = False):
     per_fn = {fn: {"mean": [], "p99": []} for fn in FUNCTIONS}
     join_cohosted = []
+    forwarded = 0
     for seed in range(N_DEPLOYMENTS):
-        _, result = run_colocation_case(constrained=constrained, seed=seed)
+        _, result = run_colocation_case(
+            constrained=constrained, seed=seed, federated=federated
+        )
+        forwarded += result.n_forwarded
         for fn in FUNCTIONS:
             summary = result.for_function(fn).summary()
             per_fn[fn]["mean"].append(summary["mean"])
@@ -39,16 +47,20 @@ def collect(constrained: bool):
             n for worker, n in join_counts.items() if worker in warm_workers
         )
         join_cohosted.append(cohosted / max(1, total))
-    return per_fn, statistics.fmean(join_cohosted)
+    return per_fn, statistics.fmean(join_cohosted), forwarded
 
 
 def main() -> None:
     print(f"# co-location evaluation over {N_DEPLOYMENTS} deployments")
     print("policy,function,mean_s,p99_s")
     rows = {}
-    for label, constrained in (("blank", False), ("tapp+aff", True)):
-        per_fn, cohost = collect(constrained)
-        rows[label] = (per_fn, cohost)
+    for label, constrained, federated in (
+        ("blank", False, False),
+        ("tapp+aff", True, False),
+        ("tapp+fed", True, True),
+    ):
+        per_fn, cohost, forwarded = collect(constrained, federated)
+        rows[label] = (per_fn, cohost, forwarded)
         for fn in FUNCTIONS:
             print(
                 f"{label},{fn},"
@@ -56,8 +68,8 @@ def main() -> None:
                 f"{statistics.fmean(per_fn[fn]['p99']):.4f}"
             )
 
-    blank_fn, blank_cohost = rows["blank"]
-    aff_fn, aff_cohost = rows["tapp+aff"]
+    blank_fn, blank_cohost, _ = rows["blank"]
+    aff_fn, aff_cohost, _ = rows["tapp+aff"]
     blank_lat = statistics.fmean(blank_fn["latency_api"]["mean"])
     aff_lat = statistics.fmean(aff_fn["latency_api"]["mean"])
     print()
@@ -68,6 +80,13 @@ def main() -> None:
     print(
         f"feature_join placed on a cache_warmer worker: "
         f"{blank_cohost:.0%} → {aff_cohost:.0%} (affinity)"
+    )
+    fed_fn, _, fed_forwarded = rows["tapp+fed"]
+    fed_lat = statistics.fmean(fed_fn["latency_api"]["mean"])
+    print(
+        f"federated (per-rack entry): latency_api mean "
+        f"{fed_lat * 1e3:.1f}ms; {fed_forwarded} requests forwarded "
+        f"across racks over {N_DEPLOYMENTS} deployments"
     )
 
 

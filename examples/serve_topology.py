@@ -8,8 +8,10 @@ Three request classes (the paper's ①②③) over an edge+cloud deployment:
 Also demonstrates: replica failure → automatic re-routing; the platform
 policy lifecycle (live apply flipping the ML class to the edge without
 restarting anything, then `rollback()` restoring the previous policy);
-and the constraint layer's anti-affinity spread with the typed
-`explain()` report.
+the constraint layer's anti-affinity spread with the typed `explain()`
+report; and the Deployment API v2 federation — per-zone entrypoints
+with cross-zone forwarding priced by a network model and narrated hop
+by hop in `TappFederation.explain()`.
 
 Run: PYTHONPATH=src python examples/serve_topology.py
 """
@@ -18,7 +20,9 @@ import dataclasses
 import jax
 
 from repro.configs import smoke_config
+from repro.core.platform import ClusterSpec, ControllerSpec, FederationSpec
 from repro.core.scheduler.topology import DistributionPolicy
+from repro.core.sim.core import NetworkModel
 from repro.models import Model
 from repro.runtime.serve_engine import Replica, ServingEngine
 
@@ -147,6 +151,82 @@ def main() -> None:
     print(f"per-worker rejections: {report.rejections()}")
     engine.run_until_done()
     print(f"platform stats: {engine.platform.stats()}")
+
+    federation_demo(cfg, params)
+
+
+#: Federation policy: `critical` work is pinned to the edge (tolerance
+#: none — it may be *forwarded to* its edge home from any entrypoint but
+#: never placed outside it); everything else is zone-local-first with
+#: cross-zone spill (`followup: default` + blank set).
+FEDERATION_SCRIPT = """
+- critical:
+  - controller: EdgeCtl
+    workers:
+    - set: edge
+    topology_tolerance: none
+  followup: fail
+- default:
+  - workers:
+    - set:
+    strategy: platform
+    invalidate: overload
+"""
+
+
+def federation_demo(cfg, params) -> None:
+    """Deployment API v2: one engine, two zone entrypoints."""
+    print("\n== federation: per-zone entrypoints + cross-zone forwarding ==")
+    spec = FederationSpec.of(
+        {
+            "edge": ClusterSpec(controllers=(ControllerSpec("EdgeCtl"),)),
+            "cloud": ClusterSpec(controllers=(ControllerSpec("CloudCtl"),)),
+        },
+        network=NetworkModel(
+            rtt={("edge", "cloud"): 0.040},
+            bandwidth={},
+        ),
+        default_entry="edge",
+    )
+    engine = ServingEngine(
+        distribution=DistributionPolicy.SHARED, federation=spec
+    )
+    engine.platform.apply_policy(FEDERATION_SCRIPT)
+
+    def replica(name, zone, sets, slots=1):
+        return Replica(name, cfg, params, zone=zone, sets=sets, slots=slots,
+                       max_len=32)
+
+    engine.add_replica(replica("E_1", "edge", ["edge"]))
+    engine.add_replica(replica("C_1", "cloud", ["cloud"]))
+
+    # Critical work entering at the CLOUD is forwarded to its edge home;
+    # generic work entering at a saturated edge spills to the cloud.
+    crit = engine.submit("smollm-135m", [1, 2], tag="critical",
+                         entry_zone="cloud", max_new_tokens=3)
+    generic = [
+        engine.submit("smollm-135m", [3 + i], entry_zone="edge",
+                      max_new_tokens=3)
+        for i in range(2)
+    ]
+    engine.run_until_done()
+    print(f"critical (entered cloud): replica {crit.replica}")
+    print(f"generic (entered edge):   replicas "
+          f"{[r.replica for r in generic]}")
+
+    report = engine.platform.explain("smollm-135m", tag="critical",
+                                     entry_zone="cloud",
+                                     model_id="smollm-135m")
+    print("federated explain() hop report:")
+    print(report.render())
+
+    stats = engine.platform.stats()
+    print(f"forwards={stats.forwards} attempts={stats.forward_attempts} "
+          f"cross_zone_rtt={stats.cross_zone_rtt * 1e3:.0f}ms")
+    for zone in stats.zones:
+        print(f"  {zone.zone}: entered={zone.entered} "
+              f"in={zone.forwarded_in} out={zone.forwarded_out} "
+              f"inflight={zone.inflight}")
 
 
 if __name__ == "__main__":

@@ -9,24 +9,48 @@
 ... # doctest: +SKIP
 >>> placement = platform.invoke("my_fn")  # doctest: +SKIP
 >>> placement.complete()                  # doctest: +SKIP
+
+Multi-zone deployments federate per-zone entrypoints over the same core
+(see the README "Federation" section):
+
+>>> from repro.core.platform import FederationSpec, TappFederation
+>>> federation = TappFederation(FederationSpec.of({  # doctest: +SKIP
+...     "edge": ClusterSpec(...), "cloud": ClusterSpec(...),
+... }))
+>>> federation.invoke("my_fn", entry_zone="edge")    # doctest: +SKIP
 """
 from repro.core.platform.explain import (
     BlockReport,
     CandidateReport,
     ExplainReport,
+    FederationExplainReport,
+    ZoneHopReport,
     build_explain_report,
 )
 from repro.core.platform.facade import (
     Placement,
+    PlatformCore,
     PlatformStats,
     TappPlatform,
+)
+from repro.core.platform.federation import (
+    FederatedPlacement,
+    FederationStats,
+    ForwardHop,
+    TappFederation,
+    ZoneStats,
 )
 from repro.core.platform.policy import (
     PolicyDryRun,
     PolicyError,
     PolicyHandle,
 )
-from repro.core.platform.specs import ClusterSpec, ControllerSpec, WorkerSpec
+from repro.core.platform.specs import (
+    ClusterSpec,
+    ControllerSpec,
+    FederationSpec,
+    WorkerSpec,
+)
 
 __all__ = [
     "BlockReport",
@@ -34,12 +58,21 @@ __all__ = [
     "ClusterSpec",
     "ControllerSpec",
     "ExplainReport",
+    "FederatedPlacement",
+    "FederationExplainReport",
+    "FederationSpec",
+    "FederationStats",
+    "ForwardHop",
     "Placement",
+    "PlatformCore",
     "PlatformStats",
     "PolicyDryRun",
     "PolicyError",
     "PolicyHandle",
+    "TappFederation",
     "TappPlatform",
     "WorkerSpec",
+    "ZoneHopReport",
+    "ZoneStats",
     "build_explain_report",
 ]

@@ -8,6 +8,11 @@ plus the tag/followup narration. The trace strings stay the single
 source of truth — this module only parses the shapes the engine and the
 vanilla baseline emit, so interpreter, compiled, and vanilla paths all
 explain identically.
+
+``TappFederation.explain`` stacks one of these reports per zone the
+request visited: the entry zone's zone-local pass, then each forwarding
+hop with the RTT the network model charged it — the
+:class:`FederationExplainReport` per-zone forwarding hop report.
 """
 from __future__ import annotations
 
@@ -96,6 +101,80 @@ class ExplainReport:
                 lines.append(f"  {label}: {note}")
             for candidate in block.candidates:
                 lines.append(f"    {candidate}")
+        return "\n".join(lines)
+
+
+@dataclasses.dataclass(frozen=True)
+class ZoneHopReport:
+    """One zone's view of a federated evaluation.
+
+    The first hop is always the entry zone's zone-local pass
+    (``forwarded=False``, ``rtt=0``); subsequent hops are forwarding
+    attempts in the order the federation tried them, each carrying the
+    inter-zone RTT the network model charged for the hop.
+    """
+
+    zone: str
+    rtt: float
+    forwarded: bool
+    report: ExplainReport
+
+    @property
+    def scheduled(self) -> bool:
+        return self.report.scheduled
+
+
+@dataclasses.dataclass(frozen=True)
+class FederationExplainReport:
+    """Why a federated invocation landed where it did, hop by hop."""
+
+    invocation: Invocation
+    entry_zone: str
+    scheduled: bool
+    worker: Optional[str]
+    controller: Optional[str]
+    placement_zone: Optional[str]
+    forward_rtt: float               # total RTT charged across hops
+    hops: Tuple[ZoneHopReport, ...]
+
+    @property
+    def forwarded(self) -> bool:
+        """Did the request leave its entry zone (placement or attempts)?"""
+        return self.placement_zone not in (None, self.entry_zone) or any(
+            h.forwarded for h in self.hops
+        )
+
+    def rejections(self) -> Dict[str, str]:
+        """worker → last rejection reason across every zone evaluated."""
+        out: Dict[str, str] = {}
+        for hop in self.hops:
+            out.update(hop.report.rejections())
+        return out
+
+    def render(self) -> str:
+        head = (
+            f"{self.invocation.function!r} tag={self.invocation.tag!r} "
+            f"entry={self.entry_zone!r} → "
+            + (
+                f"worker={self.worker} controller={self.controller} "
+                f"zone={self.placement_zone}"
+                + (
+                    f" (forwarded, +{self.forward_rtt * 1e3:.1f}ms)"
+                    if self.forwarded else ""
+                )
+                if self.scheduled
+                else "NOT SCHEDULED"
+            )
+        )
+        lines = [head]
+        for hop in self.hops:
+            label = (
+                f"zone {hop.zone!r} (entry pass)"
+                if not hop.forwarded
+                else f"zone {hop.zone!r} (forwarded, +{hop.rtt * 1e3:.1f}ms)"
+            )
+            lines.append(f"-- {label} --")
+            lines.extend("  " + line for line in hop.report.render().splitlines())
         return "\n".join(lines)
 
 

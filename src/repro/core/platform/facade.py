@@ -20,8 +20,16 @@ façade owns that wiring so callers stop hand-assembling it:
   rejection report, ``stats`` a point-in-time snapshot, and
   ``subscribe`` a feed of platform events.
 
-The underlying parts remain importable for tests and power users, but
-``TappPlatform`` is the only module that should construct them.
+Since PR 5 the machinery is split: :class:`PlatformCore` holds
+everything that does not depend on how many entrypoints exist (the
+watcher, the admission ledger, the policy lifecycle, topology
+lifecycle, events), and ``TappPlatform`` is the degenerate
+single-entrypoint instantiation — one flat :class:`Gateway` over the
+whole cluster. The multi-zone instantiation is
+:class:`~repro.core.platform.federation.TappFederation`: one
+:class:`~repro.core.scheduler.gateway.ZoneGateway` per zone over the
+same core. The underlying parts remain importable for tests and power
+users, but the façades are the only modules that should construct them.
 """
 from __future__ import annotations
 
@@ -36,6 +44,7 @@ from typing import (
     Mapping,
     Optional,
     Sequence,
+    Tuple,
     Union,
 )
 
@@ -69,13 +78,21 @@ PolicyInput = Union[str, TappScript]
 
 
 class _Ledger:
-    """Mutable admit/complete counters shared with live placements."""
+    """Mutable admit/complete/evict counters shared with live placements.
 
-    __slots__ = ("admitted", "completed")
+    Invariant: ``admitted == completed + evicted + live inflight``. A
+    ticket is *evicted* when its worker is deregistered while the work
+    runs — the drain-path removal reconciles those tickets here, and the
+    placement's later ``complete()`` sees the watcher decline the retire
+    (the worker is gone) and does not double-count it as a completion.
+    """
+
+    __slots__ = ("admitted", "completed", "evicted")
 
     def __init__(self) -> None:
         self.admitted = 0
         self.completed = 0
+        self.evicted = 0
 
 
 class Placement:
@@ -90,7 +107,7 @@ class Placement:
     """
 
     __slots__ = ("invocation", "decision", "admitted", "completed",
-                 "_watcher", "_ledger")
+                 "_watcher", "_ledger", "_worker_ref")
 
     def __init__(
         self,
@@ -99,6 +116,7 @@ class Placement:
         admitted: bool,
         watcher: Watcher,
         ledger: _Ledger,
+        worker_ref: Optional[WorkerState] = None,
     ) -> None:
         self.invocation = invocation
         self.decision = decision
@@ -106,6 +124,10 @@ class Placement:
         self.completed = False
         self._watcher = watcher
         self._ledger = ledger
+        # The live worker the ticket was taken on: complete() retires
+        # against exactly this instance, so a later worker re-using the
+        # name can never have its counters decremented by a dead ticket.
+        self._worker_ref = worker_ref
 
     @property
     def scheduled(self) -> bool:
@@ -131,13 +153,16 @@ class Placement:
         if self.completed or not self.admitted:
             return
         self.completed = True
-        self._watcher.record_completion(
+        if self._watcher.record_completion(
             self.decision.worker,
             self.decision.controller or "?",
             self.invocation.function,
             slow=slow,
-        )
-        self._ledger.completed += 1
+            expected=self._worker_ref,
+        ):
+            self._ledger.completed += 1
+        # else: the worker was evicted mid-run; the deregistration already
+        # reconciled this ticket as an eviction.
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         return (
@@ -167,37 +192,38 @@ class PlatformStats:
     # Volatile-load events recorded by the admission ledger / heartbeats —
     # the stream the candidate indexes consume incrementally.
     load_events: int = 0
+    # Admission tickets that died with a deregistered worker (see _Ledger).
+    evicted: int = 0
 
 
-class TappPlatform:
-    """One serverless platform instance: watcher + gateway + controllers."""
+class PlatformCore:
+    """Entrypoint-count-agnostic platform machinery.
+
+    Owns the watcher (authoritative cluster state + script store), the
+    controller runtime, the admission ledger, the policy lifecycle, the
+    topology lifecycle, and event fan-out. Subclasses provide the
+    entrypoints: :class:`TappPlatform` one flat gateway,
+    :class:`~repro.core.platform.federation.TappFederation` one
+    :class:`ZoneGateway` per zone — all sharing this core's watcher, so a
+    policy swap or topology change invalidates every entrypoint's caches
+    through one notification.
+    """
 
     def __init__(
         self,
-        spec: Optional[Union[ClusterSpec, ClusterState]] = None,
+        cluster: Optional[ClusterState],
         *,
-        distribution: DistributionPolicy = DistributionPolicy.DEFAULT,
-        seed: Optional[int] = None,
+        watcher: Optional[Watcher] = None,
         compiled: bool = True,
-        policy: Optional[PolicyInput] = None,
         strict_policies: bool = False,
         max_policy_history: int = 8,
     ) -> None:
-        if isinstance(spec, ClusterState):
-            cluster = spec
-        elif spec is not None:
-            cluster = spec.build()
-        else:
-            cluster = None
-        self._watcher = Watcher(cluster)
-        self._gateway = Gateway(
-            self._watcher,
-            distribution=distribution,
-            seed=seed,
-            compiled=compiled,
-        )
+        # ``watcher`` adopts an existing instance (the legacy-shim
+        # migration path) instead of building one around ``cluster``.
+        self._watcher = watcher if watcher is not None else Watcher(cluster)
         self._runtime = ControllerRuntime(self._watcher)
         self._ledger = _Ledger()
+        self._compiled = compiled
         self._strict_policies = strict_policies
         self._active: Optional[PolicyHandle] = None
         self._history: Deque[PolicyHandle] = deque(maxlen=max_policy_history)
@@ -208,33 +234,11 @@ class TappPlatform:
         self._policy_lock = threading.Lock()
         self._subscribers: List[Subscriber] = []
         self._watcher.subscribe(self._emit)
-        if policy is not None:
-            self.apply_policy(policy, strict=strict_policies)
 
-    @classmethod
-    def from_watcher(
-        cls,
-        watcher: Watcher,
-        *,
-        distribution: DistributionPolicy = DistributionPolicy.DEFAULT,
-        seed: Optional[int] = None,
-        compiled: bool = True,
-    ) -> "TappPlatform":
-        """Wrap an existing watcher (the legacy-shim migration path)."""
-        platform = cls.__new__(cls)
-        platform._watcher = watcher
-        platform._gateway = Gateway(
-            watcher, distribution=distribution, seed=seed, compiled=compiled
-        )
-        platform._runtime = ControllerRuntime(watcher)
-        platform._ledger = _Ledger()
-        platform._strict_policies = False
-        platform._active = None
-        platform._history = deque(maxlen=8)
-        platform._policy_lock = threading.Lock()
-        platform._subscribers = []
-        watcher.subscribe(platform._emit)
-        return platform
+    # -- entrypoints (provided by subclasses) -----------------------------------
+
+    def _gateways(self) -> Iterable[Gateway]:
+        raise NotImplementedError
 
     # -- events ----------------------------------------------------------------
 
@@ -254,16 +258,17 @@ class TappPlatform:
         return self._watcher
 
     @property
-    def gateway(self) -> Gateway:
-        return self._gateway
-
-    @property
     def runtime(self) -> ControllerRuntime:
         return self._runtime
 
     @property
     def cluster(self) -> ClusterState:
         return self._watcher.cluster
+
+    @property
+    def compiled(self) -> bool:
+        """Whether the entrypoints run the compiled fast path."""
+        return self._compiled
 
     # -- topology lifecycle -----------------------------------------------------
 
@@ -280,7 +285,17 @@ class TappPlatform:
         self._watcher.register_worker(worker)
 
     def remove_worker(self, name: str) -> None:
-        self._watcher.deregister_worker(name)
+        """Deregister a worker through the watcher's drain path.
+
+        The watcher clears health + reachability before the membership
+        change (no admission can race the removal) and reports how many
+        admission tickets died with the worker; those are reconciled as
+        ledger evictions, so ``admitted == completed + evicted + inflight``
+        keeps holding and nothing strands.
+        """
+        removed = self._watcher.deregister_worker(name)
+        if removed is not None and removed.inflight:
+            self._ledger.evicted += removed.inflight
 
     def add_controller(
         self,
@@ -298,6 +313,8 @@ class TappPlatform:
         self._watcher.register_controller(controller)
 
     def remove_controller(self, name: str) -> None:
+        """Deregister a controller (drained by the watcher before removal,
+        symmetric to :meth:`remove_worker`)."""
         self._watcher.deregister_controller(name)
 
     def drain(self, name: str) -> None:
@@ -381,7 +398,7 @@ class TappPlatform:
             strict = self._strict_policies
         script, source = self._coerce_policy(policy)
         gated: dict = {}
-        compiled_path = self._gateway.compiled
+        compiled_path = self._compiled
 
         def _gate(report) -> None:
             dry_run = self._dry_run_from_report(report)
@@ -399,9 +416,11 @@ class TappPlatform:
             published = self._watcher.publish_script(script, gate=_gate)
             if compiled_path:
                 # The published script shares `script.tags`, so the gate's
-                # plan is its plan — seed the engine cache instead of
-                # recompiling on the first decision after the swap.
-                self._gateway.prime(published, gated["plan"])
+                # plan is its plan — seed every entrypoint's engine cache
+                # instead of recompiling on the first decision after the
+                # swap (one plan object, shared by all zone gateways).
+                for gateway in self._gateways():
+                    gateway.prime(published, gated["plan"])
             handle = PolicyHandle(
                 version=published.version,
                 script=published,
@@ -436,11 +455,13 @@ class TappPlatform:
             published = self._watcher.publish_script(
                 previous.script, strict=True
             )
-            if self._gateway.compiled:
+            if self._compiled:
                 # Same compile-then-prime discipline as apply_policy, so
                 # the first decision after the rollback stays
                 # compilation-free too.
-                self._gateway.prime(published, compile_script(previous.script))
+                plan = compile_script(previous.script)
+                for gateway in self._gateways():
+                    gateway.prime(published, plan)
             self._active = dataclasses.replace(
                 previous, version=published.version, script=published
             )
@@ -463,6 +484,158 @@ class TappPlatform:
         script = parse_tapp(policy)
         return script, policy
 
+    # -- admission ----------------------------------------------------------------
+
+    def _admit(
+        self, invocation: Invocation, decision: ScheduleDecision
+    ) -> Optional[WorkerState]:
+        """Record a scheduled decision's admission ticket (the single
+        admission point of both façades); returns the live worker the
+        ticket was taken on (None: nothing to admit)."""
+        worker = decision.worker
+        if worker is None:
+            return None
+        ticket_worker = self._watcher.record_admission(
+            worker, decision.controller or "?", invocation.function
+        )
+        self._ledger.admitted += 1
+        return ticket_worker
+
+    def place(
+        self, invocation: Invocation, decision: ScheduleDecision
+    ) -> Placement:
+        """Admit a routed decision and hand back its ticket.
+
+        The single admission point behind ``invoke`` / ``invoke_batch``;
+        also usable directly with an externally-routed decision (legacy
+        scheduler adapters).
+        """
+        worker_ref = self._admit(invocation, decision)
+        return Placement(invocation, decision, worker_ref is not None,
+                         self._watcher, self._ledger, worker_ref)
+
+    def _platform_stats(
+        self,
+        *,
+        routed: int,
+        tapp_routed: int,
+        vanilla_routed: int,
+        failed: int,
+        script_reloads: int,
+    ) -> PlatformStats:
+        """Assemble the ledger/cluster half of a stats snapshot; the
+        caller supplies only its entrypoints' routing totals (the single
+        place both façades' snapshots are built)."""
+        cluster = self._watcher.cluster
+        return PlatformStats(
+            routed=routed,
+            tapp_routed=tapp_routed,
+            vanilla_routed=vanilla_routed,
+            failed=failed,
+            script_reloads=script_reloads,
+            admitted=self._ledger.admitted,
+            completed=self._ledger.completed,
+            inflight=sum(w.inflight for w in cluster.workers.values()),
+            workers=len(cluster.workers),
+            controllers=len(cluster.controllers),
+            policy_version=(
+                self._active.version if self._active is not None else None
+            ),
+            topology_epoch=cluster.topology_epoch,
+            load_events=cluster.load_seq,
+            evicted=self._ledger.evicted,
+        )
+
+    @staticmethod
+    def _coerce_invocation(
+        function: Union[str, Invocation],
+        tag: Optional[str],
+        model_id: Optional[str],
+        request_id: int = 0,
+    ) -> Invocation:
+        if isinstance(function, Invocation):
+            if tag is not None or model_id is not None or request_id != 0:
+                raise TypeError(
+                    "pass either a pre-built Invocation or the field "
+                    "keywords, not both (the keywords would be silently "
+                    "ignored)"
+                )
+            return function
+        return Invocation(
+            function=function, tag=tag, model_id=model_id,
+            request_id=request_id,
+        )
+
+
+class TappPlatform(PlatformCore):
+    """One serverless platform instance: watcher + gateway + controllers.
+
+    The degenerate single-entrypoint federation: one flat
+    :class:`Gateway` routes over the whole cluster (``entry_zone=None``
+    semantics — no zone-local pass, no forwarding). For multi-zone
+    deployments with per-zone entrypoints use
+    :class:`~repro.core.platform.federation.TappFederation`, which shares
+    every behaviour of this façade through :class:`PlatformCore`.
+    """
+
+    def __init__(
+        self,
+        spec: Optional[Union[ClusterSpec, ClusterState]] = None,
+        *,
+        distribution: DistributionPolicy = DistributionPolicy.DEFAULT,
+        seed: Optional[int] = None,
+        compiled: bool = True,
+        policy: Optional[PolicyInput] = None,
+        strict_policies: bool = False,
+        max_policy_history: int = 8,
+    ) -> None:
+        if isinstance(spec, ClusterState):
+            cluster = spec
+        elif spec is not None:
+            cluster = spec.build()
+        else:
+            cluster = None
+        super().__init__(
+            cluster,
+            compiled=compiled,
+            strict_policies=strict_policies,
+            max_policy_history=max_policy_history,
+        )
+        self._gateway = Gateway(
+            self._watcher,
+            distribution=distribution,
+            seed=seed,
+            compiled=compiled,
+        )
+        if policy is not None:
+            self.apply_policy(policy, strict=strict_policies)
+
+    @classmethod
+    def from_watcher(
+        cls,
+        watcher: Watcher,
+        *,
+        distribution: DistributionPolicy = DistributionPolicy.DEFAULT,
+        seed: Optional[int] = None,
+        compiled: bool = True,
+    ) -> "TappPlatform":
+        """Wrap an existing watcher (the legacy-shim migration path)."""
+        platform = cls.__new__(cls)
+        # One copy of the core init invariants: delegate, don't clone.
+        PlatformCore.__init__(platform, None, watcher=watcher,
+                              compiled=compiled)
+        platform._gateway = Gateway(
+            watcher, distribution=distribution, seed=seed, compiled=compiled
+        )
+        return platform
+
+    def _gateways(self) -> Tuple[Gateway, ...]:
+        return (self._gateway,)
+
+    @property
+    def gateway(self) -> Gateway:
+        return self._gateway
+
     # -- unified invocation flow ---------------------------------------------------
 
     def invoke(
@@ -483,21 +656,8 @@ class TappPlatform:
         Unscheduled invocations return an un-admitted placement (check
         ``scheduled`` / ``failed_by_policy``).
         """
-        if isinstance(function, Invocation):
-            if tag is not None or model_id is not None or request_id != 0:
-                raise TypeError(
-                    "pass either a pre-built Invocation or the field "
-                    "keywords, not both (the keywords would be silently "
-                    "ignored)"
-                )
-            invocation = function
-        else:
-            invocation = Invocation(
-                function=function,
-                tag=tag,
-                model_id=model_id,
-                request_id=request_id,
-            )
+        invocation = self._coerce_invocation(function, tag, model_id,
+                                             request_id)
         return self.place(invocation, self._gateway.route(invocation,
                                                           trace=trace))
 
@@ -531,25 +691,6 @@ class TappPlatform:
         self._gateway.route_batch(invs, trace=trace, on_decision=_admit)
         return placements
 
-    def place(
-        self, invocation: Invocation, decision: ScheduleDecision
-    ) -> Placement:
-        """Admit a routed decision and hand back its ticket.
-
-        The single admission point behind :meth:`invoke` /
-        :meth:`invoke_batch`; also usable directly with an
-        externally-routed decision (legacy scheduler adapters).
-        """
-        worker = decision.worker
-        ledger = self._ledger
-        if worker is not None:
-            self._watcher.record_admission(
-                worker, decision.controller or "?", invocation.function
-            )
-            ledger.admitted += 1
-        return Placement(invocation, decision, worker is not None,
-                         self._watcher, ledger)
-
     # -- observability ---------------------------------------------------------------
 
     def explain(
@@ -567,17 +708,7 @@ class TappPlatform:
         RNG stream / controller cursors are restored afterwards, so
         explaining between two real invokes never changes the second one.
         """
-        if isinstance(function, Invocation):
-            if tag is not None or model_id is not None:
-                raise TypeError(
-                    "pass either a pre-built Invocation or the field "
-                    "keywords, not both (the keywords would be silently "
-                    "ignored)"
-                )
-            invocation = function
-        else:
-            invocation = Invocation(function=function, tag=tag,
-                                    model_id=model_id)
+        invocation = self._coerce_invocation(function, tag, model_id)
         decision = self._gateway.probe(invocation)
         return build_explain_report(invocation, decision)
 
@@ -592,22 +723,11 @@ class TappPlatform:
         return self._gateway.prewarm()
 
     def stats(self) -> PlatformStats:
-        cluster = self._watcher.cluster
         gw = self._gateway.stats
-        return PlatformStats(
+        return self._platform_stats(
             routed=gw.routed,
             tapp_routed=gw.tapp_routed,
             vanilla_routed=gw.vanilla_routed,
             failed=gw.failed,
             script_reloads=gw.script_reloads,
-            admitted=self._ledger.admitted,
-            completed=self._ledger.completed,
-            inflight=sum(w.inflight for w in cluster.workers.values()),
-            workers=len(cluster.workers),
-            controllers=len(cluster.controllers),
-            policy_version=(
-                self._active.version if self._active is not None else None
-            ),
-            topology_epoch=cluster.topology_epoch,
-            load_events=cluster.load_seq,
         )

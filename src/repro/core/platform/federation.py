@@ -1,0 +1,528 @@
+"""``TappFederation`` — multi-zone deployment API v2 (PR 5).
+
+The paper's setting is cloud–edge, multi-region serverless: requests
+enter at *different* zones, each zone runs its own controller, and
+``topology_tolerance`` bounds how far from its designated home a
+function may run. This module makes that scenario class expressible
+end-to-end: a :class:`~repro.core.platform.specs.FederationSpec`
+declares the zones (each a ``ClusterSpec`` slice) and the inter-zone
+network model, and ``TappFederation`` stands up one
+:class:`~repro.core.scheduler.gateway.ZoneGateway` per zone — the
+Archipelago shape (arXiv:1911.09849): semi-autonomous per-entrypoint
+schedulers over a shared authoritative state.
+
+All zone gateways share **one** watcher (cluster state, script store,
+admission ledger) and therefore one epoch-cached view/index store; each
+owns its zone-local compiled candidate indexes (the
+``zone_restriction``-keyed entries of that store), its own RNG stream,
+and its own round-robin cursors. ``invoke(fn, entry_zone=...)`` routes
+zone-locally first; on failure the request is **forwarded** across
+zones per the policy's ``topology_tolerance`` (see
+:func:`~repro.core.scheduler.gateway.forward_targets`), nearest zone
+first, with the network model charging each hop's RTT into the
+returned :class:`FederatedPlacement`, the :class:`FederationStats`
+counters, and the :meth:`TappFederation.explain` hop report.
+
+``TappPlatform`` remains the degenerate single-entrypoint case — both
+façades share :class:`~repro.core.platform.facade.PlatformCore`, so a
+single-zone federation makes bit-identical decisions to the flat
+platform on the same spec, policy, and seed (property-tested in
+``tests/test_federation.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import (
+    Callable,
+    Dict,
+    Iterable,
+    List,
+    Optional,
+    Sequence,
+    Tuple,
+    Union,
+)
+
+from repro.core.platform.explain import (
+    FederationExplainReport,
+    ZoneHopReport,
+    build_explain_report,
+)
+from repro.core.platform.facade import (
+    Placement,
+    PlatformCore,
+    PlatformStats,
+    PolicyInput,
+)
+from repro.core.platform.specs import FederationSpec
+from repro.core.scheduler.engine import Invocation, ScheduleDecision
+from repro.core.scheduler.gateway import ZoneGateway, forward_targets
+from repro.core.scheduler.topology import DistributionPolicy
+
+
+@dataclasses.dataclass(frozen=True)
+class ForwardHop:
+    """One cross-zone hop of a federated request (attempted or taken)."""
+
+    from_zone: str
+    to_zone: str
+    rtt: float
+    scheduled: bool  # did this hop's zone place the invocation?
+
+
+class FederatedPlacement(Placement):
+    """A :class:`Placement` plus its entry zone and forwarding record.
+
+    ``hops`` lists every cross-zone hop in trial order — failed forward
+    attempts included, because the entry gateway paid their RTT to ask.
+    ``forward_rtt`` is the total the network model charged; zero for a
+    zone-local placement.
+    """
+
+    __slots__ = ("entry_zone", "hops")
+
+    def __init__(
+        self,
+        invocation: Invocation,
+        decision: ScheduleDecision,
+        admitted: bool,
+        watcher,
+        ledger,
+        entry_zone: str,
+        hops: Tuple[ForwardHop, ...],
+        worker_ref=None,
+    ) -> None:
+        super().__init__(invocation, decision, admitted, watcher, ledger,
+                         worker_ref)
+        self.entry_zone = entry_zone
+        self.hops = hops
+
+    @property
+    def forwarded(self) -> bool:
+        """Did the placement land outside the entry zone?"""
+        return any(h.scheduled for h in self.hops)
+
+    @property
+    def forward_rtt(self) -> float:
+        """Total cross-zone RTT charged (attempts included)."""
+        return sum(h.rtt for h in self.hops)
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (
+            f"FederatedPlacement(function={self.invocation.function!r}, "
+            f"entry={self.entry_zone!r}, worker={self.worker!r}, "
+            f"forwarded={self.forwarded}, hops={len(self.hops)})"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ZoneStats:
+    """One zone's routing + load snapshot inside a federation."""
+
+    zone: str
+    routed: int
+    tapp_routed: int
+    vanilla_routed: int
+    failed: int
+    script_reloads: int
+    entered: int         # invocations whose entry zone this was
+    forwarded_in: int    # placements this zone accepted from elsewhere
+    forwarded_out: int   # entries this zone handed to another zone
+    workers: int
+    inflight: int
+
+
+@dataclasses.dataclass(frozen=True)
+class FederationStats:
+    """Federation snapshot: per-zone breakdown + forwarding economics.
+
+    ``aggregate`` sums the per-zone gateway counters into the familiar
+    :class:`PlatformStats` shape; note its ``routed``/``failed`` count
+    *evaluations* (a forwarded request is evaluated once per zone
+    tried), while ``unplaced`` counts *requests* no zone could take.
+    """
+
+    aggregate: PlatformStats
+    zones: Tuple[ZoneStats, ...]
+    forwards: int          # cross-zone hops that placed the request
+    forward_attempts: int  # all cross-zone hops tried (incl. failed)
+    unplaced: int          # requests that exhausted every allowed zone
+    cross_zone_rtt: float  # total RTT charged to hops (seconds)
+
+    def zone(self, name: str) -> ZoneStats:
+        for z in self.zones:
+            if z.zone == name:
+                return z
+        raise KeyError(name)
+
+
+class TappFederation(PlatformCore):
+    """A set of per-zone entrypoints over one shared platform core."""
+
+    def __init__(
+        self,
+        spec: FederationSpec,
+        *,
+        distribution: DistributionPolicy = DistributionPolicy.DEFAULT,
+        seed: Optional[int] = None,
+        compiled: bool = True,
+        policy: Optional[PolicyInput] = None,
+        strict_policies: bool = False,
+        max_policy_history: int = 8,
+    ) -> None:
+        if not isinstance(spec, FederationSpec):
+            raise TypeError(
+                "TappFederation takes a FederationSpec (zone → ClusterSpec "
+                "slices); wrap a flat ClusterSpec in a single zone, or use "
+                "TappPlatform for the single-entrypoint case"
+            )
+        if not spec.zones:
+            raise ValueError("federation spec declares no zones")
+        super().__init__(
+            spec.build(),
+            compiled=compiled,
+            strict_policies=strict_policies,
+            max_policy_history=max_policy_history,
+        )
+        self._spec = spec
+        self._distribution = distribution
+        # Every zone gateway gets the same seed: streams are independent
+        # per zone (each gateway owns its engine/RNG), and the single-zone
+        # federation consumes exactly the flat platform's stream.
+        self._zone_gateways: Dict[str, ZoneGateway] = {
+            zone: ZoneGateway(
+                self._watcher,
+                zone=zone,
+                distribution=distribution,
+                seed=seed,
+                compiled=compiled,
+            )
+            for zone in spec.zone_names
+        }
+        self._zone_order: Dict[str, Tuple[str, ...]] = {
+            zone: spec.zone_order_from(zone) for zone in spec.zone_names
+        }
+        self._entered: Dict[str, int] = {z: 0 for z in spec.zone_names}
+        self._forwarded_in: Dict[str, int] = {z: 0 for z in spec.zone_names}
+        self._forwarded_out: Dict[str, int] = {z: 0 for z in spec.zone_names}
+        self._forwards = 0
+        self._forward_attempts = 0
+        self._unplaced = 0
+        self._cross_zone_rtt = 0.0
+        if policy is not None:
+            self.apply_policy(policy, strict=strict_policies)
+
+    # -- entrypoint access -------------------------------------------------------
+
+    def _gateways(self) -> Tuple[ZoneGateway, ...]:
+        return tuple(self._zone_gateways[z] for z in self._spec.zone_names)
+
+    @property
+    def spec(self) -> FederationSpec:
+        return self._spec
+
+    @property
+    def zones(self) -> Tuple[str, ...]:
+        return self._spec.zone_names
+
+    def zone_gateway(self, zone: str) -> ZoneGateway:
+        """The entrypoint of one zone (read-mostly; tests and metrics)."""
+        return self._zone_gateways[zone]
+
+    def _resolve_entry(self, entry_zone: Optional[str]) -> str:
+        if entry_zone is None:
+            return self._spec.entry_zone
+        if entry_zone not in self._zone_gateways:
+            raise ValueError(
+                f"unknown entry zone {entry_zone!r}; federation zones are "
+                f"{list(self._spec.zone_names)}"
+            )
+        return entry_zone
+
+    # -- routing + forwarding ----------------------------------------------------
+
+    def route(
+        self,
+        invocation: Invocation,
+        *,
+        entry_zone: Optional[str] = None,
+        trace: bool = False,
+    ) -> Tuple[ScheduleDecision, Tuple[ForwardHop, ...]]:
+        """Route one invocation without admitting it.
+
+        Zone-local pass at the entry zone first; on failure, the
+        forwarding walk over :func:`forward_targets` — each target
+        zone's own gateway evaluates the request zone-locally, so the
+        forwarded decision consumes *that* zone's RNG stream/cursors.
+        Returns the final decision plus the hop record (failed forward
+        attempts included).
+        """
+        entry = self._resolve_entry(entry_zone)
+        self._entered[entry] += 1
+        return self._route_from(entry, invocation, trace)
+
+    def _route_from(
+        self, entry: str, invocation: Invocation, trace: bool
+    ) -> Tuple[ScheduleDecision, Tuple[ForwardHop, ...]]:
+        gateway = self._zone_gateways[entry]
+        cluster = self._watcher.cluster
+        decision = gateway.route(invocation, trace=trace, entry_zone=entry)
+        if decision.scheduled:
+            worker_zone = cluster.workers[decision.worker].zone
+            if worker_zone == entry:
+                return decision, ()
+            # A designated-controller block placed the work in its home
+            # zone directly: that is a cross-zone hop too, and it pays.
+            hop = ForwardHop(
+                entry, worker_zone, self._spec.rtt(entry, worker_zone), True
+            )
+            self._account_hops(entry, worker_zone, (hop,))
+            return decision, (hop,)
+
+        hops: List[ForwardHop] = []
+        for target in forward_targets(
+            self._watcher.script,
+            invocation.tag,
+            cluster,
+            entry,
+            self._zone_order[entry],
+        ):
+            target_gateway = self._zone_gateways.get(target)
+            if target_gateway is None:
+                continue  # a home zone outside the federation's entrypoints
+            forwarded = target_gateway.route(
+                invocation, trace=trace, entry_zone=target
+            )
+            if not forwarded.scheduled:
+                hop = ForwardHop(
+                    entry, target, self._spec.rtt(entry, target), False
+                )
+                hops.append(hop)
+                self._account_hops(entry, None, (hop,))
+                continue
+            taken = [
+                ForwardHop(entry, target, self._spec.rtt(entry, target), True)
+            ]
+            # The target zone's scheduler may itself place the work in a
+            # *third* zone (a designated block's tolerance restriction):
+            # that last leg is a chargeable hop too, and the work landed
+            # where the worker is — not where we forwarded the request.
+            worker_zone = cluster.workers[forwarded.worker].zone
+            if worker_zone != target:
+                taken.append(
+                    ForwardHop(
+                        target, worker_zone,
+                        self._spec.rtt(target, worker_zone), True,
+                    )
+                )
+            hops.extend(taken)
+            self._account_hops(entry, worker_zone, taken)
+            return forwarded, tuple(hops)
+        self._unplaced += 1
+        # Every allowed zone declined: report the entry zone's decision
+        # (its failure narrative is the one the caller entered through).
+        return decision, tuple(hops)
+
+    def _account_hops(
+        self,
+        entry: str,
+        placed_zone: Optional[str],
+        hops: Sequence[ForwardHop],
+    ) -> None:
+        """Charge a routing step's hops; ``placed_zone`` is where the work
+        actually landed (None: nothing placed). Zones added to the live
+        cluster after construction are counted too (``.get`` defaults),
+        though only spec-declared zones get a :class:`ZoneStats` row."""
+        for hop in hops:
+            self._forward_attempts += 1
+            self._cross_zone_rtt += hop.rtt
+        if placed_zone is not None:
+            self._forwards += 1
+            self._forwarded_out[entry] = (
+                self._forwarded_out.get(entry, 0) + 1
+            )
+            self._forwarded_in[placed_zone] = (
+                self._forwarded_in.get(placed_zone, 0) + 1
+            )
+
+    # -- unified invocation flow -------------------------------------------------
+
+    def invoke(
+        self,
+        function: Union[str, Invocation],
+        *,
+        entry_zone: Optional[str] = None,
+        tag: Optional[str] = None,
+        model_id: Optional[str] = None,
+        request_id: int = 0,
+        trace: bool = False,
+    ) -> FederatedPlacement:
+        """Route (zone-local first, forward per tolerance) **and** admit."""
+        invocation = self._coerce_invocation(function, tag, model_id,
+                                             request_id)
+        entry = self._resolve_entry(entry_zone)
+        self._entered[entry] += 1
+        decision, hops = self._route_from(entry, invocation, trace)
+        worker_ref = self._admit(invocation, decision)
+        return FederatedPlacement(
+            invocation, decision, worker_ref is not None, self._watcher,
+            self._ledger, entry, hops, worker_ref,
+        )
+
+    def invoke_batch(
+        self,
+        invocations: Iterable[Union[str, Invocation]],
+        *,
+        entry_zone: Optional[str] = None,
+        entry_zones: Optional[Sequence[Optional[str]]] = None,
+        trace: bool = False,
+        on_placement: Optional[Callable[[FederatedPlacement], None]] = None,
+    ) -> List[FederatedPlacement]:
+        """Invoke a batch, each item entering at its own zone.
+
+        ``entry_zones`` aligns with ``invocations`` (``None`` entries
+        fall back to ``entry_zone`` / the default entry); placements are
+        admitted in order, each before the next is routed, so results
+        are identical to a sequence of :meth:`invoke` calls — the same
+        contract as ``TappPlatform.invoke_batch``.
+        """
+        invs = [
+            inv if isinstance(inv, Invocation) else Invocation(function=inv)
+            for inv in invocations
+        ]
+        if entry_zones is not None and len(entry_zones) != len(invs):
+            raise ValueError(
+                f"entry_zones has {len(entry_zones)} entries for "
+                f"{len(invs)} invocations"
+            )
+        placements: List[FederatedPlacement] = []
+        for index, invocation in enumerate(invs):
+            zone = entry_zones[index] if entry_zones is not None else None
+            placement = self.invoke(
+                invocation, entry_zone=zone or entry_zone, trace=trace
+            )
+            placements.append(placement)
+            if on_placement is not None:
+                on_placement(placement)
+        return placements
+
+    # -- observability -----------------------------------------------------------
+
+    def explain(
+        self,
+        function: Union[str, Invocation],
+        *,
+        entry_zone: Optional[str] = None,
+        tag: Optional[str] = None,
+        model_id: Optional[str] = None,
+    ) -> FederationExplainReport:
+        """The federated "why": one typed report per zone visited.
+
+        Mirrors :meth:`route` — entry-zone pass, then the forwarding walk
+        until a zone accepts — but through each gateway's side-effect-free
+        ``probe``, so nothing is admitted, no stats move, and every
+        zone's RNG stream/cursors are restored.
+        """
+        invocation = self._coerce_invocation(function, tag, model_id)
+        entry = self._resolve_entry(entry_zone)
+        cluster = self._watcher.cluster
+        gateway = self._zone_gateways[entry]
+        decision = gateway.probe(invocation, entry_zone=entry)
+        hops = [
+            ZoneHopReport(
+                zone=entry, rtt=0.0, forwarded=False,
+                report=build_explain_report(invocation, decision),
+            )
+        ]
+        final = decision
+        if not decision.scheduled:
+            for target in forward_targets(
+                self._watcher.script, invocation.tag, cluster, entry,
+                self._zone_order[entry],
+            ):
+                target_gateway = self._zone_gateways.get(target)
+                if target_gateway is None:
+                    continue
+                probed = target_gateway.probe(invocation, entry_zone=target)
+                hops.append(
+                    ZoneHopReport(
+                        zone=target,
+                        rtt=self._spec.rtt(entry, target),
+                        forwarded=True,
+                        report=build_explain_report(invocation, probed),
+                    )
+                )
+                if probed.scheduled:
+                    final = probed
+                    break
+        placement_zone = None
+        forward_rtt = sum(h.rtt for h in hops)
+        if final.scheduled:
+            placement_zone = cluster.workers[final.worker].zone
+            # Mirror _route_from's charging exactly: the last leg from
+            # the zone that evaluated the request (the entry pass, or the
+            # last forwarding hop) to where the worker actually lives is
+            # a chargeable hop too — the designated cross-zone placement
+            # case, whichever zone's pass produced it.
+            evaluated_at = hops[-1].zone
+            if placement_zone != evaluated_at:
+                forward_rtt += self._spec.rtt(evaluated_at, placement_zone)
+        return FederationExplainReport(
+            invocation=invocation,
+            entry_zone=entry,
+            scheduled=final.scheduled,
+            worker=final.worker,
+            controller=final.controller,
+            placement_zone=placement_zone,
+            forward_rtt=forward_rtt,
+            hops=tuple(hops),
+        )
+
+    def prewarm(self) -> int:
+        """Warm every zone gateway's indexes (shared store: overlapping
+        entries are cache hits). Returns total block indexes touched."""
+        return sum(gw.prewarm() for gw in self._gateways())
+
+    def stats(self) -> FederationStats:
+        cluster = self._watcher.cluster
+        zone_rows: List[ZoneStats] = []
+        totals = {"routed": 0, "tapp": 0, "vanilla": 0, "failed": 0,
+                  "reloads": 0}
+        for zone in self._spec.zone_names:
+            gw_stats = self._zone_gateways[zone].stats
+            workers = [w for w in cluster.workers.values() if w.zone == zone]
+            zone_rows.append(
+                ZoneStats(
+                    zone=zone,
+                    routed=gw_stats.routed,
+                    tapp_routed=gw_stats.tapp_routed,
+                    vanilla_routed=gw_stats.vanilla_routed,
+                    failed=gw_stats.failed,
+                    script_reloads=gw_stats.script_reloads,
+                    entered=self._entered[zone],
+                    forwarded_in=self._forwarded_in[zone],
+                    forwarded_out=self._forwarded_out[zone],
+                    workers=len(workers),
+                    inflight=sum(w.inflight for w in workers),
+                )
+            )
+            totals["routed"] += gw_stats.routed
+            totals["tapp"] += gw_stats.tapp_routed
+            totals["vanilla"] += gw_stats.vanilla_routed
+            totals["failed"] += gw_stats.failed
+            totals["reloads"] += gw_stats.script_reloads
+        aggregate = self._platform_stats(
+            routed=totals["routed"],
+            tapp_routed=totals["tapp"],
+            vanilla_routed=totals["vanilla"],
+            failed=totals["failed"],
+            script_reloads=totals["reloads"],
+        )
+        return FederationStats(
+            aggregate=aggregate,
+            zones=tuple(zone_rows),
+            forwards=self._forwards,
+            forward_attempts=self._forward_attempts,
+            unplaced=self._unplaced,
+            cross_zone_rtt=self._cross_zone_rtt,
+        )

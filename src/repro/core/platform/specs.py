@@ -8,12 +8,21 @@ are frozen values, so a deployment can be permuted (the paper's
 redeploy-every-N-repetitions methodology), diffed, or embedded in a
 scenario table, and the *live* mutable state only ever exists behind the
 watcher.
+
+A :class:`FederationSpec` is the multi-zone sibling (PR 5): an ordered
+mapping of zone name → :class:`ClusterSpec` slice plus an inter-zone
+network model, which
+:class:`~repro.core.platform.federation.TappFederation` turns into one
+shared cluster with a per-zone gateway per slice. The network model is
+duck-typed — anything with ``get_rtt(a, b)`` works, notably the
+simulator's ``NetworkModel`` — so the platform layer never imports the
+simulator.
 """
 from __future__ import annotations
 
 import dataclasses
 import random
-from typing import Iterable, Mapping, Tuple, Union
+from typing import Iterable, Mapping, Optional, Tuple, Union
 
 from repro.core.scheduler.state import (
     ClusterState,
@@ -130,3 +139,142 @@ class ClusterSpec:
         for worker in self.workers:
             cluster.add_worker(worker.build())
         return cluster
+
+
+def _coerce_zone_slice(zone: str, spec) -> ClusterSpec:
+    """Coerce one zone's slice, pinning every member to the zone.
+
+    Members declared with the default zone are adopted into the
+    federation zone; an explicit *different* zone is a contradiction and
+    raises — a slice cannot smuggle workers into another zone.
+    """
+    if not isinstance(spec, ClusterSpec):
+        spec = ClusterSpec.of(**dict(spec))
+
+    def _pin(member):
+        if member.zone in ("default", zone):
+            return dataclasses.replace(member, zone=zone)
+        raise ValueError(
+            f"zone slice {zone!r} declares {member.name!r} with "
+            f"contradictory zone {member.zone!r}"
+        )
+
+    return ClusterSpec(
+        workers=tuple(_pin(w) for w in spec.workers),
+        controllers=tuple(_pin(c) for c in spec.controllers),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class FederationSpec:
+    """A multi-zone deployment: ordered zone → :class:`ClusterSpec` slices.
+
+    ``network`` is any object exposing ``get_rtt(zone_a, zone_b) ->
+    seconds`` (e.g. the simulator's ``NetworkModel``); it prices the
+    cross-zone forwarding hops and orders forward targets latency-first.
+    Without one, hops are free and forwarding follows declaration order.
+    ``default_entry`` names the zone ``invoke`` enters when the caller
+    does not say (defaults to the first declared zone).
+    """
+
+    zones: Tuple[Tuple[str, ClusterSpec], ...] = ()
+    network: Optional[object] = None
+    default_entry: Optional[str] = None
+
+    def __post_init__(self) -> None:
+        pairs = tuple((name, _coerce_zone_slice(name, spec))
+                      for name, spec in self.zones)
+        names = [name for name, _ in pairs]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate federation zone in {names}")
+        object.__setattr__(self, "zones", pairs)
+        if self.default_entry is not None and self.default_entry not in names:
+            raise ValueError(
+                f"default_entry {self.default_entry!r} is not a federation "
+                f"zone (have {names})"
+            )
+        if self.network is not None and not hasattr(self.network, "get_rtt"):
+            raise TypeError(
+                "network must expose get_rtt(zone_a, zone_b) (e.g. "
+                "repro.core.sim.NetworkModel)"
+            )
+
+    @classmethod
+    def of(
+        cls,
+        zones: Mapping[str, Union[ClusterSpec, Mapping]],
+        *,
+        network: Optional[object] = None,
+        default_entry: Optional[str] = None,
+    ) -> "FederationSpec":
+        """Build from a zone-name mapping (insertion order = zone order)."""
+        return cls(
+            zones=tuple(zones.items()),
+            network=network,
+            default_entry=default_entry,
+        )
+
+    @property
+    def zone_names(self) -> Tuple[str, ...]:
+        return tuple(name for name, _ in self.zones)
+
+    @property
+    def entry_zone(self) -> str:
+        """The zone ``invoke`` enters when the caller does not specify."""
+        if not self.zones:
+            raise ValueError("federation spec declares no zones")
+        return self.default_entry or self.zones[0][0]
+
+    def get(self, zone: str) -> ClusterSpec:
+        for name, spec in self.zones:
+            if name == zone:
+                return spec
+        raise KeyError(zone)
+
+    def merged(self) -> ClusterSpec:
+        """The whole federation as one flat deployment, in zone order."""
+        return ClusterSpec(
+            workers=tuple(w for _, s in self.zones for w in s.workers),
+            controllers=tuple(c for _, s in self.zones for c in s.controllers),
+        )
+
+    def build(self) -> ClusterState:
+        """Materialise the shared live cluster state of all zones."""
+        return self.merged().build()
+
+    def shuffled(self, seed: int) -> "FederationSpec":
+        """Permute worker registration order *within* each zone slice.
+
+        Zone membership is structural here, so the paper's
+        redeploy-permutation methodology applies per slice; one seed
+        permutes every slice deterministically.
+        """
+        rng = random.Random(seed)
+        shuffled = []
+        for name, spec in self.zones:
+            workers = list(spec.workers)
+            rng.shuffle(workers)
+            shuffled.append(
+                (name, dataclasses.replace(spec, workers=tuple(workers)))
+            )
+        return dataclasses.replace(self, zones=tuple(shuffled))
+
+    def rtt(self, zone_a: str, zone_b: str) -> float:
+        """Inter-zone RTT in seconds (0.0 without a network model)."""
+        if self.network is None:
+            return 0.0
+        return float(self.network.get_rtt(zone_a, zone_b))
+
+    def zone_order_from(self, entry: str) -> Tuple[str, ...]:
+        """Every *other* zone, nearest-first from ``entry``.
+
+        Ties (and the no-network case) fall back to declaration order —
+        the latency-aware forwarding order of this entrypoint.
+        """
+        others = [
+            (self.rtt(entry, name), index, name)
+            for index, name in enumerate(self.zone_names)
+            if name != entry
+        ]
+        others.sort()
+        return tuple(name for _, _, name in others)

@@ -33,7 +33,12 @@ from repro.core.scheduler.engine import (
     TappEngine,
     TraceEvent,
 )
-from repro.core.scheduler.gateway import Gateway, GatewayStats
+from repro.core.scheduler.gateway import (
+    Gateway,
+    GatewayStats,
+    ZoneGateway,
+    forward_targets,
+)
 from repro.core.scheduler.state import (
     ClusterState,
     ControllerState,
@@ -83,12 +88,14 @@ __all__ = [
     "Watcher",
     "WorkerState",
     "WorkerView",
+    "ZoneGateway",
     "cached_view_entry",
     "compile_spec",
     "constraint_reason",
     "coprime_order",
     "coprime_order_cached",
     "distribution_view",
+    "forward_targets",
     "iter_ordered",
     "iter_random",
     "make_cluster",

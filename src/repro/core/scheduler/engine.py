@@ -40,6 +40,21 @@ seed; ``tests/test_scheduler_compile.py`` property-tests this over
 randomized scripts and clusters. Tracing defaults to **off**: the sim and
 serving hot loops pay nothing for :class:`TraceEvent` construction, while
 tests and observability pass ``trace=True`` and get the identical trace.
+
+**Entry zones (federation, PR 5).** ``schedule(..., entry_zone=Z)``
+evaluates the policy as zone ``Z``'s semi-autonomous scheduler sees it:
+controller-less blocks round-robin only over ``Z``'s controllers with
+workers restricted to ``Z``. Designated-controller blocks depend on the
+clause's ``topology_tolerance``: ``none``/``same`` pin candidates to
+the designated controller's home zone (routing *to* the home is the
+script's explicit intent and always allowed; executing outside it never
+is), while ``all`` evaluates under the entry restriction like any other
+block — the federation's forwarding walk covers the rest of the
+cluster. Block-level restrictions (the pin, or the tolerance fallback
+zone) take precedence over the entry restriction. With
+``entry_zone=None`` (the default) evaluation is exactly the flat
+single-entry behaviour of PR 1–4; both execution paths consume identical
+RNG draws and emit identical traces either way.
 """
 from __future__ import annotations
 
@@ -183,11 +198,20 @@ class TappEngine:
         cluster: ClusterState,
         *,
         trace: bool = False,
+        entry_zone: Optional[str] = None,
     ) -> ScheduleDecision:
-        """Resolve one invocation to a worker placement."""
+        """Resolve one invocation to a worker placement.
+
+        ``entry_zone`` evaluates the policy zone-locally (see the module
+        docstring): ``None`` keeps the flat single-entry semantics.
+        """
         if self.compiled:
-            return self._schedule_compiled(invocation, script, cluster, trace)
-        return self._schedule_interpreted(invocation, script, cluster, trace)
+            return self._schedule_compiled(
+                invocation, script, cluster, trace, entry_zone
+            )
+        return self._schedule_interpreted(
+            invocation, script, cluster, trace, entry_zone
+        )
 
     def schedule_batch(
         self,
@@ -196,6 +220,7 @@ class TappEngine:
         cluster: ClusterState,
         *,
         trace: bool = False,
+        entry_zone: Optional[str] = None,
         on_decision: Optional[OnDecision] = None,
     ) -> List[ScheduleDecision]:
         """Resolve a batch of invocations against one cluster snapshot.
@@ -211,7 +236,10 @@ class TappEngine:
             self.compiled_plan(script)  # hoist compilation out of the loop
         decisions: List[ScheduleDecision] = []
         for invocation in invocations:
-            decision = self.schedule(invocation, script, cluster, trace=trace)
+            decision = self.schedule(
+                invocation, script, cluster, trace=trace,
+                entry_zone=entry_zone,
+            )
             if on_decision is not None:
                 on_decision(invocation, decision)
             decisions.append(decision)
@@ -259,6 +287,7 @@ class TappEngine:
         script: Optional[TappScript],
         cluster: ClusterState,
         trace: bool,
+        entry_zone: Optional[str] = None,
     ) -> ScheduleDecision:
         decision = ScheduleDecision(outcome=Outcome.FAILED)
         tr = decision.trace if trace else None
@@ -294,7 +323,8 @@ class TappEngine:
 
         return self._c_tag(
             invocation, ctag, plan, cluster, decision, tr,
-            is_fallback=False, zone_override=None,
+            is_fallback=False, zone_override=entry_zone,
+            entry_zone=entry_zone,
         )
 
     def _c_tag(
@@ -308,6 +338,7 @@ class TappEngine:
         *,
         is_fallback: bool,
         zone_override: Optional[str],
+        entry_zone: Optional[str] = None,
     ) -> ScheduleDecision:
         decision.tag = ctag.tag
         decision.used_default_fallback = is_fallback
@@ -326,7 +357,7 @@ class TappEngine:
         ):
             placed = self._c_block(
                 invocation, cblock, block_index, cluster, decision, tr,
-                zone_override,
+                zone_override, entry_zone,
             )
             if placed is not None:
                 controller, worker = placed
@@ -366,6 +397,7 @@ class TappEngine:
                 return self._c_tag(
                     invocation, default_tag, plan, cluster, decision, tr,
                     is_fallback=True, zone_override=sticky_zone,
+                    entry_zone=entry_zone,
                 )
             if tr is not None:
                 tr.append(
@@ -386,11 +418,22 @@ class TappEngine:
         decision: ScheduleDecision,
         tr: Optional[List[TraceEvent]],
         zone_override: Optional[str],
+        entry_zone: Optional[str] = None,
     ) -> Optional[Tuple[str, str]]:
         if cblock.controller is None:
             # No controller clause: the gateway tries the available
             # controllers starting at the round-robin cursor (§5.4.1).
-            controllers = [c for c in cluster.controllers.values() if c.available]
+            # With an entry zone, only that zone's controllers take part
+            # (the per-zone gateway hands work to its own zone first).
+            if entry_zone is None:
+                controllers = [
+                    c for c in cluster.controllers.values() if c.available
+                ]
+            else:
+                controllers = [
+                    c for c in cluster.controllers.values()
+                    if c.available and c.zone == entry_zone
+                ]
             if not controllers:
                 if tr is not None:
                     tr.append(
@@ -421,7 +464,7 @@ class TappEngine:
             return None
 
         controller, zone_restriction = self._c_resolve_controller(
-            cblock, block_index, cluster, tr
+            cblock, block_index, cluster, tr, entry_zone
         )
         if controller is None:
             return None
@@ -437,6 +480,7 @@ class TappEngine:
         block_index: int,
         cluster: ClusterState,
         tr: Optional[List[TraceEvent]],
+        entry_zone: Optional[str] = None,
     ) -> Tuple[Optional[ControllerState], Optional[str]]:
         clause = cblock.controller
         assert clause is not None
@@ -447,13 +491,28 @@ class TappEngine:
                     TraceEvent("controller", f"block[{block_index}]: {text}")
                 )
 
+        tol = clause.topology_tolerance
         designated = cluster.controllers.get(clause.label)
         if designated is not None and designated.available:
+            # Entry-zone (federated) evaluation: tolerance none/same means
+            # the work must *execute* in the designated controller's home
+            # zone, so the block's candidates are pinned to it — the
+            # guarantee "tolerance none never places outside its zone"
+            # must hold no matter which zone the request entered at.
+            # Flat evaluation (entry_zone=None) keeps the paper's §3.3
+            # semantics, where tolerance only matters when the designated
+            # controller is unavailable.
+            if entry_zone is not None and tol is not TopologyTolerance.ALL:
+                note(
+                    f"designated controller {clause.label!r} available "
+                    f"(tolerance={tol.value} → workers pinned to zone "
+                    f"{designated.zone!r})"
+                )
+                return designated, designated.zone
             note(f"designated controller {clause.label!r} available")
             return designated, None
 
         designated_zone = designated.zone if designated is not None else None
-        tol = clause.topology_tolerance
         if tol is TopologyTolerance.NONE:
             note(
                 f"controller {clause.label!r} unavailable, tolerance=none → "
@@ -672,6 +731,7 @@ class TappEngine:
         script: Optional[TappScript],
         cluster: ClusterState,
         trace: bool,
+        entry_zone: Optional[str] = None,
     ) -> ScheduleDecision:
         decision = ScheduleDecision(outcome=Outcome.FAILED)
         tr = decision.trace if trace else None
@@ -705,7 +765,10 @@ class TappEngine:
                 decision.failed_by_policy = True
                 return decision
 
-        return self._evaluate_tag(invocation, policy, script, cluster, decision, tr)
+        return self._evaluate_tag(
+            invocation, policy, script, cluster, decision, tr,
+            zone_override=entry_zone, entry_zone=entry_zone,
+        )
 
     # -- tag evaluation -------------------------------------------------------
 
@@ -720,6 +783,7 @@ class TappEngine:
         *,
         is_fallback: bool = False,
         zone_override: Optional[str] = None,
+        entry_zone: Optional[str] = None,
     ) -> ScheduleDecision:
         decision.tag = policy.tag
         decision.used_default_fallback = is_fallback
@@ -742,7 +806,7 @@ class TappEngine:
         for block_index, block in blocks:
             placed = self._evaluate_block(
                 invocation, block, block_index, cluster, decision, tr,
-                zone_override=zone_override,
+                zone_override=zone_override, entry_zone=entry_zone,
             )
             if placed is not None:
                 controller, worker = placed
@@ -794,6 +858,7 @@ class TappEngine:
                     tr,
                     is_fallback=True,
                     zone_override=sticky_zone,
+                    entry_zone=entry_zone,
                 )
             if tr is not None:
                 tr.append(
@@ -817,6 +882,7 @@ class TappEngine:
         tr: Optional[List[TraceEvent]],
         *,
         zone_override: Optional[str] = None,
+        entry_zone: Optional[str] = None,
     ) -> Optional[Tuple[str, str]]:
         if block.controller is None:
             # No controller clause: the gateway tries the available
@@ -825,7 +891,18 @@ class TappEngine:
             # gateway, which passes the invocation to the next controller
             # (paper §5.4.1: the isolated policy "returns control to Nginx,
             # which passes the invocation to a different controller").
-            controllers = [c for c in cluster.controllers.values() if c.available]
+            # With an entry zone, only that zone's controllers take part
+            # (mirrors the compiled path exactly — same lists, same cursor
+            # arithmetic, same RNG consumption).
+            if entry_zone is None:
+                controllers = [
+                    c for c in cluster.controllers.values() if c.available
+                ]
+            else:
+                controllers = [
+                    c for c in cluster.controllers.values()
+                    if c.available and c.zone == entry_zone
+                ]
             if not controllers:
                 if tr is not None:
                     tr.append(
@@ -858,7 +935,7 @@ class TappEngine:
             return None
 
         controller, zone_restriction, note = self._resolve_controller(
-            block, cluster
+            block, cluster, entry_zone
         )
         if tr is not None:
             tr.append(TraceEvent("controller", f"block[{block_index}]: {note}"))
@@ -926,7 +1003,10 @@ class TappEngine:
         return None
 
     def _resolve_controller(
-        self, block: Block, cluster: ClusterState
+        self,
+        block: Block,
+        cluster: ClusterState,
+        entry_zone: Optional[str] = None,
     ) -> Tuple[Optional[ControllerState], Optional[str], str]:
         """Return (controller, zone_restriction, trace note)."""
         if block.controller is None:
@@ -937,13 +1017,23 @@ class TappEngine:
 
         clause = block.controller
         assert clause is not None
+        tol = clause.topology_tolerance
         designated = cluster.controllers.get(clause.label)
         if designated is not None and designated.available:
+            # Mirrors the compiled path: federated entry evaluation pins
+            # tolerance none/same candidates to the designated home zone.
+            if entry_zone is not None and tol is not TopologyTolerance.ALL:
+                return (
+                    designated,
+                    designated.zone,
+                    f"designated controller {clause.label!r} available "
+                    f"(tolerance={tol.value} → workers pinned to zone "
+                    f"{designated.zone!r})",
+                )
             return designated, None, f"designated controller {clause.label!r} available"
 
         # Designated controller missing/unavailable → topology_tolerance.
         designated_zone = designated.zone if designated is not None else None
-        tol = clause.topology_tolerance
         if tol is TopologyTolerance.NONE:
             return (
                 None,

@@ -11,21 +11,38 @@ Caching model (paper §4.3/§4.5): the gateway keeps a local copy of the
 script and the label mapping, and re-pulls from the watcher only when the
 watcher bumps a version — mirroring the NFS-store + cache-invalidation
 design.
+
+**Federation (PR 5).** A :class:`ZoneGateway` is a gateway bound to one
+zone: it routes with ``entry_zone`` set, so the evaluation is the
+semi-autonomous per-zone scheduler of the Archipelago shape
+(arXiv:1911.09849) — zone-local controllers and workers first. When the
+zone-local pass fails, :func:`forward_targets` derives, from the
+policy's ``topology_tolerance`` clauses, which zones the invocation may
+be forwarded to (and in what order); the federation façade walks them.
+All zone gateways of a federation share one watcher and therefore one
+epoch-cached view/index store — the per-zone candidate indexes are just
+the ``zone_restriction``-keyed entries of that store.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import List, Optional, Sequence
 
 from repro.core.scheduler.engine import (
     Invocation,
     ScheduleDecision,
     TappEngine,
 )
+from repro.core.scheduler.state import ClusterState
 from repro.core.scheduler.topology import DistributionPolicy
 from repro.core.scheduler.vanilla import VanillaScheduler
 from repro.core.scheduler.watcher import Watcher
-from repro.core.tapp.ast import TappScript
+from repro.core.tapp.ast import (
+    DEFAULT_TAG,
+    FollowupKind,
+    TappScript,
+    TopologyTolerance,
+)
 
 
 @dataclasses.dataclass
@@ -72,17 +89,24 @@ class Gateway:
     # -- routing --------------------------------------------------------------------
 
     def route(
-        self, invocation: Invocation, *, trace: bool = False
+        self,
+        invocation: Invocation,
+        *,
+        trace: bool = False,
+        entry_zone: Optional[str] = None,
     ) -> ScheduleDecision:
         self.stats.routed += 1
         script = self._script()
         cluster = self._watcher.cluster
         if script is None or not script.tags:
-            decision = self._vanilla.schedule(invocation, cluster, trace=trace)
+            decision = self._vanilla.schedule(
+                invocation, cluster, trace=trace, entry_zone=entry_zone
+            )
             self.stats.vanilla_routed += 1
         else:
             decision = self._engine.schedule(
-                invocation, script, cluster, trace=trace
+                invocation, script, cluster, trace=trace,
+                entry_zone=entry_zone,
             )
             self.stats.tapp_routed += 1
         if not decision.scheduled:
@@ -101,7 +125,7 @@ class Gateway:
         if self._engine.compiled:
             self._engine.adopt_plan(script, plan)
 
-    def prewarm(self) -> int:
+    def prewarm(self, *, extra_restrictions: Sequence[str] = ()) -> int:
         """Build the plan's candidate indexes against the live topology.
 
         The indexed fast path builds views, block indexes, and
@@ -112,9 +136,12 @@ class Gateway:
         ``topology_tolerance: same`` clause (or its sticky followup)
         routes through when its designated controller is unavailable —
         so the next decision is index-warm on the unrestricted paths and
-        the statically-knowable restricted ones. Returns the number of
-        block indexes touched (0 when there is no script or on the
-        interpreter path, which has no indexes).
+        the statically-knowable restricted ones. ``extra_restrictions``
+        adds further zone restrictions to warm (a :class:`ZoneGateway`
+        passes its own zone — the entry-local view its every decision
+        starts from). Returns the number of block indexes touched (0 when
+        there is no script or on the interpreter path, which has no
+        indexes).
         """
         if not self._engine.compiled:
             return 0
@@ -122,14 +149,13 @@ class Gateway:
         if script is None or not script.tags:
             return 0
         from repro.core.scheduler.topology import cached_view_entry
-        from repro.core.tapp.ast import TopologyTolerance
 
         cluster = self._watcher.cluster
         plan = self._engine.compiled_plan(script)
         # Zone restrictions that evaluation can impose: a tolerance=same
         # clause whose designated controller is known pins candidates to
         # that controller's zone (directly, or via the sticky followup).
-        sticky_zones = set()
+        sticky_zones = set(extra_restrictions)
         for ctag in plan.tags.values():
             for cblock in ctag.blocks:
                 clause = cblock.controller
@@ -156,7 +182,9 @@ class Gateway:
                         warmed += 1
         return warmed
 
-    def probe(self, invocation: Invocation) -> ScheduleDecision:
+    def probe(
+        self, invocation: Invocation, *, entry_zone: Optional[str] = None
+    ) -> ScheduleDecision:
         """Evaluate an invocation with a full trace, without counting it.
 
         The observability path behind ``TappPlatform.explain``: identical
@@ -173,12 +201,17 @@ class Gateway:
         if script is None or not script.tags:
             state = self._vanilla.scheduling_state()
             try:
-                return self._vanilla.schedule(invocation, cluster, trace=True)
+                return self._vanilla.schedule(
+                    invocation, cluster, trace=True, entry_zone=entry_zone
+                )
             finally:
                 self._vanilla.restore_scheduling_state(state)
         state = self._engine.scheduling_state()
         try:
-            return self._engine.schedule(invocation, script, cluster, trace=True)
+            return self._engine.schedule(
+                invocation, script, cluster, trace=True,
+                entry_zone=entry_zone,
+            )
         finally:
             self._engine.restore_scheduling_state(state)
 
@@ -187,6 +220,7 @@ class Gateway:
         invocations,
         *,
         trace: bool = False,
+        entry_zone: Optional[str] = None,
         on_decision=None,
     ):
         """Route a batch of invocations against one script/snapshot pull.
@@ -215,11 +249,132 @@ class Gateway:
             decisions = []
             for invocation in invocations:
                 decision = self._vanilla.schedule(
-                    invocation, cluster, trace=trace
+                    invocation, cluster, trace=trace, entry_zone=entry_zone
                 )
                 _account(invocation, decision)
                 decisions.append(decision)
             return decisions
         return self._engine.schedule_batch(
-            invocations, script, cluster, trace=trace, on_decision=_account
+            invocations, script, cluster, trace=trace,
+            entry_zone=entry_zone, on_decision=_account,
         )
+
+
+class ZoneGateway(Gateway):
+    """A gateway bound to one federation zone (a per-zone entrypoint).
+
+    Routing defaults to the zone-local pass: controller-less blocks use
+    only this zone's controllers and candidate workers are restricted to
+    this zone, while designated-controller blocks follow their
+    ``topology_tolerance`` — ``none``/``same`` pinned to the designated
+    home zone, ``all`` under the entry restriction (see the engine's
+    entry-zone contract). The federation
+    façade calls :meth:`route_local` first and walks
+    :func:`forward_targets` on failure; each target zone's own
+    ``ZoneGateway`` evaluates the forwarded invocation, so every zone's
+    RNG stream and round-robin cursors stay independent — Archipelago's
+    semi-autonomous per-entrypoint schedulers.
+    """
+
+    def __init__(
+        self,
+        watcher: Watcher,
+        *,
+        zone: str,
+        distribution: DistributionPolicy = DistributionPolicy.DEFAULT,
+        seed: Optional[int] = None,
+        compiled: bool = True,
+    ) -> None:
+        super().__init__(
+            watcher, distribution=distribution, seed=seed, compiled=compiled
+        )
+        self.zone = zone
+
+    def route_local(
+        self, invocation: Invocation, *, trace: bool = False
+    ) -> ScheduleDecision:
+        """Route with this gateway's zone as the entry zone."""
+        return self.route(invocation, trace=trace, entry_zone=self.zone)
+
+    def probe_local(self, invocation: Invocation) -> ScheduleDecision:
+        """Side-effect-free traced evaluation of the zone-local pass."""
+        return self.probe(invocation, entry_zone=self.zone)
+
+    def prewarm(self, *, extra_restrictions: Sequence[str] = ()) -> int:
+        """Warm indexes including this zone's entry-local restricted view."""
+        return super().prewarm(
+            extra_restrictions=(self.zone, *extra_restrictions)
+        )
+
+
+def forward_targets(
+    script: Optional[TappScript],
+    tag: Optional[str],
+    cluster: ClusterState,
+    entry_zone: str,
+    zone_order: Sequence[str],
+) -> List[str]:
+    """Ordered candidate zones for forwarding a zone-locally-failed request.
+
+    Implements the federation reading of ``topology_tolerance``: the
+    designated controller's zone is the function's *home*, and the
+    tolerance bounds how far from home the invocation may run —
+
+    * ``none``  → only the home zone (routing a request *to* its
+      designated home is designated routing, not tolerance-governed
+      forwarding, so the home stays reachable from any entrypoint);
+    * ``same``  → only the home zone (other controllers may manage the
+      scheduling there, which the engine's zone-restriction fallback
+      already implements);
+    * ``all``   → the home zone first, then every other zone;
+    * no controller clause → no home: any zone may take the work.
+
+    Targets are emitted in block order (designated homes first), then —
+    when some block permits unrestricted forwarding — the remaining
+    zones of ``zone_order`` (the federation's latency order from the
+    entry zone). The entry zone itself is excluded (its pass already
+    failed), as are duplicates. A ``followup: default`` tag also
+    contributes the default tag's targets, since the forwarded
+    evaluation re-runs the followup chain. With no script (vanilla
+    fallback) every other zone is a target in latency order: the
+    baseline is topology-blind, so nothing bounds the forwarding.
+    """
+    targets: List[str] = []
+    seen = {entry_zone}
+
+    def _push(zone: Optional[str]) -> None:
+        if zone is not None and zone not in seen:
+            seen.add(zone)
+            targets.append(zone)
+
+    if script is None or not script.tags:
+        for zone in zone_order:
+            _push(zone)
+        return targets
+
+    policy = script.get(tag or DEFAULT_TAG) or script.default
+    if policy is None:
+        return targets  # failed by policy; nothing to forward to
+
+    unrestricted = False
+    walked = set()
+    while policy is not None and policy.tag not in walked:
+        walked.add(policy.tag)
+        for block in policy.blocks:
+            clause = block.controller
+            if clause is None:
+                unrestricted = True
+                continue
+            designated = cluster.controllers.get(clause.label)
+            if designated is not None:
+                _push(designated.zone)
+            if clause.topology_tolerance is TopologyTolerance.ALL:
+                unrestricted = True
+        if policy.effective_followup is FollowupKind.DEFAULT:
+            policy = script.default
+        else:
+            policy = None
+    if unrestricted:
+        for zone in zone_order:
+            _push(zone)
+    return targets

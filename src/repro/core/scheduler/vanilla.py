@@ -48,7 +48,12 @@ class VanillaScheduler:
         cluster: ClusterState,
         *,
         trace: bool = False,
+        entry_zone: Optional[str] = None,
     ) -> ScheduleDecision:
+        """Vanilla co-prime schedule; ``entry_zone`` restricts the worker
+        pool to one zone (the federation's policy-free zone-local pass) —
+        vanilla stays topology-blind *within* that pool, exactly as the
+        baseline is zone-blind over the whole cluster when unset."""
         decision = ScheduleDecision(outcome=Outcome.FAILED, tag=None)
         tr = decision.trace if trace else None
         controllers = [c for c in cluster.controllers.values() if c.available]
@@ -66,7 +71,10 @@ class VanillaScheduler:
                 )
             )
 
-        workers: List[WorkerState] = list(cluster.workers.values())
+        workers: List[WorkerState] = [
+            w for w in cluster.workers.values()
+            if entry_zone is None or w.zone == entry_zone
+        ]
         if not workers:
             if tr is not None:
                 tr.append(TraceEvent("candidate", "no workers"))

@@ -76,21 +76,45 @@ class Watcher:
             self._cluster.add_worker(worker)
         self._notify("topology")
 
-    def deregister_worker(self, name: str) -> None:
-        """A worker leaves (scale-down, failure eviction)."""
+    def deregister_worker(self, name: str) -> Optional[WorkerState]:
+        """A worker leaves (scale-down, failure eviction).
+
+        Removal goes through the drain path: health and reachability are
+        cleared *before* the membership change, all under one lock, so no
+        admission can race the removal (``record_admission`` rejects
+        unreachable workers), and the single epoch bump of the removal
+        invalidates every cached view. Returns the removed state — its
+        ``inflight`` count is the number of admission tickets that died
+        with the worker, which the platform ledger reconciles as
+        evictions (nothing strands).
+        """
         with self._lock:
-            self._cluster.remove_worker(name)
+            worker = self._cluster.workers.get(name)
+            if worker is not None:
+                worker.healthy = False
+                worker.reachable = False
+                self._cluster.remove_worker(name)
         self._notify("topology")
+        return worker
 
     def register_controller(self, controller: ControllerState) -> None:
         with self._lock:
             self._cluster.add_controller(controller)
         self._notify("topology")
 
-    def deregister_controller(self, name: str) -> None:
+    def deregister_controller(self, name: str) -> Optional[ControllerState]:
+        """A controller leaves; drained symmetrically to workers (marked
+        unavailable before removal, one lock, one epoch bump). Its
+        per-worker ``inflight_by`` entitlement entries are retired by the
+        normal completion path."""
         with self._lock:
-            self._cluster.remove_controller(name)
+            controller = self._cluster.controllers.get(name)
+            if controller is not None:
+                controller.healthy = False
+                controller.reachable = False
+                self._cluster.remove_controller(name)
         self._notify("topology")
+        return controller
 
     def update_worker(self, name: str, **fields) -> None:
         """Apply a heartbeat (load/health/residency update).
@@ -123,6 +147,27 @@ class Watcher:
                 # Load-only update: candidate indexes refresh this worker's
                 # availability bits incrementally instead of rebuilding.
                 self._cluster.note_worker_load(name)
+
+    def update_controller(self, name: str, **fields) -> None:
+        """Apply a controller transition (health / reachability).
+
+        Controller availability is read live by the engine's resolution
+        paths, but the epoch is bumped conservatively (like worker
+        health) so any future view that filters on it stays safe.
+        """
+        with self._lock:
+            controller = self._cluster.controllers.get(name)
+            if controller is None:
+                raise KeyError(f"unknown controller {name!r}")
+            for key, value in fields.items():
+                if not hasattr(controller, key):
+                    raise AttributeError(
+                        f"ControllerState has no field {key!r}"
+                    )
+                setattr(controller, key, value)
+            self._cluster.version += 1
+            self._cluster.bump_topology_epoch()
+        self._notify("topology")
 
     def mark_unreachable(self, name: str) -> None:
         self.update_worker(name, reachable=False)
@@ -162,10 +207,13 @@ class Watcher:
 
     def record_admission(
         self, name: str, controller: str, function: str = ""
-    ) -> None:
+    ) -> WorkerState:
         """Record one admitted invocation (raises ``KeyError`` for an
         unknown worker, ``ValueError`` for an unreachable one — the
-        preliminary condition of every policy, paper §3.3)."""
+        preliminary condition of every policy, paper §3.3). Returns the
+        live worker the ticket was taken on: completion paths pass it
+        back as ``expected`` so a ticket can never retire against a
+        *different* worker that later re-used the name."""
         cluster = self._cluster
         with self._lock:
             worker = cluster.workers[name]
@@ -185,6 +233,7 @@ class Watcher:
                 worker.capacity_used_pct = 100.0
             cluster.version += 1
             cluster.note_worker_load(name)
+            return worker
 
     def record_completion(
         self,
@@ -193,11 +242,22 @@ class Watcher:
         function: str = "",
         *,
         slow: bool = False,
-    ) -> None:
+        expected: Optional[WorkerState] = None,
+    ) -> bool:
+        """Retire one admission ticket; returns whether a live ticket was
+        actually released (``False`` when the worker was evicted while the
+        work ran — its tickets were already reconciled at removal).
+        ``expected`` is the worker the admission was recorded on: if a
+        *different* worker has since re-used the name, the ticket is NOT
+        released against it (it died with the original and was reconciled
+        at deregistration), keeping the replacement's counters honest.
+        """
         with self._lock:
             worker = self._cluster.workers.get(name)
             if worker is None:
-                return  # worker evicted while running; nothing to release
+                return False  # worker evicted while running; ticket gone
+            if expected is not None and worker is not expected:
+                return False  # name re-used by a different worker
             worker.inflight = max(0, worker.inflight - 1)
             by = worker.inflight_by
             by[controller] = max(0, by.get(controller, 1) - 1)
@@ -221,6 +281,7 @@ class Watcher:
                 )
             self._cluster.version += 1
             self._cluster.note_worker_load(name)
+        return True
 
     # -- script store (live reload, §4.5) ---------------------------------------
 

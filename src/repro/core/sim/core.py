@@ -31,7 +31,7 @@ import statistics
 import warnings
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
-from repro.core.platform import Placement, TappPlatform
+from repro.core.platform import Placement, TappFederation, TappPlatform
 from repro.core.scheduler.engine import Invocation, ScheduleDecision
 from repro.core.scheduler.state import ClusterState
 from repro.core.scheduler.vanilla import VanillaScheduler
@@ -105,6 +105,10 @@ class WorkloadSpec:
     requests_per_user: int = 200
     ramp_up: float = 10.0                 # thread-start stagger window (s)
     pause: float = 0.0                    # think time between requests (s)
+    # Federation zone these users' requests enter at (None: the platform's
+    # single gateway / the federation's default entry). Multi-entry
+    # workloads mix specs with different entry zones.
+    entry_zone: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -119,6 +123,12 @@ class RequestRecord:
     scheduled: bool = False
     error: Optional[str] = None
     cold: bool = False
+    # Federation bookkeeping: which zone the request entered at, whether
+    # it was forwarded out of it, and the total cross-zone RTT its hops
+    # (failed attempts included) were charged.
+    entry_zone: Optional[str] = None
+    forwarded: bool = False
+    forward_rtt: float = 0.0
 
     @property
     def latency(self) -> float:
@@ -174,6 +184,11 @@ class SimResult:
             "max": lats_sorted[-1],
         }
 
+    @property
+    def n_forwarded(self) -> int:
+        """Requests whose placement left their entry zone (federation)."""
+        return sum(1 for r in self.records if r.forwarded)
+
     def per_worker_counts(self) -> Dict[str, int]:
         counts: Dict[str, int] = {}
         for r in self.records:
@@ -217,15 +232,20 @@ class Simulation:
 
     The primary constructor takes a :class:`TappPlatform` — the simulator
     drives the exact invoke→admit→complete flow the serving runtime uses.
-    The seed-era ``Simulation(watcher, scheduler_fn, ...)`` signature is
-    kept as a deprecated shim: the watcher is wrapped in a platform, the
-    scheduler function only overrides routing, and admissions still flow
-    through the platform.
+    A :class:`TappFederation` works the same way and additionally honours
+    each :class:`WorkloadSpec`'s ``entry_zone``: requests enter at their
+    zone's gateway, forwarded placements land wherever the tolerance
+    allows, and failed forward attempts are charged their cross-zone RTT
+    on top of the usual gateway→controller→worker hops. The seed-era
+    ``Simulation(watcher, scheduler_fn, ...)`` signature is kept as a
+    deprecated shim: the watcher is wrapped in a platform, the scheduler
+    function only overrides routing, and admissions still flow through
+    the platform.
     """
 
     def __init__(
         self,
-        platform: "TappPlatform | Watcher",
+        platform: "TappPlatform | TappFederation | Watcher",
         *args,
         network: Optional[NetworkModel] = None,
         profiles: Optional[Mapping[str, FunctionProfile]] = None,
@@ -295,6 +315,19 @@ class Simulation:
     # -- main loop ---------------------------------------------------------------
 
     def run(self, workload: Sequence[WorkloadSpec]) -> SimResult:
+        if not self._federated:
+            zoned = sorted(
+                {s.function for s in workload if s.entry_zone is not None}
+            )
+            if zoned:
+                # A flat platform has one gateway: silently routing these
+                # through it while charging entry-zone RTTs would skew
+                # every latency — refuse instead.
+                raise ValueError(
+                    f"workloads {zoned} set entry_zone but the platform is "
+                    f"not a TappFederation; drop entry_zone or pass a "
+                    f"federation"
+                )
         rid = itertools.count()
         for spec in workload:
             profile = self.profiles[spec.function]
@@ -345,11 +378,16 @@ class Simulation:
         self, time: float, payload: Dict
     ) -> Tuple[Invocation, RequestRecord]:
         profile: FunctionProfile = payload["profile"]
+        spec: WorkloadSpec = payload["spec"]
         record = RequestRecord(
             request_id=payload["rid"],
             function=profile.name,
             user=payload["user"],
             submitted=time,
+            # The *actual* entry zone is stamped from the placement in
+            # _finish_submit (a None entry resolves to the federation's
+            # default entry there).
+            entry_zone=spec.entry_zone if self._federated else None,
         )
         self.records.append(record)
         invocation = Invocation(
@@ -359,11 +397,19 @@ class Simulation:
 
     def _on_submit(self, time: float, payload: Dict) -> None:
         invocation, record = self._begin_submit(time, payload)
-        placement = self._route_one(invocation)
+        placement = self._route_one(invocation, record.entry_zone)
         self._finish_submit(time, payload, record, placement)
 
-    def _route_one(self, invocation: Invocation) -> Placement:
+    @property
+    def _federated(self) -> bool:
+        return isinstance(self.platform, TappFederation)
+
+    def _route_one(
+        self, invocation: Invocation, entry_zone: Optional[str] = None
+    ) -> Placement:
         if self.scheduler is None:
+            if self._federated:
+                return self.platform.invoke(invocation, entry_zone=entry_zone)
             return self.platform.invoke(invocation)
         # Legacy adapter: external routing, platform-side admission.
         decision = self.scheduler(invocation, self.platform.cluster)
@@ -386,9 +432,16 @@ class Simulation:
             # epoch-cached views shared; each placement is admitted (and
             # its sim bookkeeping done) before the next decision is made,
             # so results are identical to one-by-one submits.
-            self.platform.invoke_batch(
-                invocations, on_placement=_on_placement
-            )
+            if self._federated:
+                self.platform.invoke_batch(
+                    invocations,
+                    entry_zones=[p["spec"].entry_zone for p in payloads],
+                    on_placement=_on_placement,
+                )
+            else:
+                self.platform.invoke_batch(
+                    invocations, on_placement=_on_placement
+                )
             return
 
         schedule_batch = getattr(self.scheduler, "schedule_batch", None)
@@ -424,6 +477,22 @@ class Simulation:
             overhead += self.config.tag_resolution_overhead
         now = time + overhead
 
+        placement_entry = getattr(placement, "entry_zone", None)
+        if placement_entry is not None:
+            # The federation resolved the actual entry (a workload with
+            # entry_zone=None entered at the default entry zone) — the
+            # record and the RTT charge below must use it, not the flat
+            # config.gateway_zone fallback.
+            record.entry_zone = placement_entry
+        hops = getattr(placement, "hops", ())
+        if hops:
+            # Cross-zone forwarding: failed attempts cost their hop RTT
+            # before the request moves on; the taken hops' latency is
+            # charged below through the entry→controller→worker path.
+            now += sum(h.rtt for h in hops if not h.scheduled)
+            record.forward_rtt = sum(h.rtt for h in hops)
+            record.forwarded = any(h.scheduled for h in hops)
+
         if not decision.scheduled or decision.worker is None:
             record.completed = now
             record.error = "no-valid-worker"
@@ -440,13 +509,16 @@ class Simulation:
         # Vanilla's topology-blind worker choice pays cross-zone
         # controller→worker hops that tAPP's local-first ordering avoids —
         # this is the §5.4.1 effect (default policy beating vanilla).
+        # Federated requests enter at their workload's zone gateway, so a
+        # forwarded placement pays its cross-zone hop right here.
         ctl = (
             cluster.controllers.get(decision.controller)
             if decision.controller
             else None
         )
         ctl_zone = ctl.zone if ctl is not None else worker.zone
-        now += self.network.get_rtt(self.config.gateway_zone, ctl_zone)
+        entry = record.entry_zone or self.config.gateway_zone
+        now += self.network.get_rtt(entry, ctl_zone)
         now += self.network.get_rtt(ctl_zone, worker.zone)
 
         state = {"payload": payload, "record": record, "placement": placement}

@@ -11,11 +11,14 @@ Builders for:
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.platform import (
     ClusterSpec,
     ControllerSpec,
+    FederationSpec,
+    TappFederation,
     TappPlatform,
     WorkerSpec,
 )
@@ -108,6 +111,34 @@ def mqtt_cluster(*, cloud_first: bool = True) -> ClusterSpec:
             ControllerSpec("CloudCtl", zone=ZONE_CLOUD),
         ),
         workers=(cloud, edge) if cloud_first else (edge, cloud),
+    )
+
+
+def mqtt_federation_spec() -> FederationSpec:
+    """§5.1 as a two-entry federation: each zone is an entrypoint.
+
+    Same topology as :func:`mqtt_cluster`, but sliced per zone so
+    :class:`TappFederation` stands up an edge gateway (where the sensors
+    publish) and a cloud gateway (where the analytics dashboards live).
+    The inter-zone network model prices the forwarding hops.
+    """
+    return FederationSpec.of(
+        {
+            ZONE_EDGE: ClusterSpec(
+                controllers=(ControllerSpec("LocalCtl"),),
+                workers=(
+                    WorkerSpec("W_1", sets=("edge", "any"), capacity_slots=4),
+                ),
+            ),
+            ZONE_CLOUD: ClusterSpec(
+                controllers=(ControllerSpec("CloudCtl"),),
+                workers=(
+                    WorkerSpec("W_2", sets=("cloud", "any"), capacity_slots=4),
+                ),
+            ),
+        },
+        network=mqtt_network(),
+        default_entry=ZONE_EDGE,
     )
 
 
@@ -441,20 +472,55 @@ def colocation_workload(
     ]
 
 
+def colocation_federation_spec() -> FederationSpec:
+    """The two racks as federation zones — each rack is an entrypoint."""
+    cluster = colocation_cluster()
+    return FederationSpec.of(
+        {
+            zone: ClusterSpec(
+                workers=tuple(w for w in cluster.workers if w.zone == zone),
+                controllers=tuple(
+                    c for c in cluster.controllers if c.zone == zone
+                ),
+            )
+            for zone in (ZONE_RACK_A, ZONE_RACK_B)
+        },
+        network=colocation_network(),
+        default_entry=ZONE_RACK_A,
+    )
+
+
 def run_colocation_case(
-    *, constrained: bool, seed: int = 0, requests_per_user: int = 50
+    *,
+    constrained: bool,
+    seed: int = 0,
+    requests_per_user: int = 50,
+    federated: bool = False,
 ) -> Tuple[Simulation, "SimResult"]:
     """Run the interference workload with/without the affinity constraints.
 
-    Returns (sim, result); split per-class stats via
-    ``result.for_function(...)``.
+    ``federated`` drives the same deployment through a two-entry
+    :class:`TappFederation` instead of the flat platform: each workload
+    class enters at its own rack's gateway (latency_api + cache_warmer
+    at rack A, batch_crunch + feature_join at rack B) and spills across
+    racks only when its own rack declines. Returns (sim, result); split
+    per-class stats via ``result.for_function(...)``.
     """
-    platform = TappPlatform(
-        colocation_cluster(),
-        distribution=DistributionPolicy.SHARED,
-        seed=seed,
-        policy=COLOCATION_SCRIPT if constrained else COLOCATION_BLANK_SCRIPT,
-    )
+    policy = COLOCATION_SCRIPT if constrained else COLOCATION_BLANK_SCRIPT
+    if federated:
+        platform = TappFederation(
+            colocation_federation_spec(),
+            distribution=DistributionPolicy.SHARED,
+            seed=seed,
+            policy=policy,
+        )
+    else:
+        platform = TappPlatform(
+            colocation_cluster(),
+            distribution=DistributionPolicy.SHARED,
+            seed=seed,
+            policy=policy,
+        )
     sim = Simulation(
         platform,
         colocation_network(),
@@ -462,7 +528,19 @@ def run_colocation_case(
         SimConfig(seed=seed, gateway_zone=ZONE_RACK_A),
         is_tapp=True,
     )
-    result = sim.run(colocation_workload(requests_per_user=requests_per_user))
+    workload = colocation_workload(requests_per_user=requests_per_user)
+    if federated:
+        entries = {
+            "latency_api": ZONE_RACK_A,
+            "cache_warmer": ZONE_RACK_A,
+            "batch_crunch": ZONE_RACK_B,
+            "feature_join": ZONE_RACK_B,
+        }
+        workload = [
+            dataclasses.replace(spec, entry_zone=entries[spec.function])
+            for spec in workload
+        ]
+    result = sim.run(workload)
     return sim, result
 
 
@@ -495,3 +573,47 @@ def run_mqtt_case(
         ]
         results[fn] = sim.run(workload)
     return results
+
+
+def run_mqtt_federated_case(
+    *, minutes: int = 30, seed: int = 0
+) -> Tuple[TappFederation, Dict[str, "SimResult"]]:
+    """§5.1 end-to-end through a federation with TWO entrypoints.
+
+    The paper's pipeline, but with requests entering where they
+    originate: ``data-collection`` is triggered from the *cloud*
+    dashboard (entry = cloud) yet must run next to the edge-only broker —
+    its ``topology_tolerance: none`` home — so every invocation is
+    forwarded cloud→edge and never placed outside the edge;
+    ``feature-extraction`` enters at the edge (data gravity);
+    ``feature-analysis`` enters at the edge but its ``Cloud`` tag
+    designates the cloud controller, a designated cross-zone hop. The
+    returned federation's :meth:`~TappFederation.stats` expose the
+    forwarding ledger; per-request hops land on the sim records
+    (``forwarded`` / ``forward_rtt``).
+    """
+    federation = TappFederation(
+        mqtt_federation_spec(),
+        distribution=DistributionPolicy.SHARED,
+        seed=seed,
+        policy=MQTT_SCRIPT,
+    )
+    profiles = mqtt_profiles()
+    network = mqtt_network()
+    config = SimConfig(seed=seed, gateway_zone=ZONE_CLOUD)
+
+    entries = {
+        "data-collection": ZONE_CLOUD,      # dashboard-triggered
+        "feature-extraction": ZONE_EDGE,    # data gravity
+        "feature-analysis": ZONE_EDGE,      # edge-triggered, cloud-designated
+    }
+    results: Dict[str, "SimResult"] = {}
+    for fn, entry in entries.items():
+        sim = Simulation(federation, network, profiles, config, is_tapp=True)
+        results[fn] = sim.run([
+            WorkloadSpec(
+                function=fn, users=1, requests_per_user=minutes,
+                pause=60.0, entry_zone=entry,
+            )
+        ])
+    return federation, results

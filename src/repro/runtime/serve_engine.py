@@ -29,7 +29,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.platform import TappPlatform, WorkerSpec
+from repro.core.platform import (
+    FederationSpec,
+    TappFederation,
+    TappPlatform,
+    WorkerSpec,
+)
 from repro.core.scheduler.controller import ControllerRuntime
 from repro.core.scheduler.engine import Invocation
 from repro.core.scheduler.gateway import Gateway
@@ -46,6 +51,8 @@ class Request:
     tokens: np.ndarray                  # prompt [S]
     max_new_tokens: int = 8
     tag: Optional[str] = None
+    # Federation entry zone (None: the single gateway / default entry).
+    entry_zone: Optional[str] = None
     # lifecycle
     state: str = "queued"               # queued | running | done | failed
     output: List[int] = dataclasses.field(default_factory=list)
@@ -181,8 +188,19 @@ class ServingEngine:
         tapp_script: Optional[str] = None,
         straggler_factor: float = 4.0,
         seed: int = 0,
+        federation: Optional[FederationSpec] = None,
     ) -> None:
-        self.platform = TappPlatform(distribution=distribution, seed=seed)
+        # A federation spec turns the engine multi-entry: one ZoneGateway
+        # per declared zone, requests routed from their submit()-time
+        # entry zone and forwarded per the policy's topology_tolerance.
+        # Replicas/controllers still register dynamically (the spec's
+        # slices may be empty — they declare the zones).
+        if federation is not None:
+            self.platform: "TappPlatform | TappFederation" = TappFederation(
+                federation, distribution=distribution, seed=seed
+            )
+        else:
+            self.platform = TappPlatform(distribution=distribution, seed=seed)
         self.replicas: Dict[str, Replica] = {}
         self.queue: List[Request] = []
         self.done: List[Request] = []
@@ -202,6 +220,11 @@ class ServingEngine:
 
     @property
     def gateway(self) -> Gateway:
+        """The single entrypoint — or, on a federation-backed engine, the
+        default entry zone's gateway (keeps the compat surface working:
+        stats, probes, prewarm all behave per-zone there)."""
+        if isinstance(self.platform, TappFederation):
+            return self.platform.zone_gateway(self.platform.spec.entry_zone)
         return self.platform.gateway
 
     @property
@@ -250,13 +273,22 @@ class ServingEngine:
         *,
         tag: Optional[str] = None,
         max_new_tokens: int = 8,
+        entry_zone: Optional[str] = None,
     ) -> Request:
+        if entry_zone is not None and not isinstance(
+            self.platform, TappFederation
+        ):
+            raise ValueError(
+                f"entry_zone={entry_zone!r} requires a federation-backed "
+                f"engine (pass federation=FederationSpec.of(...))"
+            )
         req = Request(
             request_id=next(self._ids),
             model_id=model_id,
             tokens=np.asarray(tokens, np.int32),
             max_new_tokens=max_new_tokens,
             tag=tag,
+            entry_zone=entry_zone,
             submitted_tick=self.tick,
         )
         self.queue.append(req)
@@ -335,8 +367,16 @@ class ServingEngine:
         # plan compilation, and epoch-cached views are shared across the
         # queue, and each placement's admission lands before the next
         # decision is made (so capacity and affinity effects are observed,
-        # exactly as the previous request-at-a-time loop did).
-        self.platform.invoke_batch(invocations, on_placement=_place)
+        # exactly as the previous request-at-a-time loop did). On a
+        # federation, each request enters at its submit()-time zone.
+        if isinstance(self.platform, TappFederation):
+            self.platform.invoke_batch(
+                invocations,
+                entry_zones=[request.entry_zone for request in requests],
+                on_placement=_place,
+            )
+        else:
+            self.platform.invoke_batch(invocations, on_placement=_place)
         self.queue = still_queued
 
     def _flag_stragglers(self) -> None:

@@ -1,0 +1,582 @@
+"""Deployment API v2 (federation) tests.
+
+Covers the PR-5 contracts:
+* a single-zone ``TappFederation`` makes bit-identical decisions
+  (placements + traces + RNG streams) to the flat ``TappPlatform`` on
+  the same spec/policy/seed, under live churn;
+* ``topology_tolerance: none`` / ``same`` never produce a placement
+  outside the designated controller's zone, under saturation churn and
+  from every entrypoint;
+* cross-zone forwarding: spills happen, hops are recorded and priced,
+  stats/explain expose them;
+* the drain-path deregistration fix: removing a loaded worker does not
+  strand admission ledger tickets.
+"""
+import random
+
+import pytest
+
+from repro.core.platform import (
+    ClusterSpec,
+    ControllerSpec,
+    FederationSpec,
+    TappFederation,
+    TappPlatform,
+    WorkerSpec,
+)
+from repro.core.scheduler.topology import DistributionPolicy
+
+
+class Net:
+    """Minimal duck-typed network model (symmetric constant RTT)."""
+
+    def __init__(self, rtt=0.04, table=None):
+        self._rtt = rtt
+        self._table = table or {}
+
+    def get_rtt(self, a, b):
+        if a == b:
+            return 0.0
+        return self._table.get((a, b), self._table.get((b, a), self._rtt))
+
+
+MULTI_TAG_SCRIPT = """
+- default:
+  - workers:
+    - set:
+    strategy: platform
+    invalidate: overload
+- spread:
+  - workers:
+    - set: east
+    strategy: random
+    invalidate: capacity_used 60%
+    anti-affinity: [noisy]
+  - workers:
+    - set: west
+      strategy: random
+  followup: default
+- strict:
+  - workers:
+    - set: east
+    strategy: best_first
+    invalidate: max_concurrent_invocations 2
+  followup: fail
+"""
+
+
+def _single_zone_spec(n_workers=6):
+    return FederationSpec.of({
+        "z0": ClusterSpec(
+            controllers=(
+                ControllerSpec("C1"),
+                ControllerSpec("C2"),
+            ),
+            workers=tuple(
+                WorkerSpec(
+                    f"w{i}",
+                    sets=("east" if i % 2 == 0 else "west", "any"),
+                    capacity_slots=3,
+                )
+                for i in range(n_workers)
+            ),
+        ),
+    })
+
+
+def _assert_same_decision(d1, d2, context):
+    assert d1.outcome == d2.outcome, context
+    assert d1.worker == d2.worker, context
+    assert d1.controller == d2.controller, context
+    assert d1.tag == d2.tag, context
+    assert d1.used_default_fallback == d2.used_default_fallback, context
+    assert d1.failed_by_policy == d2.failed_by_policy, context
+    assert d1.trace == d2.trace, (
+        context,
+        "\n-- flat --\n" + d1.explain(),
+        "\n-- federated --\n" + d2.explain(),
+    )
+
+
+class TestSingleZoneEquivalence:
+    @pytest.mark.parametrize(
+        "policy", [DistributionPolicy.SHARED, DistributionPolicy.DEFAULT]
+    )
+    def test_bit_identical_to_flat_platform_under_churn(self, policy):
+        """Placements, traces, and RNG streams match the flat platform
+        decision-for-decision, with drains, heartbeats, and completions
+        interleaved."""
+        for trial in range(8):
+            spec = _single_zone_spec()
+            flat = TappPlatform(
+                spec.merged(), distribution=policy, seed=trial,
+                policy=MULTI_TAG_SCRIPT,
+            )
+            fed = TappFederation(
+                spec, distribution=policy, seed=trial,
+                policy=MULTI_TAG_SCRIPT,
+            )
+            rng = random.Random(100 + trial)
+            live = []
+            for step in range(40):
+                tag = rng.choice((None, "spread", "strict", "unknown"))
+                fn = rng.choice(("fn_a", "fn_b", "noisy"))
+                p1 = flat.invoke(fn, tag=tag, trace=True)
+                p2 = fed.invoke(fn, tag=tag, trace=True)
+                context = f"policy={policy} trial={trial} step={step}"
+                _assert_same_decision(p1.decision, p2.decision, context)
+                assert p2.hops == (), context  # single zone never forwards
+                if p1.admitted:
+                    live.append((p1, p2))
+                roll = rng.random()
+                if roll < 0.2 and live:
+                    a, b = live.pop(rng.randrange(len(live)))
+                    a.complete()
+                    b.complete()
+                elif roll < 0.3:
+                    name = f"w{rng.randrange(6)}"
+                    flat.drain(name)
+                    fed.drain(name)
+                elif roll < 0.4:
+                    name = f"w{rng.randrange(6)}"
+                    flat.restore(name)
+                    fed.restore(name)
+                elif roll < 0.5:
+                    name = f"w{rng.randrange(6)}"
+                    pct = rng.choice((10.0, 70.0, 95.0))
+                    flat.heartbeat(name, capacity_used_pct=pct)
+                    fed.heartbeat(name, capacity_used_pct=pct)
+            # The engines consumed identical RNG streams and cursors.
+            flat_state = flat.gateway._engine.scheduling_state()
+            fed_state = fed.zone_gateway("z0")._engine.scheduling_state()
+            assert flat_state == fed_state
+
+    def test_single_zone_stats_match_flat(self):
+        spec = _single_zone_spec()
+        flat = TappPlatform(spec.merged(), seed=0, policy=MULTI_TAG_SCRIPT)
+        fed = TappFederation(spec, seed=0, policy=MULTI_TAG_SCRIPT)
+        for _ in range(10):
+            flat.invoke("fn", tag="spread")
+            fed.invoke("fn", tag="spread")
+        fs = flat.stats()
+        agg = fed.stats().aggregate
+        assert (fs.routed, fs.failed, fs.admitted, fs.inflight) == (
+            agg.routed, agg.failed, agg.admitted, agg.inflight
+        )
+        assert fed.stats().forwards == 0
+
+
+TWO_ZONE_NET = Net(table={("za", "zb"): 0.05})
+
+
+def _two_zone_spec(slots=2, *, default_entry=None):
+    def zone(name, ctl):
+        return ClusterSpec(
+            controllers=(ControllerSpec(ctl),),
+            workers=tuple(
+                WorkerSpec(f"{name}_w{i}", sets=(name, "any"),
+                           capacity_slots=slots)
+                for i in range(2)
+            ),
+        )
+
+    return FederationSpec.of(
+        {"za": zone("za", "ACtl"), "zb": zone("zb", "BCtl")},
+        network=TWO_ZONE_NET,
+        default_entry=default_entry,
+    )
+
+
+PINNED_NONE_SCRIPT = """
+- default:
+  - workers:
+    - set:
+    strategy: platform
+    invalidate: overload
+- pinned:
+  - controller: ACtl
+    workers:
+    - set:
+    topology_tolerance: none
+  followup: fail
+"""
+
+PINNED_SAME_SCRIPT = PINNED_NONE_SCRIPT.replace(
+    "topology_tolerance: none", "topology_tolerance: same"
+)
+
+
+class TestToleranceEnforcement:
+    def test_none_never_crosses_designated_zone_under_saturation_churn(self):
+        """`tolerance: none` placements only ever land in the designated
+        controller's zone, from both entrypoints, while the cluster
+        saturates and drains randomly."""
+        fed = TappFederation(
+            _two_zone_spec(slots=1),
+            distribution=DistributionPolicy.SHARED,
+            seed=3,
+            policy=PINNED_NONE_SCRIPT,
+        )
+        rng = random.Random(42)
+        live = []
+        scheduled = failed = 0
+        for step in range(200):
+            entry = rng.choice(("za", "zb"))
+            placement = fed.invoke("locked", entry_zone=entry, tag="pinned")
+            if placement.scheduled:
+                scheduled += 1
+                zone = fed.cluster.workers[placement.worker].zone
+                assert zone == "za", (step, entry, placement.worker)
+                live.append(placement)
+            else:
+                failed += 1
+                assert placement.failed_by_policy
+            while live and rng.random() < 0.6:
+                live.pop(rng.randrange(len(live))).complete()
+        assert scheduled > 0 and failed > 0  # churn hit both outcomes
+
+    def test_none_fails_outright_when_designated_controller_down(self):
+        fed = TappFederation(
+            _two_zone_spec(), seed=0, policy=PINNED_NONE_SCRIPT,
+            distribution=DistributionPolicy.SHARED,
+        )
+        fed.watcher.update_controller("ACtl", healthy=False)
+        for entry in ("za", "zb"):
+            placement = fed.invoke("locked", entry_zone=entry, tag="pinned")
+            assert not placement.scheduled
+            assert placement.failed_by_policy
+
+    def test_same_stays_in_designated_zone_via_alternative_controller(self):
+        """With the designated controller down, `same` lets another zone's
+        controller manage the work but execution stays in the home zone."""
+        fed = TappFederation(
+            _two_zone_spec(), seed=0, policy=PINNED_SAME_SCRIPT,
+            distribution=DistributionPolicy.SHARED,
+        )
+        fed.watcher.update_controller("ACtl", healthy=False)
+        placements = [
+            fed.invoke("locked", entry_zone=entry, tag="pinned")
+            for entry in ("za", "zb", "zb", "za")
+        ]
+        for placement in placements:
+            assert placement.scheduled
+            assert fed.cluster.workers[placement.worker].zone == "za"
+            assert placement.controller == "BCtl"  # the alternative manages
+        # From zb the placement crossed into za: the hop is on the record.
+        zb_entry = placements[1]
+        assert zb_entry.forwarded or zb_entry.hops
+        assert zb_entry.forward_rtt > 0
+
+
+FORWARDING_SCRIPT = """
+- default:
+  - workers:
+    - set:
+    strategy: best_first
+    invalidate: overload
+"""
+
+
+class TestForwarding:
+    def test_spill_across_zones_with_hops_stats_and_explain(self):
+        fed = TappFederation(
+            _two_zone_spec(slots=1),
+            distribution=DistributionPolicy.SHARED,
+            seed=0,
+            policy=FORWARDING_SCRIPT,
+        )
+        # Fill za (2 workers × 1 slot), entering za.
+        local = [fed.invoke("fn", entry_zone="za") for _ in range(2)]
+        for placement in local:
+            assert fed.cluster.workers[placement.worker].zone == "za"
+            assert placement.hops == ()
+        # Third request spills to zb, paying the 50ms hop.
+        spilled = fed.invoke("fn", entry_zone="za")
+        assert spilled.scheduled
+        assert fed.cluster.workers[spilled.worker].zone == "zb"
+        assert spilled.forwarded
+        assert spilled.forward_rtt == pytest.approx(0.05)
+        assert [h.to_zone for h in spilled.hops] == ["zb"]
+
+        stats = fed.stats()
+        assert stats.forwards == 1
+        assert stats.forward_attempts >= 1
+        assert stats.cross_zone_rtt == pytest.approx(0.05)
+        assert stats.zone("za").forwarded_out == 1
+        assert stats.zone("zb").forwarded_in == 1
+        assert stats.zone("za").entered == 3
+
+        report = fed.explain("fn", entry_zone="za")
+        assert report.scheduled and report.forwarded
+        assert report.placement_zone == "zb"
+        assert [h.zone for h in report.hops] == ["za", "zb"]
+        assert not report.hops[0].forwarded and report.hops[1].forwarded
+        assert report.forward_rtt == pytest.approx(0.05)
+        # Entry-zone rejections are part of the hop report.
+        assert any(w.startswith("za_") for w in report.rejections())
+        # explain() was side-effect-free: stats unchanged.
+        assert fed.stats().forward_attempts == stats.forward_attempts
+
+    def test_exhausted_federation_reports_unplaced(self):
+        fed = TappFederation(
+            _two_zone_spec(slots=1),
+            distribution=DistributionPolicy.SHARED,
+            seed=0,
+            policy=FORWARDING_SCRIPT,
+        )
+        placements = [fed.invoke("fn", entry_zone="za") for _ in range(5)]
+        assert sum(p.scheduled for p in placements) == 4  # 2 zones × 2w × 1
+        last = placements[-1]
+        assert not last.scheduled
+        assert [h.scheduled for h in last.hops] == [False]
+        assert fed.stats().unplaced == 1
+
+    def test_vanilla_fallback_is_zone_local_then_forwarded(self):
+        """No policy: the zone-local pass runs vanilla over the entry
+        zone's workers, and forwarding is unbounded (vanilla has no
+        tolerance to honour)."""
+        fed = TappFederation(
+            _two_zone_spec(slots=1),
+            distribution=DistributionPolicy.SHARED, seed=0,
+        )
+        local = [fed.invoke("fn", entry_zone="za") for _ in range(2)]
+        assert all(
+            fed.cluster.workers[p.worker].zone == "za" for p in local
+        )
+        spilled = fed.invoke("fn", entry_zone="za")
+        assert spilled.scheduled
+        assert fed.cluster.workers[spilled.worker].zone == "zb"
+        assert spilled.forwarded
+
+    def test_invoke_batch_matches_sequential(self):
+        entries = ["za", "zb", "za", "za", "zb", None]
+        functions = [f"fn{i % 3}" for i in range(len(entries))]
+
+        fed_seq = TappFederation(
+            _two_zone_spec(slots=1), seed=5, policy=MULTI_TAG_SCRIPT,
+            distribution=DistributionPolicy.SHARED,
+        )
+        fed_batch = TappFederation(
+            _two_zone_spec(slots=1), seed=5, policy=MULTI_TAG_SCRIPT,
+            distribution=DistributionPolicy.SHARED,
+        )
+        sequential = [
+            fed_seq.invoke(fn, entry_zone=zone)
+            for fn, zone in zip(functions, entries)
+        ]
+        batched = fed_batch.invoke_batch(functions, entry_zones=entries)
+        assert [p.worker for p in sequential] == [p.worker for p in batched]
+        assert [p.hops for p in sequential] == [p.hops for p in batched]
+        assert fed_seq.stats() == fed_batch.stats()
+
+    def test_dynamically_added_zone_is_routable_and_counted(self):
+        """Zones added to the live cluster after construction (no spec
+        slice, no entrypoint) can still receive designated placements —
+        the forwarding ledger must absorb them, not KeyError."""
+        fed = TappFederation(
+            _two_zone_spec(slots=1), seed=0,
+            distribution=DistributionPolicy.SHARED,
+            policy=PINNED_NONE_SCRIPT.replace("ACtl", "LabCtl"),
+        )
+        fed.add_controller("LabCtl", zone="lab")
+        fed.add_worker(WorkerSpec("lab_w0", zone="lab", sets=("lab", "any"),
+                                  capacity_slots=2))
+        placement = fed.invoke("fn", entry_zone="za", tag="pinned")
+        assert placement.scheduled
+        assert fed.cluster.workers[placement.worker].zone == "lab"
+        assert [h.to_zone for h in placement.hops] == ["lab"]
+        stats = fed.stats()
+        assert stats.forwards == 1
+        with pytest.raises(KeyError):
+            stats.zone("lab")  # only spec-declared zones get a row
+
+    def test_unknown_entry_zone_raises(self):
+        fed = TappFederation(_two_zone_spec(), seed=0)
+        with pytest.raises(ValueError, match="unknown entry zone"):
+            fed.invoke("fn", entry_zone="nowhere")
+
+    def test_default_entry_zone_is_used(self):
+        fed = TappFederation(
+            _two_zone_spec(default_entry="zb"), seed=0,
+            policy=FORWARDING_SCRIPT,
+            distribution=DistributionPolicy.SHARED,
+        )
+        placement = fed.invoke("fn")
+        assert placement.entry_zone == "zb"
+        assert fed.cluster.workers[placement.worker].zone == "zb"
+
+    def test_sim_default_entry_workload_records_actual_entry_zone(self):
+        """A federated workload with entry_zone=None enters at the
+        federation's default entry — the sim must record (and charge)
+        that zone, not its flat gateway_zone config."""
+        from repro.core.sim.core import (
+            FunctionProfile,
+            NetworkModel,
+            SimConfig,
+            Simulation,
+            WorkloadSpec,
+        )
+
+        fed = TappFederation(
+            _two_zone_spec(slots=4), seed=0, policy=FORWARDING_SCRIPT,
+            distribution=DistributionPolicy.SHARED,
+        )
+        sim = Simulation(
+            fed,
+            NetworkModel(rtt={}, bandwidth={}),
+            {"fn": FunctionProfile(name="fn", exec_time=0.01)},
+            SimConfig(seed=0, gateway_zone="zb"),
+        )
+        result = sim.run([WorkloadSpec("fn", users=1, requests_per_user=3)])
+        assert all(r.entry_zone == "za" for r in result.records)
+
+    def test_prewarm_builds_zone_local_indexes(self):
+        fed = TappFederation(
+            _two_zone_spec(), seed=0, policy=MULTI_TAG_SCRIPT,
+            distribution=DistributionPolicy.SHARED,
+        )
+        assert fed.prewarm() > 0
+
+
+class TestFederationSpec:
+    def test_duplicate_zone_rejected(self):
+        with pytest.raises(ValueError, match="duplicate federation zone"):
+            FederationSpec(zones=(("za", ClusterSpec()),
+                                  ("za", ClusterSpec())))
+
+    def test_contradictory_member_zone_rejected(self):
+        with pytest.raises(ValueError, match="contradictory zone"):
+            FederationSpec.of({
+                "za": ClusterSpec(workers=(WorkerSpec("w0", zone="zb"),)),
+            })
+
+    def test_members_adopt_their_slice_zone(self):
+        spec = FederationSpec.of({
+            "za": ClusterSpec(
+                workers=(WorkerSpec("w0"),),
+                controllers=(ControllerSpec("C"),),
+            ),
+        })
+        cluster = spec.build()
+        assert cluster.workers["w0"].zone == "za"
+        assert cluster.controllers["C"].zone == "za"
+
+    def test_unknown_default_entry_rejected(self):
+        with pytest.raises(ValueError, match="default_entry"):
+            FederationSpec.of({"za": ClusterSpec()}, default_entry="zb")
+
+    def test_zone_order_is_latency_sorted(self):
+        spec = FederationSpec.of(
+            {"a": ClusterSpec(), "b": ClusterSpec(), "c": ClusterSpec()},
+            network=Net(table={("a", "b"): 0.2, ("a", "c"): 0.01}),
+        )
+        assert spec.zone_order_from("a") == ("c", "b")
+        # Without a network model: declaration order.
+        flat = FederationSpec.of(
+            {"a": ClusterSpec(), "b": ClusterSpec(), "c": ClusterSpec()}
+        )
+        assert flat.zone_order_from("b") == ("a", "c")
+
+    def test_shuffled_permutes_within_zones_only(self):
+        spec = _two_zone_spec()
+        shuffled = spec.shuffled(9)
+        for (zone, original), (zone2, permuted) in zip(
+            spec.zones, shuffled.zones
+        ):
+            assert zone == zone2
+            assert sorted(w.name for w in original.workers) == sorted(
+                w.name for w in permuted.workers
+            )
+            assert all(w.zone == zone for w in permuted.workers)
+
+    def test_network_must_quack(self):
+        with pytest.raises(TypeError, match="get_rtt"):
+            FederationSpec.of({"za": ClusterSpec()}, network=object())
+
+
+class TestEvictionLedger:
+    def _platform(self):
+        return TappPlatform(
+            ClusterSpec(
+                controllers=(ControllerSpec("C1"),),
+                workers=(
+                    WorkerSpec("w0", sets=("any",), capacity_slots=4),
+                    WorkerSpec("w1", sets=("any",), capacity_slots=4),
+                ),
+            ),
+            seed=0,
+            policy=FORWARDING_SCRIPT,
+            distribution=DistributionPolicy.SHARED,
+        )
+
+    def test_removing_loaded_worker_does_not_strand_tickets(self):
+        platform = self._platform()
+        placements = [platform.invoke("fn") for _ in range(3)]
+        on_w0 = [p for p in placements if p.worker == "w0"]
+        assert on_w0  # best_first lands on w0 first
+        before = platform.stats()
+        assert before.admitted == 3 and before.inflight == 3
+
+        platform.remove_worker("w0")
+        stats = platform.stats()
+        assert stats.evicted == len(on_w0)
+        # Invariant: admitted == completed + evicted + live inflight.
+        assert stats.admitted == stats.completed + stats.evicted + stats.inflight
+
+        # Completing the dead placements neither double-counts nor raises.
+        for placement in placements:
+            placement.complete()
+        stats = platform.stats()
+        assert stats.admitted == stats.completed + stats.evicted
+        assert stats.inflight == 0
+        assert stats.completed == 3 - len(on_w0)
+
+    def test_removing_idle_worker_evicts_nothing(self):
+        platform = self._platform()
+        platform.remove_worker("w1")
+        assert platform.stats().evicted == 0
+
+    def test_federation_shares_the_same_reconciliation(self):
+        fed = TappFederation(
+            _two_zone_spec(slots=4), seed=0, policy=FORWARDING_SCRIPT,
+            distribution=DistributionPolicy.SHARED,
+        )
+        placement = fed.invoke("fn", entry_zone="za")
+        fed.remove_worker(placement.worker)
+        stats = fed.stats()
+        assert stats.aggregate.evicted == 1
+        placement.complete()
+        assert fed.stats().aggregate.completed == 0
+
+    def test_stale_ticket_never_retires_against_a_name_reusing_worker(self):
+        """Remove a loaded worker, register a NEW worker under the same
+        name, admit onto it: the dead placement's complete() must not
+        decrement the replacement's counters or double-count the ticket."""
+        platform = self._platform()
+        stale = platform.invoke("fn")
+        name = stale.worker
+        platform.remove_worker(name)
+        platform.add_worker(WorkerSpec(name, sets=("any",),
+                                       capacity_slots=4))
+        other = next(w for w in platform.cluster.workers if w != name)
+        platform.drain(other)  # force the fresh admission onto the reused name
+        fresh = platform.invoke("fn")
+        assert fresh.worker == name  # the replacement took an admission
+        assert platform.cluster.workers[name].inflight == 1
+
+        stale.complete()  # the dead ticket
+        assert platform.cluster.workers[name].inflight == 1  # untouched
+        stats = platform.stats()
+        assert stats.admitted == stats.completed + stats.evicted + stats.inflight
+        fresh.complete()  # the live ticket still retires normally
+        assert platform.cluster.workers[name].inflight == 0
+        stats = platform.stats()
+        assert (stats.admitted, stats.completed, stats.evicted) == (2, 1, 1)
+
+    def test_remove_worker_routes_future_traffic_away(self):
+        platform = self._platform()
+        first = platform.invoke("fn")
+        platform.remove_worker(first.worker)
+        second = platform.invoke("fn")
+        assert second.scheduled
+        assert second.worker != first.worker

@@ -130,6 +130,40 @@ class TestServingEngine:
         assert all(r.state == "done" for r in reqs)
         assert {r.replica for r in reqs} == {"r-edge"}
 
+    def test_federated_engine_routes_by_entry_zone_and_forwards(self):
+        """A federation-backed engine serves multi-entry traffic: requests
+        enter their zone's gateway; edge-pinned work submitted at the
+        cloud entry is forwarded to (and only to) the edge replica."""
+        from repro.core.platform import (
+            ClusterSpec,
+            ControllerSpec,
+            FederationSpec,
+        )
+
+        spec = FederationSpec.of({
+            "edge": ClusterSpec(controllers=(ControllerSpec("EdgeCtl"),)),
+            "cloud": ClusterSpec(controllers=(ControllerSpec("CloudCtl"),)),
+        })
+        engine = ServingEngine(tapp_script=ZONED_SCRIPT, federation=spec)
+        engine.add_replica(_small_replica("r-edge", "edge", ["edge"]))
+        engine.add_replica(_small_replica("r-cloud", "cloud", ["cloud"]))
+        pinned = [
+            engine.submit("smollm-135m", [1, 2, 3], tag="edge_only",
+                          entry_zone="cloud", max_new_tokens=3)
+            for _ in range(2)
+        ]
+        generic = engine.submit("smollm-135m", [4, 5], entry_zone="cloud",
+                                max_new_tokens=3)
+        engine.run_until_done(max_ticks=100)
+        assert all(r.state == "done" for r in pinned + [generic])
+        assert {r.replica for r in pinned} == {"r-edge"}
+        assert generic.replica == "r-cloud"  # zone-local stays local
+        stats = engine.platform.stats()
+        assert stats.forwards >= 2
+        assert stats.zone("edge").forwarded_in >= 2
+        # The compat property resolves to the default entry's gateway.
+        assert engine.gateway is engine.platform.zone_gateway("edge")
+
     def test_decode_is_deterministic_across_replicas(self):
         """Same weights on two replicas → same generation (placement-
         transparent serving)."""
