@@ -1,10 +1,20 @@
 PY := python
 export PYTHONPATH := src:.
 
-.PHONY: test lint bench bench-sched bench-sched-full bench-check bench-serve
+.PHONY: test lint chaos bench bench-sched bench-sched-full bench-check bench-serve
 
 test:
 	$(PY) -m pytest -q
+
+# Seeded fault-injection property suite (PR 6): chaos schedules over the
+# failure-detection + retry layer, checking ledger conservation, DEAD-
+# worker exclusion, partition containment, and chaos-off bit-compat.
+# Failing seeds land in chaos_failures/ (uploaded as a CI artifact).
+# --timeout guards against a hung fault schedule, but only when the
+# pytest-timeout plugin is installed (requirements-dev.txt; optional).
+chaos:
+	$(PY) -m pytest tests/test_chaos.py tests/test_failure_detection.py -q \
+		$$($(PY) -c "import pytest_timeout" 2>/dev/null && echo --timeout=120)
 
 # Correctness lint (ruff.toml: syntax errors, bad comparisons, undefined
 # names). `pip install ruff` (requirements-dev.txt) to run locally.

@@ -48,6 +48,7 @@ from repro.core.platform import (
     ClusterSpec,
     ControllerSpec,
     FederationSpec,
+    RetryPolicy,
     TappFederation,
     TappPlatform,
     WorkerSpec,
@@ -120,8 +121,17 @@ COMPARE_FACTOR = 1.5      # regression headroom vs committed ratio floors
 # fixed ~2-3µs — with indexed routing at ~4-6µs even at 1024 workers, a
 # ratio gate would fail precisely because routing got faster. The budget
 # pins the façade's fixed cost; the committed facade_overhead ratio is
-# still recorded and floor-checked by --compare.
+# still recorded and floor-checked by --compare. Absolute µs are
+# host-dependent, so the gate scales the budget by the measured
+# machine-speed factor (see _machine_speed_factor) — the same fixed work
+# costs proportionally more µs on a slower CI host, and an unscaled
+# budget would gate on host speed rather than on regressions.
 PLATFORM_OVERHEAD_US = 6.0  # TappPlatform.invoke minus raw Gateway.route
+# What the calibration micro-workload measures on the reference host
+# (the class of machine that produced the committed artifact's ~4.3µs
+# facade_overhead_us). Hosts measuring slower scale the absolute façade
+# budget up proportionally; faster hosts keep the reference budget.
+CALIBRATION_BASELINE_US = 7.0
 PLATFORM_SIZE = 1024      # representative production point for the gate
 FLAT_BASE, FLAT_TOP = 4, 1024  # the flat-scaling gate's endpoints
 # Zone-local federation invoke vs flat-platform invoke at the same scale:
@@ -129,6 +139,12 @@ FLAT_BASE, FLAT_TOP = 4, 1024  # the flat-scaling gate's endpoints
 # the FederatedPlacement handle — all fixed-cost. The gate pins the whole
 # zone-local path (no forwarding) to a small multiple of the flat façade.
 FEDERATION_FACTOR = 1.25
+# Fault-free fast path with a RetryPolicy armed vs without (PR 6): the
+# retry machinery on a successful invoke is one policy-resolution dict
+# lookup that never fires, so arming it must be ~free. The gate pins the
+# retry-enabled invoke to RETRY_FACTOR x the plain invoke (paired
+# alternating-rep floors, same rationale as the federation gate).
+RETRY_FACTOR = 1.1
 
 
 def _cluster(n_workers: int, *, saturated: bool = False) -> ClusterState:
@@ -159,6 +175,41 @@ def _cluster(n_workers: int, *, saturated: bool = False) -> ClusterState:
             worker.capacity_used_pct = 100.0
         c.add_worker(worker)
     return c
+
+
+def _machine_speed_factor() -> float:
+    """How much slower this host is than the reference, as a budget scale.
+
+    Times a fixed dict/attribute micro-workload shaped like the admission
+    path (counter bumps, dict get/set, a float percentage) and divides by
+    ``CALIBRATION_BASELINE_US``. The absolute façade budget multiplies by
+    the factor, clamped to [1.0, 3.0]: a slower CI host gets
+    proportionally more µs for the same fixed work (the overhead it
+    measures grows by exactly this factor), a faster host keeps the
+    reference budget, and a host >3× slower is too noisy to gate on
+    absolute µs at all — better to fail loudly there than stretch the
+    budget into meaninglessness.
+    """
+
+    class _W:
+        __slots__ = ("inflight", "pct")
+
+        def __init__(self) -> None:
+            self.inflight = 0
+            self.pct = 0.0
+
+    w = _W()
+    d: Dict[int, int] = {}
+
+    def unit() -> None:
+        for i in range(64):
+            k = i & 7
+            d[k] = d.get(k, 0) + 1
+            w.inflight = w.inflight + 1
+            w.pct = 100.0 * w.inflight / 1024
+
+    us = _floor_us(unit, 2000, reps=5)
+    return min(3.0, max(1.0, us / CALIBRATION_BASELINE_US))
 
 
 def _time_us(fn, n: int = 2000) -> float:
@@ -267,6 +318,7 @@ def _platform_row(n_workers: int, iters: int) -> Dict:
         "us_per_call": us_invoke,
         "facade_overhead": overhead,
         "facade_overhead_us": us_invoke - us_route,
+        "machine_factor": _machine_speed_factor(),
     }
 
 
@@ -319,6 +371,92 @@ def _federation_row(n_workers: int, iters: int) -> Dict:
     }
 
 
+def _retry_platform_spec(n_workers: int) -> ClusterSpec:
+    return ClusterSpec(
+        controllers=(
+            ControllerSpec("C1", zone="east"),
+            ControllerSpec("C2", zone="west"),
+        ),
+        workers=tuple(
+            WorkerSpec(
+                f"w{i}",
+                zone="east" if i % 2 == 0 else "west",
+                sets=("east" if i % 2 == 0 else "west", "any"),
+                capacity_slots=1 << 30,
+            )
+            for i in range(n_workers)
+        ),
+    )
+
+
+def _retry_row(n_workers: int, iters: int) -> Dict:
+    """Fault-free fast path: retry-armed invoke vs plain invoke (PR 6).
+
+    Two identical platforms over the same deployment, one constructed
+    with a ``RetryPolicy``, both invoked on a healthy cluster so the
+    retry loop never fires. The armed side's only extra work is the
+    policy-resolution lookup after a successful placement — the gate
+    pins it to ``RETRY_FACTOR`` × the plain invoke so the robustness
+    layer cannot tax the µs-scale fast path it protects.
+    """
+    spec = _retry_platform_spec(n_workers)
+    plain = TappPlatform(
+        spec, distribution=DistributionPolicy.SHARED, seed=0, policy=SCRIPT
+    )
+    armed = TappPlatform(
+        spec, distribution=DistributionPolicy.SHARED, seed=0, policy=SCRIPT,
+        retry=RetryPolicy(max_attempts=3),
+    )
+    inv = Invocation("fn", tag="tagged")
+    us_plain, us_armed, ratio = _paired_ratio_us(
+        lambda: plain.invoke(inv),
+        lambda: armed.invoke(inv),
+        max(iters // 2, 500),
+    )
+    return {
+        "name": f"retry_invoke_{n_workers}w",
+        "us_plain": us_plain,
+        "us_invoke": us_armed,
+        "us_per_call": us_armed,
+        "retry_overhead": ratio,
+    }
+
+
+def _recovery_row(n_workers: int, iters: int) -> Dict:
+    """Worker-failure recovery time: fail → evict → re-route (PR 6).
+
+    Each cycle admits a placement, kills its worker (``fail_worker``
+    evicts the ticket and bumps the topology epoch), re-routes the dead
+    placement with ``platform.retry`` — which must land on a live worker
+    on the first pass — then revives the worker for the next cycle. The
+    reported µs is the full detection-to-replacement cost at the
+    representative cluster size: ticket eviction, epoch-index
+    recompilation, the masked re-route, and the replacement admission.
+    Informational (no gate): the committed row documents the recovery
+    budget the §5-scale chaos runs amortize.
+    """
+    platform = TappPlatform(
+        _retry_platform_spec(n_workers),
+        distribution=DistributionPolicy.SHARED, seed=0, policy=SCRIPT,
+        retry=RetryPolicy(max_attempts=3, backoff_base=0.0),
+    )
+    inv = Invocation("fn", tag="tagged")
+
+    def cycle():
+        placement = platform.invoke(inv)
+        victim = placement.worker
+        platform.fail_worker(victim)
+        replacement = platform.retry(placement)
+        assert replacement is not None and replacement.scheduled
+        replacement.complete()
+        platform.restore(victim)
+
+    return {
+        "name": f"recovery_{n_workers}w",
+        "us_per_call": _floor_us(cycle, max(iters // 4, 250)),
+    }
+
+
 def microbench(*, smoke: bool = False) -> List[Dict]:
     rows: List[Dict] = []
     script = parse_tapp(SCRIPT)
@@ -334,7 +472,8 @@ def microbench(*, smoke: bool = False) -> List[Dict]:
     # gate in every sample anyway.
     platform_row = _platform_row(PLATFORM_SIZE, iters)
     for _ in range(2):
-        if platform_row["facade_overhead_us"] <= 0.8 * PLATFORM_OVERHEAD_US:
+        budget = PLATFORM_OVERHEAD_US * platform_row["machine_factor"]
+        if platform_row["facade_overhead_us"] <= 0.8 * budget:
             break
         retry = _platform_row(PLATFORM_SIZE, iters)
         if retry["facade_overhead_us"] < platform_row["facade_overhead_us"]:
@@ -348,6 +487,15 @@ def microbench(*, smoke: bool = False) -> List[Dict]:
         retry = _federation_row(PLATFORM_SIZE, iters)
         if retry["federation_overhead"] < federation_row["federation_overhead"]:
             federation_row = retry
+    # ... and for the retry-armed/plain pair (PR 6's fast-path gate).
+    retry_row = _retry_row(PLATFORM_SIZE, iters)
+    for _ in range(2):
+        if retry_row["retry_overhead"] <= 0.8 * RETRY_FACTOR:
+            break
+        retake = _retry_row(PLATFORM_SIZE, iters)
+        if retake["retry_overhead"] < retry_row["retry_overhead"]:
+            retry_row = retake
+    recovery_row = _recovery_row(PLATFORM_SIZE, iters)
     for n_workers in sizes:
         cluster = _cluster(n_workers)
         vanilla = VanillaScheduler()
@@ -406,6 +554,8 @@ def microbench(*, smoke: bool = False) -> List[Dict]:
         )
     rows.append(platform_row)
     rows.append(federation_row)
+    rows.append(retry_row)
+    rows.append(recovery_row)
     return rows
 
 
@@ -514,18 +664,28 @@ def check_rows(rows: List[Dict], *, min_speedup: float = 1.0) -> List[str]:
     by_name = {row["name"]: row for row in rows}
     for row in rows:
         overhead_us = row.get("facade_overhead_us")
-        if overhead_us is not None and overhead_us > PLATFORM_OVERHEAD_US:
-            failures.append(
-                f"{row['name']}: platform invoke {row['us_invoke']:.1f}us vs "
-                f"gateway route {row['us_route']:.1f}us "
-                f"(+{overhead_us:.1f}us > {PLATFORM_OVERHEAD_US:.1f}us budget)"
-            )
+        if overhead_us is not None:
+            budget = PLATFORM_OVERHEAD_US * row.get("machine_factor", 1.0)
+            if overhead_us > budget:
+                failures.append(
+                    f"{row['name']}: platform invoke "
+                    f"{row['us_invoke']:.1f}us vs gateway route "
+                    f"{row['us_route']:.1f}us (+{overhead_us:.1f}us > "
+                    f"{budget:.1f}us host-scaled budget)"
+                )
         fed_overhead = row.get("federation_overhead")
         if fed_overhead is not None and fed_overhead > FEDERATION_FACTOR:
             failures.append(
                 f"{row['name']}: federation invoke {row['us_invoke']:.1f}us "
                 f"vs flat platform {row['us_flat']:.1f}us "
                 f"({fed_overhead:.2f}x > {FEDERATION_FACTOR:.2f}x budget)"
+            )
+        retry_overhead = row.get("retry_overhead")
+        if retry_overhead is not None and retry_overhead > RETRY_FACTOR:
+            failures.append(
+                f"{row['name']}: retry-armed invoke {row['us_invoke']:.1f}us "
+                f"vs plain invoke {row['us_plain']:.1f}us "
+                f"({retry_overhead:.2f}x > {RETRY_FACTOR:.2f}x budget)"
             )
         speedup = row.get("speedup")
         if speedup is not None and speedup < min_speedup:
@@ -640,6 +800,14 @@ def compare_rows(
                     f"{row['federation_overhead']:.2f}x exceeds committed "
                     f"{ref['federation_overhead']:.2f}x * {factor:.1f}"
                 )
+        if "retry_overhead" in row and "retry_overhead" in ref:
+            ceiling = ref["retry_overhead"] * factor
+            if row["retry_overhead"] > ceiling:
+                failures.append(
+                    f"{name}: retry overhead "
+                    f"{row['retry_overhead']:.2f}x exceeds committed "
+                    f"{ref['retry_overhead']:.2f}x * {factor:.1f}"
+                )
     for label in ("tagged", "default", "constrained"):
         now = _scaling_ratio(current, label)
         ref = _scaling_ratio(floors, label)
@@ -704,6 +872,12 @@ def main(argv=None) -> int:
                 f"{r['name']},flat={r['us_flat']:.1f}us,"
                 f"invoke={r['us_invoke']:.1f}us,"
                 f"overhead={r['federation_overhead']:.2f}x"
+            )
+        elif "retry_overhead" in r:
+            print(
+                f"{r['name']},plain={r['us_plain']:.1f}us,"
+                f"invoke={r['us_invoke']:.1f}us,"
+                f"overhead={r['retry_overhead']:.2f}x"
             )
         else:
             print(f"{r['name']},{r['us_per_call']:.1f}us")

@@ -32,6 +32,12 @@ from repro.core.platform.facade import (
     PlatformCore,
     PlatformStats,
     TappPlatform,
+    UnknownWorkerError,
+)
+from repro.core.platform.faults import (
+    ChaosSpec,
+    FaultEvent,
+    FaultInjector,
 )
 from repro.core.platform.federation import (
     FederatedPlacement,
@@ -49,28 +55,39 @@ from repro.core.platform.specs import (
     ClusterSpec,
     ControllerSpec,
     FederationSpec,
+    RetryPolicy,
     WorkerSpec,
 )
+from repro.core.scheduler.state import HealthState
+from repro.core.scheduler.watcher import HealthTransition, LeaseConfig
 
 __all__ = [
     "BlockReport",
     "CandidateReport",
+    "ChaosSpec",
     "ClusterSpec",
     "ControllerSpec",
     "ExplainReport",
+    "FaultEvent",
+    "FaultInjector",
     "FederatedPlacement",
     "FederationExplainReport",
     "FederationSpec",
     "FederationStats",
     "ForwardHop",
+    "HealthState",
+    "HealthTransition",
+    "LeaseConfig",
     "Placement",
     "PlatformCore",
     "PlatformStats",
     "PolicyDryRun",
     "PolicyError",
     "PolicyHandle",
+    "RetryPolicy",
     "TappFederation",
     "TappPlatform",
+    "UnknownWorkerError",
     "WorkerSpec",
     "ZoneHopReport",
     "ZoneStats",

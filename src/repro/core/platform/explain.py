@@ -71,6 +71,10 @@ class ExplainReport:
     blocks: Tuple[BlockReport, ...]
     notes: Tuple[str, ...]          # tag / followup narration, in order
     trace: Tuple[TraceEvent, ...]   # the raw events, for provenance
+    # Failure-detector / partition narration (PR 6): why the platform
+    # layer overrode or annotated this decision (e.g. a designated
+    # placement severed by an inter-zone partition).
+    failure_notes: Tuple[str, ...] = ()
 
     def rejections(self) -> Dict[str, str]:
         """worker → last rejection reason across every block evaluated."""
@@ -93,6 +97,8 @@ class ExplainReport:
             )
         )
         lines = [head]
+        for note in self.failure_notes:
+            lines.append(f"  ! {note}")
         for note in self.notes:
             lines.append(f"  · {note}")
         for block in self.blocks:
@@ -136,6 +142,10 @@ class FederationExplainReport:
     placement_zone: Optional[str]
     forward_rtt: float               # total RTT charged across hops
     hops: Tuple[ZoneHopReport, ...]
+    # Zones the entry zone could not reach when this report was built
+    # (inter-zone partitions + all-workers-DEAD zones); the forwarding
+    # walk skipped them (PR 6).
+    unreachable_zones: Tuple[str, ...] = ()
 
     @property
     def forwarded(self) -> bool:
@@ -167,6 +177,11 @@ class FederationExplainReport:
             )
         )
         lines = [head]
+        if self.unreachable_zones:
+            lines.append(
+                "  ! unreachable zones: "
+                + ", ".join(repr(z) for z in self.unreachable_zones)
+            )
         for hop in self.hops:
             label = (
                 f"zone {hop.zone!r} (entry pass)"

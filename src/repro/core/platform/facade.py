@@ -39,6 +39,7 @@ from collections import deque
 from typing import (
     Callable,
     Deque,
+    Dict,
     Iterable,
     List,
     Mapping,
@@ -54,17 +55,27 @@ from repro.core.platform.policy import (
     PolicyError,
     PolicyHandle,
 )
-from repro.core.platform.specs import ClusterSpec, ControllerSpec, WorkerSpec
+from repro.core.platform.specs import (
+    ClusterSpec,
+    ControllerSpec,
+    RetryPolicy,
+    WorkerSpec,
+)
 from repro.core.scheduler.controller import ControllerRuntime
 from repro.core.scheduler.engine import Invocation, ScheduleDecision
 from repro.core.scheduler.gateway import Gateway
 from repro.core.scheduler.state import (
     ClusterState,
     ControllerState,
+    HealthState,
     WorkerState,
 )
 from repro.core.scheduler.topology import DistributionPolicy
-from repro.core.scheduler.watcher import Watcher
+from repro.core.scheduler.watcher import (
+    HealthTransition,
+    LeaseConfig,
+    Watcher,
+)
 from repro.core.tapp.ast import TappScript
 from repro.core.tapp.compile import compile_script
 from repro.core.tapp.parser import parse_tapp
@@ -75,6 +86,48 @@ from repro.core.tapp.validate import validate_script
 Subscriber = Callable[[str], None]
 
 PolicyInput = Union[str, TappScript]
+
+
+class UnknownWorkerError(KeyError):
+    """A platform entry point named a worker the cluster does not have.
+
+    Raised (instead of a bare ``KeyError``) by the topology/health
+    lifecycle methods so a heartbeat for a deregistered worker fails
+    loudly rather than resurrecting a drained worker's state.
+    """
+
+    def __init__(self, name: str) -> None:
+        super().__init__(name)
+        self.worker = name
+
+    def __str__(self) -> str:
+        return (
+            f"unknown worker {self.worker!r} (never registered, or already "
+            f"deregistered — a drained worker's state is not resurrectable)"
+        )
+
+
+class _UnknownWorkerGuard:
+    """Context manager turning the watcher's ``KeyError`` for an unknown
+    worker into :class:`UnknownWorkerError` (already-wrapped errors pass
+    through untouched)."""
+
+    __slots__ = ("name",)
+
+    def __init__(self, name: str) -> None:
+        self.name = name
+
+    def __enter__(self) -> "_UnknownWorkerGuard":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        if (
+            exc_type is not None
+            and issubclass(exc_type, KeyError)
+            and not isinstance(exc, UnknownWorkerError)
+        ):
+            raise UnknownWorkerError(self.name) from None
+        return False
 
 
 class _Ledger:
@@ -107,7 +160,8 @@ class Placement:
     """
 
     __slots__ = ("invocation", "decision", "admitted", "completed",
-                 "_watcher", "_ledger", "_worker_ref")
+                 "_watcher", "_ledger", "_worker_ref", "_generation",
+                 "attempts", "retry_wait", "failed_workers")
 
     def __init__(
         self,
@@ -128,6 +182,16 @@ class Placement:
         # against exactly this instance, so a later worker re-using the
         # name can never have its counters decremented by a dead ticket.
         self._worker_ref = worker_ref
+        # Incarnation at admission: a crash (DEAD transition) evicts the
+        # ticket and bumps the worker's generation, so complete() declines.
+        self._generation = 0 if worker_ref is None else worker_ref.generation
+        # Retry bookkeeping (see TappPlatform.retry): total attempts this
+        # placement represents, cumulative deterministic backoff charged,
+        # and the workers earlier attempts failed on (excluded from
+        # subsequent re-routes).
+        self.attempts = 1
+        self.retry_wait = 0.0
+        self.failed_workers: Tuple[str, ...] = ()
 
     @property
     def scheduled(self) -> bool:
@@ -149,9 +213,31 @@ class Placement:
     def failed_by_policy(self) -> bool:
         return self.decision.failed_by_policy
 
-    def complete(self, *, slow: bool = False) -> None:
+    @property
+    def retried(self) -> bool:
+        return self.attempts > 1
+
+    @property
+    def ticket_alive(self) -> bool:
+        """Is the admission ticket still live on its original worker
+        incarnation? ``False`` once completed, or after the worker was
+        deregistered or crashed (either way the ticket was reconciled as
+        a ledger eviction and the work it covered died)."""
+        if not self.admitted or self.completed:
+            return False
+        worker = self._worker_ref
+        if worker is None or worker.generation != self._generation:
+            return False
+        return self._watcher.cluster.workers.get(self.decision.worker) is worker
+
+    def complete(self, *, slow: bool = False) -> bool:
+        """Retire the admission ticket. Idempotent: returns ``True`` only
+        the one time a live ticket is actually released; ``False`` on a
+        double complete, an un-admitted placement, or a ticket that was
+        already reconciled as an eviction (worker deregistered or crashed
+        while the work ran) — none of which touch the ledger again."""
         if self.completed or not self.admitted:
-            return
+            return False
         self.completed = True
         if self._watcher.record_completion(
             self.decision.worker,
@@ -159,10 +245,13 @@ class Placement:
             self.invocation.function,
             slow=slow,
             expected=self._worker_ref,
+            generation=self._generation,
         ):
             self._ledger.completed += 1
-        # else: the worker was evicted mid-run; the deregistration already
-        # reconciled this ticket as an eviction.
+            return True
+        # else: the worker was evicted mid-run (deregistration or crash);
+        # the eviction already reconciled this ticket.
+        return False
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         return (
@@ -194,6 +283,11 @@ class PlatformStats:
     load_events: int = 0
     # Admission tickets that died with a deregistered worker (see _Ledger).
     evicted: int = 0
+    # Retry re-routes issued by the platform's RetryPolicy machinery.
+    retries: int = 0
+    # Failure-detector verdicts currently in force.
+    suspect_workers: int = 0
+    dead_workers: int = 0
 
 
 class PlatformCore:
@@ -217,12 +311,24 @@ class PlatformCore:
         compiled: bool = True,
         strict_policies: bool = False,
         max_policy_history: int = 8,
+        retry: Optional[RetryPolicy] = None,
+        lease: Optional[LeaseConfig] = None,
     ) -> None:
         # ``watcher`` adopts an existing instance (the legacy-shim
         # migration path) instead of building one around ``cluster``.
-        self._watcher = watcher if watcher is not None else Watcher(cluster)
+        self._watcher = (
+            watcher if watcher is not None else Watcher(cluster, lease=lease)
+        )
+        if watcher is not None and lease is not None:
+            self._watcher.configure_lease(lease)
         self._runtime = ControllerRuntime(self._watcher)
         self._ledger = _Ledger()
+        # Platform-default retry policy + per-controller overrides (from
+        # ControllerSpec.retry); resolution order per placement: explicit
+        # call argument > routed controller's policy > platform default.
+        self._retry = retry
+        self._controller_retry: Dict[str, RetryPolicy] = {}
+        self._retries = 0
         self._compiled = compiled
         self._strict_policies = strict_policies
         self._active: Optional[PolicyHandle] = None
@@ -309,13 +415,26 @@ class PlatformCore:
         if isinstance(spec, ControllerState):
             controller = spec
         else:
-            controller = ControllerSpec.coerce(spec).build()
+            coerced = ControllerSpec.coerce(spec)
+            if coerced.retry is not None:
+                self._controller_retry[coerced.name] = coerced.retry
+            controller = coerced.build()
         self._watcher.register_controller(controller)
 
     def remove_controller(self, name: str) -> None:
         """Deregister a controller (drained by the watcher before removal,
         symmetric to :meth:`remove_worker`)."""
+        self._controller_retry.pop(name, None)
         self._watcher.deregister_controller(name)
+
+    def _adopt_controller_policies(
+        self, controllers: Iterable[ControllerSpec]
+    ) -> None:
+        """Collect per-controller retry policies from declarative specs
+        (the constructor path, where the cluster is built wholesale)."""
+        for spec in controllers:
+            if spec.retry is not None:
+                self._controller_retry[spec.name] = spec.retry
 
     def drain(self, name: str) -> None:
         """Stop new admissions on a worker; running work keeps completing.
@@ -328,23 +447,111 @@ class PlatformCore:
         admission ledger refuses new tickets outright — while completions
         still retire, which is what distinguishes a drain from a loss.
         """
-        self._watcher.mark_drained(name)
+        with self._wrap_unknown_worker(name):
+            self._watcher.mark_drained(name)
 
     def restore(self, name: str) -> None:
         """Undo :meth:`drain` / :meth:`mark_unhealthy` /
-        :meth:`mark_unreachable` (subscribers see the "topology" event,
-        same as the marking side)."""
-        self._watcher.mark_restored(name)
+        :meth:`mark_unreachable` / a failure-detector verdict (subscribers
+        see the "topology" event, same as the marking side)."""
+        with self._wrap_unknown_worker(name):
+            self._watcher.mark_restored(name)
 
     def mark_unhealthy(self, name: str) -> None:
-        self._watcher.mark_unhealthy(name)
+        with self._wrap_unknown_worker(name):
+            self._watcher.mark_unhealthy(name)
 
     def mark_unreachable(self, name: str) -> None:
-        self._watcher.mark_unreachable(name)
+        with self._wrap_unknown_worker(name):
+            self._watcher.mark_unreachable(name)
 
     def heartbeat(self, name: str, **fields) -> None:
-        """Report live worker state (load / health / residency update)."""
-        self._watcher.update_worker(name, **fields)
+        """Report live worker state (load / health / residency update).
+
+        Raises :class:`UnknownWorkerError` for a worker that was never
+        registered or has been deregistered — a late heartbeat must not
+        resurrect a drained worker's state.
+        """
+        with self._wrap_unknown_worker(name):
+            self._watcher.update_worker(name, **fields)
+
+    @staticmethod
+    def _wrap_unknown_worker(name: str):
+        """Context manager lifting the watcher's ``KeyError`` for an
+        unknown worker into the platform's :class:`UnknownWorkerError`."""
+        return _UnknownWorkerGuard(name)
+
+    # -- failure detection + recovery (PR 6) -------------------------------------
+
+    def heartbeat_lease(
+        self, name: str, now: float, **fields
+    ) -> Optional[HealthTransition]:
+        """Renew a worker's heartbeat lease (see
+        :meth:`~repro.core.scheduler.watcher.Watcher.heartbeat_lease`);
+        a heartbeat from a SUSPECT/DEAD worker restores it to HEALTHY and
+        returns the transition. Unknown/deregistered workers raise
+        :class:`UnknownWorkerError`."""
+        with self._wrap_unknown_worker(name):
+            return self._watcher.heartbeat_lease(name, now, **fields)
+
+    def check_leases(self, now: float) -> List[HealthTransition]:
+        """Advance the failure detector to ``now`` and reconcile the
+        ledger: each DEAD verdict's evicted in-flight tickets are counted
+        as ledger evictions (the deregistration-drain shape), keeping
+        ``admitted == completed + evicted + inflight``."""
+        transitions = self._watcher.check_leases(now)
+        for transition in transitions:
+            if transition.evicted:
+                self._ledger.evicted += transition.evicted
+        return transitions
+
+    def fail_worker(self, name: str) -> int:
+        """Declare a worker DEAD now (crash signal / fault injection);
+        evicts its in-flight tickets into the ledger and returns the
+        evicted count. Idempotent; unknown workers raise
+        :class:`UnknownWorkerError`."""
+        with self._wrap_unknown_worker(name):
+            evicted = self._watcher.mark_dead(name)
+        self._ledger.evicted += evicted
+        return evicted
+
+    def suspect_worker(self, name: str) -> None:
+        """Flag a worker SUSPECT (flappy heartbeat): deprioritized in
+        candidate ordering but still placeable."""
+        with self._wrap_unknown_worker(name):
+            self._watcher.mark_suspect(name)
+
+    # -- retry policy resolution --------------------------------------------------
+
+    @property
+    def retry_policy(self) -> Optional[RetryPolicy]:
+        """The platform-default :class:`RetryPolicy` (None: no retries)."""
+        return self._retry
+
+    def _retry_policy_for(
+        self,
+        controller: Optional[str],
+        override: Optional[RetryPolicy],
+    ) -> Optional[RetryPolicy]:
+        if override is not None:
+            return override
+        if controller is not None:
+            policy = self._controller_retry.get(controller)
+            if policy is not None:
+                return policy
+        return self._retry
+
+    def _masked_route(self, exclude: Sequence[str], route):
+        """Run ``route()`` with ``exclude`` workers masked unreachable —
+        the already-tried exclusion of a retry re-route. The mask restores
+        exactly the workers it masked, so a worker unreachable for other
+        reasons stays that way."""
+        masked = self._watcher.mask_unreachable(exclude)
+        try:
+            return route()
+        finally:
+            if masked:
+                self._watcher.unmask(masked)
 
     # -- policy lifecycle ---------------------------------------------------------
 
@@ -527,6 +734,12 @@ class PlatformCore:
         caller supplies only its entrypoints' routing totals (the single
         place both façades' snapshots are built)."""
         cluster = self._watcher.cluster
+        suspects = dead = 0
+        for w in cluster.workers.values():
+            if w.health is HealthState.SUSPECT:
+                suspects += 1
+            elif w.health is HealthState.DEAD:
+                dead += 1
         return PlatformStats(
             routed=routed,
             tapp_routed=tapp_routed,
@@ -544,6 +757,9 @@ class PlatformCore:
             topology_epoch=cluster.topology_epoch,
             load_events=cluster.load_seq,
             evicted=self._ledger.evicted,
+            retries=self._retries,
+            suspect_workers=suspects,
+            dead_workers=dead,
         )
 
     @staticmethod
@@ -588,6 +804,8 @@ class TappPlatform(PlatformCore):
         policy: Optional[PolicyInput] = None,
         strict_policies: bool = False,
         max_policy_history: int = 8,
+        retry: Optional[RetryPolicy] = None,
+        lease: Optional[LeaseConfig] = None,
     ) -> None:
         if isinstance(spec, ClusterState):
             cluster = spec
@@ -600,7 +818,11 @@ class TappPlatform(PlatformCore):
             compiled=compiled,
             strict_policies=strict_policies,
             max_policy_history=max_policy_history,
+            retry=retry,
+            lease=lease,
         )
+        if isinstance(spec, ClusterSpec):
+            self._adopt_controller_policies(spec.controllers)
         self._gateway = Gateway(
             self._watcher,
             distribution=distribution,
@@ -646,6 +868,7 @@ class TappPlatform(PlatformCore):
         model_id: Optional[str] = None,
         request_id: int = 0,
         trace: bool = False,
+        retry: Optional[RetryPolicy] = None,
     ) -> Placement:
         """Route **and** admit one invocation; returns its :class:`Placement`.
 
@@ -655,11 +878,91 @@ class TappPlatform(PlatformCore):
         the slot occupancy and running-function multiset this one created.
         Unscheduled invocations return an un-admitted placement (check
         ``scheduled`` / ``failed_by_policy``).
+
+        With a :class:`RetryPolicy` in force (the ``retry`` argument, the
+        routed controller's spec, or the platform default — in that
+        order), an invocation that finds *no valid worker* is re-routed
+        up to ``max_attempts`` times with deterministic backoff charged
+        to ``Placement.retry_wait``. A tAPP ``followup: fail`` policy
+        failure is terminal and never retried (paper §3.3).
         """
         invocation = self._coerce_invocation(function, tag, model_id,
                                              request_id)
-        return self.place(invocation, self._gateway.route(invocation,
-                                                          trace=trace))
+        placement = self.place(invocation, self._gateway.route(invocation,
+                                                               trace=trace))
+        if placement.scheduled:
+            return placement
+        return self._retry_unscheduled(invocation, placement, retry,
+                                       trace=trace)
+
+    def _retry_unscheduled(
+        self,
+        invocation: Invocation,
+        placement: Placement,
+        override: Optional[RetryPolicy],
+        *,
+        trace: bool = False,
+    ) -> Placement:
+        """Re-route an unscheduled invoke under the resolved retry policy
+        (off the fast path — only entered when the first route failed)."""
+        if placement.failed_by_policy:
+            return placement
+        policy = self._retry_policy_for(placement.controller, override)
+        if policy is None:
+            return placement
+        attempts, waited = placement.attempts, placement.retry_wait
+        while (not placement.scheduled
+               and not placement.failed_by_policy
+               and policy.allows(attempts, waited)):
+            waited += policy.backoff(attempts)
+            attempts += 1
+            self._retries += 1
+            placement = self.place(
+                invocation, self._gateway.route(invocation, trace=trace)
+            )
+        placement.attempts = attempts
+        placement.retry_wait = waited
+        return placement
+
+    def retry(
+        self,
+        placement: Placement,
+        *,
+        retry: Optional[RetryPolicy] = None,
+    ) -> Optional[Placement]:
+        """Re-route a failed placement around the workers it already tried.
+
+        Returns the replacement :class:`Placement` (carrying cumulative
+        ``attempts`` / ``retry_wait`` / ``failed_workers`` bookkeeping),
+        or ``None`` when no retry is issued: no policy in force, the
+        policy's attempt/deadline budget is spent, or the original
+        failure was a tAPP ``followup: fail`` — a *policy* verdict, which
+        is terminal (only *worker* failures retry; paper §3.3).
+
+        The caller owns the old ticket: a crashed worker's ticket was
+        already reconciled as an eviction, a timed-out one should be
+        completed (``slow=True``) by whoever declared the timeout.
+        """
+        policy = self._retry_policy_for(placement.controller, retry)
+        if policy is None or placement.failed_by_policy:
+            return None
+        if not policy.allows(placement.attempts, placement.retry_wait):
+            return None
+        failed = placement.failed_workers
+        if placement.worker is not None:
+            failed = failed + (placement.worker,)
+        self._retries += 1
+        invocation = placement.invocation
+        replacement = self._masked_route(
+            failed,
+            lambda: self.place(invocation, self._gateway.route(invocation)),
+        )
+        replacement.attempts = placement.attempts + 1
+        replacement.retry_wait = (
+            placement.retry_wait + policy.backoff(placement.attempts)
+        )
+        replacement.failed_workers = failed
+        return replacement
 
     def invoke_batch(
         self,
@@ -667,6 +970,7 @@ class TappPlatform(PlatformCore):
         *,
         trace: bool = False,
         on_placement: Optional[Callable[[Placement], None]] = None,
+        retry: Optional[RetryPolicy] = None,
     ) -> List[Placement]:
         """Route + admit a batch against one script/snapshot resolution.
 
@@ -674,7 +978,9 @@ class TappPlatform(PlatformCore):
         ``on_placement`` fires in between), so results are bit-identical
         to a sequence of :meth:`invoke` calls — including policies whose
         affinity constraints read the placements made earlier in the same
-        batch.
+        batch, and including the unscheduled-retry loop when a
+        :class:`RetryPolicy` is in force (its re-routes interleave into
+        the batch exactly where sequential invokes would place them).
         """
         invs = [
             inv if isinstance(inv, Invocation) else Invocation(function=inv)
@@ -684,6 +990,9 @@ class TappPlatform(PlatformCore):
 
         def _admit(invocation: Invocation, decision: ScheduleDecision) -> None:
             placement = self.place(invocation, decision)
+            if not placement.scheduled:
+                placement = self._retry_unscheduled(invocation, placement,
+                                                    retry, trace=trace)
             placements.append(placement)
             if on_placement is not None:
                 on_placement(placement)

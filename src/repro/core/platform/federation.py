@@ -35,10 +35,12 @@ import dataclasses
 from typing import (
     Callable,
     Dict,
+    FrozenSet,
     Iterable,
     List,
     Optional,
     Sequence,
+    Set,
     Tuple,
     Union,
 )
@@ -54,10 +56,16 @@ from repro.core.platform.facade import (
     PlatformStats,
     PolicyInput,
 )
-from repro.core.platform.specs import FederationSpec
-from repro.core.scheduler.engine import Invocation, ScheduleDecision
+from repro.core.platform.specs import FederationSpec, RetryPolicy
+from repro.core.scheduler.engine import (
+    Invocation,
+    Outcome,
+    ScheduleDecision,
+    TraceEvent,
+)
 from repro.core.scheduler.gateway import ZoneGateway, forward_targets
 from repro.core.scheduler.topology import DistributionPolicy
+from repro.core.scheduler.watcher import LeaseConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -146,7 +154,8 @@ class FederationStats:
     zones: Tuple[ZoneStats, ...]
     forwards: int          # cross-zone hops that placed the request
     forward_attempts: int  # all cross-zone hops tried (incl. failed)
-    unplaced: int          # requests that exhausted every allowed zone
+    unplaced: int          # routing passes that exhausted every allowed
+                           # zone (a retried request counts once per pass)
     cross_zone_rtt: float  # total RTT charged to hops (seconds)
 
     def zone(self, name: str) -> ZoneStats:
@@ -169,6 +178,8 @@ class TappFederation(PlatformCore):
         policy: Optional[PolicyInput] = None,
         strict_policies: bool = False,
         max_policy_history: int = 8,
+        retry: Optional[RetryPolicy] = None,
+        lease: Optional[LeaseConfig] = None,
     ) -> None:
         if not isinstance(spec, FederationSpec):
             raise TypeError(
@@ -183,7 +194,10 @@ class TappFederation(PlatformCore):
             compiled=compiled,
             strict_policies=strict_policies,
             max_policy_history=max_policy_history,
+            retry=retry,
+            lease=lease,
         )
+        self._adopt_controller_policies(spec.merged().controllers)
         self._spec = spec
         self._distribution = distribution
         # Every zone gateway gets the same seed: streams are independent
@@ -209,6 +223,11 @@ class TappFederation(PlatformCore):
         self._forward_attempts = 0
         self._unplaced = 0
         self._cross_zone_rtt = 0.0
+        # Severed inter-zone links (unordered pairs) + the per-epoch memo
+        # of zones whose every worker is DEAD; both feed the partition-
+        # aware forwarding walk (PR 6).
+        self._partitions: Set[FrozenSet[str]] = set()
+        self._dead_zone_cache: Tuple[int, FrozenSet[str]] = (-1, frozenset())
         if policy is not None:
             self.apply_policy(policy, strict=strict_policies)
 
@@ -239,6 +258,106 @@ class TappFederation(PlatformCore):
             )
         return entry_zone
 
+    # -- partitions + zone reachability (PR 6) -----------------------------------
+
+    def _require_zone(self, zone: str) -> None:
+        if zone not in self._zone_gateways:
+            raise ValueError(
+                f"unknown federation zone {zone!r}; zones are "
+                f"{list(self._spec.zone_names)}"
+            )
+
+    def sever(self, zone_a: str, zone_b: str) -> None:
+        """Partition the inter-zone link ``zone_a ↔ zone_b`` (symmetric).
+
+        While severed, neither zone forwards to the other: the partition
+        filters :func:`~repro.core.scheduler.gateway.forward_targets` and
+        converts a designated direct placement across the severed link
+        into a failure (the request then continues the filtered
+        forwarding walk, or fails if its tolerance pins it home).
+        Idempotent; in-zone scheduling on both sides is unaffected.
+        """
+        self._require_zone(zone_a)
+        self._require_zone(zone_b)
+        if zone_a == zone_b:
+            raise ValueError(f"cannot sever zone {zone_a!r} from itself")
+        self._partitions.add(frozenset((zone_a, zone_b)))
+
+    def heal(self, zone_a: str, zone_b: str) -> None:
+        """Undo :meth:`sever` (idempotent). Forwarding order after the
+        heal is exactly the pre-partition order — the partition filter
+        preserves dedup slots, so nothing is reordered."""
+        self._require_zone(zone_a)
+        self._require_zone(zone_b)
+        self._partitions.discard(frozenset((zone_a, zone_b)))
+
+    def partitioned(self, zone_a: str, zone_b: str) -> bool:
+        """Is the ``zone_a ↔ zone_b`` link currently severed?"""
+        return frozenset((zone_a, zone_b)) in self._partitions
+
+    @property
+    def partitions(self) -> Tuple[Tuple[str, str], ...]:
+        """Currently-severed links as sorted (a, b) pairs, sorted."""
+        return tuple(sorted(tuple(sorted(p)) for p in self._partitions))
+
+    def _dead_zones(self) -> FrozenSet[str]:
+        """Zones whose every worker is DEAD — unroutable, so the
+        forwarding walk skips them. Memoized per topology epoch: DEAD
+        transitions and revivals are structural (they bump the epoch),
+        so one O(workers) scan per epoch suffices."""
+        epoch = self._watcher.cluster.topology_epoch
+        cached_epoch, cached = self._dead_zone_cache
+        if cached_epoch == epoch:
+            return cached
+        alive: Set[str] = set()
+        populated: Set[str] = set()
+        for worker in self._watcher.cluster.workers.values():
+            populated.add(worker.zone)
+            if not worker.dead:
+                alive.add(worker.zone)
+        dead = frozenset(populated - alive)
+        self._dead_zone_cache = (epoch, dead)
+        return dead
+
+    def _unreachable_from(self, zone: str) -> FrozenSet[str]:
+        """Zones ``zone`` cannot currently deliver work to: partitioned
+        peers plus all-DEAD zones. Empty (and cheap) in the fault-free
+        case."""
+        dead = self._dead_zones()
+        if not self._partitions:
+            return dead
+        cut = {
+            other
+            for other in self._spec.zone_names
+            if frozenset((zone, other)) in self._partitions
+        }
+        return dead | cut if cut else dead
+
+    @staticmethod
+    def _severed_decision(
+        decision: ScheduleDecision, worker_zone: str, from_zone: str
+    ) -> ScheduleDecision:
+        """Convert a scheduled decision whose worker sits behind a severed
+        link into a failure (``failed_by_policy`` stays False — this is a
+        *worker-side* failure, so retry policies apply)."""
+        trace = list(decision.trace)
+        trace.append(
+            TraceEvent(
+                "forward",
+                f"placement in zone {worker_zone!r} severed: unreachable "
+                f"from {from_zone!r} (partition)",
+            )
+        )
+        return ScheduleDecision(
+            outcome=Outcome.FAILED,
+            controller=decision.controller,
+            tag=decision.tag,
+            used_default_fallback=decision.used_default_fallback,
+            zone_restriction=decision.zone_restriction,
+            failed_by_policy=False,
+            trace=trace,
+        )
+
     # -- routing + forwarding ----------------------------------------------------
 
     def route(
@@ -266,18 +385,30 @@ class TappFederation(PlatformCore):
     ) -> Tuple[ScheduleDecision, Tuple[ForwardHop, ...]]:
         gateway = self._zone_gateways[entry]
         cluster = self._watcher.cluster
+        unreachable = self._unreachable_from(entry)
         decision = gateway.route(invocation, trace=trace, entry_zone=entry)
         if decision.scheduled:
             worker_zone = cluster.workers[decision.worker].zone
             if worker_zone == entry:
                 return decision, ()
-            # A designated-controller block placed the work in its home
-            # zone directly: that is a cross-zone hop too, and it pays.
-            hop = ForwardHop(
-                entry, worker_zone, self._spec.rtt(entry, worker_zone), True
-            )
-            self._account_hops(entry, worker_zone, (hop,))
-            return decision, (hop,)
+            if worker_zone not in unreachable:
+                # A designated-controller block placed the work in its home
+                # zone directly: that is a cross-zone hop too, and it pays.
+                hop = ForwardHop(
+                    entry, worker_zone, self._spec.rtt(entry, worker_zone),
+                    True,
+                )
+                self._account_hops(entry, worker_zone, (hop,))
+                return decision, (hop,)
+            # The designated placement sits behind a severed link: the
+            # entry zone cannot deliver it. Convert to a failure and walk
+            # the (partition-filtered) forward targets instead — which,
+            # for tolerance none/same, pin the function to its (now
+            # unreachable) home zone, so the walk is empty and the
+            # request fails rather than escaping its designated zone.
+            # The entry gateway's routed/scheduled counters already moved;
+            # the severed outcome is accounted at this (platform) layer.
+            decision = self._severed_decision(decision, worker_zone, entry)
 
         hops: List[ForwardHop] = []
         for target in forward_targets(
@@ -286,6 +417,7 @@ class TappFederation(PlatformCore):
             cluster,
             entry,
             self._zone_order[entry],
+            unreachable=unreachable,
         ):
             target_gateway = self._zone_gateways.get(target)
             if target_gateway is None:
@@ -293,31 +425,35 @@ class TappFederation(PlatformCore):
             forwarded = target_gateway.route(
                 invocation, trace=trace, entry_zone=target
             )
-            if not forwarded.scheduled:
-                hop = ForwardHop(
-                    entry, target, self._spec.rtt(entry, target), False
-                )
-                hops.append(hop)
-                self._account_hops(entry, None, (hop,))
-                continue
-            taken = [
-                ForwardHop(entry, target, self._spec.rtt(entry, target), True)
-            ]
-            # The target zone's scheduler may itself place the work in a
-            # *third* zone (a designated block's tolerance restriction):
-            # that last leg is a chargeable hop too, and the work landed
-            # where the worker is — not where we forwarded the request.
-            worker_zone = cluster.workers[forwarded.worker].zone
-            if worker_zone != target:
-                taken.append(
-                    ForwardHop(
-                        target, worker_zone,
-                        self._spec.rtt(target, worker_zone), True,
-                    )
-                )
-            hops.extend(taken)
-            self._account_hops(entry, worker_zone, taken)
-            return forwarded, tuple(hops)
+            if forwarded.scheduled:
+                # The target zone's scheduler may itself place the work in
+                # a *third* zone (a designated block's tolerance
+                # restriction). That last leg is chargeable too — unless
+                # *it* crosses a severed link, in which case the target
+                # cannot deliver either and the walk continues.
+                worker_zone = cluster.workers[forwarded.worker].zone
+                if (worker_zone == target
+                        or worker_zone not in self._unreachable_from(target)):
+                    taken = [
+                        ForwardHop(
+                            entry, target, self._spec.rtt(entry, target), True
+                        )
+                    ]
+                    if worker_zone != target:
+                        taken.append(
+                            ForwardHop(
+                                target, worker_zone,
+                                self._spec.rtt(target, worker_zone), True,
+                            )
+                        )
+                    hops.extend(taken)
+                    self._account_hops(entry, worker_zone, taken)
+                    return forwarded, tuple(hops)
+            hop = ForwardHop(
+                entry, target, self._spec.rtt(entry, target), False
+            )
+            hops.append(hop)
+            self._account_hops(entry, None, (hop,))
         self._unplaced += 1
         # Every allowed zone declined: report the entry zone's decision
         # (its failure narrative is the one the caller entered through).
@@ -356,18 +492,89 @@ class TappFederation(PlatformCore):
         model_id: Optional[str] = None,
         request_id: int = 0,
         trace: bool = False,
+        retry: Optional[RetryPolicy] = None,
     ) -> FederatedPlacement:
-        """Route (zone-local first, forward per tolerance) **and** admit."""
+        """Route (zone-local first, forward per tolerance) **and** admit.
+
+        With a :class:`RetryPolicy` in force (argument > routed
+        controller's spec > platform default), an invocation no zone
+        could take is re-routed from the same entry zone up to
+        ``max_attempts`` times, deterministic backoff charged to
+        ``retry_wait``; every attempt's hops are in ``hops`` (the entry
+        gateway paid their RTT). ``followup: fail`` stays terminal.
+        """
         invocation = self._coerce_invocation(function, tag, model_id,
                                              request_id)
         entry = self._resolve_entry(entry_zone)
         self._entered[entry] += 1
         decision, hops = self._route_from(entry, invocation, trace)
+        attempts, waited = 1, 0.0
+        if not decision.scheduled and not decision.failed_by_policy:
+            policy = self._retry_policy_for(decision.controller, retry)
+            if policy is not None:
+                all_hops = list(hops)
+                while (not decision.scheduled
+                       and not decision.failed_by_policy
+                       and policy.allows(attempts, waited)):
+                    waited += policy.backoff(attempts)
+                    attempts += 1
+                    self._retries += 1
+                    decision, hops = self._route_from(entry, invocation,
+                                                      trace)
+                    all_hops.extend(hops)
+                hops = tuple(all_hops)
         worker_ref = self._admit(invocation, decision)
-        return FederatedPlacement(
+        placement = FederatedPlacement(
             invocation, decision, worker_ref is not None, self._watcher,
             self._ledger, entry, hops, worker_ref,
         )
+        placement.attempts = attempts
+        placement.retry_wait = waited
+        return placement
+
+    def retry(
+        self,
+        placement: FederatedPlacement,
+        *,
+        retry: Optional[RetryPolicy] = None,
+    ) -> Optional[FederatedPlacement]:
+        """Re-route a failed federated placement from its entry zone.
+
+        The workers earlier attempts failed on are masked out of the
+        re-route, and the forwarding walk runs against the *current*
+        partition/death picture — a retry routes around zones that died
+        or were severed since the original attempt. Returns ``None``
+        when no retry is issued (no policy, budget spent, or the failure
+        was a terminal ``followup: fail`` policy verdict); otherwise the
+        replacement placement, whose ``hops`` cover only the re-route
+        (the original attempt's hops were already charged).
+        """
+        policy = self._retry_policy_for(placement.controller, retry)
+        if policy is None or placement.failed_by_policy:
+            return None
+        if not policy.allows(placement.attempts, placement.retry_wait):
+            return None
+        failed = placement.failed_workers
+        if placement.worker is not None:
+            failed = failed + (placement.worker,)
+        self._retries += 1
+        entry = placement.entry_zone
+        self._entered[entry] += 1
+        invocation = placement.invocation
+        decision, hops = self._masked_route(
+            failed, lambda: self._route_from(entry, invocation, False)
+        )
+        worker_ref = self._admit(invocation, decision)
+        replacement = FederatedPlacement(
+            invocation, decision, worker_ref is not None, self._watcher,
+            self._ledger, entry, hops, worker_ref,
+        )
+        replacement.attempts = placement.attempts + 1
+        replacement.retry_wait = (
+            placement.retry_wait + policy.backoff(placement.attempts)
+        )
+        replacement.failed_workers = failed
+        return replacement
 
     def invoke_batch(
         self,
@@ -426,8 +633,17 @@ class TappFederation(PlatformCore):
         invocation = self._coerce_invocation(function, tag, model_id)
         entry = self._resolve_entry(entry_zone)
         cluster = self._watcher.cluster
+        unreachable = self._unreachable_from(entry)
         gateway = self._zone_gateways[entry]
         decision = gateway.probe(invocation, entry_zone=entry)
+        if decision.scheduled:
+            worker_zone = cluster.workers[decision.worker].zone
+            if worker_zone != entry and worker_zone in unreachable:
+                # Mirror _route_from's severed conversion: the designated
+                # placement is behind a partition, so the live path fails
+                # it and walks the filtered targets.
+                decision = self._severed_decision(decision, worker_zone,
+                                                  entry)
         hops = [
             ZoneHopReport(
                 zone=entry, rtt=0.0, forwarded=False,
@@ -439,11 +655,19 @@ class TappFederation(PlatformCore):
             for target in forward_targets(
                 self._watcher.script, invocation.tag, cluster, entry,
                 self._zone_order[entry],
+                unreachable=unreachable,
             ):
                 target_gateway = self._zone_gateways.get(target)
                 if target_gateway is None:
                     continue
                 probed = target_gateway.probe(invocation, entry_zone=target)
+                if probed.scheduled:
+                    # Mirror the third-leg severed check of _route_from.
+                    worker_zone = cluster.workers[probed.worker].zone
+                    if (worker_zone != target
+                            and worker_zone in self._unreachable_from(target)):
+                        probed = self._severed_decision(probed, worker_zone,
+                                                        target)
                 hops.append(
                     ZoneHopReport(
                         zone=target,
@@ -476,6 +700,7 @@ class TappFederation(PlatformCore):
             placement_zone=placement_zone,
             forward_rtt=forward_rtt,
             hops=tuple(hops),
+            unreachable_zones=tuple(sorted(unreachable)),
         )
 
     def prewarm(self) -> int:

@@ -34,6 +34,50 @@ _DEFAULT_MEMORY = 16 * 1024**3
 
 
 @dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Deterministic retry/backoff policy for worker-failure re-routing.
+
+    ``max_attempts`` bounds total attempts (first try included); backoff
+    before retry *k* (1-based) is ``backoff_base * backoff_multiplier**(k-1)``
+    — deterministic, no jitter, so seeded runs reproduce bit-for-bit.
+    ``deadline`` caps the cumulative backoff a request may accumulate
+    (a per-function latency budget); a retry whose backoff would exceed
+    it is not issued. Retries apply to *worker* failures (crash, timeout,
+    no valid worker); a tAPP ``followup: fail`` policy failure is
+    terminal and never retried (paper §3.3 semantics).
+    """
+
+    max_attempts: int = 3
+    backoff_base: float = 0.05
+    backoff_multiplier: float = 2.0
+    deadline: Optional[float] = None
+
+    def __post_init__(self) -> None:
+        if self.max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1")
+        if self.backoff_base < 0:
+            raise ValueError("backoff_base must be >= 0")
+        if self.backoff_multiplier <= 0:
+            raise ValueError("backoff_multiplier must be > 0")
+        if self.deadline is not None and self.deadline < 0:
+            raise ValueError("deadline must be >= 0")
+
+    def backoff(self, attempts_made: int) -> float:
+        """Wait (seconds) before the retry following ``attempts_made``
+        attempts (>= 1)."""
+        return self.backoff_base * self.backoff_multiplier ** (attempts_made - 1)
+
+    def allows(self, attempts_made: int, waited: float = 0.0) -> bool:
+        """May another attempt be issued after ``attempts_made`` tries and
+        ``waited`` seconds of cumulative backoff?"""
+        if attempts_made >= self.max_attempts:
+            return False
+        if self.deadline is not None:
+            return waited + self.backoff(attempts_made) <= self.deadline
+        return True
+
+
+@dataclasses.dataclass(frozen=True)
 class WorkerSpec:
     """Declarative description of one worker (model replica / invoker)."""
 
@@ -81,10 +125,17 @@ class WorkerSpec:
 
 @dataclasses.dataclass(frozen=True)
 class ControllerSpec:
-    """Declarative description of one per-zone controller."""
+    """Declarative description of one per-zone controller.
+
+    ``retry`` is the :class:`RetryPolicy` for invocations this controller
+    schedules (None: the platform-level default, if any). It is platform
+    configuration, not live state — :class:`ControllerState` does not
+    carry it; the platform façade resolves it per placement.
+    """
 
     name: str
     zone: str = "default"
+    retry: Optional[RetryPolicy] = None
 
     def build(self) -> ControllerState:
         return ControllerState(name=self.name, zone=self.zone)
@@ -97,7 +148,10 @@ class ControllerSpec:
             return value
         if isinstance(value, ControllerState):
             return cls(name=value.name, zone=value.zone)
-        return cls(**dict(value))
+        fields = dict(value)
+        if isinstance(fields.get("retry"), Mapping):
+            fields["retry"] = RetryPolicy(**fields["retry"])
+        return cls(**fields)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -26,7 +26,7 @@ the ``zone_restriction``-keyed entries of that store.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import FrozenSet, List, Optional, Sequence
 
 from repro.core.scheduler.engine import (
     Invocation,
@@ -313,6 +313,7 @@ def forward_targets(
     cluster: ClusterState,
     entry_zone: str,
     zone_order: Sequence[str],
+    unreachable: FrozenSet[str] = frozenset(),
 ) -> List[str]:
     """Ordered candidate zones for forwarding a zone-locally-failed request.
 
@@ -338,6 +339,14 @@ def forward_targets(
     evaluation re-runs the followup chain. With no script (vanilla
     fallback) every other zone is a target in latency order: the
     baseline is topology-blind, so nothing bounds the forwarding.
+
+    ``unreachable`` names zones the entry zone cannot currently reach
+    (network partition, or every worker DEAD): they are dropped from the
+    emitted targets but still consume their dedup slot, so healing a
+    partition restores the exact pre-partition order. A tolerance
+    ``none``/``same`` function whose home zone is unreachable therefore
+    gets *no* targets — the invocation fails rather than escaping its
+    designated zone (the partition-tolerance invariant).
     """
     targets: List[str] = []
     seen = {entry_zone}
@@ -345,7 +354,8 @@ def forward_targets(
     def _push(zone: Optional[str]) -> None:
         if zone is not None and zone not in seen:
             seen.add(zone)
-            targets.append(zone)
+            if zone not in unreachable:
+                targets.append(zone)
 
     if script is None or not script.tags:
         for zone in zone_order:

@@ -15,7 +15,26 @@ instantiates for the paper-table benchmarks.
 from __future__ import annotations
 
 import dataclasses
+import enum
 from typing import Dict, FrozenSet, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+
+class HealthState(enum.Enum):
+    """Failure-detector verdict on one worker (PR 6).
+
+    ``HEALTHY`` → ``SUSPECT`` when the heartbeat lease expires (the worker
+    stays placeable but is deprioritized in candidate ordering);
+    ``SUSPECT`` → ``DEAD`` when the lease stays expired past the dead
+    threshold (the worker is excluded like a drain and its in-flight
+    tickets are reconciled as evictions). A recovery heartbeat restores
+    ``HEALTHY`` from either state. Orthogonal to the boolean ``healthy``
+    platform signal: SUSPECT keeps ``healthy``/``reachable`` true, DEAD
+    clears both.
+    """
+
+    HEALTHY = "healthy"
+    SUSPECT = "suspect"
+    DEAD = "dead"
 
 
 @dataclasses.dataclass
@@ -63,6 +82,23 @@ class WorkerState:
     memory_bytes: int = 16 * 1024**3
     memory_used_bytes: int = 0
     perf_factor: float = 1.0
+    # Failure-detector verdict (lease machinery in the watcher). SUSPECT
+    # workers remain placeable but sort after healthy peers in every
+    # candidate order; DEAD workers are structurally excluded.
+    health: HealthState = HealthState.HEALTHY
+    # Incarnation counter: bumped when the worker's in-flight tickets are
+    # evicted wholesale (a crash / DEAD transition). Placements capture it
+    # at admission so a ticket can never retire against a later
+    # incarnation's counters.
+    generation: int = 0
+
+    @property
+    def suspect(self) -> bool:
+        return self.health is HealthState.SUSPECT
+
+    @property
+    def dead(self) -> bool:
+        return self.health is HealthState.DEAD
 
     @property
     def concurrent(self) -> int:

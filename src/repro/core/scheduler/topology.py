@@ -110,9 +110,14 @@ def distribution_view(
                     controller=controller_name,
                 )
             )
-    # Stable order: local tier first, then foreign; preserve insertion order
-    # within a tier so best_first means "order of appearance" deterministically.
-    views.sort(key=lambda v: v.tier)
+    # Stable order: local tier first, then foreign; within a tier, workers
+    # the failure detector marks SUSPECT sort after healthy peers (they
+    # stay placeable — last resort, not excluded); preserve insertion
+    # order otherwise so best_first means "order of appearance"
+    # deterministically. SUSPECT transitions are structural (epoch bump),
+    # so the cached view's order is always current, and the sort is
+    # stable, so a suspect-free cluster orders bit-identically to before.
+    views.sort(key=lambda v: (v.tier, v.worker.suspect))
     return views
 
 

@@ -13,10 +13,16 @@ the mutation methods directly.
 """
 from __future__ import annotations
 
+import dataclasses
 import threading
-from typing import Callable, Dict, Iterable, List, Optional
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
-from repro.core.scheduler.state import ClusterState, ControllerState, WorkerState
+from repro.core.scheduler.state import (
+    ClusterState,
+    ControllerState,
+    HealthState,
+    WorkerState,
+)
 from repro.core.tapp.ast import TappScript
 from repro.core.tapp.parser import parse_tapp
 from repro.core.tapp.validate import ValidationReport, validate_script
@@ -39,20 +45,65 @@ _STRUCTURAL_WORKER_FIELDS = frozenset(
         "capacity_slots",
         "reachable",
         "healthy",
+        "health",
         "resident_models",
         "memory_bytes",
     }
 )
 
 
+@dataclasses.dataclass(frozen=True)
+class LeaseConfig:
+    """Heartbeat-lease thresholds of the failure detector (seconds).
+
+    A worker whose last heartbeat is older than ``suspect_after`` turns
+    SUSPECT (deprioritized but placeable); older than ``dead_after`` turns
+    DEAD (excluded, in-flight tickets evicted). All lease methods take an
+    explicit ``now`` — the detector never reads a wall clock, so seeded
+    runs stay deterministic.
+    """
+
+    suspect_after: float = 1.5
+    dead_after: float = 5.0
+
+    def __post_init__(self) -> None:
+        if self.suspect_after <= 0 or self.dead_after <= 0:
+            raise ValueError("lease thresholds must be positive")
+        if self.dead_after < self.suspect_after:
+            raise ValueError(
+                f"dead_after ({self.dead_after}) must be >= suspect_after "
+                f"({self.suspect_after})"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthTransition:
+    """One failure-detector verdict change, as reported by the watcher."""
+
+    worker: str
+    previous: HealthState
+    state: HealthState
+    at: float
+    evicted: int = 0  # in-flight tickets that died with a DEAD transition
+
+
 class Watcher:
-    def __init__(self, cluster: Optional[ClusterState] = None) -> None:
+    def __init__(
+        self,
+        cluster: Optional[ClusterState] = None,
+        *,
+        lease: Optional[LeaseConfig] = None,
+    ) -> None:
         self._lock = threading.RLock()
         self._cluster = cluster or ClusterState()
         self._script: Optional[TappScript] = None
         self._script_version = 0
         self._subscribers: List[Subscriber] = []
         self._last_report: Optional[ValidationReport] = None
+        self._lease = lease
+        # Last-heartbeat timestamps, per worker. Leases are opt-in: a
+        # worker enters the detector on its first heartbeat_lease().
+        self._leases: Dict[str, float] = {}
 
     # -- subscriptions ---------------------------------------------------------
 
@@ -94,6 +145,7 @@ class Watcher:
                 worker.healthy = False
                 worker.reachable = False
                 self._cluster.remove_worker(name)
+            self._leases.pop(name, None)
         self._notify("topology")
         return worker
 
@@ -134,6 +186,8 @@ class Watcher:
                     raise AttributeError(f"WorkerState has no field {key!r}")
                 if key in ("sets", "resident_models"):
                     value = frozenset(value)
+                elif key == "health" and not isinstance(value, HealthState):
+                    value = HealthState(value)
                 if key in _STRUCTURAL_WORKER_FIELDS:
                     if getattr(worker, key) != value:
                         structural = True
@@ -188,9 +242,199 @@ class Watcher:
     def mark_restored(self, name: str) -> None:
         """Clear health + reachability flags (recovery / undrain) — the
         symmetric notification to :meth:`mark_unhealthy` /
-        :meth:`mark_unreachable`."""
-        self.update_worker(name, healthy=True, reachable=True)
+        :meth:`mark_unreachable`. Also resets the failure detector's
+        verdict: a restored worker is HEALTHY again (its eviction history
+        stays recorded through the generation counter)."""
+        self.update_worker(
+            name, healthy=True, reachable=True, health=HealthState.HEALTHY
+        )
         self._notify("topology")
+
+    # -- failure detection (heartbeat leases, PR 6) ------------------------------
+
+    @property
+    def lease_config(self) -> Optional[LeaseConfig]:
+        return self._lease
+
+    def configure_lease(self, lease: LeaseConfig) -> None:
+        """Install (or replace) the failure detector's lease thresholds."""
+        with self._lock:
+            self._lease = lease
+
+    def heartbeat_lease(
+        self, name: str, now: float, **fields
+    ) -> Optional[HealthTransition]:
+        """Renew a worker's heartbeat lease at time ``now``.
+
+        Enters the worker into the failure detector on first call. A
+        heartbeat from a SUSPECT or DEAD worker is the recovery signal:
+        the verdict returns to HEALTHY, health + reachability flags are
+        restored, and the transition is reported (None: no verdict
+        change). Extra keyword fields are applied as a regular
+        :meth:`update_worker` heartbeat in the same lock hold. Unknown
+        workers raise ``KeyError`` — a drained/deregistered worker's lease
+        is gone and cannot resurrect its state.
+        """
+        transition: Optional[HealthTransition] = None
+        with self._lock:
+            worker = self._cluster.workers.get(name)
+            if worker is None:
+                raise KeyError(f"unknown worker {name!r}")
+            self._leases[name] = float(now)
+            if worker.health is not HealthState.HEALTHY:
+                previous = worker.health
+                self.update_worker(
+                    name, healthy=True, reachable=True,
+                    health=HealthState.HEALTHY,
+                )
+                transition = HealthTransition(
+                    worker=name, previous=previous,
+                    state=HealthState.HEALTHY, at=float(now),
+                )
+            if fields:
+                self.update_worker(name, **fields)
+        if transition is not None:
+            self._notify("topology")
+        return transition
+
+    def check_leases(self, now: float) -> List[HealthTransition]:
+        """Advance the failure detector to time ``now``.
+
+        Expired leases transition HEALTHY→SUSPECT→DEAD per the
+        :class:`LeaseConfig` thresholds; each DEAD transition evicts the
+        worker's in-flight tickets (see :meth:`mark_dead`) and reports the
+        evicted count so the platform ledger can reconcile. Returns the
+        transitions in worker registration order.
+        """
+        lease = self._lease
+        if lease is None:
+            raise ValueError(
+                "watcher has no LeaseConfig; pass lease= at construction "
+                "or call configure_lease()"
+            )
+        transitions: List[HealthTransition] = []
+        structural = False
+        with self._lock:
+            for name in list(self._leases):
+                worker = self._cluster.workers.get(name)
+                if worker is None:
+                    del self._leases[name]
+                    continue
+                age = float(now) - self._leases[name]
+                if age >= lease.dead_after:
+                    if worker.health is not HealthState.DEAD:
+                        previous = worker.health
+                        evicted = self._kill_locked(worker)
+                        structural = True
+                        transitions.append(
+                            HealthTransition(
+                                worker=name, previous=previous,
+                                state=HealthState.DEAD, at=float(now),
+                                evicted=evicted,
+                            )
+                        )
+                elif age >= lease.suspect_after:
+                    if worker.health is HealthState.HEALTHY:
+                        worker.health = HealthState.SUSPECT
+                        structural = True
+                        transitions.append(
+                            HealthTransition(
+                                worker=name, previous=HealthState.HEALTHY,
+                                state=HealthState.SUSPECT, at=float(now),
+                            )
+                        )
+            if structural:
+                self._cluster.version += 1
+                self._cluster.bump_topology_epoch()
+        if transitions:
+            self._notify("topology")
+        return transitions
+
+    def _kill_locked(self, worker: WorkerState) -> int:
+        """DEAD transition under the lock: evict in-flight tickets, bump
+        the incarnation, clear health + reachability. Returns the number
+        of tickets that died with the worker (the caller reconciles them
+        as ledger evictions, reusing the deregistration-drain shape)."""
+        evicted = worker.inflight
+        worker.inflight = 0
+        worker.inflight_by.clear()
+        worker.running_functions.clear()
+        worker.queued = 0
+        worker.capacity_used_pct = 100.0
+        worker.generation += 1
+        worker.health = HealthState.DEAD
+        worker.healthy = False
+        worker.reachable = False
+        return evicted
+
+    def mark_dead(self, name: str) -> int:
+        """Declare a worker DEAD immediately (crash signal / injected
+        fault) — the same transition :meth:`check_leases` performs on a
+        fully-expired lease. Idempotent (0 evictions the second time);
+        unknown workers raise ``KeyError``. Returns the evicted in-flight
+        ticket count for ledger reconciliation."""
+        with self._lock:
+            worker = self._cluster.workers.get(name)
+            if worker is None:
+                raise KeyError(f"unknown worker {name!r}")
+            if worker.health is HealthState.DEAD:
+                return 0
+            evicted = self._kill_locked(worker)
+            self._cluster.version += 1
+            self._cluster.bump_topology_epoch()
+        self._notify("topology")
+        return evicted
+
+    def mark_suspect(self, name: str) -> None:
+        """Flag a worker SUSPECT (flappy-heartbeat signal): deprioritized
+        in candidate ordering but still placeable. No-op unless currently
+        HEALTHY; unknown workers raise ``KeyError``."""
+        with self._lock:
+            worker = self._cluster.workers.get(name)
+            if worker is None:
+                raise KeyError(f"unknown worker {name!r}")
+            if worker.health is not HealthState.HEALTHY:
+                return
+            worker.health = HealthState.SUSPECT
+            self._cluster.version += 1
+            self._cluster.bump_topology_epoch()
+        self._notify("topology")
+
+    # -- retry exclusion masks ---------------------------------------------------
+
+    def mask_unreachable(self, names: Iterable[str]) -> Tuple[str, ...]:
+        """Temporarily mark workers unreachable (a retry's already-tried
+        exclusion set). Returns exactly the workers that were reachable
+        and got masked — pass it to :meth:`unmask` to restore, so workers
+        unreachable for *other* reasons are never resurrected by the
+        restore. Retries are the failure path, so the epoch bump's index
+        rebuild cost is acceptable."""
+        masked: List[str] = []
+        with self._lock:
+            for name in names:
+                worker = self._cluster.workers.get(name)
+                if worker is not None and worker.reachable:
+                    worker.reachable = False
+                    masked.append(name)
+            if masked:
+                self._cluster.version += 1
+                self._cluster.bump_topology_epoch()
+        return tuple(masked)
+
+    def unmask(self, names: Sequence[str]) -> None:
+        """Restore reachability for workers previously masked by
+        :meth:`mask_unreachable` (no subscriber notification — the mask
+        is a transient routing-internal state, not a topology event)."""
+        restored = False
+        with self._lock:
+            for name in names:
+                worker = self._cluster.workers.get(name)
+                if worker is not None and not worker.reachable:
+                    worker.reachable = True
+                    restored = True
+            if restored:
+                self._cluster.version += 1
+                self._cluster.bump_topology_epoch()
 
     # -- admission ledger fast path ---------------------------------------------
     #
@@ -243,6 +487,7 @@ class Watcher:
         *,
         slow: bool = False,
         expected: Optional[WorkerState] = None,
+        generation: Optional[int] = None,
     ) -> bool:
         """Retire one admission ticket; returns whether a live ticket was
         actually released (``False`` when the worker was evicted while the
@@ -251,6 +496,10 @@ class Watcher:
         *different* worker has since re-used the name, the ticket is NOT
         released against it (it died with the original and was reconciled
         at deregistration), keeping the replacement's counters honest.
+        ``generation`` is the worker's incarnation at admission: if the
+        worker has since crashed (a DEAD transition evicted its tickets
+        and bumped the counter), the ticket is likewise declined even if
+        the same instance recovered.
         """
         with self._lock:
             worker = self._cluster.workers.get(name)
@@ -258,6 +507,8 @@ class Watcher:
                 return False  # worker evicted while running; ticket gone
             if expected is not None and worker is not expected:
                 return False  # name re-used by a different worker
+            if generation is not None and worker.generation != generation:
+                return False  # ticket evicted at a crash; already reconciled
             worker.inflight = max(0, worker.inflight - 1)
             by = worker.inflight_by
             by[controller] = max(0, by.get(controller, 1) - 1)

@@ -32,6 +32,7 @@ import warnings
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.core.platform import Placement, TappFederation, TappPlatform
+from repro.core.platform.faults import ChaosSpec, FaultEvent, FaultInjector
 from repro.core.scheduler.engine import Invocation, ScheduleDecision
 from repro.core.scheduler.state import ClusterState
 from repro.core.scheduler.vanilla import VanillaScheduler
@@ -129,6 +130,11 @@ class RequestRecord:
     entry_zone: Optional[str] = None
     forwarded: bool = False
     forward_rtt: float = 0.0
+    # Failure handling (PR 6): re-routes this request survived (worker
+    # crashes / no-valid-worker retries under a RetryPolicy), and the
+    # cumulative deterministic backoff charged into its latency.
+    retries: int = 0
+    retry_wait: float = 0.0
 
     @property
     def latency(self) -> float:
@@ -188,6 +194,11 @@ class SimResult:
     def n_forwarded(self) -> int:
         """Requests whose placement left their entry zone (federation)."""
         return sum(1 for r in self.records if r.forwarded)
+
+    @property
+    def n_retried(self) -> int:
+        """Requests that survived at least one retry re-route."""
+        return sum(1 for r in self.records if r.retries)
 
     def per_worker_counts(self) -> Dict[str, int]:
         counts: Dict[str, int] = {}
@@ -252,6 +263,7 @@ class Simulation:
         config: Optional[SimConfig] = None,
         is_tapp: bool = True,
         scheduler: Optional[SchedulerFn] = None,
+        chaos: Optional[ChaosSpec] = None,
     ) -> None:
         if isinstance(platform, Watcher):
             warnings.warn(
@@ -297,6 +309,13 @@ class Simulation:
         self._events: List = []
         self._seq = itertools.count()
         self.records: List[RequestRecord] = []
+        # Seeded fault injection (PR 6): the injector is built lazily in
+        # run() (it draws targets from the live cluster membership). With
+        # chaos=None nothing is scheduled and the event stream — and
+        # therefore every placement, trace, and RNG draw — is bit-identical
+        # to pre-chaos simulators.
+        self.chaos = chaos
+        self._injector: Optional[FaultInjector] = None
 
     @property
     def watcher(self) -> Watcher:
@@ -328,6 +347,17 @@ class Simulation:
                     f"not a TappFederation; drop entry_zone or pass a "
                     f"federation"
                 )
+        if self.chaos is not None and self._injector is None:
+            cluster = self.platform.cluster
+            self._injector = FaultInjector(
+                self.chaos,
+                list(cluster.workers),
+                list(cluster.controllers),
+                (tuple(self.platform.zones) if self._federated
+                 else tuple(cluster.zones())),
+            )
+            for event in self._injector.schedule():
+                self._push(event.at, "fault", event)
         rid = itertools.count()
         for spec in workload:
             profile = self.profiles[spec.function]
@@ -368,6 +398,8 @@ class Simulation:
                 self._on_start(time, payload)
             elif kind == "finish":
                 self._on_finish(time, payload)
+            elif kind == "fault":
+                self._on_fault(time, payload)
             else:  # pragma: no cover - defensive
                 raise RuntimeError(f"unknown event {kind}")
         return SimResult(records=self.records)
@@ -477,6 +509,17 @@ class Simulation:
             overhead += self.config.tag_resolution_overhead
         now = time + overhead
 
+        attempts = getattr(placement, "attempts", 1)
+        if attempts > 1:
+            # Retry bookkeeping: count the re-routes and charge the not-
+            # yet-charged share of the policy's deterministic backoff into
+            # this request's latency (re-entries via _retry_or_fail carry
+            # cumulative retry_wait, so the delta is what this pass adds).
+            record.retries = attempts - 1
+            if placement.retry_wait > record.retry_wait:
+                now += placement.retry_wait - record.retry_wait
+                record.retry_wait = placement.retry_wait
+
         placement_entry = getattr(placement, "entry_zone", None)
         if placement_entry is not None:
             # The federation resolved the actual entry (a workload with
@@ -489,14 +532,18 @@ class Simulation:
             # Cross-zone forwarding: failed attempts cost their hop RTT
             # before the request moves on; the taken hops' latency is
             # charged below through the entry→controller→worker path.
+            # Accumulated (+=): a retried request's earlier attempts
+            # already charged theirs.
             now += sum(h.rtt for h in hops if not h.scheduled)
-            record.forward_rtt = sum(h.rtt for h in hops)
-            record.forwarded = any(h.scheduled for h in hops)
+            record.forward_rtt += sum(h.rtt for h in hops)
+            record.forwarded |= any(h.scheduled for h in hops)
 
         if not decision.scheduled or decision.worker is None:
-            record.completed = now
-            record.error = "no-valid-worker"
-            self._finish_user_chain(now, payload, record)
+            self._retry_or_fail(
+                now,
+                {"payload": payload, "record": record, "placement": placement},
+                "no-valid-worker",
+            )
             return
 
         record.scheduled = True
@@ -535,13 +582,16 @@ class Simulation:
         record: RequestRecord = state["record"]
         profile: FunctionProfile = self.profiles[record.function]
         worker = self.platform.cluster.workers.get(record.worker)
-        if worker is None:  # evicted while queued
-            # Retire the orphaned ticket (a watcher no-op for a gone
-            # worker, but it keeps the admitted/completed ledger honest).
+        if worker is None or not state["placement"].ticket_alive:
+            # Deregistered while queued, or crashed before the work could
+            # start (the ticket was reconciled as a ledger eviction either
+            # way). complete() is a bookkeeping no-op on a dead ticket;
+            # the request retries under the policy, or fails.
             state["placement"].complete()
-            record.completed = time
-            record.error = "worker-evicted"
-            self._finish_user_chain(time, state["payload"], record)
+            self._retry_or_fail(
+                time, state,
+                "worker-evicted" if worker is None else "worker-crashed",
+            )
             return
 
         duration = 0.0
@@ -599,12 +649,26 @@ class Simulation:
 
     def _on_finish(self, time: float, state: Dict) -> None:
         record: RequestRecord = state["record"]
-        state["placement"].complete()
-        record.completed = time
+        placement: Placement = state["placement"]
+        retired = placement.complete()
         link = state.pop("link", None)
         if link is not None:
             self._link_load[link] = max(0, self._link_load.get(link, 1) - 1)
 
+        if (
+            not retired
+            and placement.admitted
+            and record.worker in self.platform.cluster.workers
+        ):
+            # The ticket was reconciled as an eviction while the work
+            # executed and the worker is still a cluster member — a crash
+            # (DEAD transition): the result died with that incarnation.
+            # A *deregistered* worker is the drain case instead — running
+            # work completes — so it falls through to the normal path.
+            self._retry_or_fail(time, state, "worker-crashed")
+            return
+
+        record.completed = time
         # Pull the next queued invocation for this worker, if any.
         queue = self._queues.get(record.worker or "", [])
         if queue:
@@ -612,6 +676,46 @@ class Simulation:
             self._push(time, "start", next_state)
 
         self._finish_user_chain(time, state["payload"], record)
+
+    def _retry_or_fail(self, time: float, state: Dict, error: str) -> None:
+        """Re-route a failed request under the platform's retry policy,
+        or record its terminal failure.
+
+        ``platform.retry`` resolves the policy (explicit > controller >
+        platform default) and returns ``None`` when no retry is issued —
+        including the no-policy case, which keeps chaos-free runs
+        bit-identical: nothing here touches RNG streams or routing state
+        unless a retry actually happens. The re-route happens at failure
+        time against the live cluster; the policy's backoff is charged
+        into the request's latency by ``_finish_submit``'s delta charge.
+        """
+        record: RequestRecord = state["record"]
+        retry = getattr(self.platform, "retry", None)
+        replacement = retry(state["placement"]) if retry is not None else None
+        if replacement is None:
+            record.completed = time
+            record.error = error
+            self._finish_user_chain(time, state["payload"], record)
+            return
+        self._finish_submit(time, state["payload"], record, replacement)
+
+    def _on_fault(self, time: float, event: FaultEvent) -> None:
+        """Apply one injected fault to the platform and reconcile the
+        sim-side bookkeeping the platform cannot see."""
+        if not self._injector.apply(event, self.platform, now=time):
+            return
+        if event.kind == "crash":
+            # The worker's warm containers die with it (a restarted
+            # worker starts cold), and its queued-but-not-started work is
+            # retried or failed — the platform already evicted the
+            # tickets. Executing work is handled at its finish event (the
+            # dead-ticket complete() there routes into retry-or-fail).
+            target = event.target
+            for key in [k for k in self._warm if k[0] == target]:
+                del self._warm[key]
+            for _, state in self._queues.pop(target, ()):
+                state["placement"].complete()
+                self._retry_or_fail(time, state, "worker-crashed")
 
     def _finish_user_chain(self, time: float, payload: Dict, record: RequestRecord) -> None:
         payload = dict(payload)

@@ -15,9 +15,11 @@ import dataclasses
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.platform import (
+    ChaosSpec,
     ClusterSpec,
     ControllerSpec,
     FederationSpec,
+    RetryPolicy,
     TappFederation,
     TappPlatform,
     WorkerSpec,
@@ -541,6 +543,68 @@ def run_colocation_case(
             for spec in workload
         ]
     result = sim.run(workload)
+    return sim, result
+
+
+def chaos_benchmark_chaos(
+    *, seed: int = 0, crashes: int = 2, partitions: int = 0
+) -> ChaosSpec:
+    """A §5.3-sized chaos schedule: a couple of worker crashes (with
+    recovery) inside the first minute, optional inter-zone partitions."""
+    return ChaosSpec(
+        seed=seed,
+        horizon=60.0,
+        worker_crashes=crashes,
+        crash_downtime=10.0,
+        partitions=partitions,
+        partition_duration=15.0,
+    )
+
+
+def run_chaos_case(
+    *,
+    test: str = "hellojs",
+    seed: int = 0,
+    chaos: Optional[ChaosSpec] = None,
+    retry: Optional[RetryPolicy] = RetryPolicy(max_attempts=3),
+    federated: bool = False,
+) -> Tuple[Simulation, "SimResult"]:
+    """Run one §5.2 test under seeded fault injection (PR 6).
+
+    The same deployment + workload as :func:`run_benchmark`'s tAPP
+    shared-distribution arm, but with a :class:`RetryPolicy` on the
+    platform and a :class:`ChaosSpec` threaded into the simulator's
+    event stream: workers crash (evicting their in-flight tickets) and
+    recover mid-run, and affected requests re-route under the policy.
+    ``chaos=None`` runs the schedule-free control — bit-identical to a
+    pre-chaos simulation. ``federated=True`` drives the two-rack
+    federation instead (partitions then sever real forwarding links).
+    """
+    profiles = adhoc_profiles(False)
+    config = SimConfig(seed=seed, gateway_zone=ZONE_EAST)
+    if federated:
+        platform = TappFederation(
+            colocation_federation_spec(),
+            distribution=DistributionPolicy.SHARED,
+            seed=seed,
+            policy=COLOCATION_BLANK_SCRIPT,
+            retry=retry,
+        )
+        network = colocation_network()
+        config = SimConfig(seed=seed, gateway_zone=ZONE_RACK_A)
+    else:
+        platform = TappPlatform(
+            benchmark_cluster(deployment_seed=seed),
+            distribution=DistributionPolicy.SHARED,
+            seed=seed,
+            policy=DATA_LOCALITY_SCRIPT,
+            retry=retry,
+        )
+        network = benchmark_network()
+    sim = Simulation(
+        platform, network, profiles, config, is_tapp=True, chaos=chaos
+    )
+    result = sim.run([WORKLOADS[test]])
     return sim, result
 
 

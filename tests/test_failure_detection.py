@@ -1,0 +1,606 @@
+"""Failure-domain robustness (PR 6): heartbeat-lease failure detection,
+retry/backoff re-routing, unknown-worker platform errors, idempotent
+completion, and partition-tolerant federation forwarding."""
+import dataclasses
+
+import pytest
+
+from repro.core.platform import (
+    ClusterSpec,
+    ControllerSpec,
+    FederationSpec,
+    HealthState,
+    LeaseConfig,
+    RetryPolicy,
+    TappFederation,
+    TappPlatform,
+    UnknownWorkerError,
+    WorkerSpec,
+)
+from repro.core.scheduler.gateway import forward_targets
+from repro.core.scheduler.topology import DistributionPolicy
+from repro.core.scheduler.watcher import Watcher
+from repro.core.sim.core import NetworkModel
+from repro.core.tapp import parse_tapp
+
+SPEC = ClusterSpec(
+    controllers=(ControllerSpec("Ctl", zone="z"),),
+    workers=tuple(
+        WorkerSpec(f"w{i}", zone="z", sets=("z", "any"), capacity_slots=4)
+        for i in range(4)
+    ),
+)
+
+BLANK = (
+    "- default:\n"
+    "  - workers:\n"
+    "    - set:\n"
+    "    strategy: platform\n"
+    "    invalidate: overload\n"
+)
+
+
+def platform(**kwargs) -> TappPlatform:
+    return TappPlatform(
+        SPEC, distribution=DistributionPolicy.SHARED, seed=0, policy=BLANK,
+        **kwargs
+    )
+
+
+def ledger_holds(stats) -> bool:
+    return stats.admitted == stats.completed + stats.evicted + stats.inflight
+
+
+# ---------------------------------------------------------------------------
+# Heartbeat leases: HEALTHY → SUSPECT → DEAD → recovery
+# ---------------------------------------------------------------------------
+
+
+def lease_platform() -> TappPlatform:
+    return platform(lease=LeaseConfig(suspect_after=1.0, dead_after=4.0))
+
+
+class TestLeases:
+    def test_fresh_lease_keeps_worker_healthy(self):
+        p = lease_platform()
+        p.heartbeat_lease("w0", 0.0)
+        assert p.check_leases(0.5) == []
+        assert p.cluster.workers["w0"].health is HealthState.HEALTHY
+
+    def test_expired_lease_marks_suspect_then_dead(self):
+        p = lease_platform()
+        p.heartbeat_lease("w0", 0.0)
+        [t] = p.check_leases(2.0)
+        assert (t.worker, t.previous, t.state) == (
+            "w0", HealthState.HEALTHY, HealthState.SUSPECT
+        )
+        w = p.cluster.workers["w0"]
+        assert w.suspect and w.healthy and w.reachable  # still placeable
+        [t] = p.check_leases(5.0)
+        assert t.state is HealthState.DEAD
+        assert w.dead and not w.healthy and not w.reachable
+
+    def test_suspect_worker_sorts_after_healthy_peers(self):
+        p = lease_platform()
+        # Shared-distribution platform strategy picks the least-loaded
+        # worker; make w0 the clear winner, then suspect it.
+        for name in ("w1", "w2", "w3"):
+            p.heartbeat(name, inflight=2)
+        assert p.invoke("fn").worker == "w0"
+        p.suspect_worker("w0")
+        assert p.cluster.workers["w0"].suspect
+        assert p.invoke("fn").worker != "w0"  # deprioritized, not excluded
+        # With every worker suspect, w0 is placeable again.
+        for name in ("w1", "w2", "w3"):
+            p.suspect_worker(name)
+        assert p.invoke("fn").scheduled
+
+    def test_dead_worker_excluded_and_tickets_evicted(self):
+        p = lease_platform()
+        placements = [p.invoke("fn") for _ in range(4)]
+        victim = placements[0].worker
+        evicted = p.fail_worker(victim)
+        assert evicted == sum(1 for pl in placements if pl.worker == victim)
+        stats = p.stats()
+        assert stats.dead_workers == 1 and ledger_holds(stats)
+        for _ in range(8):
+            assert p.invoke("fn").worker != victim
+        # Completing an evicted ticket is a no-op, not a double-count.
+        assert placements[0].complete() is False
+        assert ledger_holds(p.stats())
+
+    def test_lease_expiry_evicts_like_a_crash(self):
+        p = lease_platform()
+        pl = p.invoke("fn")
+        p.heartbeat_lease(pl.worker, 0.0)
+        transitions = p.check_leases(10.0)  # straight past dead_after
+        dead = [t for t in transitions if t.state is HealthState.DEAD]
+        assert dead and dead[0].evicted == 1
+        assert ledger_holds(p.stats())
+        assert pl.ticket_alive is False
+
+    def test_recovery_heartbeat_restores_healthy(self):
+        p = lease_platform()
+        p.heartbeat_lease("w0", 0.0)
+        p.check_leases(10.0)
+        assert p.cluster.workers["w0"].dead
+        t = p.heartbeat_lease("w0", 11.0)
+        assert t is not None and t.state is HealthState.HEALTHY
+        w = p.cluster.workers["w0"]
+        assert w.healthy and w.reachable and not w.dead
+        assert p.check_leases(11.5) == []
+        # A revived worker takes placements again.
+        assert any(p.invoke("fn").worker == "w0" for _ in range(8))
+
+    def test_generation_guards_completion_across_crash_revival(self):
+        p = lease_platform()
+        pl = p.invoke("fn")
+        p.fail_worker(pl.worker)
+        p.restore(pl.worker)
+        w = p.cluster.workers[pl.worker]
+        assert w.generation == 1 and w.inflight == 0
+        # The pre-crash ticket must not decrement the new incarnation.
+        assert pl.complete() is False
+        assert w.inflight == 0 and ledger_holds(p.stats())
+
+    def test_check_leases_requires_config(self):
+        p = platform()  # no LeaseConfig
+        with pytest.raises(ValueError):
+            p.check_leases(1.0)
+
+    def test_lease_config_validation(self):
+        with pytest.raises(ValueError):
+            LeaseConfig(suspect_after=0.0)
+        with pytest.raises(ValueError):
+            LeaseConfig(suspect_after=5.0, dead_after=1.0)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: unknown/deregistered workers raise UnknownWorkerError
+# ---------------------------------------------------------------------------
+
+
+class TestUnknownWorker:
+    def test_heartbeat_unknown_worker_raises(self):
+        p = platform()
+        with pytest.raises(UnknownWorkerError) as err:
+            p.heartbeat("ghost", inflight=1)
+        assert err.value.worker == "ghost"
+        assert isinstance(err.value, KeyError)
+        assert "deregistered" in str(err.value)
+
+    def test_mark_unhealthy_unknown_worker_raises(self):
+        p = platform()
+        with pytest.raises(UnknownWorkerError):
+            p.mark_unhealthy("ghost")
+
+    def test_heartbeat_never_resurrects_deregistered_worker(self):
+        p = platform()
+        p.remove_worker("w3")
+        with pytest.raises(UnknownWorkerError):
+            p.heartbeat("w3", inflight=0, healthy=True)
+        assert "w3" not in p.cluster.workers
+
+    def test_mark_unhealthy_after_deregistration_raises(self):
+        p = platform()
+        p.remove_worker("w3")
+        with pytest.raises(UnknownWorkerError):
+            p.mark_unhealthy("w3")
+
+    def test_lease_and_failure_entry_points_wrapped_too(self):
+        p = lease_platform()
+        for call in (
+            lambda: p.heartbeat_lease("ghost", 0.0),
+            lambda: p.fail_worker("ghost"),
+            lambda: p.suspect_worker("ghost"),
+            lambda: p.drain("ghost"),
+            lambda: p.restore("ghost"),
+            lambda: p.mark_unreachable("ghost"),
+        ):
+            with pytest.raises(UnknownWorkerError):
+                call()
+
+
+# ---------------------------------------------------------------------------
+# Satellite: Placement.complete() is idempotent
+# ---------------------------------------------------------------------------
+
+
+class TestIdempotentComplete:
+    def test_double_complete_does_not_double_decrement(self):
+        p = platform()
+        pl = p.invoke("fn")
+        assert pl.complete() is True
+        assert pl.complete() is False
+        stats = p.stats()
+        assert stats.completed == 1 and stats.inflight == 0
+        assert ledger_holds(stats)
+
+    def test_complete_racing_deregistration_eviction(self):
+        p = platform()
+        pl = p.invoke("fn")
+        p.remove_worker(pl.worker)
+        evicted_before = p.stats().evicted
+        assert evicted_before == 1
+        # The ticket died with the worker: complete() must not turn the
+        # eviction into a completion as well.
+        assert pl.complete() is False
+        stats = p.stats()
+        assert (stats.completed, stats.evicted) == (0, evicted_before)
+        assert ledger_holds(stats)
+
+    def test_unadmitted_placement_complete_is_noop(self):
+        p = TappPlatform(
+            ClusterSpec(controllers=(ControllerSpec("C"),)),
+            policy=BLANK,
+        )
+        pl = p.invoke("fn")
+        assert not pl.scheduled
+        assert pl.complete() is False
+        assert ledger_holds(p.stats())
+
+
+# ---------------------------------------------------------------------------
+# RetryPolicy: resolution order, backoff, terminal policy failures
+# ---------------------------------------------------------------------------
+
+
+class TestRetryPolicy:
+    def test_backoff_is_deterministic_exponential(self):
+        policy = RetryPolicy(max_attempts=4, backoff_base=0.1,
+                             backoff_multiplier=2.0)
+        assert [policy.backoff(k) for k in (1, 2, 3)] == [0.1, 0.2, 0.4]
+        assert policy.allows(3) and not policy.allows(4)
+
+    def test_deadline_caps_cumulative_backoff(self):
+        policy = RetryPolicy(max_attempts=10, backoff_base=1.0,
+                             backoff_multiplier=2.0, deadline=2.5)
+        assert policy.allows(1, 0.0)          # +1.0 <= 2.5
+        assert not policy.allows(2, 1.0)      # 1.0 + 2.0 > 2.5
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            RetryPolicy(max_attempts=0)
+        with pytest.raises(ValueError):
+            RetryPolicy(backoff_multiplier=0.0)
+
+    def test_retry_reroutes_around_failed_worker(self):
+        p = platform(retry=RetryPolicy(max_attempts=3, backoff_base=0.05))
+        pl = p.invoke("fn")
+        p.fail_worker(pl.worker)
+        replacement = p.retry(pl)
+        assert replacement is not None and replacement.scheduled
+        assert replacement.worker != pl.worker
+        assert replacement.attempts == 2
+        assert replacement.retry_wait == pytest.approx(0.05)
+        assert replacement.failed_workers == (pl.worker,)
+        assert p.stats().retries == 1
+
+    def test_retry_excludes_every_previously_failed_worker(self):
+        p = platform(retry=RetryPolicy(max_attempts=4))
+        pl = p.invoke("fn")
+        tried = [pl.worker]
+        for _ in range(2):
+            p.fail_worker(pl.worker)
+            pl = p.retry(pl)
+            assert pl is not None and pl.worker not in tried
+            tried.append(pl.worker)
+        assert pl.failed_workers == tuple(tried[:-1])
+
+    def test_retry_mask_restores_reachability(self):
+        p = platform(retry=RetryPolicy(max_attempts=2))
+        pl = p.invoke("fn")
+        victim = pl.worker
+        p.fail_worker(victim)
+        p.retry(pl)
+        # Only the DEAD worker stays unreachable; the mask rolled back.
+        assert all(
+            w.reachable for n, w in p.cluster.workers.items() if n != victim
+        )
+
+    def test_retry_budget_exhaustion_returns_none(self):
+        p = platform(retry=RetryPolicy(max_attempts=2))
+        pl = p.invoke("fn")
+        p.fail_worker(pl.worker)
+        second = p.retry(pl)
+        assert second is not None and second.attempts == 2
+        assert p.retry(second) is None  # max_attempts spent
+
+    def test_no_policy_means_no_retry(self):
+        p = platform()
+        pl = p.invoke("fn")
+        assert p.retry(pl) is None
+        assert p.stats().retries == 0
+
+    def test_controller_policy_beats_platform_default(self):
+        spec = dataclasses.replace(
+            SPEC,
+            controllers=(
+                ControllerSpec("Ctl", zone="z",
+                               retry=RetryPolicy(max_attempts=5)),
+            ),
+        )
+        p = TappPlatform(spec, distribution=DistributionPolicy.SHARED,
+                         seed=0, policy=BLANK,
+                         retry=RetryPolicy(max_attempts=2))
+        pl = p.invoke("fn")
+        assert pl.controller == "Ctl"
+        assert p._retry_policy_for(pl.controller, None).max_attempts == 5
+        override = RetryPolicy(max_attempts=9)
+        assert p._retry_policy_for(pl.controller, override) is override
+
+    def test_followup_fail_is_terminal(self):
+        script = (
+            BLANK
+            + "- pinned:\n"
+            + "  - workers:\n"
+            + "    - wrk: nope\n"
+            + "  followup: fail\n"
+        )
+        p = TappPlatform(SPEC, distribution=DistributionPolicy.SHARED,
+                         seed=0, policy=script,
+                         retry=RetryPolicy(max_attempts=5))
+        pl = p.invoke("fn", tag="pinned")
+        assert not pl.scheduled and pl.failed_by_policy
+        assert pl.attempts == 1          # the invoke loop never retried
+        assert p.retry(pl) is None       # and neither does explicit retry
+        assert p.stats().retries == 0
+
+    def test_exhausted_route_is_policy_terminal_not_retried(self):
+        # One worker, kill it: the route exhausts and the engine marks
+        # the failure as the policy's verdict — invoke must not burn the
+        # retry budget re-running a deterministic policy decision.
+        p = TappPlatform(
+            ClusterSpec(controllers=(ControllerSpec("Ctl"),),
+                        workers=(WorkerSpec("only"),)),
+            policy=BLANK,
+            retry=RetryPolicy(max_attempts=3, backoff_base=0.1),
+        )
+        p.fail_worker("only")
+        pl = p.invoke("fn")
+        assert not pl.scheduled and pl.failed_by_policy
+        assert pl.attempts == 1
+        assert p.stats().retries == 0
+
+    def test_invoke_batch_matches_sequential_invokes(self):
+        kwargs = dict(distribution=DistributionPolicy.SHARED, seed=0,
+                      policy=BLANK,
+                      retry=RetryPolicy(max_attempts=2))
+        a = TappPlatform(SPEC, **kwargs)
+        b = TappPlatform(SPEC, **kwargs)
+        a.fail_worker("w0")
+        b.fail_worker("w0")
+        seq = [a.invoke(f"fn{i % 3}") for i in range(12)]
+        batch = b.invoke_batch([f"fn{i % 3}" for i in range(12)])
+        assert [(p.worker, p.attempts) for p in seq] == [
+            (p.worker, p.attempts) for p in batch
+        ]
+
+
+# ---------------------------------------------------------------------------
+# Partition-tolerant federation
+# ---------------------------------------------------------------------------
+
+
+def zone_slice(prefix: str, ctl: str) -> ClusterSpec:
+    return ClusterSpec(
+        controllers=(ControllerSpec(ctl),),
+        workers=tuple(
+            WorkerSpec(f"{prefix}{i}", sets=(prefix, "any"), capacity_slots=4)
+            for i in range(2)
+        ),
+    )
+
+
+def federation(**kwargs) -> TappFederation:
+    spec = FederationSpec.of(
+        {
+            "a": zone_slice("a", "ACtl"),
+            "b": zone_slice("b", "BCtl"),
+            "c": zone_slice("c", "CCtl"),
+        },
+        network=NetworkModel(
+            rtt={("a", "b"): 0.010, ("a", "c"): 0.030, ("b", "c"): 0.020},
+            bandwidth={},
+        ),
+    )
+    return TappFederation(
+        spec, distribution=DistributionPolicy.SHARED, seed=0, policy=BLANK,
+        **kwargs
+    )
+
+
+HOME_B_SCRIPT = (
+    BLANK
+    + "- pinned_b:\n"
+    + "  - controller: BCtl\n"
+    + "    workers:\n"
+    + "    - set: b\n"
+    + "    topology_tolerance: none\n"
+    + "  followup: fail\n"
+    + "- home_b_roam:\n"
+    + "  - controller: BCtl\n"
+    + "    workers:\n"
+    + "    - set: b\n"
+    + "    topology_tolerance: all\n"
+)
+
+
+class TestPartitions:
+    def test_sever_heal_bookkeeping(self):
+        f = federation()
+        f.sever("a", "b")
+        f.sever("a", "b")  # idempotent
+        assert f.partitioned("a", "b") and f.partitioned("b", "a")
+        assert f.partitions == (("a", "b"),)
+        f.heal("a", "b")
+        assert f.partitions == ()
+        with pytest.raises(ValueError):
+            f.sever("a", "a")
+        with pytest.raises(ValueError):
+            f.sever("a", "nope")
+
+    def test_forward_targets_skip_partitioned_zone(self):
+        f = federation()
+        script = parse_tapp(BLANK)
+        targets = forward_targets(script, None, f.cluster, "a", ("b", "c"))
+        assert targets == ["b", "c"]
+        filtered = forward_targets(script, None, f.cluster, "a", ("b", "c"),
+                                   unreachable=frozenset({"b"}))
+        assert filtered == ["c"]
+
+    def test_forwarding_routes_around_partition(self):
+        f = federation()
+        # Fill zone a so its local pass declines and forwarding kicks in.
+        for w in ("a0", "a1"):
+            f.heartbeat(w, inflight=4)
+        assert f.cluster.workers["a0"].overloaded
+        baseline = f.invoke("fn", entry_zone="a")
+        assert baseline.scheduled
+        assert f.cluster.workers[baseline.worker].zone == "b"  # nearest
+        f.sever("a", "b")
+        rerouted = f.invoke("fn", entry_zone="a")
+        assert rerouted.scheduled
+        assert f.cluster.workers[rerouted.worker].zone == "c"
+
+    def test_tolerance_none_never_escapes_home_mid_partition(self):
+        f = federation()
+        f.apply_policy(HOME_B_SCRIPT)
+        placed = f.invoke("fn", tag="pinned_b", entry_zone="a")
+        assert placed.scheduled
+        assert f.cluster.workers[placed.worker].zone == "b"
+        f.sever("a", "b")
+        for _ in range(6):
+            pl = f.invoke("fn", tag="pinned_b", entry_zone="a")
+            assert not pl.scheduled  # fails; never lands outside zone b
+        # Entering AT the home zone still works: the partition only cuts
+        # the a↔b link.
+        assert f.invoke("fn", tag="pinned_b", entry_zone="b").scheduled
+        f.heal("a", "b")
+        healed = f.invoke("fn", tag="pinned_b", entry_zone="a")
+        assert healed.scheduled
+        assert f.cluster.workers[healed.worker].zone == "b"
+
+    def test_dead_zone_skipped_without_explicit_partition(self):
+        f = federation()
+        for w in ("a0", "a1"):
+            f.heartbeat(w, inflight=4)
+        for w in ("b0", "b1"):
+            f.fail_worker(w)
+        pl = f.invoke("fn", entry_zone="a")
+        assert pl.scheduled
+        assert f.cluster.workers[pl.worker].zone == "c"
+        report = f.explain("fn", entry_zone="a")
+        assert "b" in report.unreachable_zones
+
+    def test_federated_retry_reroutes_around_dead_zone(self):
+        f = federation(retry=RetryPolicy(max_attempts=3))
+        # Drain zone a so the baseline placement forwards to b.
+        for w in ("a0", "a1"):
+            f.drain(w)
+        pl = f.invoke("fn", entry_zone="a")
+        assert f.cluster.workers[pl.worker].zone == "b"
+        for w in ("b0", "b1"):
+            f.fail_worker(w)
+        assert pl.ticket_alive is False
+        replacement = f.retry(pl)
+        assert replacement is not None and replacement.scheduled
+        assert f.cluster.workers[replacement.worker].zone != "b"
+        assert replacement.attempts == 2
+        assert replacement.entry_zone == "a"
+        stats = f.stats()
+        assert stats.aggregate.retries == 1
+        assert ledger_holds(stats.aggregate)
+
+    def test_severed_designated_route_burns_retry_budget(self):
+        # A partition failure is NOT a policy verdict, so the invoke
+        # loop retries it; with the partition still up every attempt
+        # fails deterministically and the budget is spent.
+        f = federation(retry=RetryPolicy(max_attempts=3, backoff_base=0.1))
+        f.apply_policy(HOME_B_SCRIPT)
+        f.sever("a", "b")
+        pl = f.invoke("fn", tag="pinned_b", entry_zone="a")
+        assert not pl.scheduled and not pl.failed_by_policy
+        assert pl.attempts == 3
+        assert pl.retry_wait == pytest.approx(0.1 + 0.2)
+        assert f.stats().aggregate.retries == 2
+        f.heal("a", "b")
+        healed = f.invoke("fn", tag="pinned_b", entry_zone="a")
+        assert healed.scheduled and healed.attempts == 1
+
+    def test_explain_mirrors_partitioned_route(self):
+        f = federation()
+        f.apply_policy(HOME_B_SCRIPT)
+        f.sever("a", "b")
+        report = f.explain("fn", tag="pinned_b", entry_zone="a")
+        assert not report.scheduled
+        assert report.unreachable_zones == ("b",)
+        live = f.invoke("fn", tag="pinned_b", entry_zone="a")
+        assert live.scheduled == report.scheduled
+
+    def test_partition_preserves_forward_order_after_heal(self):
+        f = federation()
+        for w in ("a0", "a1"):
+            f.heartbeat(w, inflight=4)
+        before = f.invoke("fn", entry_zone="a").worker
+        f.sever("a", "b")
+        f.invoke("fn", entry_zone="a")
+        f.heal("a", "b")
+        after = f.invoke("fn", entry_zone="a")
+        assert f.cluster.workers[after.worker].zone == (
+            f.cluster.workers[before].zone
+        )
+
+
+# ---------------------------------------------------------------------------
+# Satellite: federation-wide ledger conservation under churn
+# ---------------------------------------------------------------------------
+
+
+class TestFederationLedgerChurn:
+    def test_conservation_under_drain_restore_deregister_churn(self):
+        f = federation(retry=RetryPolicy(max_attempts=2))
+        open_placements = []
+        step = 0
+        for round_no in range(6):
+            for zone in ("a", "b", "c"):
+                for _ in range(4):
+                    pl = f.invoke(f"fn{step % 5}", entry_zone=zone)
+                    step += 1
+                    if pl.scheduled:
+                        open_placements.append(pl)
+            if round_no == 1:
+                f.drain("b0")
+            if round_no == 2:
+                f.fail_worker("c1")
+                f.sever("a", "c")
+            if round_no == 3:
+                f.restore("b0")
+                f.heal("a", "c")
+                f.remove_worker("a1")
+            if round_no == 4:
+                f.restore("c1")
+                f.add_worker(WorkerSpec("a2", zone="a", sets=("a", "any"),
+                                        capacity_slots=4))
+            # Complete roughly half of what is open, oldest first.
+            keep = []
+            for index, pl in enumerate(open_placements):
+                if index % 2 == 0:
+                    pl.complete()
+                else:
+                    keep.append(pl)
+            open_placements = keep
+            stats = f.stats()
+            assert ledger_holds(stats.aggregate), (round_no, stats.aggregate)
+            # Zone inflight rows sum to the aggregate inflight.
+            assert sum(z.inflight for z in stats.zones) == (
+                stats.aggregate.inflight
+            )
+        for pl in open_placements:
+            pl.complete()
+        final = f.stats().aggregate
+        assert final.inflight == 0
+        assert ledger_holds(final)
+        # entered splits across the three entry zones.
+        by_zone = {z.zone: z.entered for z in f.stats().zones}
+        assert sum(by_zone.values()) >= step
