@@ -1,7 +1,7 @@
 PY := python
 export PYTHONPATH := src:.
 
-.PHONY: test lint chaos bench bench-sched bench-sched-full bench-check bench-serve
+.PHONY: test lint chaos bench bench-sched bench-sched-full bench-check bench-serve bench-throughput bench-throughput-smoke
 
 test:
 	$(PY) -m pytest -q
@@ -18,7 +18,14 @@ chaos:
 
 # Correctness lint (ruff.toml: syntax errors, bad comparisons, undefined
 # names). `pip install ruff` (requirements-dev.txt) to run locally.
+# Also fails if any Python bytecode is tracked (bytecode is
+# machine-specific noise in diffs; .gitignore keeps it out, this keeps
+# it honest).
 lint:
+	@tracked=$$(git ls-files | grep -E '(^|/)__pycache__/|\.py[co]$$' || true); \
+	if [ -n "$$tracked" ]; then \
+		echo "FAIL: tracked Python bytecode:"; echo "$$tracked"; exit 1; \
+	fi
 	ruff check src benchmarks examples tests
 
 bench:
@@ -46,3 +53,16 @@ bench-sched-full:
 # CPU replicas); regenerates the committed artifact.
 bench-serve:
 	$(PY) benchmarks/run.py serve --out BENCH_serving.json
+
+# Multi-entry federated throughput (PR 7): sustained invoke→complete
+# ops/s with one driver thread per entry zone at a fixed total worker
+# count; gated at 2-zone >= 1.5x the 1-zone rate (what the zone-sharded
+# ledgers buy under the GIL). Full reps; merges the rows into the
+# committed artifact. CI runs the reduced-rep smoke variant below.
+bench-throughput:
+	$(PY) benchmarks/run.py sched --throughput --check \
+		--merge BENCH_scheduler.json
+
+bench-throughput-smoke:
+	$(PY) benchmarks/run.py sched --throughput --smoke \
+		--out bench_throughput_smoke.json

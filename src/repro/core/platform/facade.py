@@ -138,6 +138,12 @@ class _Ledger:
     runs — the drain-path removal reconciles those tickets here, and the
     placement's later ``complete()`` sees the watcher decline the retire
     (the worker is gone) and does not double-count it as a completion.
+
+    Since PR 7 the platform keeps one shard per worker *zone* (plus a
+    ``None`` shard for un-admitted placements), so per-zone entrypoints
+    admit and complete against zone-local counters instead of one shared
+    object; the invariant holds per shard, and therefore for the sums
+    the stats snapshots report.
     """
 
     __slots__ = ("admitted", "completed", "evicted")
@@ -322,7 +328,14 @@ class PlatformCore:
         if watcher is not None and lease is not None:
             self._watcher.configure_lease(lease)
         self._runtime = ControllerRuntime(self._watcher)
-        self._ledger = _Ledger()
+        # Zone-sharded admission ledger (PR 7): one counter shard per
+        # worker zone, plus the ``None`` shard for un-admitted
+        # placements. Writes are zone-local (each placement holds the
+        # shard of the zone its ticket was taken in); the lock guards
+        # only shard-map growth and cross-zone snapshot reads, never the
+        # admit/complete hot path.
+        self._ledger_lock = threading.Lock()
+        self._ledgers: Dict[Optional[str], _Ledger] = {None: _Ledger()}
         # Platform-default retry policy + per-controller overrides (from
         # ControllerSpec.retry); resolution order per placement: explicit
         # call argument > routed controller's policy > platform default.
@@ -401,7 +414,7 @@ class PlatformCore:
         """
         removed = self._watcher.deregister_worker(name)
         if removed is not None and removed.inflight:
-            self._ledger.evicted += removed.inflight
+            self._ledger_for(removed.zone).evicted += removed.inflight
 
     def add_controller(
         self,
@@ -502,7 +515,10 @@ class PlatformCore:
         transitions = self._watcher.check_leases(now)
         for transition in transitions:
             if transition.evicted:
-                self._ledger.evicted += transition.evicted
+                # DEAD workers stay registered, so the zone lookup holds.
+                self._ledger_shard_of(transition.worker).evicted += (
+                    transition.evicted
+                )
         return transitions
 
     def fail_worker(self, name: str) -> int:
@@ -511,8 +527,10 @@ class PlatformCore:
         evicted count. Idempotent; unknown workers raise
         :class:`UnknownWorkerError`."""
         with self._wrap_unknown_worker(name):
+            worker = self._watcher.cluster.workers.get(name)
+            zone = worker.zone if worker is not None else None
             evicted = self._watcher.mark_dead(name)
-        self._ledger.evicted += evicted
+        self._ledger_for(zone).evicted += evicted
         return evicted
 
     def suspect_worker(self, name: str) -> None:
@@ -693,20 +711,56 @@ class PlatformCore:
 
     # -- admission ----------------------------------------------------------------
 
+    def _ledger_for(self, zone: Optional[str]) -> _Ledger:
+        """The ledger shard of one zone (created on first use; the lock
+        covers only shard-map growth, not counter updates)."""
+        shard = self._ledgers.get(zone)
+        if shard is None:
+            with self._ledger_lock:
+                shard = self._ledgers.setdefault(zone, _Ledger())
+        return shard
+
+    def _ledger_shard_of(self, worker_name: Optional[str]) -> _Ledger:
+        """The shard admissions on ``worker_name`` land in (the worker's
+        zone; the ``None`` shard for unknown/deregistered workers)."""
+        if worker_name is None:
+            return self._ledgers[None]
+        worker = self._watcher.cluster.workers.get(worker_name)
+        return self._ledger_for(worker.zone if worker is not None else None)
+
+    def ledger_snapshot(self) -> Dict[Optional[str], Tuple[int, int, int]]:
+        """Per-zone ``(admitted, completed, evicted)`` counters.
+
+        Cross-zone reads freeze the shard map under the ledger lock;
+        each shard's counters are written only by the entrypoints of its
+        zone (zone-local writes), so the per-shard triple is a
+        consistent snapshot and the sums satisfy the ledger invariant.
+        """
+        with self._ledger_lock:
+            shards = list(self._ledgers.items())
+        return {
+            zone: (s.admitted, s.completed, s.evicted) for zone, s in shards
+        }
+
     def _admit(
         self, invocation: Invocation, decision: ScheduleDecision
-    ) -> Optional[WorkerState]:
+    ) -> Tuple[Optional[WorkerState], _Ledger]:
         """Record a scheduled decision's admission ticket (the single
         admission point of both façades); returns the live worker the
-        ticket was taken on (None: nothing to admit)."""
+        ticket was taken on (None: nothing to admit) plus the ledger
+        shard the ticket was charged to — the placement completes
+        against exactly that shard."""
         worker = decision.worker
         if worker is None:
-            return None
+            return None, self._ledgers[None]
         ticket_worker = self._watcher.record_admission(
             worker, decision.controller or "?", invocation.function
         )
-        self._ledger.admitted += 1
-        return ticket_worker
+        ledger = self._ledger_for(
+            ticket_worker.zone if ticket_worker is not None else None
+        )
+        ledger.admitted += 1
+        return ticket_worker, ledger
 
     def place(
         self, invocation: Invocation, decision: ScheduleDecision
@@ -717,9 +771,9 @@ class PlatformCore:
         also usable directly with an externally-routed decision (legacy
         scheduler adapters).
         """
-        worker_ref = self._admit(invocation, decision)
+        worker_ref, ledger = self._admit(invocation, decision)
         return Placement(invocation, decision, worker_ref is not None,
-                         self._watcher, self._ledger, worker_ref)
+                         self._watcher, ledger, worker_ref)
 
     def _platform_stats(
         self,
@@ -740,14 +794,19 @@ class PlatformCore:
                 suspects += 1
             elif w.health is HealthState.DEAD:
                 dead += 1
+        admitted = completed = evicted = 0
+        for shard in list(self._ledgers.values()):
+            admitted += shard.admitted
+            completed += shard.completed
+            evicted += shard.evicted
         return PlatformStats(
             routed=routed,
             tapp_routed=tapp_routed,
             vanilla_routed=vanilla_routed,
             failed=failed,
             script_reloads=script_reloads,
-            admitted=self._ledger.admitted,
-            completed=self._ledger.completed,
+            admitted=admitted,
+            completed=completed,
             inflight=sum(w.inflight for w in cluster.workers.values()),
             workers=len(cluster.workers),
             controllers=len(cluster.controllers),
@@ -756,7 +815,7 @@ class PlatformCore:
             ),
             topology_epoch=cluster.topology_epoch,
             load_events=cluster.load_seq,
-            evicted=self._ledger.evicted,
+            evicted=evicted,
             retries=self._retries,
             suspect_workers=suspects,
             dead_workers=dead,

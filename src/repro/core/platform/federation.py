@@ -138,6 +138,11 @@ class ZoneStats:
     forwarded_out: int   # entries this zone handed to another zone
     workers: int
     inflight: int
+    # This zone's admission-ledger shard (PR 7): tickets taken on / retired
+    # from / evicted with this zone's workers, regardless of entry zone.
+    admitted: int = 0
+    completed: int = 0
+    evicted: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -303,19 +308,20 @@ class TappFederation(PlatformCore):
     def _dead_zones(self) -> FrozenSet[str]:
         """Zones whose every worker is DEAD — unroutable, so the
         forwarding walk skips them. Memoized per topology epoch: DEAD
-        transitions and revivals are structural (they bump the epoch),
-        so one O(workers) scan per epoch suffices."""
+        transitions and revivals are structural (they bump the epoch).
+        The rescan walks the per-zone member map with early-out — a
+        healthy zone costs one worker check — so an epoch bump in one
+        zone charges O(zones), not O(cluster workers), to every
+        entrypoint's next request."""
         epoch = self._watcher.cluster.topology_epoch
         cached_epoch, cached = self._dead_zone_cache
         if cached_epoch == epoch:
             return cached
-        alive: Set[str] = set()
-        populated: Set[str] = set()
-        for worker in self._watcher.cluster.workers.values():
-            populated.add(worker.zone)
-            if not worker.dead:
-                alive.add(worker.zone)
-        dead = frozenset(populated - alive)
+        dead_zones: Set[str] = set()
+        for zone, members in self._watcher.cluster.zone_members().items():
+            if members and all(w.dead for w in members):
+                dead_zones.add(zone)
+        dead = frozenset(dead_zones)
         self._dead_zone_cache = (epoch, dead)
         return dead
 
@@ -523,10 +529,10 @@ class TappFederation(PlatformCore):
                                                       trace)
                     all_hops.extend(hops)
                 hops = tuple(all_hops)
-        worker_ref = self._admit(invocation, decision)
+        worker_ref, ledger = self._admit(invocation, decision)
         placement = FederatedPlacement(
             invocation, decision, worker_ref is not None, self._watcher,
-            self._ledger, entry, hops, worker_ref,
+            ledger, entry, hops, worker_ref,
         )
         placement.attempts = attempts
         placement.retry_wait = waited
@@ -564,10 +570,10 @@ class TappFederation(PlatformCore):
         decision, hops = self._masked_route(
             failed, lambda: self._route_from(entry, invocation, False)
         )
-        worker_ref = self._admit(invocation, decision)
+        worker_ref, ledger = self._admit(invocation, decision)
         replacement = FederatedPlacement(
             invocation, decision, worker_ref is not None, self._watcher,
-            self._ledger, entry, hops, worker_ref,
+            ledger, entry, hops, worker_ref,
         )
         replacement.attempts = placement.attempts + 1
         replacement.retry_wait = (
@@ -713,9 +719,11 @@ class TappFederation(PlatformCore):
         zone_rows: List[ZoneStats] = []
         totals = {"routed": 0, "tapp": 0, "vanilla": 0, "failed": 0,
                   "reloads": 0}
+        shards = self.ledger_snapshot()
         for zone in self._spec.zone_names:
             gw_stats = self._zone_gateways[zone].stats
             workers = [w for w in cluster.workers.values() if w.zone == zone]
+            admitted, completed, evicted = shards.get(zone, (0, 0, 0))
             zone_rows.append(
                 ZoneStats(
                     zone=zone,
@@ -729,6 +737,9 @@ class TappFederation(PlatformCore):
                     forwarded_out=self._forwarded_out[zone],
                     workers=len(workers),
                     inflight=sum(w.inflight for w in workers),
+                    admitted=admitted,
+                    completed=completed,
+                    evicted=evicted,
                 )
             )
             totals["routed"] += gw_stats.routed

@@ -181,6 +181,7 @@ class TappEngine:
         *,
         seed: Optional[int] = None,
         compiled: bool = True,
+        batch_backend: Optional[str] = None,
     ) -> None:
         self.distribution = distribution
         self.compiled = compiled
@@ -188,6 +189,15 @@ class TappEngine:
         self._controller_cursor = 0  # round-robin for controller-less blocks
         self._plan: Optional[CompiledScript] = None
         self._plan_source: Optional[TappScript] = None
+        # Mask-plane batch routing (scheduler/batch.py): which kernel
+        # backend resolves the stacked order planes. None → the
+        # REPRO_BATCH_BACKEND env var, then "numpy".
+        if batch_backend is None:
+            import os
+
+            batch_backend = os.environ.get("REPRO_BATCH_BACKEND") or "numpy"
+        self._batch_backend = batch_backend
+        self._batch_router = None
 
     # -- public API ----------------------------------------------------------
 
@@ -231,9 +241,29 @@ class TappEngine:
         placement before the next decision is made — which keeps batch
         results bit-identical to a sequence of :meth:`schedule` calls with
         interleaved admissions.
+
+        Untraced compiled batches of two or more invocations route
+        through the vectorized mask-plane path
+        (:class:`~repro.core.scheduler.batch.BatchRouter`): items whose
+        cascade consumes no RNG draws are resolved against stacked
+        order/availability planes with memoized outcomes, the rest fall
+        back to per-item :meth:`schedule` calls — placements, traces,
+        RNG streams, and cursor movement are bit-identical either way.
         """
         if self.compiled and script is not None and script.tags:
-            self.compiled_plan(script)  # hoist compilation out of the loop
+            plan = self.compiled_plan(script)  # hoist out of the loop
+            if not trace and len(invocations) >= 2:
+                router = self._batch_router
+                if router is None:
+                    from repro.core.scheduler.batch import BatchRouter
+
+                    router = self._batch_router = BatchRouter(
+                        self, backend=self._batch_backend
+                    )
+                return router.route_batch(
+                    invocations, script, plan, cluster, entry_zone,
+                    on_decision,
+                )
         decisions: List[ScheduleDecision] = []
         for invocation in invocations:
             decision = self.schedule(

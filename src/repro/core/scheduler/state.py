@@ -142,10 +142,39 @@ class ControllerState:
         return self.healthy and self.reachable
 
 
-# Volatile-load log compaction threshold: when the log outgrows this, it
-# is truncated and stale index consumers fall back to a full avail-mask
-# rebuild (amortized O(1) per logged event).
+# Volatile-load log compaction threshold: when a shard's log outgrows
+# this, it is truncated and stale index consumers fall back to a full
+# avail-mask rebuild (amortized O(1) per logged event).
 _LOAD_LOG_LIMIT = 4096
+
+
+class _LoadShard:
+    """One zone's volatile-load event log (zone-local writes).
+
+    Sharding the log per zone keeps federated entrypoints from
+    serializing on — and, worse, replaying — each other's admission
+    streams: a zone-restricted candidate index tracks only the shards
+    its candidates live in, so churn in zone A never costs zone B's
+    routing path a single replayed event.
+    """
+
+    __slots__ = ("log", "trimmed")
+
+    def __init__(self) -> None:
+        self.log: List[str] = []
+        self.trimmed = 0
+
+    @property
+    def seq(self) -> int:
+        """Absolute sequence number of the next event in this shard."""
+        return self.trimmed + len(self.log)
+
+    def note(self, name: str) -> None:
+        log = self.log
+        log.append(name)
+        if len(log) > _LOAD_LOG_LIMIT:
+            self.trimmed += len(log)
+            log.clear()
 
 
 @dataclasses.dataclass
@@ -177,26 +206,63 @@ class ClusterState:
     view_cache: Dict = dataclasses.field(
         default_factory=dict, repr=False, compare=False
     )
-    # Volatile-load event log: worker names whose dynamic fields changed,
-    # in order. Candidate indexes consume it incrementally; see
-    # load_seq/note_worker_load.
-    load_log: List[str] = dataclasses.field(
-        default_factory=list, repr=False, compare=False
+    # Volatile-load event logs, sharded per zone: worker names whose
+    # dynamic fields changed, in order, appended to the shard of the
+    # worker's zone. Candidate indexes consume only the shards their
+    # candidates span; see load_seq/note_worker_load.
+    load_shards: Dict[str, _LoadShard] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False
     )
-    # Events dropped from the front of load_log by compaction; absolute
-    # sequence numbers are load_trimmed + offset-in-log.
-    load_trimmed: int = 0
+    # Advisory total of volatile-load events across every shard (the
+    # cheap "anything at all changed?" signal; per-shard seqs are the
+    # exact cursors).
+    _load_total: int = 0
+    # Merged journal of the same events, all zones interleaved in global
+    # order (its seq always equals _load_total). Indexes whose candidates
+    # span multiple zones replay this window — O(events since last sync)
+    # — instead of scanning every zone shard for new cursors, which would
+    # be O(zones) per decision even when nothing moved. Single-zone
+    # indexes keep reading their zone shard, so the containment story
+    # (foreign churn costs a zone-restricted index nothing) is unchanged.
+    _load_journal: _LoadShard = dataclasses.field(
+        default_factory=_LoadShard, repr=False, compare=False
+    )
     # Per-epoch memo for the derived topology queries (workers_in_set /
     # set_labels / zones); cleared with the view cache.
     _query_cache: Dict = dataclasses.field(
         default_factory=dict, repr=False, compare=False
     )
+    # Lazily built zone → [WorkerState] map (insertion order preserved),
+    # maintained incrementally on add_worker and dropped on removals /
+    # zone moves; lets zone-restricted view rebuilds scan O(zone workers)
+    # instead of the whole cluster.
+    _zone_members: Optional[Dict[str, List[WorkerState]]] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
 
-    def bump_topology_epoch(self) -> None:
-        """Invalidate all memoized topology views (structural change)."""
+    def bump_topology_epoch(self, zone: Optional[str] = None) -> None:
+        """Invalidate memoized topology views (structural change).
+
+        ``zone=None`` (the conservative default) drops every cached view.
+        Passing a zone scopes the eviction to entries that can actually
+        see that zone's workers — zone-restricted entries of *other*
+        zones survive, so a worker flapping in zone A never forces zone
+        B's entrypoint to rebuild its candidate indexes (the Archipelago
+        partitioned-invalidation property). The global epoch counter
+        always advances: plan/derived-query memos stay conservative.
+        """
         self.topology_epoch += 1
         if self.view_cache:
-            self.view_cache.clear()
+            if zone is None:
+                self.view_cache.clear()
+            else:
+                stale = [
+                    key
+                    for key in self.view_cache
+                    if key[3] is None or key[3] == zone
+                ]
+                for key in stale:
+                    del self.view_cache[key]
         if self._query_cache:
             self._query_cache.clear()
 
@@ -205,20 +271,49 @@ class ClusterState:
     @property
     def load_seq(self) -> int:
         """Monotonic count of volatile-load events recorded so far."""
-        return self.load_trimmed + len(self.load_log)
+        return self._load_total
 
-    def note_worker_load(self, name: str) -> None:
+    @property
+    def load_trimmed(self) -> int:
+        """Total events dropped by compaction, summed across shards."""
+        return sum(shard.trimmed for shard in self.load_shards.values())
+
+    def load_shard(self, zone: str) -> _LoadShard:
+        shard = self.load_shards.get(zone)
+        if shard is None:
+            shard = self.load_shards[zone] = _LoadShard()
+        return shard
+
+    def note_worker_load(self, name: str, zone: Optional[str] = None) -> None:
         """Record that ``name``'s volatile load fields changed.
 
-        O(1) amortized: appends to the event log, compacting it once it
-        exceeds ``_LOAD_LOG_LIMIT`` (consumers whose cursor predates the
-        compaction rebuild from scratch, which the limit amortizes).
+        O(1) amortized: appends to the worker's zone shard, compacting a
+        shard once it exceeds ``_LOAD_LOG_LIMIT`` (consumers whose cursor
+        predates the compaction rebuild from scratch, which the limit
+        amortizes). ``zone`` may be passed by callers that already hold
+        the worker (the watcher's admission ledger) to skip the lookup.
         """
-        log = self.load_log
+        if zone is None:
+            worker = self.workers.get(name)
+            zone = worker.zone if worker is not None else ""
+        shard = self.load_shards.get(zone)
+        if shard is None:
+            shard = self.load_shards[zone] = _LoadShard()
+        # Two inlined _LoadShard.note bodies: this runs once per ledger
+        # event on the admission fast path, where the two method calls
+        # are measurable against the ~µs decision budget.
+        log = shard.log
         log.append(name)
         if len(log) > _LOAD_LOG_LIMIT:
-            self.load_trimmed += len(log)
+            shard.trimmed += len(log)
             log.clear()
+        journal = self._load_journal
+        log = journal.log
+        log.append(name)
+        if len(log) > _LOAD_LOG_LIMIT:
+            journal.trimmed += len(log)
+            log.clear()
+        self._load_total += 1
 
     # -- membership ---------------------------------------------------------
 
@@ -226,13 +321,16 @@ class ClusterState:
         if worker.name in self.workers:
             raise ValueError(f"duplicate worker {worker.name!r}")
         self.workers[worker.name] = worker
+        if self._zone_members is not None:
+            self._zone_members.setdefault(worker.zone, []).append(worker)
         self.version += 1
-        self.bump_topology_epoch()
+        self.bump_topology_epoch(worker.zone)
 
     def remove_worker(self, name: str) -> None:
-        self.workers.pop(name, None)
+        removed = self.workers.pop(name, None)
+        self._zone_members = None
         self.version += 1
-        self.bump_topology_epoch()
+        self.bump_topology_epoch(removed.zone if removed is not None else None)
 
     def add_controller(self, controller: ControllerState) -> None:
         if controller.name in self.controllers:
@@ -252,7 +350,33 @@ class ClusterState:
         return list(self.workers.keys())
 
     def workers_in_zone(self, zone: str) -> List[WorkerState]:
-        return [w for w in self.workers.values() if w.zone == zone]
+        return list(self.workers_by_zone(zone))
+
+    def workers_by_zone(self, zone: str) -> Sequence[WorkerState]:
+        """Workers of one zone, in cluster insertion order.
+
+        Backed by an incrementally maintained per-zone map (rebuilt
+        lazily after removals or zone moves), so zone-restricted view
+        rebuilds cost O(zone workers) rather than O(cluster).
+        """
+        return self.zone_members().get(zone, ())
+
+    def zone_members(self) -> Dict[str, List[WorkerState]]:
+        """The full per-zone member map backing :meth:`workers_by_zone`
+        (treat as read-only). Lets per-zone scans — e.g. the federation's
+        dead-zone detection — iterate zones with early-out instead of
+        walking every worker in the cluster."""
+        members = self._zone_members
+        if members is None:
+            members = {}
+            for worker in self.workers.values():
+                members.setdefault(worker.zone, []).append(worker)
+            self._zone_members = members
+        return members
+
+    def invalidate_zone_members(self) -> None:
+        """Drop the per-zone member map (a worker changed zones)."""
+        self._zone_members = None
 
     def workers_in_set(self, label: Optional[str]) -> List[WorkerState]:
         """Workers matching a tAPP set label; memoized per topology epoch

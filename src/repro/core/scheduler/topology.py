@@ -96,7 +96,14 @@ def distribution_view(
     """
     n_controllers = max(1, len(cluster.controllers))
     views: List[WorkerView] = []
-    for worker in cluster.workers.values():
+    if zone_restriction is not None:
+        # Zone-restricted views scan only that zone's members (same
+        # insertion order as filtering the full worker dict), so a
+        # zone-local rebuild costs O(zone workers), not O(cluster).
+        source = cluster.workers_by_zone(zone_restriction)
+    else:
+        source = cluster.workers.values()
+    for worker in source:
         if zone_restriction is not None and worker.zone != zone_restriction:
             continue
         local = worker.zone == controller_zone
@@ -297,10 +304,17 @@ class ItemIndex:
         "avail",
         "_static_positions",
         "_by_worker",
+        "_zones",
         "_synced",
+        "_synced_total",
         "_platform_chunks",
         "_scratch_local",
         "_scratch_foreign",
+        "_sat_ctls",
+        "_sat_caps",
+        "_replay_limit",
+        "_bits",
+        "_single_zone",
     )
 
     def __init__(self, candidates, n_local: int) -> None:
@@ -310,22 +324,55 @@ class ItemIndex:
         self.workers = [c[0] for c in candidates]
         self.views = [c[1] for c in candidates]
         self.dyns = [c[3] for c in candidates]
+        # Flattened WorkerView.saturated inputs: the controller key into
+        # worker.inflight_by and min(slot_cap, capacity_slots). Both are
+        # epoch-static (capacity changes are structural → the entry, and
+        # this index with it, dies at the epoch bump), so the per-event
+        # bit re-derivation pays one dict.get instead of two property
+        # calls through the view.
+        self._sat_ctls = [
+            v.controller if v is not None else "" for v in self.views
+        ]
+        self._sat_caps = [
+            min(v.slot_cap, v.worker.capacity_slots) if v is not None else 0
+            for v in self.views
+        ]
         static_mask = 0
         static_positions: List[int] = []
         by_worker: Dict[str, List[int]] = {}
+        zones: List[str] = []
         for pos, (worker, _view, static_fn, _dyn) in enumerate(candidates):
             if worker is None or static_fn(worker):
                 continue
             static_mask |= 1 << pos
             static_positions.append(pos)
             by_worker.setdefault(worker.name, []).append(pos)
+            if worker.zone not in zones:
+                zones.append(worker.zone)
         self.static_mask = static_mask
         self._static_positions = static_positions
         self._by_worker = {k: tuple(v) for k, v in by_worker.items()}
+        # Replay cutoff: more pending events than candidate workers makes
+        # a full recompute cheaper than replay (precomputed — refresh
+        # runs once per decision).
+        self._replay_limit = max(1, len(self._by_worker))
+        # Per-position bit masks: at 1024 candidates the avail mask is a
+        # 1024-bit int, so `1 << pos` and the read-modify-write both
+        # allocate. Precomputing the masks and skipping the write when
+        # the bit already has the right value keeps the per-event
+        # re-derivation flat in candidate count (bits rarely flip).
+        self._bits = [1 << pos for pos in range(self.n)]
+        # Load-log shards this index's candidates span; refresh replays
+        # only these, so foreign-zone churn never costs a replayed event.
+        self._zones: Tuple[str, ...] = tuple(zones)
+        self._single_zone = len(zones) == 1
         # Dynamic bits are computed on the first refresh (an index is
         # built for a whole block at once, but an item may first be
         # *reached* many decisions — and many ledger events — later).
-        self._synced: Optional[int] = None
+        # Cursor: the zone shard's seq (single-zone index) or the merged
+        # journal's seq (multi-zone); None until the first refresh.
+        self._synced = None
+        self._synced_total = -1
         self._platform_chunks: Dict[int, Tuple] = {}
         self._scratch_local: Optional[List[int]] = None
         self._scratch_foreign: Optional[List[int]] = None
@@ -336,46 +383,126 @@ class ItemIndex:
     def _recompute(self, positions) -> None:
         avail = self.avail
         workers = self.workers
-        views = self.views
         dyns = self.dyns
+        ctls = self._sat_ctls
+        caps = self._sat_caps
+        bits = self._bits
         for pos in positions:
             worker = workers[pos]
-            if dyns[pos](worker) or views[pos].saturated:
-                avail &= ~(1 << pos)
-            else:
-                avail |= 1 << pos
+            bit = bits[pos]
+            if (
+                dyns[pos](worker)
+                or worker.inflight_by.get(ctls[pos], 0) >= caps[pos]
+            ):
+                if avail & bit:
+                    avail &= ~bit
+            elif not avail & bit:
+                avail |= bit
         self.avail = avail
 
     def refresh(self, cluster: ClusterState) -> int:
         """Bring the availability mask up to date with the load log.
 
-        O(events since last refresh), and each event costs only the
-        touched worker's positions — a decision on an otherwise idle
-        index is one integer comparison.
+        O(events since last refresh): a single-zone index replays its
+        zone's shard (foreign churn costs it nothing), a multi-zone
+        index replays the cluster's merged journal (never an O(zones)
+        shard-cursor scan). Replayed events are deduplicated per touched
+        worker before any bit re-derivation — a churn window that
+        hammers one worker costs one ``_recompute``, not one per event.
+        A decision on an otherwise idle index is a single integer
+        comparison.
         """
-        seq = cluster.load_trimmed + len(cluster.load_log)
-        synced = self._synced
-        if synced is None:
-            # First use: derive all dynamic bits from live state.
-            self._recompute(self._static_positions)
+        total = cluster._load_total
+        if total == self._synced_total:
+            return self.avail
+        if self._single_zone:
+            zone = self._zones[0]
+            shard = cluster.load_shards.get(zone)
+            seq = shard.seq if shard is not None else 0
+            synced = self._synced
+            if synced is None:
+                # First use: derive all dynamic bits from live state.
+                self._recompute(self._static_positions)
+            elif seq != synced:
+                if (
+                    shard is None
+                    or synced < shard.trimmed
+                    or seq - synced >= self._replay_limit
+                ):
+                    # Compacted past our cursor, or more events than
+                    # candidates: a full recompute is cheaper than replay.
+                    self._recompute(self._static_positions)
+                else:
+                    self._replay_window(shard.log, synced - shard.trimmed)
             self._synced = seq
+            self._synced_total = total
             return self.avail
-        if seq == synced:
+        # Multi-zone candidates: replay the cluster's merged journal
+        # (all zones interleaved, seq == _load_total) from our last
+        # synced total — O(events since last sync) regardless of how
+        # many zones exist. Foreign-worker names simply miss in
+        # _by_worker. Scanning per-zone shards here instead would cost
+        # O(zones) cursor checks per decision even on an idle cluster.
+        if self._synced is None:
+            self._recompute(self._static_positions)
+            self._synced = total
+            self._synced_total = total
             return self.avail
-        base = cluster.load_trimmed
-        if synced < base or seq - synced >= max(1, len(self._by_worker)):
+        journal = cluster._load_journal
+        old = self._synced_total
+        if old < journal.trimmed or total - old >= self._replay_limit:
             # Compacted past our cursor, or more events than candidates:
-            # a full recompute is cheaper than replaying the log.
+            # a full recompute is cheaper than replay.
             self._recompute(self._static_positions)
         else:
-            log = cluster.load_log
-            by = self._by_worker
-            for i in range(synced - base, len(log)):
-                positions = by.get(log[i])
-                if positions is not None:
-                    self._recompute(positions)
-        self._synced = seq
+            self._replay_window(journal.log, old - journal.trimmed)
+        self._synced_total = total
         return self.avail
+
+    def _replay_window(self, log: List[str], start: int) -> None:
+        by = self._by_worker
+        end = len(log)
+        if end - start <= 4:
+            # Tiny window — the admission ledger's admit/complete pairs
+            # put the same name in consecutive events, so a running
+            # last-name check dedups without allocating a slice + set,
+            # and the bit re-derivation is inlined (this path runs once
+            # per churned decision; the _recompute call chain is
+            # measurable at that rate).
+            workers = self.workers
+            dyns = self.dyns
+            ctls = self._sat_ctls
+            caps = self._sat_caps
+            bits = self._bits
+            avail = self.avail
+            prev = None
+            for i in range(start, end):
+                name = log[i]
+                if name != prev:
+                    prev = name
+                    positions = by.get(name)
+                    if positions is not None:
+                        for pos in positions:
+                            worker = workers[pos]
+                            bit = bits[pos]
+                            if (
+                                dyns[pos](worker)
+                                or worker.inflight_by.get(ctls[pos], 0)
+                                >= caps[pos]
+                            ):
+                                if avail & bit:
+                                    avail &= ~bit
+                            elif not avail & bit:
+                                avail |= bit
+            self.avail = avail
+            return
+        # Satellite: dedup the window before re-deriving bits — each
+        # distinct touched worker costs one _recompute regardless of how
+        # many ledger events it produced.
+        for name in set(log[start:]):
+            positions = by.get(name)
+            if positions is not None:
+                self._recompute(positions)
 
     # -- strategy picks -----------------------------------------------------
 
@@ -438,6 +565,23 @@ class ItemIndex:
         if pos is None:
             pos = _draw_first_avail(self._scratch_foreign, avail, rng)
         return pos
+
+    def platform_order(self, fhash: int) -> List[int]:
+        """The flat per-fhash co-prime trial order over static survivors.
+
+        The batch router stacks these into the ``select_first_available``
+        kernel's int32 order planes; scanning the flat list position by
+        position is exactly what :meth:`pick_platform` does (its chunking
+        is only a skip optimization), so a kernel pick over this order is
+        bit-identical to the scalar pick.
+        """
+        chunks = self._platform_chunks.get(fhash)
+        if chunks is None:
+            chunks = self._build_platform_chunks(fhash)
+        order: List[int] = []
+        for _mask, seg in chunks:
+            order.extend(seg)
+        return order
 
 
 class BlockIndex:

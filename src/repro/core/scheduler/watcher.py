@@ -95,6 +95,14 @@ class Watcher:
         lease: Optional[LeaseConfig] = None,
     ) -> None:
         self._lock = threading.RLock()
+        # Admission-ledger locks, sharded per zone: the per-decision hot
+        # path (record_admission / record_completion) takes only the
+        # worker's zone lock, so federated entrypoints never serialize on
+        # each other's admission streams. Structural mutations take the
+        # global lock first, then the affected zone lock — a strict
+        # ordering (global → zone), so the paths cannot deadlock.
+        self._zone_locks: Dict[str, threading.Lock] = {}
+        self._zone_locks_guard = threading.Lock()
         self._cluster = cluster or ClusterState()
         self._script: Optional[TappScript] = None
         self._script_version = 0
@@ -121,6 +129,15 @@ class Watcher:
     def cluster(self) -> ClusterState:
         return self._cluster
 
+    def _zone_lock(self, zone: str) -> threading.Lock:
+        lock = self._zone_locks.get(zone)
+        if lock is None:
+            with self._zone_locks_guard:
+                lock = self._zone_locks.get(zone)
+                if lock is None:
+                    lock = self._zone_locks[zone] = threading.Lock()
+        return lock
+
     def register_worker(self, worker: WorkerState) -> None:
         """A worker joins (elastic scale-up / node replacement)."""
         with self._lock:
@@ -142,9 +159,10 @@ class Watcher:
         with self._lock:
             worker = self._cluster.workers.get(name)
             if worker is not None:
-                worker.healthy = False
-                worker.reachable = False
-                self._cluster.remove_worker(name)
+                with self._zone_lock(worker.zone):
+                    worker.healthy = False
+                    worker.reachable = False
+                    self._cluster.remove_worker(name)
             self._leases.pop(name, None)
         self._notify("topology")
         return worker
@@ -181,6 +199,8 @@ class Watcher:
                 raise KeyError(f"unknown worker {name!r}")
             structural = False
             volatile = False
+            zone_changed = False
+            updates = []
             for key, value in fields.items():
                 if not hasattr(worker, key):
                     raise AttributeError(f"WorkerState has no field {key!r}")
@@ -191,16 +211,29 @@ class Watcher:
                 if key in _STRUCTURAL_WORKER_FIELDS:
                     if getattr(worker, key) != value:
                         structural = True
+                        if key == "zone":
+                            zone_changed = True
                 else:
                     volatile = True
-                setattr(worker, key, value)
-            self._cluster.version += 1
+                updates.append((key, value))
+            zone = worker.zone
+            with self._zone_lock(zone):
+                for key, value in updates:
+                    setattr(worker, key, value)
+                self._cluster.version += 1
+                if not structural and volatile:
+                    # Load-only update: candidate indexes refresh this
+                    # worker's availability bits incrementally instead of
+                    # rebuilding.
+                    self._cluster.note_worker_load(name, zone)
             if structural:
-                self._cluster.bump_topology_epoch()
-            elif volatile:
-                # Load-only update: candidate indexes refresh this worker's
-                # availability bits incrementally instead of rebuilding.
-                self._cluster.note_worker_load(name)
+                if zone_changed:
+                    # A zone move touches two zones' views; invalidate
+                    # globally and rebuild the per-zone member map.
+                    self._cluster.invalidate_zone_members()
+                    self._cluster.bump_topology_epoch()
+                else:
+                    self._cluster.bump_topology_epoch(zone)
 
     def update_controller(self, name: str, **fields) -> None:
         """Apply a controller transition (health / reachability).
@@ -354,17 +387,20 @@ class Watcher:
         """DEAD transition under the lock: evict in-flight tickets, bump
         the incarnation, clear health + reachability. Returns the number
         of tickets that died with the worker (the caller reconciles them
-        as ledger evictions, reusing the deregistration-drain shape)."""
-        evicted = worker.inflight
-        worker.inflight = 0
-        worker.inflight_by.clear()
-        worker.running_functions.clear()
-        worker.queued = 0
-        worker.capacity_used_pct = 100.0
-        worker.generation += 1
-        worker.health = HealthState.DEAD
-        worker.healthy = False
-        worker.reachable = False
+        as ledger evictions, reusing the deregistration-drain shape).
+        Takes the worker's zone lock so the counter wipe cannot interleave
+        with a concurrent admission/completion on the hot path."""
+        with self._zone_lock(worker.zone):
+            evicted = worker.inflight
+            worker.inflight = 0
+            worker.inflight_by.clear()
+            worker.running_functions.clear()
+            worker.queued = 0
+            worker.capacity_used_pct = 100.0
+            worker.generation += 1
+            worker.health = HealthState.DEAD
+            worker.healthy = False
+            worker.reachable = False
         return evicted
 
     def mark_dead(self, name: str) -> int:
@@ -381,7 +417,7 @@ class Watcher:
                 return 0
             evicted = self._kill_locked(worker)
             self._cluster.version += 1
-            self._cluster.bump_topology_epoch()
+            self._cluster.bump_topology_epoch(worker.zone)
         self._notify("topology")
         return evicted
 
@@ -397,7 +433,7 @@ class Watcher:
                 return
             worker.health = HealthState.SUSPECT
             self._cluster.version += 1
-            self._cluster.bump_topology_epoch()
+            self._cluster.bump_topology_epoch(worker.zone)
         self._notify("topology")
 
     # -- retry exclusion masks ---------------------------------------------------
@@ -410,15 +446,19 @@ class Watcher:
         restore. Retries are the failure path, so the epoch bump's index
         rebuild cost is acceptable."""
         masked: List[str] = []
+        zones: set = set()
         with self._lock:
             for name in names:
                 worker = self._cluster.workers.get(name)
                 if worker is not None and worker.reachable:
                     worker.reachable = False
                     masked.append(name)
+                    zones.add(worker.zone)
             if masked:
                 self._cluster.version += 1
-                self._cluster.bump_topology_epoch()
+                self._cluster.bump_topology_epoch(
+                    zones.pop() if len(zones) == 1 else None
+                )
         return tuple(masked)
 
     def unmask(self, names: Sequence[str]) -> None:
@@ -426,15 +466,19 @@ class Watcher:
         :meth:`mask_unreachable` (no subscriber notification — the mask
         is a transient routing-internal state, not a topology event)."""
         restored = False
+        zones: set = set()
         with self._lock:
             for name in names:
                 worker = self._cluster.workers.get(name)
                 if worker is not None and not worker.reachable:
                     worker.reachable = True
                     restored = True
+                    zones.add(worker.zone)
             if restored:
                 self._cluster.version += 1
-                self._cluster.bump_topology_epoch()
+                self._cluster.bump_topology_epoch(
+                    zones.pop() if len(zones) == 1 else None
+                )
 
     # -- admission ledger fast path ---------------------------------------------
     #
@@ -457,10 +501,17 @@ class Watcher:
         preliminary condition of every policy, paper §3.3). Returns the
         live worker the ticket was taken on: completion paths pass it
         back as ``expected`` so a ticket can never retire against a
-        *different* worker that later re-used the name."""
+        *different* worker that later re-used the name.
+
+        Locking: takes only the worker's *zone* lock — zone-local writes —
+        so concurrent entrypoints of different zones admit in parallel
+        instead of serializing on one global ledger lock."""
         cluster = self._cluster
-        with self._lock:
-            worker = cluster.workers[name]
+        worker = cluster.workers[name]
+        lock = self._zone_locks.get(worker.zone)
+        if lock is None:
+            lock = self._zone_lock(worker.zone)
+        with lock:
             if not worker.reachable:
                 raise ValueError(f"worker {name!r} unreachable")
             inflight = worker.inflight + 1
@@ -476,7 +527,7 @@ class Watcher:
             else:
                 worker.capacity_used_pct = 100.0
             cluster.version += 1
-            cluster.note_worker_load(name)
+            cluster.note_worker_load(name, worker.zone)
             return worker
 
     def record_completion(
@@ -501,17 +552,24 @@ class Watcher:
         and bumped the counter), the ticket is likewise declined even if
         the same instance recovered.
         """
-        with self._lock:
-            worker = self._cluster.workers.get(name)
-            if worker is None:
-                return False  # worker evicted while running; ticket gone
+        worker = self._cluster.workers.get(name)
+        if worker is None:
+            return False  # worker evicted while running; ticket gone
+        lock = self._zone_locks.get(worker.zone)
+        if lock is None:
+            lock = self._zone_lock(worker.zone)
+        with lock:
             if expected is not None and worker is not expected:
                 return False  # name re-used by a different worker
             if generation is not None and worker.generation != generation:
                 return False  # ticket evicted at a crash; already reconciled
-            worker.inflight = max(0, worker.inflight - 1)
+            inflight = worker.inflight - 1
+            if inflight < 0:
+                inflight = 0
+            worker.inflight = inflight
             by = worker.inflight_by
-            by[controller] = max(0, by.get(controller, 1) - 1)
+            own = by.get(controller, 1) - 1
+            by[controller] = own if own > 0 else 0
             if function:
                 running = worker.running_functions
                 remaining = running.get(function, 1) - 1
@@ -528,10 +586,10 @@ class Watcher:
             else:
                 worker.capacity_used_pct = (
                     100.0 if slots <= 0
-                    else min(100.0, 100.0 * worker.inflight / slots)
+                    else min(100.0, 100.0 * inflight / slots)
                 )
             self._cluster.version += 1
-            self._cluster.note_worker_load(name)
+            self._cluster.note_worker_load(name, worker.zone)
         return True
 
     # -- script store (live reload, §4.5) ---------------------------------------

@@ -28,6 +28,65 @@ def _interpret_default() -> bool:
 
 
 # ---------------------------------------------------------------------------
+# Scheduler batch-routing kernel
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _select_first_available_jax(words32: jax.Array, orders: jax.Array) -> jax.Array:
+    # words32: uint32 [m, 2W] — each uint64 mask word split little-endian
+    # (jax runs with x64 disabled on this container, so uint64 lanes are
+    # unavailable; position p lives at word p>>5, bit p&31).
+    valid = orders >= 0
+    safe = jnp.where(valid, orders, 0)
+    gathered = jnp.take_along_axis(
+        jnp.broadcast_to(words32, (orders.shape[0], words32.shape[-1])),
+        safe >> 5,
+        axis=1,
+    )
+    bits = (gathered >> (safe & 31).astype(jnp.uint32)) & jnp.uint32(1)
+    hit = (bits != 0) & valid
+    found = hit.any(axis=1)
+    first = hit.argmax(axis=1)
+    picks = jnp.take_along_axis(orders, first[:, None], axis=1)[:, 0]
+    return jnp.where(found, picks, -1).astype(jnp.int32)
+
+
+def select_first_available(avail_words, orders, *, backend: str = "numpy"):
+    """First-set-bit-in-order over availability mask planes (batched).
+
+    The scheduler's mask-plane routing kernel: ``orders`` is an int32
+    ``[m, L]`` plane of candidate positions (one row per distinct
+    function hash at a routing stage, ``-1``-padded); ``avail_words`` is
+    the stage's uint64 availability bitmask (``[W]``, broadcast across
+    rows, or per-row ``[m, W]``). Returns int32 ``[m]`` picks, ``-1``
+    where no ordered candidate is available.
+
+    ``backend="numpy"`` uses the reference in :mod:`repro.kernels.ref`;
+    ``backend="jax"`` runs the identical computation as a jit'd XLA
+    program (correctness-equal; useful once mask planes live on an
+    accelerator alongside the model kernels).
+    """
+    from repro.kernels.ref import select_first_available_np
+
+    if backend == "jax":
+        import numpy as np
+
+        words = np.ascontiguousarray(avail_words, dtype=np.uint64)
+        if words.ndim == 1:
+            words = words[None, :]
+        words32 = words.view(np.uint32).reshape(words.shape[0], -1)
+        ordered = np.ascontiguousarray(orders, dtype=np.int32)
+        if ordered.ndim == 1:
+            ordered = ordered[None, :]
+        out = _select_first_available_jax(jnp.asarray(words32), jnp.asarray(ordered))
+        return np.asarray(out)
+    if backend != "numpy":
+        raise ValueError(f"unknown select_first_available backend: {backend!r}")
+    return select_first_available_np(avail_words, orders)
+
+
+# ---------------------------------------------------------------------------
 # Flash attention
 # ---------------------------------------------------------------------------
 

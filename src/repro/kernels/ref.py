@@ -8,8 +8,43 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 NEG_INF = -1e30
+
+
+def select_first_available_np(avail_words, orders):
+    """Numpy reference for the scheduler's batch-routing kernel.
+
+    ``avail_words`` — uint64 availability bitmask planes, shape ``[W]``
+    (one mask shared by every row) or ``[m, W]`` (per-row masks); bit
+    ``p`` of the flattened mask is set iff candidate position ``p`` is
+    available. ``orders`` — int32 ``[m, L]`` candidate positions in
+    preference order, right-padded with ``-1``.
+
+    Returns int32 ``[m]``: for each row, the first position in its order
+    whose availability bit is set, or ``-1`` when none is. Equivalent to
+    the scalar ``ItemIndex.pick_*`` scan, resolved for all rows at once
+    via a bit-gather and an argmax over the extracted order plane.
+    """
+    orders = np.ascontiguousarray(orders, dtype=np.int64)
+    if orders.ndim == 1:
+        orders = orders[None, :]
+    m, _l = orders.shape
+    words = np.ascontiguousarray(avail_words, dtype=np.uint64)
+    if words.ndim == 1:
+        words = words[None, :]
+    valid = orders >= 0
+    safe = np.where(valid, orders, 0)
+    gathered = np.take_along_axis(
+        np.broadcast_to(words, (m, words.shape[1])), safe >> 6, axis=1
+    )
+    bits = (gathered >> (safe & 63).astype(np.uint64)) & np.uint64(1)
+    hit = (bits != 0) & valid
+    found = hit.any(axis=1)
+    first = hit.argmax(axis=1)
+    picks = np.take_along_axis(orders, first[:, None], axis=1)[:, 0]
+    return np.where(found, picks, -1).astype(np.int32)
 
 
 def ref_attention(

@@ -1,0 +1,493 @@
+"""PR-7 batch routing kernel: bit-identity of ``schedule_batch``.
+
+The vectorized batch path (mask-plane kernel + zero-draw cascade solver)
+is an *optimization*, never a semantic fork: for any batch, backend, and
+live-state churn pattern, ``schedule_batch`` must produce exactly the
+decisions the sequential ``schedule`` loop would — same placements, same
+traces, same RNG stream afterwards, same controller cursor, same
+admission-ledger counters. This suite pins that contract:
+
+* randomized property sweep (scripts × clusters × policies × entry
+  zones × per-decision churn callbacks), numpy backend;
+* traced batches (the scalar-fallback trigger) produce the sequential
+  traces, untraced batches return empty traces;
+* directed mid-batch saturation: a batch that fills a worker's slots
+  partway through routes the tail exactly like the loop does;
+* directed topology-epoch bumps (register/deregister) mid-batch;
+* façade contracts: ``TappPlatform.invoke_batch`` and
+  ``TappFederation.invoke_batch`` equal an ``invoke`` loop, including
+  the PR-7 zone-sharded ledger snapshots and per-zone stats;
+* jax backend spot-check (skipped when jax is unavailable).
+"""
+import random
+
+import pytest
+
+from repro.core.platform import (
+    ClusterSpec,
+    ControllerSpec,
+    FederationSpec,
+    TappFederation,
+    TappPlatform,
+    WorkerSpec,
+)
+from repro.core.scheduler import (
+    DistributionPolicy,
+    Invocation,
+    TappEngine,
+    WorkerState,
+)
+from repro.core.scheduler.watcher import Watcher
+from tests.test_scheduler_compile import (
+    mutate_cluster,
+    random_cluster,
+    random_script,
+)
+
+FUNCTIONS = ("fn_a", "fn_b", "fn_c")
+TAGS = (None, "default", "alpha", "beta", "unk")
+
+
+def _key(decision):
+    return (
+        decision.outcome,
+        decision.worker,
+        decision.controller,
+        decision.tag,
+        decision.used_default_fallback,
+        decision.zone_restriction,
+        decision.failed_by_policy,
+    )
+
+
+def _trace(decision):
+    return [(e.kind, e.detail) for e in decision.trace]
+
+
+def _run_pair(trial, policy, entry_zone, churn, backend, *, trace=False):
+    """One batch through the sequential loop and through
+    ``schedule_batch``, on twin clusters built from the same seed.
+
+    Returns ``(seq_decisions, bat_decisions, (seq_engine, seq_watcher),
+    (bat_engine, bat_watcher))`` for state comparison. The on-decision
+    callback admits every placement (so later items see the batch's own
+    load, the mid-batch feedback loop) and optionally churns the
+    cluster between decisions — both sides replay the identical
+    mutation stream.
+    """
+    rng = random.Random(trial)
+    script = random_script(rng)
+    w_seq = Watcher(random_cluster(random.Random(trial)))
+    w_bat = Watcher(random_cluster(random.Random(trial)))
+    seq = TappEngine(policy, seed=trial)
+    bat = TappEngine(policy, seed=trial, batch_backend=backend)
+    invocations = [
+        Invocation(rng.choice(FUNCTIONS), tag=rng.choice(TAGS))
+        for _ in range(24)
+    ]
+    mut_seq, mut_bat = random.Random(trial + 5), random.Random(trial + 5)
+
+    def callback(watcher, mut):
+        def on_decision(invocation, decision):
+            if decision.scheduled:
+                watcher.record_admission(
+                    decision.worker, decision.controller, invocation.function
+                )
+            if churn and mut.random() < 0.3:
+                mutate_cluster(mut, watcher)
+
+        return on_decision
+
+    seq_cb = callback(w_seq, mut_seq)
+    seq_decisions = []
+    for invocation in invocations:
+        decision = seq.schedule(
+            invocation,
+            script,
+            w_seq.cluster,
+            trace=trace,
+            entry_zone=entry_zone,
+        )
+        seq_cb(invocation, decision)
+        seq_decisions.append(decision)
+    bat_decisions = bat.schedule_batch(
+        invocations,
+        script,
+        w_bat.cluster,
+        trace=trace,
+        entry_zone=entry_zone,
+        on_decision=callback(w_bat, mut_bat),
+    )
+    return seq_decisions, bat_decisions, (seq, w_seq), (bat, w_bat)
+
+
+def _assert_identical(seq_decisions, bat_decisions, seq_side, bat_side):
+    seq, w_seq = seq_side
+    bat, w_bat = bat_side
+    assert [_key(d) for d in seq_decisions] == [
+        _key(d) for d in bat_decisions
+    ]
+    assert [_trace(d) for d in seq_decisions] == [
+        _trace(d) for d in bat_decisions
+    ]
+    # The batch path must consume exactly the sequential RNG stream and
+    # leave the engine/ledger in the sequential end state.
+    assert seq._rng.getstate() == bat._rng.getstate()
+    assert seq._controller_cursor == bat._controller_cursor
+    assert w_seq.cluster.load_seq == w_bat.cluster.load_seq
+
+
+# ---------------------------------------------------------------------------
+# Randomized property sweep
+# ---------------------------------------------------------------------------
+
+
+class TestBatchBitIdentity:
+    @pytest.mark.parametrize("policy", list(DistributionPolicy))
+    @pytest.mark.parametrize("entry_zone", [None, "edge"])
+    def test_steady_state(self, policy, entry_zone):
+        for trial in range(8):
+            _assert_identical(
+                *_run_pair(trial, policy, entry_zone, False, "numpy")
+            )
+
+    @pytest.mark.parametrize("policy", list(DistributionPolicy))
+    @pytest.mark.parametrize("entry_zone", [None, "edge"])
+    def test_under_churn(self, policy, entry_zone):
+        # Per-decision cluster mutations (load, health, membership —
+        # membership bumps the topology epoch mid-batch) force the
+        # kernel through its cache-invalidation and scalar-fallback
+        # paths; decisions must still match the loop bit-for-bit.
+        for trial in range(8):
+            _assert_identical(
+                *_run_pair(trial, policy, entry_zone, True, "numpy")
+            )
+
+    def test_traced_batch_reproduces_sequential_traces(self):
+        # trace=True is a scalar-fallback trigger: the batch path must
+        # fall back without changing a single decision or trace event.
+        for trial in range(4):
+            _assert_identical(
+                *_run_pair(
+                    trial,
+                    DistributionPolicy.DEFAULT,
+                    None,
+                    True,
+                    "numpy",
+                    trace=True,
+                )
+            )
+
+    def test_untraced_batch_returns_empty_traces(self):
+        _, bat_decisions, _, _ = _run_pair(
+            3, DistributionPolicy.SHARED, None, False, "numpy"
+        )
+        assert all(d.trace == [] for d in bat_decisions)
+
+
+# ---------------------------------------------------------------------------
+# Directed scenarios
+# ---------------------------------------------------------------------------
+
+TINY_SCRIPT = """
+- default:
+  - workers:
+    - set: pool
+    strategy: platform
+    invalidate: overload
+"""
+
+
+def _tiny_pair(policy=DistributionPolicy.DEFAULT, seed=0):
+    def build():
+        return Watcher(
+            ClusterSpec(
+                controllers=(ControllerSpec("C1", zone="z"),),
+                workers=tuple(
+                    WorkerSpec(
+                        f"w{i}",
+                        zone="z",
+                        sets=("pool", "any"),
+                        capacity_slots=1,
+                    )
+                    for i in range(2)
+                ),
+            ).build()
+        )
+
+    return (
+        build(),
+        build(),
+        TappEngine(policy, seed=seed),
+        TappEngine(policy, seed=seed, batch_backend="numpy"),
+    )
+
+
+class TestDirectedScenarios:
+    def test_mid_batch_saturation(self):
+        """A batch larger than the cluster's total slots: admissions
+        made inside the batch must be visible to later items, exactly
+        as in the sequential loop (2 workers x 1 slot -> decisions 3+
+        find everything saturated)."""
+        from repro.core.tapp import parse_tapp
+
+        script = parse_tapp(TINY_SCRIPT)
+        w_seq, w_bat, seq, bat = _tiny_pair()
+        invocations = [Invocation("fn_a") for _ in range(6)]
+
+        def admit(watcher):
+            def on_decision(invocation, decision):
+                if decision.scheduled:
+                    watcher.record_admission(
+                        decision.worker,
+                        decision.controller,
+                        invocation.function,
+                    )
+
+            return on_decision
+
+        seq_cb = admit(w_seq)
+        seq_decisions = []
+        for invocation in invocations:
+            decision = seq.schedule(invocation, script, w_seq.cluster)
+            seq_cb(invocation, decision)
+            seq_decisions.append(decision)
+        bat_decisions = bat.schedule_batch(
+            invocations, script, w_bat.cluster, on_decision=admit(w_bat)
+        )
+        assert [_key(d) for d in seq_decisions] == [
+            _key(d) for d in bat_decisions
+        ]
+        # The scenario actually saturates: both slots get taken, and at
+        # least one tail item cannot be placed.
+        placed = [d for d in bat_decisions if d.scheduled]
+        assert {d.worker for d in placed} == {"w0", "w1"}
+        assert any(not d.scheduled for d in bat_decisions)
+        assert seq._rng.getstate() == bat._rng.getstate()
+        assert w_seq.cluster.load_seq == w_bat.cluster.load_seq
+
+    def test_mid_batch_epoch_bumps(self):
+        """Register a worker partway through and deregister another
+        later: the topology epoch moves twice inside one batch, and the
+        tail decisions must match the loop on the rebuilt views."""
+        from repro.core.tapp import parse_tapp
+
+        script = parse_tapp(TINY_SCRIPT)
+        w_seq, w_bat, seq, bat = _tiny_pair(DistributionPolicy.SHARED)
+        invocations = [Invocation("fn_a") for _ in range(8)]
+
+        def mutating(watcher):
+            state = {"i": 0}
+
+            def on_decision(invocation, decision):
+                if decision.scheduled:
+                    watcher.record_admission(
+                        decision.worker,
+                        decision.controller,
+                        invocation.function,
+                    )
+                if state["i"] == 2:
+                    watcher.register_worker(
+                        WorkerState(
+                            name="late",
+                            zone="z",
+                            sets=frozenset({"pool", "any"}),
+                            capacity_slots=4,
+                        )
+                    )
+                elif state["i"] == 5:
+                    watcher.deregister_worker("w1")
+                state["i"] += 1
+
+            return on_decision
+
+        seq_cb = mutating(w_seq)
+        seq_decisions = []
+        for invocation in invocations:
+            decision = seq.schedule(invocation, script, w_seq.cluster)
+            seq_cb(invocation, decision)
+            seq_decisions.append(decision)
+        epoch_before = w_bat.cluster.topology_epoch
+        bat_decisions = bat.schedule_batch(
+            invocations, script, w_bat.cluster, on_decision=mutating(w_bat)
+        )
+        assert [_key(d) for d in seq_decisions] == [
+            _key(d) for d in bat_decisions
+        ]
+        assert w_bat.cluster.topology_epoch > epoch_before
+        assert any(d.worker == "late" for d in bat_decisions)
+        assert seq._rng.getstate() == bat._rng.getstate()
+        assert w_seq.cluster.load_seq == w_bat.cluster.load_seq
+
+
+# ---------------------------------------------------------------------------
+# Façade contracts (flat platform + federation), zone-sharded ledgers
+# ---------------------------------------------------------------------------
+
+FACADE_SPEC = ClusterSpec(
+    controllers=(
+        ControllerSpec("EdgeCtl", zone="edge"),
+        ControllerSpec("CloudCtl", zone="cloud"),
+    ),
+    workers=(
+        WorkerSpec("e0", zone="edge", sets=("edge", "any"), capacity_slots=2),
+        WorkerSpec("e1", zone="edge", sets=("edge", "any"), capacity_slots=2),
+        WorkerSpec("c0", zone="cloud", sets=("cloud", "any"),
+                   capacity_slots=4),
+    ),
+)
+
+FACADE_SCRIPT = """
+- default:
+  - workers:
+    - set:
+    strategy: platform
+    invalidate: overload
+- edge_only:
+  - controller: EdgeCtl
+    workers:
+    - set: edge
+      strategy: random
+  followup: default
+"""
+
+
+def _facade_platform():
+    return TappPlatform(
+        FACADE_SPEC,
+        distribution=DistributionPolicy.SHARED,
+        seed=0,
+        policy=FACADE_SCRIPT,
+    )
+
+
+def _federation_spec():
+    def zone(name, n):
+        return ClusterSpec(
+            controllers=(ControllerSpec(f"{name}Ctl", zone=name),),
+            workers=tuple(
+                WorkerSpec(
+                    f"{name[0]}{i}",
+                    zone=name,
+                    sets=(name, "any"),
+                    capacity_slots=2,
+                )
+                for i in range(n)
+            ),
+        )
+
+    return FederationSpec.of({"east": zone("east", 3), "west": zone("west", 3)})
+
+
+FED_SCRIPT = """
+- default:
+  - workers:
+    - set:
+    strategy: platform
+    invalidate: overload
+"""
+
+
+class TestFacadeBatchContracts:
+    def test_platform_invoke_batch_equals_invoke_loop(self):
+        p_loop, p_bat = _facade_platform(), _facade_platform()
+        invocations = [
+            Invocation(FUNCTIONS[i % 3], tag="edge_only" if i % 4 == 0
+                       else None)
+            for i in range(12)
+        ]
+        loop_placements = [p_loop.invoke(inv) for inv in invocations]
+        bat_placements = p_bat.invoke_batch(invocations)
+        assert [_key(p.decision) for p in loop_placements] == [
+            _key(p.decision) for p in bat_placements
+        ]
+        assert [p.admitted for p in loop_placements] == [
+            p.admitted for p in bat_placements
+        ]
+        # Retire every other ticket on both sides: the zone-sharded
+        # ledgers (PR-7) must agree shard by shard, not just in sum.
+        for placement in loop_placements[::2]:
+            placement.complete()
+        for placement in bat_placements[::2]:
+            placement.complete()
+        assert p_loop.ledger_snapshot() == p_bat.ledger_snapshot()
+        s_loop, s_bat = p_loop.stats(), p_bat.stats()
+        assert (s_loop.routed, s_loop.admitted, s_loop.completed,
+                s_loop.failed) == (s_bat.routed, s_bat.admitted,
+                                   s_bat.completed, s_bat.failed)
+
+    def test_platform_ledger_shards_sum_to_aggregate(self):
+        p = _facade_platform()
+        placements = p.invoke_batch(
+            [Invocation(FUNCTIONS[i % 3]) for i in range(8)]
+        )
+        for placement in placements[:3]:
+            placement.complete()
+        snapshot = p.ledger_snapshot()
+        stats = p.stats()
+        assert sum(adm for adm, _, _ in snapshot.values()) == stats.admitted
+        assert sum(cmp_ for _, cmp_, _ in snapshot.values()) \
+            == stats.completed
+        # Admissions landed on the workers' own zone shards.
+        zones = {z for z, (adm, _, _) in snapshot.items() if adm}
+        assert zones <= {"edge", "cloud"}
+
+    def test_federation_invoke_batch_equals_invoke_loop(self):
+        def build():
+            return TappFederation(
+                _federation_spec(), seed=0, policy=FED_SCRIPT
+            )
+
+        f_loop, f_bat = build(), build()
+        invocations = [Invocation(FUNCTIONS[i % 3]) for i in range(10)]
+        entry_zones = [("east", "west")[i % 2] for i in range(10)]
+        loop_placements = [
+            f_loop.invoke(inv, entry_zone=zone)
+            for inv, zone in zip(invocations, entry_zones)
+        ]
+        bat_placements = f_bat.invoke_batch(
+            invocations, entry_zones=entry_zones
+        )
+        assert [_key(p.decision) for p in loop_placements] == [
+            _key(p.decision) for p in bat_placements
+        ]
+        assert [(p.entry_zone, p.hops) for p in loop_placements] == [
+            (p.entry_zone, p.hops) for p in bat_placements
+        ]
+        assert f_loop.ledger_snapshot() == f_bat.ledger_snapshot()
+
+    def test_federation_zone_stats_expose_ledger_shards(self):
+        fed = TappFederation(_federation_spec(), seed=0, policy=FED_SCRIPT)
+        placements = fed.invoke_batch(
+            [Invocation("fn_a") for _ in range(8)],
+            entry_zones=[("east", "west")[i % 2] for i in range(8)],
+        )
+        for placement in placements[:4]:
+            placement.complete()
+        snapshot = fed.ledger_snapshot()
+        stats = fed.stats()
+        for zone_name in ("east", "west"):
+            zone = stats.zone(zone_name)
+            admitted, completed, evicted = snapshot.get(zone_name, (0, 0, 0))
+            assert (zone.admitted, zone.completed, zone.evicted) == (
+                admitted, completed, evicted,
+            )
+        assert stats.aggregate.admitted == sum(
+            adm for adm, _, _ in snapshot.values()
+        )
+
+
+# ---------------------------------------------------------------------------
+# jax backend
+# ---------------------------------------------------------------------------
+
+
+class TestJaxBackend:
+    def test_jax_batch_matches_sequential(self):
+        pytest.importorskip("jax")
+        for trial in range(3):
+            _assert_identical(
+                *_run_pair(
+                    trial, DistributionPolicy.DEFAULT, None, True, "jax"
+                )
+            )
