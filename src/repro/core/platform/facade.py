@@ -141,17 +141,40 @@ class _Ledger:
 
     Since PR 7 the platform keeps one shard per worker *zone* (plus a
     ``None`` shard for un-admitted placements), so per-zone entrypoints
-    admit and complete against zone-local counters instead of one shared
-    object; the invariant holds per shard, and therefore for the sums
-    the stats snapshots report.
+    mostly touch zone-local counters instead of one shared object; the
+    invariant holds per shard, and therefore for the sums the stats
+    snapshots report. Writes are *not* single-writer, though —
+    cross-zone forwarding charges the ticket to the ticket worker's
+    zone, so an entrypoint of zone A can increment zone B's shard
+    concurrently with zone B's own thread — hence every counter update
+    and every snapshot read of the triple goes through the shard's own
+    lock (uncontended in the zone-local common case).
     """
 
-    __slots__ = ("admitted", "completed", "evicted")
+    __slots__ = ("admitted", "completed", "evicted", "lock")
 
     def __init__(self) -> None:
         self.admitted = 0
         self.completed = 0
         self.evicted = 0
+        self.lock = threading.Lock()
+
+    def add_admitted(self, n: int = 1) -> None:
+        with self.lock:
+            self.admitted += n
+
+    def add_completed(self, n: int = 1) -> None:
+        with self.lock:
+            self.completed += n
+
+    def add_evicted(self, n: int = 1) -> None:
+        with self.lock:
+            self.evicted += n
+
+    def snapshot(self) -> Tuple[int, int, int]:
+        """Consistent ``(admitted, completed, evicted)`` triple."""
+        with self.lock:
+            return (self.admitted, self.completed, self.evicted)
 
 
 class Placement:
@@ -253,7 +276,7 @@ class Placement:
             expected=self._worker_ref,
             generation=self._generation,
         ):
-            self._ledger.completed += 1
+            self._ledger.add_completed()
             return True
         # else: the worker was evicted mid-run (deregistration or crash);
         # the eviction already reconciled this ticket.
@@ -414,7 +437,7 @@ class PlatformCore:
         """
         removed = self._watcher.deregister_worker(name)
         if removed is not None and removed.inflight:
-            self._ledger_for(removed.zone).evicted += removed.inflight
+            self._ledger_for(removed.zone).add_evicted(removed.inflight)
 
     def add_controller(
         self,
@@ -516,7 +539,7 @@ class PlatformCore:
         for transition in transitions:
             if transition.evicted:
                 # DEAD workers stay registered, so the zone lookup holds.
-                self._ledger_shard_of(transition.worker).evicted += (
+                self._ledger_shard_of(transition.worker).add_evicted(
                     transition.evicted
                 )
         return transitions
@@ -530,7 +553,7 @@ class PlatformCore:
             worker = self._watcher.cluster.workers.get(name)
             zone = worker.zone if worker is not None else None
             evicted = self._watcher.mark_dead(name)
-        self._ledger_for(zone).evicted += evicted
+        self._ledger_for(zone).add_evicted(evicted)
         return evicted
 
     def suspect_worker(self, name: str) -> None:
@@ -731,16 +754,15 @@ class PlatformCore:
     def ledger_snapshot(self) -> Dict[Optional[str], Tuple[int, int, int]]:
         """Per-zone ``(admitted, completed, evicted)`` counters.
 
-        Cross-zone reads freeze the shard map under the ledger lock;
-        each shard's counters are written only by the entrypoints of its
-        zone (zone-local writes), so the per-shard triple is a
-        consistent snapshot and the sums satisfy the ledger invariant.
+        The shard map is frozen under the ledger lock; each shard's
+        triple is then read under that shard's own counter lock (the
+        same lock every increment takes — cross-zone forwarding means a
+        shard is *not* single-writer), so each per-shard triple is
+        internally consistent and the sums satisfy the ledger invariant.
         """
         with self._ledger_lock:
             shards = list(self._ledgers.items())
-        return {
-            zone: (s.admitted, s.completed, s.evicted) for zone, s in shards
-        }
+        return {zone: s.snapshot() for zone, s in shards}
 
     def _admit(
         self, invocation: Invocation, decision: ScheduleDecision
@@ -759,7 +781,7 @@ class PlatformCore:
         ledger = self._ledger_for(
             ticket_worker.zone if ticket_worker is not None else None
         )
-        ledger.admitted += 1
+        ledger.add_admitted()
         return ticket_worker, ledger
 
     def place(
@@ -796,9 +818,10 @@ class PlatformCore:
                 dead += 1
         admitted = completed = evicted = 0
         for shard in list(self._ledgers.values()):
-            admitted += shard.admitted
-            completed += shard.completed
-            evicted += shard.evicted
+            a, c, e = shard.snapshot()
+            admitted += a
+            completed += c
+            evicted += e
         return PlatformStats(
             routed=routed,
             tapp_routed=tapp_routed,

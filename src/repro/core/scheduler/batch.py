@@ -137,7 +137,9 @@ class BatchRouter:
         self._reuse: Optional[Tuple] = None
         # (id(ctag), entry_zone, fhash) → list of _Record (residue-keyed).
         self._outcomes: Dict[Tuple, List[_Record]] = {}
-        # (id(ItemIndex), avail int) → {fhash: pick or -1}.
+        # (ItemIndex.serial, avail int) → {fhash: pick or -1}. The
+        # serial is process-unique and monotonic, so a collected index
+        # whose id() gets re-used can never serve another index's plane.
         self._planes: Dict[Tuple, Dict[int, int]] = {}
         self._batch_hashes: Tuple[int, ...] = ()
 
@@ -521,7 +523,7 @@ class BatchRouter:
             # Admission-corrected remainder of the batch: avail moves
             # per item, so plane reuse is nil — scalar chunk scan wins.
             return idx.pick_platform(avail, fhash)
-        key = (id(idx), avail)
+        key = (idx.serial, avail)
         plane = self._planes.get(key)
         if plane is None:
             if len(self._planes) >= _PLANE_CACHE_LIMIT:
@@ -563,8 +565,11 @@ class BatchRouter:
         for row, order in enumerate(orders):
             plane[row, : len(order)] = order
         nwords = max(1, (idx.n + 63) >> 6)
+        # Explicit little-endian dtype: the bytes are produced
+        # little-endian, so a native-endian view would byte-swap the
+        # mask words on a big-endian host.
         words = np.frombuffer(
-            avail.to_bytes(nwords * 8, "little"), dtype=np.uint64
+            avail.to_bytes(nwords * 8, "little"), dtype="<u8"
         )
         picks = select(words, plane, backend=self._backend)
         return {h: int(p) for h, p in zip(hashes, picks)}

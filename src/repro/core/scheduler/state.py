@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import threading
 from typing import Dict, FrozenSet, Iterable, List, Mapping, Optional, Sequence, Tuple
 
 
@@ -173,8 +174,16 @@ class _LoadShard:
         log = self.log
         log.append(name)
         if len(log) > _LOAD_LOG_LIMIT:
+            # Compaction *replaces* the list rather than clearing it in
+            # place: lock-free readers that already grabbed a reference
+            # replay a complete (merely stale) window instead of a
+            # truncated one, and the advanced ``trimmed`` cursor pushes
+            # them onto the full-recompute path on their next refresh.
+            # Writer order (trimmed, then log) pairs with the readers'
+            # capture order (trimmed, then log) so a torn read can only
+            # look over-trimmed — which also lands on the recompute path.
             self.trimmed += len(log)
-            log.clear()
+            self.log = []
 
 
 @dataclasses.dataclass
@@ -226,6 +235,18 @@ class ClusterState:
     # (foreign churn costs a zone-restricted index nothing) is unchanged.
     _load_journal: _LoadShard = dataclasses.field(
         default_factory=_LoadShard, repr=False, compare=False
+    )
+    # Guards _load_journal and _load_total. Zone shards are protected by
+    # their zone's ledger lock (the watcher holds it around every
+    # note_worker_load call), but the merged journal and the total are
+    # written by *every* zone's entrypoint, so without a dedicated lock
+    # two zones admitting concurrently can lose increments — a lost
+    # increment makes index refresh see "nothing changed" and serve a
+    # stale availability mask, and it permanently breaks the
+    # ``journal.seq == _load_total`` invariant the multi-zone replay
+    # window arithmetic depends on.
+    _journal_lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False
     )
     # Per-epoch memo for the derived topology queries (workers_in_set /
     # set_labels / zones); cleared with the view cache.
@@ -292,6 +313,13 @@ class ClusterState:
         predates the compaction rebuild from scratch, which the limit
         amortizes). ``zone`` may be passed by callers that already hold
         the worker (the watcher's admission ledger) to skip the lookup.
+
+        Thread contract: the caller must hold the worker's zone ledger
+        lock (the watcher's admission/heartbeat paths do), which makes
+        the zone-shard append single-writer. The merged journal and the
+        event total are shared across zones and are updated under the
+        cluster's journal lock, preserving ``journal.seq == _load_total``
+        under concurrent multi-zone admission.
         """
         if zone is None:
             worker = self.workers.get(name)
@@ -299,21 +327,24 @@ class ClusterState:
         shard = self.load_shards.get(zone)
         if shard is None:
             shard = self.load_shards[zone] = _LoadShard()
-        # Two inlined _LoadShard.note bodies: this runs once per ledger
-        # event on the admission fast path, where the two method calls
-        # are measurable against the ~µs decision budget.
+        # Inlined _LoadShard.note body: this runs once per ledger event
+        # on the admission fast path, where the method call is
+        # measurable against the ~µs decision budget. Compaction
+        # replaces the list (see _LoadShard.note) so lock-free readers
+        # never see a half-cleared window.
         log = shard.log
         log.append(name)
         if len(log) > _LOAD_LOG_LIMIT:
             shard.trimmed += len(log)
-            log.clear()
-        journal = self._load_journal
-        log = journal.log
-        log.append(name)
-        if len(log) > _LOAD_LOG_LIMIT:
-            journal.trimmed += len(log)
-            log.clear()
-        self._load_total += 1
+            shard.log = []
+        with self._journal_lock:
+            journal = self._load_journal
+            log = journal.log
+            log.append(name)
+            if len(log) > _LOAD_LOG_LIMIT:
+                journal.trimmed += len(log)
+                journal.log = []
+            self._load_total += 1
 
     # -- membership ---------------------------------------------------------
 

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import itertools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.scheduler.state import ClusterState, WorkerState
@@ -281,6 +282,11 @@ def _draw_first_avail(arr: List[int], avail: int, rng) -> Optional[int]:
     return found
 
 
+# Monotonic ItemIndex serial source; itertools.count.__next__ is atomic
+# in CPython, so concurrent index builds never share a serial.
+_ITEM_INDEX_SERIAL = itertools.count()
+
+
 class ItemIndex:
     """Pre-filtered, pre-ordered candidates of one worker item.
 
@@ -295,6 +301,7 @@ class ItemIndex:
     """
 
     __slots__ = (
+        "serial",
         "workers",
         "views",
         "dyns",
@@ -319,6 +326,10 @@ class ItemIndex:
 
     def __init__(self, candidates, n_local: int) -> None:
         # candidates: sequence of (worker|None, view|None, static_fn, dyn_fn)
+        # Process-unique monotonic id: external caches (the batch
+        # router's mask planes) key on it instead of id(self), which a
+        # later index could legally re-use after this one is collected.
+        self.serial = next(_ITEM_INDEX_SERIAL)
         self.n = len(candidates)
         self.n_local = n_local
         self.workers = [c[0] for c in candidates]
@@ -418,7 +429,17 @@ class ItemIndex:
         if self._single_zone:
             zone = self._zones[0]
             shard = cluster.load_shards.get(zone)
-            seq = shard.seq if shard is not None else 0
+            # Capture trimmed before log (writers advance trimmed, then
+            # swap in a fresh list): a torn read across a concurrent
+            # compaction can only look over-trimmed, which lands on the
+            # full-recompute branch instead of replaying a wrong window.
+            if shard is not None:
+                trimmed = shard.trimmed
+                log = shard.log
+                seq = trimmed + len(log)
+            else:
+                trimmed = seq = 0
+                log = ()
             synced = self._synced
             if synced is None:
                 # First use: derive all dynamic bits from live state.
@@ -426,14 +447,14 @@ class ItemIndex:
             elif seq != synced:
                 if (
                     shard is None
-                    or synced < shard.trimmed
+                    or synced < trimmed
                     or seq - synced >= self._replay_limit
                 ):
                     # Compacted past our cursor, or more events than
                     # candidates: a full recompute is cheaper than replay.
                     self._recompute(self._static_positions)
                 else:
-                    self._replay_window(shard.log, synced - shard.trimmed)
+                    self._replay_window(log, synced - trimmed)
             self._synced = seq
             self._synced_total = total
             return self.avail
@@ -450,12 +471,17 @@ class ItemIndex:
             return self.avail
         journal = cluster._load_journal
         old = self._synced_total
-        if old < journal.trimmed or total - old >= self._replay_limit:
+        # Same trimmed-then-log capture order as the single-zone path:
+        # racing a journal compaction degrades to a recompute, never a
+        # mis-sliced replay window.
+        trimmed = journal.trimmed
+        log = journal.log
+        if old < trimmed or total - old >= self._replay_limit:
             # Compacted past our cursor, or more events than candidates:
             # a full recompute is cheaper than replay.
             self._recompute(self._static_positions)
         else:
-            self._replay_window(journal.log, old - journal.trimmed)
+            self._replay_window(log, old - trimmed)
         self._synced_total = total
         return self.avail
 

@@ -217,15 +217,31 @@ class Watcher:
                     volatile = True
                 updates.append((key, value))
             zone = worker.zone
-            with self._zone_lock(zone):
-                for key, value in updates:
-                    setattr(worker, key, value)
-                self._cluster.version += 1
-                if not structural and volatile:
-                    # Load-only update: candidate indexes refresh this
-                    # worker's availability bits incrementally instead of
-                    # rebuilding.
-                    self._cluster.note_worker_load(name, zone)
+            if zone_changed:
+                # A zone move must exclude the hot paths of BOTH zones:
+                # the instant the ``zone`` setattr lands, a concurrent
+                # record_admission re-reading worker.zone takes the NEW
+                # zone's lock, so holding only the old lock would let
+                # counter writes interleave with the structural update.
+                # Both locks are taken in sorted order (and only ever
+                # under the global lock, which serializes structural
+                # mutations), so lock ordering stays deterministic.
+                new_zone = next(v for k, v in updates if k == "zone")
+                first, second = sorted((zone, new_zone))
+                with self._zone_lock(first), self._zone_lock(second):
+                    for key, value in updates:
+                        setattr(worker, key, value)
+                    self._cluster.version += 1
+            else:
+                with self._zone_lock(zone):
+                    for key, value in updates:
+                        setattr(worker, key, value)
+                    self._cluster.version += 1
+                    if not structural and volatile:
+                        # Load-only update: candidate indexes refresh
+                        # this worker's availability bits incrementally
+                        # instead of rebuilding.
+                        self._cluster.note_worker_load(name, zone)
             if structural:
                 if zone_changed:
                     # A zone move touches two zones' views; invalidate
@@ -505,13 +521,24 @@ class Watcher:
 
         Locking: takes only the worker's *zone* lock — zone-local writes —
         so concurrent entrypoints of different zones admit in parallel
-        instead of serializing on one global ledger lock."""
+        instead of serializing on one global ledger lock. The zone is
+        re-read after acquiring the lock: a concurrent zone move
+        (update_worker holds both zones' locks for the whole update) may
+        have re-homed the worker between the unlocked read and the
+        acquire, in which case the admission retries on the new zone's
+        lock instead of writing counters under the wrong one."""
         cluster = self._cluster
         worker = cluster.workers[name]
-        lock = self._zone_locks.get(worker.zone)
-        if lock is None:
-            lock = self._zone_lock(worker.zone)
-        with lock:
+        while True:
+            zone = worker.zone
+            lock = self._zone_locks.get(zone)
+            if lock is None:
+                lock = self._zone_lock(zone)
+            lock.acquire()
+            if worker.zone == zone:
+                break
+            lock.release()
+        try:
             if not worker.reachable:
                 raise ValueError(f"worker {name!r} unreachable")
             inflight = worker.inflight + 1
@@ -527,8 +554,10 @@ class Watcher:
             else:
                 worker.capacity_used_pct = 100.0
             cluster.version += 1
-            cluster.note_worker_load(name, worker.zone)
+            cluster.note_worker_load(name, zone)
             return worker
+        finally:
+            lock.release()
 
     def record_completion(
         self,
@@ -555,10 +584,19 @@ class Watcher:
         worker = self._cluster.workers.get(name)
         if worker is None:
             return False  # worker evicted while running; ticket gone
-        lock = self._zone_locks.get(worker.zone)
-        if lock is None:
-            lock = self._zone_lock(worker.zone)
-        with lock:
+        # Same zone re-validation as record_admission: a concurrent zone
+        # move may re-home the worker between the unlocked zone read and
+        # the lock acquire.
+        while True:
+            zone = worker.zone
+            lock = self._zone_locks.get(zone)
+            if lock is None:
+                lock = self._zone_lock(zone)
+            lock.acquire()
+            if worker.zone == zone:
+                break
+            lock.release()
+        try:
             if expected is not None and worker is not expected:
                 return False  # name re-used by a different worker
             if generation is not None and worker.generation != generation:
@@ -589,8 +627,10 @@ class Watcher:
                     else min(100.0, 100.0 * inflight / slots)
                 )
             self._cluster.version += 1
-            self._cluster.note_worker_load(name, worker.zone)
-        return True
+            self._cluster.note_worker_load(name, zone)
+            return True
+        finally:
+            lock.release()
 
     # -- script store (live reload, §4.5) ---------------------------------------
 

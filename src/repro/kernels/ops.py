@@ -34,9 +34,10 @@ def _interpret_default() -> bool:
 
 @functools.partial(jax.jit, static_argnames=())
 def _select_first_available_jax(words32: jax.Array, orders: jax.Array) -> jax.Array:
-    # words32: uint32 [m, 2W] — each uint64 mask word split little-endian
-    # (jax runs with x64 disabled on this container, so uint64 lanes are
-    # unavailable; position p lives at word p>>5, bit p&31).
+    # words32: uint32 [m, 2W] — each uint64 mask word split into
+    # (low, high) halves, low half at even indices (jax runs with x64
+    # disabled on this container, so uint64 lanes are unavailable;
+    # position p lives at word p>>5, bit p&31).
     valid = orders >= 0
     safe = jnp.where(valid, orders, 0)
     gathered = jnp.take_along_axis(
@@ -75,7 +76,15 @@ def select_first_available(avail_words, orders, *, backend: str = "numpy"):
         words = np.ascontiguousarray(avail_words, dtype=np.uint64)
         if words.ndim == 1:
             words = words[None, :]
-        words32 = words.view(np.uint32).reshape(words.shape[0], -1)
+        # Split each uint64 word into (low, high) uint32 halves by value
+        # — not via a .view(), whose half order depends on host byte
+        # order — so position p lives at word p>>5, bit p&31 on any
+        # endianness (matching _select_first_available_jax's indexing).
+        words32 = np.empty(
+            (words.shape[0], 2 * words.shape[1]), dtype=np.uint32
+        )
+        words32[:, 0::2] = (words & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+        words32[:, 1::2] = (words >> np.uint64(32)).astype(np.uint32)
         ordered = np.ascontiguousarray(orders, dtype=np.int32)
         if ordered.ndim == 1:
             ordered = ordered[None, :]
