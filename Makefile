@@ -1,7 +1,7 @@
 PY := python
 export PYTHONPATH := src:.
 
-.PHONY: test lint chaos bench bench-sched bench-sched-full bench-check bench-serve bench-throughput bench-throughput-smoke
+.PHONY: test lint verify-policies chaos bench bench-sched bench-sched-full bench-check bench-serve bench-throughput bench-throughput-smoke
 
 test:
 	$(PY) -m pytest -q
@@ -26,7 +26,14 @@ lint:
 	if [ -n "$$tracked" ]; then \
 		echo "FAIL: tracked Python bytecode:"; echo "$$tracked"; exit 1; \
 	fi
-	ruff check src benchmarks examples tests
+	ruff check src benchmarks examples tests tools
+
+# Static policy verification (PR 8): run the reachability /
+# satisfiability / starvation analyzer over every shipped tAPP script
+# (examples/ + sim scenario families) against its real deployment.
+# Fails on any error-level finding or unplaceability proof.
+verify-policies:
+	$(PY) tools/verify_policies.py
 
 bench:
 	$(PY) benchmarks/run.py --quick

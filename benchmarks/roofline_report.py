@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import json
 import pathlib
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 ARTIFACTS = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
 

@@ -27,7 +27,9 @@ compiled path at 1024w; churn cycle ≤ ``CHURN_FACTOR``× its paired
 steady-state window (× ``CHURN_NOISE`` headroom on fresh runs — both
 sides are ~5µs quantities on drifting hosts); platform façade ≤
 ``PLATFORM_FACTOR``× raw routing; zone-local federation invoke ≤
-``FEDERATION_FACTOR``× the flat-platform invoke. ``--throughput``
+``FEDERATION_FACTOR``× the flat-platform invoke; apply-time policy
+analysis of the constraint-heavy plan ≤ ``ANALYZER_BUDGET_US``
+(host-scaled) at 1024 workers. ``--throughput``
 runs the multi-entry federated throughput rows instead (one driver
 thread per entry zone, fixed total workers), gated at 2-zone ≥
 ``THROUGHPUT_SCALING_FLOOR``× the 1-zone rate. ``--compare
@@ -69,8 +71,9 @@ from repro.core.scheduler import (
     VanillaScheduler,
     WorkerState,
 )
+from repro.core.analysis import analyze_plan
 from repro.core.scheduler.topology import DistributionPolicy
-from repro.core.tapp import parse_tapp
+from repro.core.tapp import compile_script, parse_tapp
 
 SCRIPT = """
 - default:
@@ -180,6 +183,14 @@ CHURN_NOISE = 1.2
 THROUGHPUT_SCALING_FLOOR = 1.5
 THROUGHPUT_WORKERS = 512
 THROUGHPUT_FLAP_EVERY = 16
+# The apply-time policy verifier (PR 8): a full reachability /
+# satisfiability / starvation analysis of a freshly-compiled
+# constraint-heavy plan against the PLATFORM_SIZE-worker snapshot must
+# fit in the apply_policy budget — the analyzer runs synchronously
+# between compile and the atomic swap, so this is latency the control
+# plane pays on every policy rollout. Absolute µs, host-scaled by the
+# same machine-speed factor as the façade gate.
+ANALYZER_BUDGET_US = 25_000.0
 
 
 def _cluster(n_workers: int, *, saturated: bool = False) -> ClusterState:
@@ -492,6 +503,31 @@ def _recovery_row(n_workers: int, iters: int) -> Dict:
     }
 
 
+def _analyzer_row(n_workers: int, iters: int) -> Dict:
+    """apply_policy-time static analysis cost at the production point.
+
+    Times :func:`analyze_plan` — the PR 8 verifier's reachability /
+    satisfiability / starvation pass — on the constraint-heavy script
+    against the ``n_workers`` snapshot. The plan is compiled fresh
+    outside the timed region (compile cost is already covered by the
+    compiled-path rows); what is gated is the *analysis* latency
+    ``apply_policy`` adds between compile and the atomic plan swap.
+    """
+    cluster = _cluster(n_workers)
+    plan = compile_script(parse_tapp(CONSTRAINED_SCRIPT))
+    us = _floor_us(
+        lambda: analyze_plan(plan, cluster, DistributionPolicy.SHARED),
+        max(iters // 100, 3),
+        reps=3,
+    )
+    return {
+        "name": f"apply_policy_analyzed_{n_workers}w",
+        "analyzer_us": us,
+        "us_per_call": us,
+        "machine_factor": _machine_speed_factor(),
+    }
+
+
 def microbench(*, smoke: bool = False) -> List[Dict]:
     rows: List[Dict] = []
     script = parse_tapp(SCRIPT)
@@ -592,6 +628,7 @@ def microbench(*, smoke: bool = False) -> List[Dict]:
     rows.append(federation_row)
     rows.append(retry_row)
     rows.append(recovery_row)
+    rows.append(_analyzer_row(PLATFORM_SIZE, iters))
     return rows
 
 
@@ -845,6 +882,15 @@ def check_rows(rows: List[Dict], *, min_speedup: float = 1.0) -> List[str]:
                     f"{row['us_invoke']:.1f}us vs gateway route "
                     f"{row['us_route']:.1f}us (+{overhead_us:.1f}us > "
                     f"{budget:.1f}us host-scaled budget)"
+                )
+        analyzer_us = row.get("analyzer_us")
+        if analyzer_us is not None:
+            budget = ANALYZER_BUDGET_US * row.get("machine_factor", 1.0)
+            if analyzer_us > budget:
+                failures.append(
+                    f"{row['name']}: policy analysis {analyzer_us:.0f}us "
+                    f"exceeds the {budget:.0f}us host-scaled apply_policy "
+                    f"budget"
                 )
         fed_overhead = row.get("federation_overhead")
         if fed_overhead is not None and fed_overhead > FEDERATION_FACTOR:
@@ -1138,6 +1184,11 @@ def main(argv=None) -> int:
                 f"{r['name']},plain={r['us_plain']:.1f}us,"
                 f"invoke={r['us_invoke']:.1f}us,"
                 f"overhead={r['retry_overhead']:.2f}x"
+            )
+        elif "analyzer_us" in r:
+            print(
+                f"{r['name']},analyze={r['analyzer_us']:.0f}us,"
+                f"budget={ANALYZER_BUDGET_US * r['machine_factor']:.0f}us"
             )
         else:
             print(f"{r['name']},{r['us_per_call']:.1f}us")

@@ -9,7 +9,6 @@ Run: PYTHONPATH=src python examples/train_smollm.py --steps 300
 """
 import argparse
 import dataclasses
-import pathlib
 import tempfile
 import time
 

@@ -29,7 +29,7 @@ import pathlib
 import re
 import shutil
 import threading
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Callable, Dict, List
+from typing import Dict, List
 
 from repro.models.config import ModelConfig
 

@@ -37,9 +37,15 @@ class CandidateReport:
     valid: bool
     reason: Optional[str]  # first violated constraint; None when valid
     detail: str            # the raw trace detail
+    # True when the static analyzer proved the active policy can never
+    # place this invocation's tag on the worker — the rejection is a
+    # property of the (policy × topology), not of current load.
+    inevitable: bool = False
 
     def __str__(self) -> str:  # pragma: no cover - cosmetic
         verdict = "valid" if self.valid else f"rejected — {self.reason}"
+        if self.inevitable:
+            verdict += " (statically inevitable)"
         return f"{self.worker}: {verdict}"
 
 
@@ -75,6 +81,10 @@ class ExplainReport:
     # layer overrode or annotated this decision (e.g. a designated
     # placement severed by an inter-zone partition).
     failure_notes: Tuple[str, ...] = ()
+    # Workers whose rejections the static analyzer proved inevitable
+    # (PR 8): the active policy can never place this tag on them, under
+    # any load — distinct from dynamic (load-dependent) rejections.
+    inevitable_workers: Tuple[str, ...] = ()
 
     def rejections(self) -> Dict[str, str]:
         """worker → last rejection reason across every block evaluated."""
@@ -97,6 +107,11 @@ class ExplainReport:
             )
         )
         lines = [head]
+        if self.inevitable_workers:
+            lines.append(
+                "  ! statically inevitable rejections: "
+                + ", ".join(self.inevitable_workers)
+            )
         for note in self.failure_notes:
             lines.append(f"  ! {note}")
         for note in self.notes:
@@ -191,6 +206,38 @@ class FederationExplainReport:
             lines.append(f"-- {label} --")
             lines.extend("  " + line for line in hop.report.render().splitlines())
         return "\n".join(lines)
+
+
+def annotate_inevitable(
+    report: ExplainReport, selectable: frozenset
+) -> ExplainReport:
+    """Mark rejected candidates outside the statically-selectable set.
+
+    ``selectable`` is the analyzer's verdict for the invocation's
+    resolved tag (workers some admission sequence can place it on); a
+    rejected candidate outside it is statically inevitable — no load
+    state would have changed the outcome.
+    """
+    blocks: List[BlockReport] = []
+    doomed: set = set()
+    changed = False
+    for block in report.blocks:
+        candidates = []
+        for c in block.candidates:
+            if not c.valid and c.worker not in selectable:
+                candidates.append(dataclasses.replace(c, inevitable=True))
+                doomed.add(c.worker)
+                changed = True
+            else:
+                candidates.append(c)
+        blocks.append(dataclasses.replace(block, candidates=tuple(candidates)))
+    if not changed:
+        return report
+    return dataclasses.replace(
+        report,
+        blocks=tuple(blocks),
+        inevitable_workers=tuple(sorted(doomed)),
+    )
 
 
 def _parse_candidate(detail: str) -> CandidateReport:

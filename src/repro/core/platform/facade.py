@@ -49,7 +49,12 @@ from typing import (
     Union,
 )
 
-from repro.core.platform.explain import ExplainReport, build_explain_report
+from repro.core.analysis import AnalysisReport, FederationView, analyze_plan
+from repro.core.platform.explain import (
+    ExplainReport,
+    annotate_inevitable,
+    build_explain_report,
+)
 from repro.core.platform.policy import (
     PolicyDryRun,
     PolicyError,
@@ -76,7 +81,7 @@ from repro.core.scheduler.watcher import (
     LeaseConfig,
     Watcher,
 )
-from repro.core.tapp.ast import TappScript
+from repro.core.tapp.ast import DEFAULT_TAG, TappScript
 from repro.core.tapp.compile import compile_script
 from repro.core.tapp.parser import parse_tapp
 from repro.core.tapp.validate import validate_script
@@ -382,6 +387,86 @@ class PlatformCore:
     def _gateways(self) -> Iterable[Gateway]:
         raise NotImplementedError
 
+    # -- static analysis context (subclasses refine) ----------------------------
+
+    def _analysis_distribution(self) -> Optional[DistributionPolicy]:
+        """The distribution policy the analyzer evaluates views under."""
+        for gateway in self._gateways():
+            return gateway.distribution
+        return None
+
+    def _analysis_entry_zones(self) -> Tuple[Optional[str], ...]:
+        """Entry contexts to verify: flat platforms evaluate context-free."""
+        return (None,)
+
+    def _analysis_federation(self) -> Optional[FederationView]:
+        """Forwarding context (federated platforms only)."""
+        return None
+
+    def _analyze_policy_plan(
+        self,
+        plan,
+        *,
+        starvation_floor: int = 1,
+        tags: Optional[Sequence[str]] = None,
+    ) -> Optional[AnalysisReport]:
+        """Run the static verifier on a lowered plan against live topology."""
+        distribution = self._analysis_distribution()
+        if distribution is None:
+            return None
+        return analyze_plan(
+            plan,
+            self._watcher.cluster,
+            distribution,
+            entry_zones=self._analysis_entry_zones(),
+            starvation_floor=starvation_floor,
+            federation=self._analysis_federation(),
+            tags=tags,
+        )
+
+    def _analysis_plan(self, script: TappScript):
+        """Identity-memoized lowering of the active script (explain path)."""
+        memo = getattr(self, "_plan_memo", None)
+        if memo is None or memo[0] is not script:
+            memo = (script, compile_script(script))
+            self._plan_memo = memo
+        return memo[1]
+
+    def _annotate_explain(
+        self,
+        report: ExplainReport,
+        tag: Optional[str],
+        entry_zone: Optional[str],
+    ) -> ExplainReport:
+        """Mark rejected candidates the active policy can *never* accept.
+
+        A rejection is statically inevitable when the analyzer's verdict
+        for the invocation's resolved tag (from this entry context,
+        forwarding included) shows no admission sequence ever placing the
+        tag on that worker — the operator-facing split between "policy
+        can never work here" and "cluster is busy right now".
+        """
+        handle = self._active
+        if handle is None or not handle.script.tags:
+            return report
+        script = handle.script
+        try:
+            plan = self._analysis_plan(script)
+        except Exception:
+            # Interpreter-only script the compiler rejects: the engine
+            # still runs it, so there is nothing static to prove.
+            return report
+        resolved = tag if tag is not None and tag in plan.tags else DEFAULT_TAG
+        if resolved not in plan.tags:
+            return report
+        analysis = self._analyze_policy_plan(plan, tags=(resolved,))
+        if analysis is None:
+            return report
+        selectable = analysis.selectable(resolved, entry_zone)
+        if selectable is None:
+            return report
+        return annotate_inevitable(report, selectable)
+
     # -- events ----------------------------------------------------------------
 
     def subscribe(self, callback: Subscriber) -> None:
@@ -615,7 +700,7 @@ class PlatformCore:
         )
 
     def dry_run_policy(self, policy: PolicyInput) -> PolicyDryRun:
-        """Validate a script against the live topology without applying it."""
+        """Validate + statically analyze a script without applying it."""
         script, _ = self._coerce_policy(policy)
         cluster = self._watcher.cluster
         report = validate_script(
@@ -624,7 +709,47 @@ class PlatformCore:
             known_worker_labels=cluster.worker_names(),
             known_set_labels=cluster.set_labels(),
         )
-        return self._dry_run_from_report(report)
+        dry_run = self._dry_run_from_report(report)
+        try:
+            plan = compile_script(script)
+        except Exception:
+            # Interpreter-only script: validation findings stand alone.
+            return dry_run
+        analysis = self._analyze_policy_plan(plan)
+        if analysis is not None:
+            dry_run = dataclasses.replace(dry_run, analysis=analysis)
+        return dry_run
+
+    def verify_policy(
+        self,
+        policy: Optional[PolicyInput] = None,
+        *,
+        starvation_floor: int = 1,
+    ) -> AnalysisReport:
+        """Statically verify a policy against the live topology.
+
+        Defaults to the active policy. Returns the analyzer's
+        :class:`~repro.core.analysis.AnalysisReport` — ``report.verdict()``
+        renders the per-(tag × entry zone) reachability/satisfiability/
+        starvation verdicts. ``starvation_floor`` flags tags whose static
+        admission bound is positive but below it.
+        """
+        if policy is None:
+            handle = self._active
+            if handle is None:
+                raise PolicyError("no active policy to verify")
+            script: TappScript = handle.script
+        else:
+            script, _ = self._coerce_policy(policy)
+        plan = compile_script(script)
+        report = self._analyze_policy_plan(
+            plan, starvation_floor=starvation_floor
+        )
+        if report is None:
+            raise PolicyError(
+                "platform has no entrypoints to analyze against"
+            )
+        return report
 
     def apply_policy(
         self, policy: PolicyInput, *, strict: Optional[bool] = None
@@ -639,8 +764,9 @@ class PlatformCore:
         the watcher's published script, and the history untouched.
         ``strict`` additionally rejects topology/constraint warnings
         (unknown controllers, worker labels, or set labels; contradictory
-        affinity lists); it defaults to the platform's ``strict_policies``
-        setting.
+        affinity lists) and static-analysis *proofs* (tags no admission
+        sequence can ever place); it defaults to the platform's
+        ``strict_policies`` setting.
         """
         if strict is None:
             strict = self._strict_policies
@@ -656,9 +782,26 @@ class PlatformCore:
             # un-publish the previous script (the engine would otherwise
             # recompile lazily on the next decision and blow up
             # mid-traffic). The interpreter path never lowers, so it
-            # skips the check rather than rejecting scripts it would run.
+            # skips the check rather than rejecting scripts it would run
+            # — but still lowers opportunistically so the analyzer gets
+            # a plan to verify.
             if compiled_path:
-                gated["plan"] = compile_script(script)
+                plan = gated["plan"] = compile_script(script)
+            else:
+                try:
+                    plan = compile_script(script)
+                except Exception:
+                    plan = None
+            if plan is not None:
+                # Static verification (reachability / satisfiability /
+                # starvation) runs under the same lock, against the same
+                # snapshot the dry-run saw; strict mode re-gates on the
+                # analyzer's proofs before the swap.
+                analysis = self._analyze_policy_plan(plan)
+                if analysis is not None:
+                    dry_run = dataclasses.replace(dry_run, analysis=analysis)
+                    gated["dry_run"] = dry_run
+                    dry_run.raise_for(strict=strict)
 
         with self._policy_lock:
             published = self._watcher.publish_script(script, gate=_gate)
@@ -1098,10 +1241,13 @@ class TappPlatform(PlatformCore):
         nothing is admitted, gateway stats are untouched, and the engine's
         RNG stream / controller cursors are restored afterwards, so
         explaining between two real invokes never changes the second one.
+        Rejected candidates the active policy can *never* accept (per the
+        static analyzer) are marked statically inevitable.
         """
         invocation = self._coerce_invocation(function, tag, model_id)
         decision = self._gateway.probe(invocation)
-        return build_explain_report(invocation, decision)
+        report = build_explain_report(invocation, decision)
+        return self._annotate_explain(report, invocation.tag, None)
 
     def prewarm(self) -> int:
         """Eagerly build the scheduler's candidate indexes for the active

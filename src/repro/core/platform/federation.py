@@ -45,6 +45,7 @@ from typing import (
     Union,
 )
 
+from repro.core.analysis import FederationView
 from repro.core.platform.explain import (
     FederationExplainReport,
     ZoneHopReport,
@@ -240,6 +241,16 @@ class TappFederation(PlatformCore):
 
     def _gateways(self) -> Tuple[ZoneGateway, ...]:
         return tuple(self._zone_gateways[z] for z in self._spec.zone_names)
+
+    # -- static analysis context -------------------------------------------------
+
+    def _analysis_entry_zones(self) -> Tuple[Optional[str], ...]:
+        """Federated plans are verified once per entry zone."""
+        return tuple(self._spec.zone_names)
+
+    def _analysis_federation(self) -> FederationView:
+        """Forwarding table so per-entry verdicts fold in forward targets."""
+        return FederationView(zone_order=dict(self._zone_order))
 
     @property
     def spec(self) -> FederationSpec:
@@ -653,7 +664,10 @@ class TappFederation(PlatformCore):
         hops = [
             ZoneHopReport(
                 zone=entry, rtt=0.0, forwarded=False,
-                report=build_explain_report(invocation, decision),
+                report=self._annotate_explain(
+                    build_explain_report(invocation, decision),
+                    invocation.tag, entry,
+                ),
             )
         ]
         final = decision
@@ -679,7 +693,10 @@ class TappFederation(PlatformCore):
                         zone=target,
                         rtt=self._spec.rtt(entry, target),
                         forwarded=True,
-                        report=build_explain_report(invocation, probed),
+                        report=self._annotate_explain(
+                            build_explain_report(invocation, probed),
+                            invocation.tag, target,
+                        ),
                     )
                 )
                 if probed.scheduled:

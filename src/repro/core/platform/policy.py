@@ -2,18 +2,21 @@
 
 The platform treats a tAPP script like a deployment artifact: it is
 parsed, **dry-run against the live topology** (unknown controllers /
-worker labels / set labels, contradictory affinity lists), compiled, and
-only then atomically swapped in — with a bounded history so ``rollback``
-can restore the previous policy bit-for-bit. This is where the static
-checking of the reachability line of work (arXiv:2407.14159) gets an
-ergonomic home: the findings surface *before* the script starts steering
-live traffic.
+worker labels / set labels, contradictory affinity lists), compiled,
+**statically analyzed** (reachability / satisfiability / starvation, the
+questions of arXiv:2407.14159 answered at apply time by
+:mod:`repro.core.analysis`), and only then atomically swapped in — with a
+bounded history so ``rollback`` can restore the previous policy
+bit-for-bit. The findings surface *before* the script starts steering
+live traffic; strict mode additionally treats analyzer *proofs* (tags no
+admission sequence can ever place) as deploy blockers.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.core.analysis import AnalysisReport
 from repro.core.tapp.ast import TappScript
 from repro.core.tapp.validate import Finding, ValidationReport
 
@@ -29,6 +32,18 @@ class PolicyError(ValueError):
         super().__init__(message)
 
 
+# Render order: grammar-level first, then live-topology checks, then the
+# static-analysis categories (unknown categories sort last, in input order).
+_CATEGORY_ORDER = (
+    "structure",
+    "topology",
+    "constraint",
+    "reachability",
+    "satisfiability",
+    "starvation",
+)
+
+
 @dataclasses.dataclass(frozen=True)
 class PolicyDryRun:
     """What applying a script *would* do, checked against live topology."""
@@ -38,52 +53,87 @@ class PolicyDryRun:
     known_zones: Tuple[str, ...]
     known_sets: Tuple[str, ...]
     known_controllers: Tuple[str, ...]
+    # Static plan analysis (reachability/satisfiability/starvation); None
+    # when the script could not be lowered (the interpreter path accepts
+    # scripts the compiler cannot — lowering failures never reject there).
+    analysis: Optional[AnalysisReport] = None
 
     @property
     def findings(self) -> Tuple[Finding, ...]:
-        return tuple(self.report.findings)
+        found = tuple(self.report.findings)
+        if self.analysis is not None:
+            found += tuple(self.analysis.findings)
+        return found
 
     @property
     def errors(self) -> Tuple[Finding, ...]:
-        return tuple(self.report.errors)
+        return tuple(f for f in self.findings if f.level == "error")
 
     @property
     def warnings(self) -> Tuple[Finding, ...]:
-        return tuple(self.report.warnings)
+        return tuple(f for f in self.findings if f.level == "warning")
 
     @property
     def topology_findings(self) -> Tuple[Finding, ...]:
         """References that match nothing in the live deployment."""
-        return tuple(
-            f for f in self.report.findings if f.category == "topology"
-        )
+        return self._category("topology")
 
     @property
     def constraint_findings(self) -> Tuple[Finding, ...]:
         """Unsatisfiable constraint combinations (affinity ∩ anti-affinity)."""
-        return tuple(
-            f for f in self.report.findings if f.category == "constraint"
-        )
+        return self._category("constraint")
+
+    @property
+    def reachability_findings(self) -> Tuple[Finding, ...]:
+        """Dead blocks / unplaceable tags proven by the static analyzer."""
+        return self._category("reachability")
+
+    @property
+    def satisfiability_findings(self) -> Tuple[Finding, ...]:
+        """Per-item contradictions and empty static survivor sets."""
+        return self._category("satisfiability")
+
+    @property
+    def starvation_findings(self) -> Tuple[Finding, ...]:
+        """Tags whose static admission bound undercuts the declared floor."""
+        return self._category("starvation")
+
+    @property
+    def proofs(self) -> Tuple[Finding, ...]:
+        """Analyzer-proved findings (strict-mode deploy blockers)."""
+        return tuple(f for f in self.findings if f.proof)
+
+    def _category(self, category: str) -> Tuple[Finding, ...]:
+        return tuple(f for f in self.findings if f.category == category)
 
     @property
     def ok(self) -> bool:
         """No structural errors (lenient mode: warnings are advisory)."""
-        return self.report.ok
+        return not self.errors
 
     def ok_strict(self) -> bool:
-        """No errors AND no topology/constraint findings.
+        """No errors, no topology/constraint findings, no analyzer proofs.
 
-        Strict mode treats a dangling reference as a deploy blocker rather
-        than a runtime no-match — the right default for production rollouts
-        where set membership is not expected to be in flux.
+        Strict mode treats a dangling reference — or a *proof* that a tag
+        can never be placed — as a deploy blocker rather than a runtime
+        no-match: the right default for production rollouts where set
+        membership is not expected to be in flux.
         """
-        return self.ok and not self.topology_findings and not self.constraint_findings
+        return (
+            self.ok
+            and not self.topology_findings
+            and not self.constraint_findings
+            and not self.proofs
+        )
 
     def blocking(self, *, strict: bool) -> Tuple[Finding, ...]:
         """The findings that reject the apply under the given mode."""
         if strict:
             return tuple(
-                self.errors + self.topology_findings + self.constraint_findings
+                self.errors
+                + self.topology_findings
+                + self.constraint_findings
+                + self.proofs
             )
         return self.errors
 
@@ -93,14 +143,32 @@ class PolicyDryRun:
             raise PolicyError("policy rejected by dry-run", blocking)
 
     def render(self) -> str:
+        """Findings grouped by category, every line carrying its tag/block.
+
+        Finding ``where`` strings are already structured
+        (``tag:<tag>.block[<i>].workers[<j>]``), so grouping by category
+        makes the output actionable without reading the script
+        side-by-side.
+        """
         lines = [
             f"dry-run against zones={list(self.known_zones)} "
             f"sets={list(self.known_sets)} "
             f"controllers={list(self.known_controllers)}"
         ]
-        if not self.findings:
+        findings = self.findings
+        if not findings:
             lines.append("no findings")
-        lines.extend(str(f) for f in self.findings)
+        else:
+            groups: Dict[str, List[Finding]] = {}
+            for f in findings:
+                groups.setdefault(f.category, []).append(f)
+            ordered = [c for c in _CATEGORY_ORDER if c in groups]
+            ordered.extend(c for c in groups if c not in _CATEGORY_ORDER)
+            for category in ordered:
+                lines.append(f"{category}:")
+                lines.extend(f"  {f}" for f in groups[category])
+        if self.analysis is not None:
+            lines.append(self.analysis.summary())
         return "\n".join(lines)
 
 

@@ -15,7 +15,7 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Sequence, Tuple
 
-from repro.core.scheduler.state import ClusterState, WorkerState
+from repro.core.scheduler.state import ClusterState
 from repro.core.scheduler.watcher import Watcher
 
 

@@ -72,7 +72,6 @@ from typing import (
 )
 
 from repro.core.scheduler.constraints import (
-    ConstraintSpec,
     constraint_reason,
     resolve_constraints,
 )

@@ -118,6 +118,11 @@ class Gateway:
         """Whether this gateway's engine runs the compiled fast path."""
         return self._engine.compiled
 
+    @property
+    def distribution(self) -> DistributionPolicy:
+        """The distribution policy this gateway's engine evaluates under."""
+        return self._engine.distribution
+
     def prime(self, script: TappScript, plan) -> None:
         """Seed the engine's plan cache for a freshly-published script so
         the first routed decision does not pay compilation (no-op on the

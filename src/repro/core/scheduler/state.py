@@ -17,7 +17,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import threading
-from typing import Dict, FrozenSet, Iterable, List, Mapping, Optional, Sequence, Tuple
+from typing import Dict, FrozenSet, Iterable, List, Mapping, Optional, Sequence
 
 
 class HealthState(enum.Enum):

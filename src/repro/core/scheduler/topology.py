@@ -389,6 +389,19 @@ class ItemIndex:
         self._scratch_foreign: Optional[List[int]] = None
         self.avail = 0
 
+    def static_survivors(self):
+        """``(position, worker, saturation cap)`` of every static survivor.
+
+        The saturation cap is ``min(view.slot_cap, capacity_slots)`` — the
+        exact per-controller entitlement the availability mask saturates
+        against — so static analyzers can bound admissions without
+        re-deriving the distribution policy. Read-only view over
+        epoch-static state; never triggers a dynamic refresh.
+        """
+        workers = self.workers
+        caps = self._sat_caps
+        return [(pos, workers[pos], caps[pos]) for pos in self._static_positions]
+
     # -- availability maintenance ------------------------------------------
 
     def _recompute(self, positions) -> None:

@@ -16,7 +16,6 @@ implemented as a first-class scheduler:
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import List, Optional
 
 from repro.core.scheduler.engine import (

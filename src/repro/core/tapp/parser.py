@@ -26,7 +26,7 @@ final entries of the block list.
 """
 from __future__ import annotations
 
-from typing import Any, List, Mapping, Optional, Sequence, Tuple
+from typing import Any, List, Mapping, Optional, Tuple
 
 import yaml
 

@@ -46,13 +46,21 @@ class Finding:
     message: str
     # What kind of rule produced the finding: "structure" (grammar-level
     # invariants), "topology" (references that match nothing in the live
-    # deployment), or "constraint" (unsatisfiable constraint combinations).
-    # The platform's strict policy mode promotes non-structure warnings to
-    # rejections; plain validation treats all warnings as advisory.
+    # deployment), "constraint" (unsatisfiable constraint combinations),
+    # or one of the static-analysis categories "reachability" /
+    # "satisfiability" / "starvation" produced by
+    # :mod:`repro.core.analysis`. The platform's strict policy mode
+    # promotes non-structure warnings to rejections; plain validation
+    # treats all warnings as advisory.
     category: str = "structure"
+    # True when the finding is a *proof* (the analyzer established the
+    # property holds under every admissible execution, not just a lint
+    # heuristic). Strict policy mode treats proofs as deploy blockers.
+    proof: bool = False
 
     def __str__(self) -> str:  # pragma: no cover - cosmetic
-        return f"[{self.level}] {self.where}: {self.message}"
+        mark = "/proof" if self.proof else ""
+        return f"[{self.level}{mark}] {self.where}: {self.message}"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,6 +109,13 @@ def validate_script(
     Topology rules (warnings, since membership is dynamic):
       * controller labels not present in the deployment;
       * wrk/set labels that match nothing right now.
+    Dead-code lints (structure warnings — valid scripts, likely mistakes):
+      * the same wrk label or set label listed twice in one block (the
+        duplicate item can never be selected before its twin invalidates,
+        so it is almost always a copy-paste slip);
+      * worker sets declared in the deployment but referenced by no block
+        (dead deployment metadata, or a typo in the script) — suppressed
+        when any block uses the blank set, which reaches every set member.
     """
     findings: List[Finding] = []
 
@@ -135,7 +150,70 @@ def validate_script(
             known_set_labels=known_set_labels,
         ))
 
+    findings.extend(_lint_unreferenced_sets(script, known_set_labels))
     return ValidationReport(findings=tuple(findings))
+
+
+def _lint_unreferenced_sets(
+    script: TappScript, known_set_labels: Optional[Sequence[str]]
+) -> List[Finding]:
+    """Declared worker sets no block references (dead deployment metadata)."""
+    if known_set_labels is None:
+        return []
+    referenced = set()
+    for tag in script.tags:
+        for block in tag.blocks:
+            for item in block.workers:
+                if isinstance(item, WorkerSet):
+                    if item.label is None:
+                        # The blank set selects every worker, so every
+                        # declared set is (implicitly) in play.
+                        return []
+                    referenced.add(item.label)
+    unused = sorted(set(known_set_labels) - referenced)
+    if not unused:
+        return []
+    return [
+        Finding(
+            "warning",
+            "script",
+            f"worker sets {unused} are declared in the deployment but "
+            f"referenced by no block",
+        )
+    ]
+
+
+def _lint_duplicate_items(block, where: str) -> List[Finding]:
+    """The same wrk/set label listed more than once within one block."""
+    findings: List[Finding] = []
+    wrk_labels: List[str] = []
+    set_labels: List[Optional[str]] = []
+    for item in block.workers:
+        if isinstance(item, WorkerRef):
+            wrk_labels.append(item.label)
+        elif isinstance(item, WorkerSet):
+            set_labels.append(item.label)
+    for label in sorted({w for w in wrk_labels if wrk_labels.count(w) > 1}):
+        findings.append(
+            Finding(
+                "warning",
+                where,
+                f"worker {label!r} is listed {wrk_labels.count(label)} times "
+                f"in this block; the duplicates are dead items",
+            )
+        )
+    dup_sets = {s for s in set_labels if set_labels.count(s) > 1}
+    for label in sorted(dup_sets, key=lambda s: (s is None, s)):
+        shown = "the blank set" if label is None else f"set {label!r}"
+        findings.append(
+            Finding(
+                "warning",
+                where,
+                f"{shown} is listed {set_labels.count(label)} times in this "
+                f"block; the duplicate members are dead items",
+            )
+        )
+    return findings
 
 
 def _validate_tag_topology(
@@ -148,6 +226,7 @@ def _validate_tag_topology(
     findings: List[Finding] = []
     for bi, block in enumerate(tag.blocks):
         where = f"tag:{tag.tag}.block[{bi}]"
+        findings.extend(_lint_duplicate_items(block, where))
         if (
             block.controller is not None
             and known_controllers is not None

@@ -9,10 +9,9 @@ import functools
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.models.api import Model, ShapeSpec
+from repro.models.api import Model
 from repro.models.config import ModelConfig
 from repro.optim.adamw import (
     AdamWConfig,
@@ -22,8 +21,6 @@ from repro.optim.adamw import (
 )
 from repro.sharding.specs import (
     ShardingPolicy,
-    batch_shardings,
-    cache_shardings,
     param_shardings,
 )
 

@@ -7,7 +7,6 @@ state per the policy, and runs the fault-tolerant loop.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import tempfile
 
 import jax

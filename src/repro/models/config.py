@@ -14,7 +14,7 @@ per-layer remat policy).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Tuple
 
 
 @dataclasses.dataclass(frozen=True)

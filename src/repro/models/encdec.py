@@ -7,7 +7,7 @@ embeddings, LayerNorm, GELU — per the Whisper architecture.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

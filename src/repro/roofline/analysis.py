@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 # --- TPU v5e -----------------------------------------------------------------
 PEAK_FLOPS = 197e12           # bf16 per chip

@@ -18,7 +18,6 @@ All quantities are per-device (the HLO is the SPMD-partitioned module).
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Dict, List, Optional, Tuple
 
@@ -109,7 +108,6 @@ def analyze_hlo(text: str) -> HloCost:
 
     # Call graph: (caller, callee, multiplier).
     multipliers: Dict[str, float] = {}
-    entry = None
     for name, comp in comps.items():
         for line in comp.lines:
             for callee in _CALLS_RE.findall(line):

@@ -23,7 +23,6 @@ import time
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.data.pipeline import SyntheticTokens, make_global_batch

@@ -24,7 +24,6 @@ import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.api import ShapeSpec

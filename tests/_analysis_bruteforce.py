@@ -1,0 +1,80 @@
+"""Brute-force oracle for the static policy analyzer.
+
+Shared by the deterministic sweep in ``test_analysis.py`` and the
+hypothesis property suite in ``test_analysis_property.py``: exhaustively
+admits invocations through a real platform until saturation and checks
+the analyzer's verdicts against what actually happened —
+
+- ``placeable`` ⟺ at least one admission succeeded,
+- ``starvation_bound`` == the number of admissions absorbed before the
+  platform started rejecting (exact verdicts only; affinity-free scripts
+  are always exact),
+- every worker that received an admission is in the verdict's
+  ``selectable`` set (the inevitability property behind ``explain()``).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from repro.core.platform import ClusterSpec, TappPlatform
+from repro.core.scheduler.topology import DistributionPolicy
+
+
+def saturate(platform: TappPlatform, tag: str, n_ctls: int,
+             *, limit: int = 200) -> List[str]:
+    """Admit invocations (never completing them) until the platform
+    rejects ``n_ctls + 1`` in a row; returns the workers placed on."""
+    placed: List[str] = []
+    consecutive = 0
+    while consecutive <= n_ctls and len(placed) < limit:
+        placement = platform.invoke("fn", tag=tag)
+        if placement.scheduled:
+            placed.append(placement.worker)
+            consecutive = 0
+        else:
+            consecutive += 1
+    return placed
+
+
+def check_agreement(
+    spec: ClusterSpec,
+    script: str,
+    *,
+    distribution: DistributionPolicy = DistributionPolicy.SHARED,
+) -> Tuple[int, int]:
+    """Assert analyzer verdicts == brute-force outcomes for every tag.
+
+    Returns ``(tags checked, total admissions placed)`` for reporting.
+    """
+    analysis = TappPlatform(
+        spec, distribution=distribution, seed=0
+    ).verify_policy(script)
+    n_ctls = len(spec.controllers)
+    placed_total = 0
+    for verdict in analysis.verdicts:
+        fresh = TappPlatform(spec, distribution=distribution, seed=0)
+        fresh.apply_policy(script)
+        placed = saturate(fresh, verdict.tag, n_ctls)
+        placed_total += len(placed)
+
+        assert verdict.placeable == bool(placed), (
+            f"tag {verdict.tag!r}: analyzer says placeable="
+            f"{verdict.placeable} but brute force placed {len(placed)}\n"
+            f"{analysis.verdict()}"
+        )
+        assert verdict.exact, (
+            f"tag {verdict.tag!r}: affinity-free script must yield an "
+            f"exact bound"
+        )
+        assert len(placed) == verdict.starvation_bound, (
+            f"tag {verdict.tag!r}: analyzer bound "
+            f"{verdict.starvation_bound}, brute force absorbed "
+            f"{len(placed)} ({placed})\n{analysis.verdict()}"
+        )
+        extra = set(placed) - set(verdict.selectable)
+        assert not extra, (
+            f"tag {verdict.tag!r}: workers {sorted(extra)} received "
+            f"admissions but are outside the selectable set "
+            f"{sorted(verdict.selectable)}"
+        )
+    return len(analysis.verdicts), placed_total

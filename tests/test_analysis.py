@@ -1,0 +1,468 @@
+"""Static policy verifier (PR 8): reachability / satisfiability /
+starvation proofs over compiled tAPP plans, the apply_policy gate, the
+dead-code lints, and the explain() inevitability annotation."""
+import pytest
+
+from repro.core.analysis import UNBOUNDED, analyze_plan
+from repro.core.platform import (
+    ClusterSpec,
+    ControllerSpec,
+    FederationSpec,
+    PolicyError,
+    TappFederation,
+    TappPlatform,
+    WorkerSpec,
+)
+from repro.core.scheduler.topology import DistributionPolicy
+from repro.core.sim import scenarios
+from repro.core.tapp import parse_tapp
+from repro.core.tapp.compile import compile_script
+from repro.core.tapp.validate import validate_script
+
+SPEC = ClusterSpec(
+    controllers=(
+        ControllerSpec("EdgeCtl", zone="edge"),
+        ControllerSpec("CloudCtl", zone="cloud"),
+    ),
+    workers=(
+        WorkerSpec("e0", zone="edge", sets=("edge", "any"), capacity_slots=2),
+        WorkerSpec("e1", zone="edge", sets=("edge", "any"), capacity_slots=2),
+        WorkerSpec("c0", zone="cloud", sets=("cloud", "any"), capacity_slots=4),
+    ),
+)
+
+BLANK_DEFAULT = """
+- default:
+  - workers:
+    - set:
+    strategy: platform
+    invalidate: overload
+"""
+
+#: affinity ∩ anti-affinity on the same function: no worker state can
+#: ever satisfy both, so every admission of the tag is rejected.
+CONTRADICTION_SCRIPT = BLANK_DEFAULT + """
+- clash:
+  - workers:
+    - set:
+    strategy: platform
+    affinity: [f]
+    anti-affinity: [f]
+  followup: fail
+"""
+
+#: `critical` is pinned (tolerance none) to EdgeCtl's zone but its worker
+#: set only has cloud members — the home zone is empty, so the pin can
+#: never be satisfied from ANY entry zone (forwarding included).
+EMPTY_HOME_SCRIPT = """
+- critical:
+  - controller: EdgeCtl
+    workers:
+    - set: cloud
+    topology_tolerance: none
+  followup: fail
+- default:
+  - workers:
+    - set:
+    strategy: platform
+    invalidate: overload
+"""
+
+
+def flat_platform(**kw):
+    kw.setdefault("distribution", DistributionPolicy.SHARED)
+    return TappPlatform(SPEC, **kw)
+
+
+def empty_home_federation() -> TappFederation:
+    spec = FederationSpec.of(
+        {
+            "edge": ClusterSpec(controllers=(ControllerSpec("EdgeCtl"),)),
+            "cloud": ClusterSpec(
+                controllers=(ControllerSpec("CloudCtl"),),
+                workers=(
+                    WorkerSpec("C_1", sets=("cloud", "any"),
+                               capacity_slots=2),
+                ),
+            ),
+        },
+        default_entry="edge",
+    )
+    return TappFederation(spec, distribution=DistributionPolicy.SHARED)
+
+
+class TestUnplaceabilityProofs:
+    def test_contradictory_affinity_is_proved_unplaceable(self):
+        platform = flat_platform()
+        dry = platform.dry_run_policy(CONTRADICTION_SCRIPT)
+        assert dry.analysis is not None
+        assert dry.proofs, "expected an unplaceability proof"
+        assert dry.satisfiability_findings
+        verdict = dry.analysis.tag("clash")
+        assert verdict is not None
+        assert not verdict.placeable
+        assert verdict.starvation_bound == 0
+        # The default tag is untouched by the clash.
+        assert dry.analysis.tag("default").placeable
+
+    def test_strict_apply_rejects_lenient_apply_warns(self):
+        with pytest.raises(PolicyError):
+            flat_platform().apply_policy(CONTRADICTION_SCRIPT, strict=True)
+        handle = flat_platform().apply_policy(CONTRADICTION_SCRIPT)
+        assert handle.dry_run.proofs
+        assert handle.dry_run.ok
+        assert not handle.dry_run.ok_strict()
+
+    def test_federated_empty_home_zone_proved_per_entry_zone(self):
+        federation = empty_home_federation()
+        dry = federation.dry_run_policy(EMPTY_HOME_SCRIPT)
+        assert dry.analysis is not None
+        assert dry.proofs
+        for zone in ("edge", "cloud"):
+            verdict = dry.analysis.tag("critical", zone)
+            assert verdict is not None
+            assert not verdict.placeable, f"entry zone {zone}"
+            # default spills cross-zone: placeable from both entries.
+            assert dry.analysis.tag("default", zone).placeable
+
+        with pytest.raises(PolicyError):
+            empty_home_federation().apply_policy(EMPTY_HOME_SCRIPT,
+                                                 strict=True)
+        handle = empty_home_federation().apply_policy(EMPTY_HOME_SCRIPT)
+        assert handle.dry_run.proofs
+
+    def test_forwarding_prevents_false_local_proofs(self):
+        # A controller-less tag with no local workers is NOT unplaceable
+        # when a forward-target zone can take it: the verdict must fold
+        # the forwarding walk in, or every shipped federation policy
+        # would be rejected in strict mode.
+        federation = empty_home_federation()
+        report = federation.verify_policy(BLANK_DEFAULT)
+        verdict = report.tag("default", "edge")
+        assert verdict.placeable
+        assert "C_1" in verdict.selectable
+
+
+class TestVerifyPolicyApi:
+    def test_verify_policy_defaults_to_active(self):
+        platform = flat_platform()
+        platform.apply_policy(BLANK_DEFAULT)
+        report = platform.verify_policy()
+        assert report.ok
+        assert report.tag("default").placeable
+        assert "analysis @epoch" in report.summary()
+        text = report.verdict()
+        assert "tag 'default'" in text
+        assert "placeable" in text
+
+    def test_verify_policy_without_active_raises(self):
+        with pytest.raises(PolicyError):
+            flat_platform().verify_policy()
+
+    def test_starvation_floor_flags_thin_tags(self):
+        platform = flat_platform()
+        report = platform.verify_policy(
+            BLANK_DEFAULT, starvation_floor=10_000
+        )
+        starving = [f for f in report.findings
+                    if f.category == "starvation"]
+        assert starving
+        assert not report.proofs  # bound > 0: flagged, not proved dead
+
+    def test_apply_policy_attaches_analysis(self):
+        platform = flat_platform()
+        handle = platform.apply_policy(BLANK_DEFAULT, strict=True)
+        assert handle.dry_run.analysis is not None
+        assert handle.dry_run.analysis.tag("default").placeable
+
+
+class TestAnalyzeCore:
+    def _analysis(self, script_text, **kw):
+        plan = compile_script(parse_tapp(script_text))
+        platform = flat_platform()
+        cluster = platform._watcher.cluster
+        return analyze_plan(plan, cluster, DistributionPolicy.SHARED, **kw)
+
+    def test_admission_bound_counts_capacity(self):
+        # Blank set + overload: every worker admits up to its slot count.
+        report = self._analysis(BLANK_DEFAULT)
+        verdict = report.tag("default")
+        assert verdict.exact
+        assert verdict.starvation_bound == 2 + 2 + 4
+        assert dict(verdict.admissible) == {"e0": 2, "e1": 2, "c0": 4}
+
+    def test_max_concurrent_invocations_ceiling(self):
+        script = """
+- default:
+  - workers:
+    - set:
+    invalidate: max_concurrent_invocations 1
+"""
+        report = self._analysis(script)
+        assert report.tag("default").starvation_bound == 3  # 1 per worker
+
+    def test_capacity_used_100_percent_saturates_at_slots(self):
+        script = """
+- default:
+  - workers:
+    - set:
+    invalidate: capacity_used 100%
+"""
+        report = self._analysis(script)
+        verdict = report.tag("default")
+        # The signal only reports 100% once every slot is taken, so each
+        # worker absorbs exactly its slot count before invalidating.
+        assert verdict.starvation_bound == 2 + 2 + 4
+
+    def test_capacity_used_ceiling_defensive_over_100(self):
+        # The grammar rejects >100%, but the ceiling helper stays total.
+        from repro.core.analysis.verifier import _capacity_used_ceiling
+
+        assert _capacity_used_ceiling(150.0, 4) == UNBOUNDED
+        assert _capacity_used_ceiling(50.0, 0) == 0
+        assert _capacity_used_ceiling(50.0, 4) == 2
+
+    def test_dead_block_reported_once_per_tag(self):
+        script = BLANK_DEFAULT + """
+- pinned:
+  - controller: NoSuchCtl
+    workers:
+    - set: edge
+    topology_tolerance: none
+  followup: fail
+"""
+        report = self._analysis(script)
+        verdict = report.tag("pinned")
+        assert not verdict.placeable
+        dead = [b for b in verdict.blocks if not b.live]
+        assert dead and dead[0].reason
+        reach = [f for f in report.findings
+                 if f.category == "reachability" and "pinned" in f.where]
+        assert reach
+
+    def test_tag_subset_analysis(self):
+        report = self._analysis(CONTRADICTION_SCRIPT, tags=("clash",))
+        assert {v.tag for v in report.verdicts} == {"clash"}
+        assert report.selectable("clash") == frozenset()
+        assert report.selectable("default") is None
+
+
+class TestDryRunRender:
+    def test_render_groups_by_category_with_location(self):
+        platform = flat_platform()
+        script = CONTRADICTION_SCRIPT + """
+- dangling:
+  - controller: GhostCtl
+    workers:
+    - set: nowhere
+"""
+        dry = platform.dry_run_policy(script)
+        text = dry.render()
+        lines = text.splitlines()
+        for category in ("topology:", "constraint:", "satisfiability:"):
+            assert any(line == category for line in lines), category
+        # Category headers appear in the canonical order.
+        order = [lines.index(c) for c in
+                 ("topology:", "constraint:", "satisfiability:")]
+        assert order == sorted(order)
+        # Every finding line names its tag/block.
+        for line in lines:
+            if line.startswith("  ["):
+                assert "tag:" in line or "script" in line
+        assert "analysis @epoch" in text
+
+    def test_render_no_findings(self):
+        dry = flat_platform().dry_run_policy(BLANK_DEFAULT)
+        assert not dry.findings
+        assert "no findings" in dry.render()
+
+
+class TestDeadCodeLints:
+    def test_duplicate_wrk_items_in_block(self):
+        script = parse_tapp("""
+- default:
+  - workers:
+    - wrk: e0
+    - wrk: e1
+    - wrk: e0
+""")
+        report = validate_script(script, known_worker_labels=("e0", "e1"))
+        dup = [f for f in report.findings if "listed 2 times" in f.message]
+        assert len(dup) == 1
+        assert "'e0'" in dup[0].message
+        assert dup[0].level == "warning"
+        assert dup[0].where == "tag:default.block[0]"
+
+    def test_duplicate_set_items_in_block(self):
+        script = parse_tapp("""
+- default:
+  - workers:
+    - set: edge
+    - set: edge
+    - set:
+    - set:
+""")
+        report = validate_script(script, known_set_labels=("edge",))
+        messages = [f.message for f in report.findings]
+        assert any("set 'edge' is listed 2 times" in m for m in messages)
+        assert any("the blank set is listed 2 times" in m for m in messages)
+
+    def test_unreferenced_declared_sets(self):
+        script = parse_tapp("""
+- default:
+  - workers:
+    - set: edge
+""")
+        report = validate_script(
+            script, known_set_labels=("edge", "cloud", "spare")
+        )
+        unused = [f for f in report.findings
+                  if "referenced by no block" in f.message]
+        assert len(unused) == 1
+        assert "'cloud'" in unused[0].message
+        assert "'spare'" in unused[0].message
+
+    def test_blank_set_reference_silences_unreferenced_lint(self):
+        # A blank set covers every declared set; nothing is unreachable.
+        script = parse_tapp(BLANK_DEFAULT)
+        report = validate_script(script, known_set_labels=("edge", "cloud"))
+        assert not [f for f in report.findings
+                    if "referenced by no block" in f.message]
+
+    def test_lints_never_block_strict_apply(self):
+        platform = flat_platform()
+        script = """
+- default:
+  - workers:
+    - wrk: e0
+    - wrk: e0
+    invalidate: overload
+"""
+        handle = platform.apply_policy(script, strict=True)
+        assert any("listed 2 times" in f.message
+                   for f in handle.dry_run.warnings)
+
+
+class TestExplainInevitability:
+    def test_contradiction_rejections_marked_inevitable(self):
+        platform = flat_platform()
+        platform.apply_policy(CONTRADICTION_SCRIPT)
+        report = platform.explain("f", tag="clash")
+        assert not report.scheduled
+        assert set(report.inevitable_workers) == {"e0", "e1", "c0"}
+        assert "statically inevitable" in report.render()
+
+    def test_dynamic_rejections_not_marked(self):
+        platform = flat_platform()
+        platform.apply_policy(BLANK_DEFAULT)
+        # Saturate one worker: its rejection is load-dependent, not
+        # statically inevitable.
+        for _ in range(SPEC.workers[0].capacity_slots * 4):
+            platform.invoke("f")
+        report = platform.explain("f")
+        assert report.inevitable_workers == ()
+
+    def test_federated_explain_marks_inevitable_per_hop(self):
+        # The contradictory tag rejects C_1 in whichever zone evaluates
+        # it; the analyzer's empty selectable set marks that rejection
+        # inevitable on the hop report.
+        federation = empty_home_federation()
+        federation.apply_policy(CONTRADICTION_SCRIPT)
+        report = federation.explain("f", tag="clash", entry_zone="cloud")
+        assert not report.scheduled
+        assert any(
+            "C_1" in hop.report.inevitable_workers for hop in report.hops
+        ), "expected the clash rejection to be marked statically inevitable"
+
+
+class TestBruteForceAgreement:
+    """Seeded mirror of the hypothesis property suite (which needs the
+    dev-only hypothesis package): analyzer verdicts vs exhaustive
+    admission on small random topologies × affinity-free scripts."""
+
+    @pytest.mark.parametrize("seed", range(12))
+    def test_seeded_random_cases(self, seed):
+        import random
+
+        from tests._analysis_bruteforce import check_agreement
+
+        rng = random.Random(seed)
+        zones = ("z0", "z1")[: rng.randint(1, 2)]
+        spec = ClusterSpec(
+            controllers=tuple(
+                ControllerSpec(f"C{i}", zone=zones[i % len(zones)])
+                for i in range(rng.randint(1, 2))
+            ),
+            workers=tuple(
+                WorkerSpec(
+                    f"w{i}",
+                    zone=rng.choice(zones),
+                    sets=(rng.choice(("a", "b")), "any"),
+                    capacity_slots=rng.randint(1, 3),
+                )
+                for i in range(rng.randint(1, 4))
+            ),
+        )
+        invalidates = (
+            "overload",
+            "max_concurrent_invocations 1",
+            "max_concurrent_invocations 2",
+            "capacity_used 25%",
+            "capacity_used 50%",
+            "capacity_used 100%",
+        )
+        script = (
+            "- default:\n"
+            "  - workers:\n"
+            "    - set:\n"
+            "    strategy: platform\n"
+            f"    invalidate: {rng.choice(invalidates)}\n"
+        )
+        if rng.random() < 0.7:
+            tolerance = rng.choice((None, "none", "same", "all"))
+            block = ["- t:"]
+            if tolerance is not None:
+                block.append(f"  - controller: {rng.choice(('C0', 'C1'))}")
+                block.append("    workers:")
+            else:
+                block.append("  - workers:")
+            block.append(f"    - set: {rng.choice(('', 'a', 'b', 'any'))}")
+            block.append(f"    invalidate: {rng.choice(invalidates)}")
+            if tolerance is not None:
+                block.append(f"    topology_tolerance: {tolerance}")
+            block.append(f"  followup: {rng.choice(('fail', 'default'))}")
+            script += "\n".join(block) + "\n"
+        distribution = rng.choice(tuple(DistributionPolicy))
+        check_agreement(spec, script, distribution=distribution)
+
+
+class TestZeroFalseBlockers:
+    """Shipped scenario policies must verify clean (no errors, no proofs)."""
+
+    CASES = [
+        ("data_locality", scenarios.DATA_LOCALITY_SCRIPT,
+         lambda: TappPlatform(scenarios.benchmark_cluster(),
+                              distribution=DistributionPolicy.SHARED)),
+        ("mqtt_flat", scenarios.MQTT_SCRIPT,
+         lambda: TappPlatform(scenarios.mqtt_cluster(),
+                              distribution=DistributionPolicy.SHARED)),
+        ("mqtt_federated", scenarios.MQTT_SCRIPT,
+         lambda: TappFederation(scenarios.mqtt_federation_spec(),
+                                distribution=DistributionPolicy.SHARED)),
+        ("colocation", scenarios.COLOCATION_SCRIPT,
+         lambda: TappPlatform(scenarios.colocation_cluster(),
+                              distribution=DistributionPolicy.SHARED)),
+        ("colocation_federated", scenarios.COLOCATION_SCRIPT,
+         lambda: TappFederation(scenarios.colocation_federation_spec(),
+                                distribution=DistributionPolicy.SHARED)),
+    ]
+
+    @pytest.mark.parametrize("name,script,factory", CASES,
+                             ids=[c[0] for c in CASES])
+    def test_shipped_policy_verifies_clean(self, name, script, factory):
+        dry = factory().dry_run_policy(script)
+        assert dry.analysis is not None
+        assert not dry.errors
+        assert not dry.proofs, [str(f) for f in dry.proofs]
+        # And strict apply accepts them.
+        factory().apply_policy(script, strict=True)

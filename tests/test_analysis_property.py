@@ -1,0 +1,118 @@
+"""Property test: analyzer verdicts agree with brute-force enumeration.
+
+For random small topologies × affinity-free scripts, the static
+analyzer's per-tag verdicts must match what a real platform does when
+invocations are exhaustively admitted until saturation:
+
+- "statically unplaceable" ⟺ no admission sequence places the tag,
+- the starvation bound equals the exact number of admissions absorbed,
+- placed workers are always inside the analyzer's selectable set.
+
+Requires hypothesis (requirements-dev.txt); skipped when absent.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.platform import (  # noqa: E402
+    ClusterSpec,
+    ControllerSpec,
+    WorkerSpec,
+)
+from repro.core.scheduler.topology import DistributionPolicy  # noqa: E402
+
+from tests._analysis_bruteforce import check_agreement  # noqa: E402
+
+ZONES = ("z0", "z1")
+SET_LABELS = ("a", "b")
+
+
+@st.composite
+def cluster_specs(draw):
+    n_zones = draw(st.integers(1, 2))
+    zones = ZONES[:n_zones]
+    controllers = tuple(
+        ControllerSpec(f"C{i}", zone=zones[i % n_zones])
+        for i in range(draw(st.integers(1, 2)))
+    )
+    workers = tuple(
+        WorkerSpec(
+            f"w{i}",
+            zone=draw(st.sampled_from(zones)),
+            sets=(draw(st.sampled_from(SET_LABELS)), "any"),
+            capacity_slots=draw(st.integers(1, 3)),
+        )
+        for i in range(draw(st.integers(1, 4)))
+    )
+    return ClusterSpec(controllers=controllers, workers=workers)
+
+
+_INVALIDATES = st.sampled_from(
+    (
+        "overload",
+        "max_concurrent_invocations 1",
+        "max_concurrent_invocations 2",
+        "max_concurrent_invocations 3",
+        "capacity_used 25%",
+        "capacity_used 50%",
+        "capacity_used 100%",
+    )
+)
+
+
+def _block(set_label, invalidate, controller=None, tolerance=None):
+    lines = []
+    if controller is not None:
+        lines.append(f"  - controller: {controller}")
+        lines.append("    workers:")
+    else:
+        lines.append("  - workers:")
+    lines.append(f"    - set: {set_label or ''}")
+    lines.append("    strategy: platform")
+    lines.append(f"    invalidate: {invalidate}")
+    if tolerance is not None:
+        lines.append(f"    topology_tolerance: {tolerance}")
+    return "\n".join(lines)
+
+
+@st.composite
+def scripts(draw):
+    parts = [
+        "- default:",
+        _block(
+            draw(st.sampled_from((None, "any"))),
+            draw(_INVALIDATES),
+        ),
+    ]
+    if draw(st.booleans()):
+        tolerance = draw(st.sampled_from((None, "none", "same", "all")))
+        controller = (
+            draw(st.sampled_from(("C0", "C1"))) if tolerance else None
+        )
+        parts.append("- t:")
+        parts.append(
+            _block(
+                draw(st.sampled_from((None,) + SET_LABELS)),
+                draw(_INVALIDATES),
+                controller=controller,
+                tolerance=tolerance,
+            )
+        )
+        parts.append(
+            f"  followup: {draw(st.sampled_from(('fail', 'default')))}"
+        )
+    return "\n".join(parts) + "\n"
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    spec=cluster_specs(),
+    script=scripts(),
+    distribution=st.sampled_from(tuple(DistributionPolicy)),
+)
+def test_analyzer_agrees_with_brute_force(spec, script, distribution):
+    # Scripts may name C1 when the cluster only has C0 — a legitimate
+    # dead-designation case the analyzer must prove, not an error.
+    check_agreement(spec, script, distribution=distribution)

@@ -32,7 +32,6 @@ from repro.core.platform import (
     FederationSpec,
     RetryPolicy,
     TappFederation,
-    TappPlatform,
     WorkerSpec,
 )
 from repro.core.scheduler.topology import DistributionPolicy

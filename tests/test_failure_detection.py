@@ -19,7 +19,6 @@ from repro.core.platform import (
 )
 from repro.core.scheduler.gateway import forward_targets
 from repro.core.scheduler.topology import DistributionPolicy
-from repro.core.scheduler.watcher import Watcher
 from repro.core.sim.core import NetworkModel
 from repro.core.tapp import parse_tapp
 

@@ -8,7 +8,6 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_bhsd
 from repro.kernels.moe_gmm import gmm
 from repro.kernels.ops import flash_attention, moe_ffn_gmm, ssd_scan
-from repro.kernels.ssd_scan import ssd_scan_bhsd
 
 KEY = jax.random.PRNGKey(0)
 

@@ -14,7 +14,6 @@ from repro.core.platform import (
 )
 from repro.core.scheduler import Gateway, Invocation, Watcher, make_cluster
 from repro.core.scheduler.topology import DistributionPolicy
-from repro.core.tapp import parse_tapp
 
 SPEC = ClusterSpec(
     controllers=(

@@ -2,9 +2,7 @@
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs import smoke_config

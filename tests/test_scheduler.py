@@ -1,10 +1,8 @@
 """Scheduler semantics: strategies, invalidation, engine, topology policies."""
-import pytest
 
 from repro.core.scheduler import (
     ClusterState,
     ConstraintSpec,
-    ControllerState,
     DistributionPolicy,
     Invocation,
     TappEngine,

@@ -182,7 +182,6 @@ def mutate_cluster(rng: random.Random, watcher: Watcher) -> None:
         # the running-function multiset: the affinity signal is per-decision
         # churn, same as the inflight counters.
         name = rng.choice(names)
-        w = cluster.workers[name]
         watcher.update_worker(
             name,
             inflight=rng.randint(0, 5),

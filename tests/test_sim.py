@@ -1,7 +1,6 @@
 """Simulator reproduction of the paper's evaluation (§5)."""
 import statistics
 
-import pytest
 
 from repro.core.sim.scenarios import (
     run_benchmark,

@@ -1,5 +1,4 @@
 """Optimizer, data pipeline, checkpointing, sharding specs."""
-import pathlib
 
 import jax
 import jax.numpy as jnp

@@ -2,7 +2,6 @@
 import pytest
 
 from repro.core.tapp import (
-    DEFAULT_TAG,
     Affinity,
     AntiAffinity,
     CapacityUsed,
@@ -12,7 +11,6 @@ from repro.core.tapp import (
     Strategy,
     TappParseError,
     TopologyTolerance,
-    WorkerRef,
     WorkerSet,
     invalidate_from_text,
     parse_tapp,

@@ -40,7 +40,7 @@ class TestWatcher:
 
     def test_live_reload_versioning(self):
         w = self._watcher()
-        s1 = w.load_script("- default:\n  - workers:\n    - set:\n")
+        w.load_script("- default:\n  - workers:\n    - set:\n")
         v1 = w.script_version
         s2 = w.load_script(
             "- default:\n  - workers:\n    - set: s1\n"

@@ -1,0 +1,224 @@
+#!/usr/bin/env python
+"""Statically verify every shipped tAPP policy against its deployment.
+
+`make verify-policies` (and the CI job of the same name) runs the
+:mod:`repro.core.analysis` verifier over every policy script the repo
+ships — the examples/ demos and the simulation scenario families — each
+against the cluster/federation spec its runner actually deploys. A case
+fails on any error-level finding or analyzer *proof* (a tag no admission
+sequence can place): shipped scripts must be free of false blockers, so
+this doubles as the analyzer's zero-false-positive regression gate.
+
+Run: PYTHONPATH=src:. python tools/verify_policies.py [-v]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Callable, List, Optional, Tuple
+
+from repro.core.platform import (
+    ClusterSpec,
+    ControllerSpec,
+    FederationSpec,
+    TappFederation,
+    TappPlatform,
+    WorkerSpec,
+)
+from repro.core.scheduler.topology import DistributionPolicy
+from repro.core.sim import scenarios
+from repro.core.sim.core import NetworkModel
+
+# (name, script text, platform factory). Factories build the deployment
+# the script's runner/demo uses, so verdicts match what would go live.
+Case = Tuple[str, str, Callable[[], object]]
+
+
+def _flat(spec: ClusterSpec, distribution: DistributionPolicy):
+    return lambda: TappPlatform(spec, distribution=distribution)
+
+
+def _federated(spec: FederationSpec, distribution: DistributionPolicy):
+    return lambda: TappFederation(spec, distribution=distribution)
+
+
+def _serve_topology_cluster() -> ClusterSpec:
+    """The examples/serve_topology.py flat deployment, as a ClusterSpec.
+
+    The demo registers these through ServingEngine replicas; the verifier
+    only needs the topology shape (zones / sets / slots), mirrored here.
+    """
+    return ClusterSpec(
+        controllers=(
+            ControllerSpec("LocalCtl_1", zone="edge"),
+            ControllerSpec("LocalCtl_2", zone="edge"),
+            ControllerSpec("CloudCtl", zone="cloud"),
+        ),
+        workers=(
+            WorkerSpec("W_1", zone="edge", sets=("edge", "internal"),
+                       capacity_slots=2),
+            WorkerSpec("W_2", zone="edge", sets=("edge", "internal"),
+                       capacity_slots=2),
+            WorkerSpec("W_3", zone="cloud", sets=("cloud",),
+                       capacity_slots=2),
+            WorkerSpec("W_4", zone="cloud", sets=("cloud",),
+                       capacity_slots=2),
+        ),
+    )
+
+
+def _serve_topology_federation() -> FederationSpec:
+    """examples/serve_topology.py federation_demo(), replicas included."""
+    return FederationSpec.of(
+        {
+            "edge": ClusterSpec(
+                controllers=(ControllerSpec("EdgeCtl"),),
+                workers=(WorkerSpec("E_1", sets=("edge",),
+                                    capacity_slots=1),),
+            ),
+            "cloud": ClusterSpec(
+                controllers=(ControllerSpec("CloudCtl"),),
+                workers=(WorkerSpec("C_1", sets=("cloud",),
+                                    capacity_slots=1),),
+            ),
+        },
+        network=NetworkModel(rtt={("edge", "cloud"): 0.040}, bandwidth={}),
+        default_entry="edge",
+    )
+
+
+def _example_scripts() -> List[Tuple[str, str]]:
+    """(constant name, script) pairs lifted from the examples/ modules.
+
+    The example modules import jax at module scope (they end in model-
+    serving demos); where jax is unavailable the scripts are skipped
+    with a notice rather than failing the gate.
+    """
+    out: List[Tuple[str, str]] = []
+    try:
+        from examples import quickstart, serve_topology
+    except ImportError as exc:  # pragma: no cover - jax-less environments
+        print(f"NOTE: skipping examples/ scripts ({exc})")
+        return out
+    out.append(("quickstart.SCRIPT", quickstart.SCRIPT))
+    for name in ("CASE_STUDY_SCRIPT", "FLIPPED", "SPREAD_SCRIPT"):
+        out.append((f"serve_topology.{name}", getattr(serve_topology, name)))
+    out.append(("serve_topology.FEDERATION_SCRIPT",
+                serve_topology.FEDERATION_SCRIPT))
+    return out
+
+
+def build_cases() -> List[Case]:
+    cases: List[Case] = []
+    examples = dict(_example_scripts())
+
+    if "quickstart.SCRIPT" in examples:
+        from examples.quickstart import SPEC as QUICKSTART_SPEC
+
+        cases.append((
+            "quickstart.SCRIPT",
+            examples["quickstart.SCRIPT"],
+            _flat(QUICKSTART_SPEC, DistributionPolicy.SHARED),
+        ))
+        serve_cluster = _serve_topology_cluster()
+        for name in ("CASE_STUDY_SCRIPT", "FLIPPED", "SPREAD_SCRIPT"):
+            cases.append((
+                f"serve_topology.{name}",
+                examples[f"serve_topology.{name}"],
+                _flat(serve_cluster, DistributionPolicy.SHARED),
+            ))
+        cases.append((
+            "serve_topology.FEDERATION_SCRIPT",
+            examples["serve_topology.FEDERATION_SCRIPT"],
+            _federated(_serve_topology_federation(),
+                       DistributionPolicy.SHARED),
+        ))
+
+    # §5.2/§5.3 quantitative benchmark: the data-locality script runs
+    # under every distribution policy the sweep exercises.
+    for policy in DistributionPolicy:
+        cases.append((
+            f"scenarios.DATA_LOCALITY_SCRIPT[{policy.value}]",
+            scenarios.DATA_LOCALITY_SCRIPT,
+            _flat(scenarios.benchmark_cluster(), policy),
+        ))
+
+    # §5.1 qualitative MQTT case: flat (both registration orders) and
+    # the two-entry federation.
+    for cloud_first in (True, False):
+        order = "cloud_first" if cloud_first else "edge_first"
+        cases.append((
+            f"scenarios.MQTT_SCRIPT[{order}]",
+            scenarios.MQTT_SCRIPT,
+            _flat(scenarios.mqtt_cluster(cloud_first=cloud_first),
+                  DistributionPolicy.SHARED),
+        ))
+    cases.append((
+        "scenarios.MQTT_SCRIPT[federated]",
+        scenarios.MQTT_SCRIPT,
+        _federated(scenarios.mqtt_federation_spec(),
+                   DistributionPolicy.SHARED),
+    ))
+
+    # Co-location / interference family (constraint layer v2).
+    for name in ("COLOCATION_BLANK_SCRIPT", "COLOCATION_SCRIPT"):
+        script = getattr(scenarios, name)
+        cases.append((
+            f"scenarios.{name}",
+            script,
+            _flat(scenarios.colocation_cluster(), DistributionPolicy.SHARED),
+        ))
+        cases.append((
+            f"scenarios.{name}[federated]",
+            script,
+            _federated(scenarios.colocation_federation_spec(),
+                       DistributionPolicy.SHARED),
+        ))
+    return cases
+
+
+def verify_case(name: str, script: str, factory, *,
+                verbose: bool) -> Optional[str]:
+    """Returns None on pass, else a failure description."""
+    platform = factory()
+    dry = platform.dry_run_policy(script)
+    report = dry.analysis
+    if report is None:
+        return "script did not lower to a compiled plan (no analysis)"
+    blockers = tuple(dry.errors) + tuple(dry.proofs)
+    if verbose:
+        print(f"--- {name} ---")
+        print(report.verdict())
+    if blockers:
+        return "; ".join(str(f) for f in blockers)
+    return None
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("-v", "--verbose", action="store_true",
+                        help="print each case's full analyzer verdict")
+    opts = parser.parse_args(argv)
+
+    cases = build_cases()
+    failures: List[Tuple[str, str]] = []
+    for name, script, factory in cases:
+        problem = verify_case(name, script, factory, verbose=opts.verbose)
+        if problem is None:
+            print(f"PASS {name}")
+        else:
+            print(f"FAIL {name}: {problem}")
+            failures.append((name, problem))
+
+    print(f"\n{len(cases) - len(failures)}/{len(cases)} policies verified")
+    if failures:
+        print("error-level findings / unplaceability proofs in shipped "
+              "policies:")
+        for name, problem in failures:
+            print(f"  {name}: {problem}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
