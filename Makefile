@@ -1,7 +1,7 @@
 PY := python
 export PYTHONPATH := src:.
 
-.PHONY: test lint verify-policies chaos bench bench-sched bench-sched-full bench-check bench-serve bench-throughput bench-throughput-smoke
+.PHONY: test lint verify-policies chaos chaos-overload bench bench-sched bench-sched-full bench-check bench-serve bench-throughput bench-throughput-smoke bench-overload bench-overload-smoke
 
 test:
 	$(PY) -m pytest -q
@@ -14,6 +14,15 @@ test:
 # pytest-timeout plugin is installed (requirements-dev.txt; optional).
 chaos:
 	$(PY) -m pytest tests/test_chaos.py tests/test_failure_detection.py -q \
+		$$($(PY) -c "import pytest_timeout" 2>/dev/null && echo --timeout=120)
+
+# Overload-burst chaos suite (PR 9): admission queues, priority
+# shedding, circuit breakers, and brownout degradation under seeded
+# overload_burst fault schedules (plus the armed-idle bit-identity
+# properties).
+chaos-overload:
+	$(PY) -m pytest tests/test_overload.py \
+		tests/test_chaos.py -k "Overload or Breaker or Burst" -q \
 		$$($(PY) -c "import pytest_timeout" 2>/dev/null && echo --timeout=120)
 
 # Correctness lint (ruff.toml: syntax errors, bad comparisons, undefined
@@ -73,3 +82,14 @@ bench-throughput:
 bench-throughput-smoke:
 	$(PY) benchmarks/run.py sched --throughput --smoke \
 		--out bench_throughput_smoke.json
+
+# Overload-resilience benchmark (PR 9): goodput under a saturating
+# open-loop burst, admission-queue arm vs oblivious arm at equal
+# offered load; gated at queued goodput >= 2x oblivious. Full size
+# merges the rows into the committed serving artifact.
+bench-overload:
+	$(PY) benchmarks/run.py overload --check --merge BENCH_serving.json
+
+bench-overload-smoke:
+	$(PY) benchmarks/run.py overload --smoke --check \
+		--out bench_overload_smoke.json

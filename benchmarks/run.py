@@ -33,6 +33,14 @@ def main() -> None:
 
         raise SystemExit(sched_main(sys.argv[2:]))
 
+    if len(sys.argv) > 1 and sys.argv[1] == "overload":
+        # Overload-resilience benchmark subcommand (goodput gate):
+        #   python benchmarks/run.py overload [--smoke] [--check]
+        #       [--merge BENCH_serving.json]
+        from benchmarks.overload_bench import main as overload_main
+
+        raise SystemExit(overload_main(sys.argv[2:]))
+
     if len(sys.argv) > 1 and sys.argv[1] == "serve":
         # Serving-engine benchmark subcommand (JSON artifact):
         #   python benchmarks/run.py serve [--out PATH]

@@ -55,9 +55,12 @@ from typing import Dict, List, Optional
 from repro.core.scheduler.watcher import Watcher
 
 from repro.core.platform import (
+    BrownoutSpec,
     ClusterSpec,
     ControllerSpec,
     FederationSpec,
+    OverloadSpec,
+    QueueSpec,
     RetryPolicy,
     TappFederation,
     TappPlatform,
@@ -156,6 +159,13 @@ FEDERATION_FACTOR = 1.25
 # retry-enabled invoke to RETRY_FACTOR x the plain invoke (paired
 # alternating-rep floors, same rationale as the federation gate).
 RETRY_FACTOR = 1.1
+# Enabled-but-idle overload layer (PR 9): an OverloadSpec (admission
+# queue + brownout) armed on a healthy, unsaturated cluster must leave
+# the invoke fast path untaxed — the queue map stays empty (complete()'s
+# drain check is one falsy dict read) and the enqueue branch is only
+# reached after routing already failed. Same paired-floor gate shape as
+# the retry row.
+OVERLOAD_FACTOR = 1.1
 # The vectorized batch path (PR 7): ``schedule_batch`` must amortize a
 # homogeneous 64-invocation batch to at least this much faster than
 # per-call compiled routing at the FLAT_TOP production point. The same
@@ -468,6 +478,43 @@ def _retry_row(n_workers: int, iters: int) -> Dict:
     }
 
 
+def _overload_row(n_workers: int, iters: int) -> Dict:
+    """Unsaturated fast path: overload-armed invoke vs plain invoke (PR 9).
+
+    Two identical platforms over the same deployment, one constructed
+    with a full ``OverloadSpec`` (admission queue + brownout), both
+    invoked on a cluster with effectively infinite slots so every invoke
+    schedules and the queue never holds an entry. The armed side's only
+    extra work is an empty-dict drain check in ``complete`` and the
+    dead enqueue branch guard — the gate pins it to ``OVERLOAD_FACTOR``
+    × the plain invoke so the overload layer is free until it fires.
+    """
+    spec = _retry_platform_spec(n_workers)
+    plain = TappPlatform(
+        spec, distribution=DistributionPolicy.SHARED, seed=0, policy=SCRIPT
+    )
+    armed = TappPlatform(
+        spec, distribution=DistributionPolicy.SHARED, seed=0, policy=SCRIPT,
+        overload=OverloadSpec(
+            queue=QueueSpec(depth=64, deadline=60.0),
+            brownout=BrownoutSpec(),
+        ),
+    )
+    inv = Invocation("fn", tag="tagged")
+    us_plain, us_armed, ratio = _paired_ratio_us(
+        lambda: plain.invoke(inv),
+        lambda: armed.invoke(inv),
+        max(iters // 2, 500),
+    )
+    return {
+        "name": f"overload_invoke_{n_workers}w",
+        "us_plain": us_plain,
+        "us_invoke": us_armed,
+        "us_per_call": us_armed,
+        "overload_overhead": ratio,
+    }
+
+
 def _recovery_row(n_workers: int, iters: int) -> Dict:
     """Worker-failure recovery time: fail → evict → re-route (PR 6).
 
@@ -566,6 +613,14 @@ def microbench(*, smoke: bool = False) -> List[Dict]:
         retake = _retry_row(PLATFORM_SIZE, iters)
         if retake["retry_overhead"] < retry_row["retry_overhead"]:
             retry_row = retake
+    # ... and for the overload-armed/plain pair (PR 9's fast-path gate).
+    overload_row = _overload_row(PLATFORM_SIZE, iters)
+    for _ in range(2):
+        if overload_row["overload_overhead"] <= 0.8 * OVERLOAD_FACTOR:
+            break
+        retake = _overload_row(PLATFORM_SIZE, iters)
+        if retake["overload_overhead"] < overload_row["overload_overhead"]:
+            overload_row = retake
     recovery_row = _recovery_row(PLATFORM_SIZE, iters)
     for n_workers in sizes:
         cluster = _cluster(n_workers)
@@ -627,6 +682,7 @@ def microbench(*, smoke: bool = False) -> List[Dict]:
     rows.append(platform_row)
     rows.append(federation_row)
     rows.append(retry_row)
+    rows.append(overload_row)
     rows.append(recovery_row)
     rows.append(_analyzer_row(PLATFORM_SIZE, iters))
     return rows
@@ -906,6 +962,14 @@ def check_rows(rows: List[Dict], *, min_speedup: float = 1.0) -> List[str]:
                 f"vs plain invoke {row['us_plain']:.1f}us "
                 f"({retry_overhead:.2f}x > {RETRY_FACTOR:.2f}x budget)"
             )
+        overload_overhead = row.get("overload_overhead")
+        if overload_overhead is not None and overload_overhead > OVERLOAD_FACTOR:
+            failures.append(
+                f"{row['name']}: overload-armed invoke "
+                f"{row['us_invoke']:.1f}us "
+                f"vs plain invoke {row['us_plain']:.1f}us "
+                f"({overload_overhead:.2f}x > {OVERLOAD_FACTOR:.2f}x budget)"
+            )
         speedup = row.get("speedup")
         if speedup is not None and speedup < min_speedup:
             failures.append(
@@ -1079,6 +1143,14 @@ def compare_rows(
                     f"{row['retry_overhead']:.2f}x exceeds committed "
                     f"{ref['retry_overhead']:.2f}x * {factor:.1f}"
                 )
+        if "overload_overhead" in row and "overload_overhead" in ref:
+            ceiling = ref["overload_overhead"] * factor
+            if row["overload_overhead"] > ceiling:
+                failures.append(
+                    f"{name}: overload overhead "
+                    f"{row['overload_overhead']:.2f}x exceeds committed "
+                    f"{ref['overload_overhead']:.2f}x * {factor:.1f}"
+                )
     for label in ("tagged", "default", "constrained"):
         now = _scaling_ratio(current, label)
         ref = _scaling_ratio(floors, label)
@@ -1184,6 +1256,12 @@ def main(argv=None) -> int:
                 f"{r['name']},plain={r['us_plain']:.1f}us,"
                 f"invoke={r['us_invoke']:.1f}us,"
                 f"overhead={r['retry_overhead']:.2f}x"
+            )
+        elif "overload_overhead" in r:
+            print(
+                f"{r['name']},plain={r['us_plain']:.1f}us,"
+                f"invoke={r['us_invoke']:.1f}us,"
+                f"overhead={r['overload_overhead']:.2f}x"
             )
         elif "analyzer_us" in r:
             print(

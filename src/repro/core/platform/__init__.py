@@ -46,6 +46,16 @@ from repro.core.platform.federation import (
     TappFederation,
     ZoneStats,
 )
+from repro.core.platform.overload import (
+    AdmissionQueue,
+    BreakerSpec,
+    BrownoutController,
+    BrownoutSpec,
+    CircuitBreaker,
+    OverloadSpec,
+    QueueSpec,
+    degrade_script,
+)
 from repro.core.platform.policy import (
     PolicyDryRun,
     PolicyError,
@@ -62,9 +72,14 @@ from repro.core.scheduler.state import HealthState
 from repro.core.scheduler.watcher import HealthTransition, LeaseConfig
 
 __all__ = [
+    "AdmissionQueue",
     "BlockReport",
+    "BreakerSpec",
+    "BrownoutController",
+    "BrownoutSpec",
     "CandidateReport",
     "ChaosSpec",
+    "CircuitBreaker",
     "ClusterSpec",
     "ControllerSpec",
     "ExplainReport",
@@ -78,12 +93,14 @@ __all__ = [
     "HealthState",
     "HealthTransition",
     "LeaseConfig",
+    "OverloadSpec",
     "Placement",
     "PlatformCore",
     "PlatformStats",
     "PolicyDryRun",
     "PolicyError",
     "PolicyHandle",
+    "QueueSpec",
     "RetryPolicy",
     "TappFederation",
     "TappPlatform",

@@ -161,6 +161,12 @@ class FederationExplainReport:
     # (inter-zone partitions + all-workers-DEAD zones); the forwarding
     # walk skipped them (PR 6).
     unreachable_zones: Tuple[str, ...] = ()
+    # Overload layer (PR 9): the entry zone's admission-queue state line
+    # (None when the queue layer is off) and the (source, target) circuit
+    # breakers currently open — an open breaker suppresses the forwarding
+    # walk down to its half-open probe rate.
+    overload_note: Optional[str] = None
+    open_circuits: Tuple[Tuple[str, str], ...] = ()
 
     @property
     def forwarded(self) -> bool:
@@ -197,6 +203,13 @@ class FederationExplainReport:
                 "  ! unreachable zones: "
                 + ", ".join(repr(z) for z in self.unreachable_zones)
             )
+        if self.open_circuits:
+            lines.append(
+                "  ! open circuits: "
+                + ", ".join(f"{s!r}→{t!r}" for s, t in self.open_circuits)
+            )
+        if self.overload_note is not None:
+            lines.append(f"  {self.overload_note}")
         for hop in self.hops:
             label = (
                 f"zone {hop.zone!r} (entry pass)"

@@ -55,6 +55,13 @@ from repro.core.platform.explain import (
     annotate_inevitable,
     build_explain_report,
 )
+from repro.core.platform.overload import (
+    AdmissionQueue,
+    BrownoutController,
+    CircuitBreaker,
+    OverloadSpec,
+    degrade_script,
+)
 from repro.core.platform.policy import (
     PolicyDryRun,
     PolicyError,
@@ -81,7 +88,7 @@ from repro.core.scheduler.watcher import (
     LeaseConfig,
     Watcher,
 )
-from repro.core.tapp.ast import DEFAULT_TAG, TappScript
+from repro.core.tapp.ast import DEFAULT_TAG, OnOverload, TappScript
 from repro.core.tapp.compile import compile_script
 from repro.core.tapp.parser import parse_tapp
 from repro.core.tapp.validate import validate_script
@@ -195,7 +202,8 @@ class Placement:
 
     __slots__ = ("invocation", "decision", "admitted", "completed",
                  "_watcher", "_ledger", "_worker_ref", "_generation",
-                 "attempts", "retry_wait", "failed_workers")
+                 "attempts", "retry_wait", "failed_workers",
+                 "_core", "queued", "queue_outcome", "queue_wait")
 
     def __init__(
         self,
@@ -226,6 +234,15 @@ class Placement:
         self.attempts = 1
         self.retry_wait = 0.0
         self.failed_workers: Tuple[str, ...] = ()
+        # Overload layer (PR 9). ``_core`` backref lets complete() drain
+        # the admission queues and record duplicate completes; ``queued``
+        # marks a placement parked in an admission queue, and
+        # ``queue_outcome`` its fate ("drained" / "shed" /
+        # "deadline_exceeded"; None while still waiting).
+        self._core: Optional["PlatformCore"] = None
+        self.queued = False
+        self.queue_outcome: Optional[str] = None
+        self.queue_wait = 0.0
 
     @property
     def scheduled(self) -> bool:
@@ -264,15 +281,42 @@ class Placement:
             return False
         return self._watcher.cluster.workers.get(self.decision.worker) is worker
 
-    def complete(self, *, slow: bool = False) -> bool:
-        """Retire the admission ticket. Idempotent: returns ``True`` only
-        the one time a live ticket is actually released; ``False`` on a
-        double complete, an un-admitted placement, or a ticket that was
-        already reconciled as an eviction (worker deregistered or crashed
-        while the work ran) — none of which touch the ledger again."""
+    def _rebind(
+        self,
+        decision: ScheduleDecision,
+        admitted: bool,
+        ledger: _Ledger,
+        worker_ref: Optional[WorkerState],
+    ) -> None:
+        """Re-point this placement at a freshly-admitted decision (the
+        queue-drain / brownout-reroute path): the original invoke handed
+        out an un-admitted ticket, and capacity showed up later."""
+        self.decision = decision
+        self.admitted = admitted
+        self.completed = False
+        self._ledger = ledger
+        self._worker_ref = worker_ref
+        self._generation = 0 if worker_ref is None else worker_ref.generation
+
+    def complete(self, *, slow: bool = False,
+                 now: Optional[float] = None) -> bool:
+        """Retire the admission ticket. Idempotent-or-loud: returns
+        ``True`` only the one time a live ticket is actually released;
+        ``False`` on a double complete (recorded in the platform's
+        ``duplicate_completions`` counter), an un-admitted placement, or
+        a ticket that was already reconciled as an eviction (worker
+        deregistered or crashed while the work ran) — none of which
+        touch the ledger again. ``now`` is the caller's clock, used to
+        expire admission-queue deadlines when the freed slot triggers a
+        queue drain (PR 9)."""
         if self.completed or not self.admitted:
+            if self.completed and self.admitted and self._core is not None:
+                # A second complete() on the same ticket: harmless (the
+                # ledger is untouched) but a caller bug worth surfacing.
+                self._core._duplicate_completions += 1
             return False
         self.completed = True
+        retired = False
         if self._watcher.record_completion(
             self.decision.worker,
             self.decision.controller or "?",
@@ -282,10 +326,16 @@ class Placement:
             generation=self._generation,
         ):
             self._ledger.add_completed()
-            return True
+            retired = True
         # else: the worker was evicted mid-run (deregistration or crash);
         # the eviction already reconciled this ticket.
-        return False
+        core = self._core
+        if core is not None and core._overload_queues:
+            # A slot was freed (or at least a ticket retired): give the
+            # admission queues a chance to place their heads through the
+            # same O(1) index path the original invoke used.
+            core._drain_queues(now)
+        return retired
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         return (
@@ -322,6 +372,13 @@ class PlatformStats:
     # Failure-detector verdicts currently in force.
     suspect_workers: int = 0
     dead_workers: int = 0
+    # Overload layer (PR 9); all zero while the layer is off/idle.
+    queued: int = 0              # entries ever enqueued (cumulative)
+    shed: int = 0                # entries shed by priority / reject
+    deadline_exceeded: int = 0   # entries expired waiting
+    queue_depth: int = 0         # entries currently waiting
+    duplicate_completions: int = 0
+    brownout_reroutes: int = 0   # placements served via the degraded plan
 
 
 class PlatformCore:
@@ -347,6 +404,7 @@ class PlatformCore:
         max_policy_history: int = 8,
         retry: Optional[RetryPolicy] = None,
         lease: Optional[LeaseConfig] = None,
+        overload: Optional[OverloadSpec] = None,
     ) -> None:
         # ``watcher`` adopts an existing instance (the legacy-shim
         # migration path) instead of building one around ``cluster``.
@@ -379,6 +437,33 @@ class PlatformCore:
         # concurrent applies cannot leave `policy` pointing at a handle
         # that is not the published script.
         self._policy_lock = threading.Lock()
+        # Overload-resilience layer (PR 9), entirely dormant without an
+        # OverloadSpec: the queue map stays empty (complete()'s drain
+        # check is one falsy dict read), and the breaker / brownout
+        # hooks are None-checked on their (already off-hot-path) sites.
+        self._overload = overload
+        self._overload_queues: Dict[Optional[str], AdmissionQueue] = {}
+        self._breaker = (
+            CircuitBreaker(overload.breaker)
+            if overload is not None and overload.breaker is not None
+            else None
+        )
+        self._brownout = (
+            BrownoutController(overload.brownout)
+            if overload is not None and overload.brownout is not None
+            else None
+        )
+        self._drain_lock = threading.Lock()
+        self._duplicate_completions = 0
+        self._brownout_reroutes = 0
+        # The pre-compiled brownout plan: (degraded_script, plan), set by
+        # apply_policy when the active script opts in via on-overload.
+        self._degraded = None
+        # Observer hook for queue lifecycle events ("drained" / "shed" /
+        # "expired"); the sim uses it to resume parked requests.
+        self.on_queue_event: Optional[
+            Callable[[str, Placement, Optional[float]], None]
+        ] = None
         self._subscribers: List[Subscriber] = []
         self._watcher.subscribe(self._emit)
 
@@ -718,6 +803,17 @@ class PlatformCore:
         analysis = self._analyze_policy_plan(plan)
         if analysis is not None:
             dry_run = dataclasses.replace(dry_run, analysis=analysis)
+        degraded = degrade_script(script)
+        if degraded is not None:
+            # The brownout plan is a deploy artifact too: verify it with
+            # the same analyzer so its verdicts gate the apply.
+            degraded_analysis = self._analyze_policy_plan(
+                compile_script(degraded)
+            )
+            if degraded_analysis is not None:
+                dry_run = dataclasses.replace(
+                    dry_run, degraded_analysis=degraded_analysis
+                )
         return dry_run
 
     def verify_policy(
@@ -802,6 +898,23 @@ class PlatformCore:
                     dry_run = dataclasses.replace(dry_run, analysis=analysis)
                     gated["dry_run"] = dry_run
                     dry_run.raise_for(strict=strict)
+                # on-overload tags pre-compile a degraded brownout plan;
+                # verify it under the same lock/snapshot as the primary,
+                # so a brownout can never swap in a plan with
+                # proven-unplaceable tags (strict mode re-gates).
+                degraded = degrade_script(script)
+                if degraded is not None:
+                    degraded_plan = compile_script(degraded)
+                    gated["degraded"] = (degraded, degraded_plan)
+                    degraded_analysis = self._analyze_policy_plan(
+                        degraded_plan
+                    )
+                    if degraded_analysis is not None:
+                        dry_run = dataclasses.replace(
+                            dry_run, degraded_analysis=degraded_analysis
+                        )
+                        gated["dry_run"] = dry_run
+                        dry_run.raise_for(strict=strict)
 
         with self._policy_lock:
             published = self._watcher.publish_script(script, gate=_gate)
@@ -812,6 +925,12 @@ class PlatformCore:
                 # swap (one plan object, shared by all zone gateways).
                 for gateway in self._gateways():
                     gateway.prime(published, gated["plan"])
+            self._degraded = gated.get("degraded")
+            if self._degraded is not None and compiled_path:
+                # Prime the degraded plan too: the brownout re-route must
+                # not pay compilation mid-saturation.
+                for gateway in self._gateways():
+                    gateway.prime(*self._degraded)
             handle = PolicyHandle(
                 version=published.version,
                 script=published,
@@ -839,6 +958,7 @@ class PlatformCore:
             if not self._history:
                 # Active policy but empty history → back to "no script".
                 self._active = None
+                self._degraded = None
                 self._watcher.clear_script()
                 self._emit("rollback")
                 return None
@@ -853,6 +973,20 @@ class PlatformCore:
                 plan = compile_script(previous.script)
                 for gateway in self._gateways():
                     gateway.prime(published, plan)
+            degraded = degrade_script(previous.script)
+            try:
+                self._degraded = (
+                    None if degraded is None
+                    else (degraded, compile_script(degraded))
+                )
+            except Exception:
+                # Interpreter-only script: no lowered plan to pre-prime,
+                # but the degraded script itself still routes.
+                self._degraded = (degraded, None)
+            if (self._degraded is not None and self._compiled
+                    and self._degraded[1] is not None):
+                for gateway in self._gateways():
+                    gateway.prime(*self._degraded)
             self._active = dataclasses.replace(
                 previous, version=published.version, script=published
             )
@@ -866,6 +1000,7 @@ class PlatformCore:
             if self._active is not None:
                 self._history.append(self._active)
                 self._active = None
+            self._degraded = None
             self._watcher.clear_script()
 
     @staticmethod
@@ -937,8 +1072,216 @@ class PlatformCore:
         scheduler adapters).
         """
         worker_ref, ledger = self._admit(invocation, decision)
-        return Placement(invocation, decision, worker_ref is not None,
-                         self._watcher, ledger, worker_ref)
+        placement = Placement(invocation, decision, worker_ref is not None,
+                              self._watcher, ledger, worker_ref)
+        placement._core = self
+        return placement
+
+    # -- overload layer (PR 9) ----------------------------------------------------
+
+    @property
+    def overload_spec(self) -> Optional[OverloadSpec]:
+        return self._overload
+
+    @property
+    def brownout_active(self) -> bool:
+        return self._brownout is not None and self._brownout.active
+
+    def queue_snapshot(self) -> Dict[Optional[str], Dict[str, int]]:
+        """Per-zone admission-queue counters (empty when the layer is
+        off or no overflow has ever been enqueued)."""
+        return {
+            zone: queue.snapshot()
+            for zone, queue in sorted(
+                self._overload_queues.items(),
+                key=lambda kv: (kv[0] is not None, kv[0] or ""),
+            )
+        }
+
+    def _queue_for(self, zone: Optional[str]) -> AdmissionQueue:
+        """The admission queue of one entry zone (armed path only)."""
+        queue = self._overload_queues.get(zone)
+        if queue is None:
+            queue = self._overload_queues[zone] = AdmissionQueue(
+                self._overload.queue
+            )
+        return queue
+
+    def _compiled_policy_tag(self, tag: Optional[str]):
+        """The active policy's CompiledTag an invocation tag resolves to
+        (None without a policy, or when the script cannot be lowered)."""
+        handle = self._active
+        if handle is None or not handle.script.tags:
+            return None
+        try:
+            plan = self._analysis_plan(handle.script)
+        except Exception:
+            return None
+        resolved = tag if tag is not None and tag in plan.tags else DEFAULT_TAG
+        return plan.tags.get(resolved, plan.default)
+
+    def _queue_priority(self, tag: Optional[str]) -> int:
+        ctag = self._compiled_policy_tag(tag)
+        return 0 if ctag is None else ctag.priority
+
+    def _queue_on_overload(self, tag: Optional[str]) -> Optional[OnOverload]:
+        ctag = self._compiled_policy_tag(tag)
+        return None if ctag is None else ctag.on_overload
+
+    def _drain_route(
+        self,
+        zone: Optional[str],
+        invocation: Invocation,
+        script: Optional[TappScript] = None,
+    ) -> ScheduleDecision:
+        """Route a queued (or brownout-degraded) invocation from its
+        entry zone; subclasses bind this to their entrypoint shape."""
+        raise NotImplementedError
+
+    def _notify_queue(
+        self, event: str, placement: Placement, now: Optional[float]
+    ) -> None:
+        callback = self.on_queue_event
+        if callback is not None:
+            callback(event, placement, now)
+
+    def _enqueue_overflow(
+        self,
+        placement: Placement,
+        zone: Optional[str],
+        now: Optional[float],
+    ) -> Placement:
+        """Park an unplaceable invocation in its zone's admission queue
+        (the armed overflow path — never reached without a QueueSpec).
+        Under an active brownout the tag's ``on-overload:`` escape hatch
+        runs first: ``reject`` sheds immediately, ``relax-affinity`` /
+        ``any-zone`` try the pre-compiled degraded plan; only then does
+        the invocation queue (shedding the lowest-priority entrant when
+        full)."""
+        queue = self._queue_for(zone)
+        if self._brownout is not None:
+            self._brownout.observe(queue.depth)
+            if self._brownout.active:
+                handled = self._brownout_overflow(placement, zone, queue, now)
+                if handled is not None:
+                    return handled
+        priority = self._queue_priority(placement.invocation.tag)
+        status, entry = queue.offer(placement, priority, now)
+        if status == "queued":
+            placement.queued = True
+            return placement
+        # "shed": the entry is the losing side — the newcomer itself,
+        # or the lower-priority incumbent evicted to make room for it.
+        shed = entry.placement
+        shed.queue_outcome = "shed"
+        if shed is not placement:
+            placement.queued = True
+        self._notify_queue("shed", shed, now)
+        return placement
+
+    def _brownout_overflow(
+        self,
+        placement: Placement,
+        zone: Optional[str],
+        queue: AdmissionQueue,
+        now: Optional[float],
+    ) -> Optional[Placement]:
+        """Apply the tag's on-overload escape hatch under an active
+        brownout; returns the handled placement, or None to fall
+        through to the queue."""
+        mode = self._queue_on_overload(placement.invocation.tag)
+        if mode is None:
+            return None
+        if mode is OnOverload.REJECT:
+            placement.queue_outcome = "shed"
+            queue.shed += 1
+            self._notify_queue("shed", placement, now)
+            return placement
+        degraded = self._degraded
+        if degraded is None:
+            return None
+        decision = self._drain_route(
+            zone, placement.invocation, script=degraded[0]
+        )
+        if not decision.scheduled:
+            return None
+        worker_ref, ledger = self._admit(placement.invocation, decision)
+        placement._rebind(decision, worker_ref is not None, ledger,
+                          worker_ref)
+        self._brownout_reroutes += 1
+        return placement
+
+    def _drain_queues(self, now: Optional[float] = None) -> None:
+        """Try to place queued invocations through the normal route path
+        (called from ``Placement.complete()`` whenever a ticket retires).
+        Expired entries are counted as ``deadline_exceeded`` and never
+        placed; draining stops at the first head the cluster still
+        cannot take. Re-entrant calls (a drain admitting work while
+        another drain runs) are coalesced into the ongoing pass."""
+        if not self._drain_lock.acquire(blocking=False):
+            return
+        try:
+            for zone in sorted(
+                self._overload_queues,
+                key=lambda z: (z is not None, z or ""),
+            ):
+                queue = self._overload_queues[zone]
+                for entry in queue.expire(now):
+                    expired = entry.placement
+                    expired.queue_outcome = "deadline_exceeded"
+                    self._notify_queue("expired", expired, now)
+                while True:
+                    head = queue.head()
+                    if head is None:
+                        break
+                    invocation = head.placement.invocation
+                    decision = self._drain_route(zone, invocation)
+                    if not decision.scheduled:
+                        break
+                    queue.remove(head, drained=True)
+                    worker_ref, ledger = self._admit(invocation, decision)
+                    drained = head.placement
+                    drained._rebind(decision, worker_ref is not None,
+                                    ledger, worker_ref)
+                    drained.queue_outcome = "drained"
+                    if now is not None and head.enqueued_at is not None:
+                        drained.queue_wait = now - head.enqueued_at
+                    self._notify_queue("drained", drained, now)
+                if self._brownout is not None:
+                    self._brownout.observe(queue.depth)
+        finally:
+            self._drain_lock.release()
+
+    def _overload_note(self, zone: Optional[str]) -> Optional[str]:
+        """One-line queue/brownout state for explain reports (None when
+        the queue layer is off)."""
+        if self._overload is None or self._overload.queue is None:
+            return None
+        spec = self._overload.queue
+        queue = self._overload_queues.get(zone)
+        snap = queue.snapshot() if queue is not None else {}
+        note = (
+            f"overload queue[{zone if zone is not None else 'platform'}]: "
+            f"depth {snap.get('depth', 0)}/{spec.depth} "
+            f"({spec.discipline}), shed {snap.get('shed', 0)}, "
+            f"deadline_exceeded {snap.get('deadline_exceeded', 0)}, "
+            f"drained {snap.get('drained', 0)}"
+        )
+        if self._brownout is not None and self._brownout.active:
+            note += "; brownout active"
+        return note
+
+    def _queue_totals(self) -> Tuple[int, int, int, int]:
+        """(queued_total, shed, deadline_exceeded, current depth) summed
+        over every zone's admission queue."""
+        queued = shed = expired = depth = 0
+        for queue in list(self._overload_queues.values()):
+            snap = queue.snapshot()
+            queued += snap["queued_total"]
+            shed += snap["shed"]
+            expired += snap["deadline_exceeded"]
+            depth += snap["depth"]
+        return queued, shed, expired, depth
 
     def _platform_stats(
         self,
@@ -965,6 +1308,7 @@ class PlatformCore:
             admitted += a
             completed += c
             evicted += e
+        queued, shed, expired, depth = self._queue_totals()
         return PlatformStats(
             routed=routed,
             tapp_routed=tapp_routed,
@@ -985,6 +1329,12 @@ class PlatformCore:
             retries=self._retries,
             suspect_workers=suspects,
             dead_workers=dead,
+            queued=queued,
+            shed=shed,
+            deadline_exceeded=expired,
+            queue_depth=depth,
+            duplicate_completions=self._duplicate_completions,
+            brownout_reroutes=self._brownout_reroutes,
         )
 
     @staticmethod
@@ -1031,6 +1381,7 @@ class TappPlatform(PlatformCore):
         max_policy_history: int = 8,
         retry: Optional[RetryPolicy] = None,
         lease: Optional[LeaseConfig] = None,
+        overload: Optional[OverloadSpec] = None,
     ) -> None:
         if isinstance(spec, ClusterState):
             cluster = spec
@@ -1045,6 +1396,7 @@ class TappPlatform(PlatformCore):
             max_policy_history=max_policy_history,
             retry=retry,
             lease=lease,
+            overload=overload,
         )
         if isinstance(spec, ClusterSpec):
             self._adopt_controller_policies(spec.controllers)
@@ -1094,6 +1446,7 @@ class TappPlatform(PlatformCore):
         request_id: int = 0,
         trace: bool = False,
         retry: Optional[RetryPolicy] = None,
+        now: Optional[float] = None,
     ) -> Placement:
         """Route **and** admit one invocation; returns its :class:`Placement`.
 
@@ -1110,6 +1463,13 @@ class TappPlatform(PlatformCore):
         up to ``max_attempts`` times with deterministic backoff charged
         to ``Placement.retry_wait``. A tAPP ``followup: fail`` policy
         failure is terminal and never retried (paper §3.3).
+
+        With an :class:`OverloadSpec` queue configured, an invocation
+        that still finds no capacity after retries is *parked* in the
+        admission queue instead of failing (``Placement.queued``); a
+        later ``complete()`` drains it through the same route path.
+        ``now`` is the caller's clock, stamped on the queue entry so
+        deadlines can expire (None: entries never expire).
         """
         invocation = self._coerce_invocation(function, tag, model_id,
                                              request_id)
@@ -1117,8 +1477,17 @@ class TappPlatform(PlatformCore):
                                                                trace=trace))
         if placement.scheduled:
             return placement
-        return self._retry_unscheduled(invocation, placement, retry,
-                                       trace=trace)
+        placement = self._retry_unscheduled(invocation, placement, retry,
+                                            trace=trace)
+        # Queue armed → park instead of failing. Note a saturated tAPP
+        # evaluation reports failed_by_policy (followup-fail exhaustion
+        # IS the no-capacity outcome under a policy), so that flag does
+        # not gate the queue; deadlines bound genuinely unplaceable work.
+        if (not placement.scheduled
+                and self._overload is not None
+                and self._overload.queue is not None):
+            placement = self._enqueue_overflow(placement, None, now)
+        return placement
 
     def _retry_unscheduled(
         self,
@@ -1196,6 +1565,7 @@ class TappPlatform(PlatformCore):
         trace: bool = False,
         on_placement: Optional[Callable[[Placement], None]] = None,
         retry: Optional[RetryPolicy] = None,
+        now: Optional[float] = None,
     ) -> List[Placement]:
         """Route + admit a batch against one script/snapshot resolution.
 
@@ -1205,19 +1575,26 @@ class TappPlatform(PlatformCore):
         affinity constraints read the placements made earlier in the same
         batch, and including the unscheduled-retry loop when a
         :class:`RetryPolicy` is in force (its re-routes interleave into
-        the batch exactly where sequential invokes would place them).
+        the batch exactly where sequential invokes would place them),
+        and including the admission-queue overflow path when an
+        :class:`OverloadSpec` queue is armed.
         """
         invs = [
             inv if isinstance(inv, Invocation) else Invocation(function=inv)
             for inv in invocations
         ]
         placements: List[Placement] = []
+        queue_armed = (
+            self._overload is not None and self._overload.queue is not None
+        )
 
         def _admit(invocation: Invocation, decision: ScheduleDecision) -> None:
             placement = self.place(invocation, decision)
             if not placement.scheduled:
                 placement = self._retry_unscheduled(invocation, placement,
                                                     retry, trace=trace)
+                if queue_armed and not placement.scheduled:
+                    placement = self._enqueue_overflow(placement, None, now)
             placements.append(placement)
             if on_placement is not None:
                 on_placement(placement)
@@ -1247,7 +1624,21 @@ class TappPlatform(PlatformCore):
         invocation = self._coerce_invocation(function, tag, model_id)
         decision = self._gateway.probe(invocation)
         report = build_explain_report(invocation, decision)
-        return self._annotate_explain(report, invocation.tag, None)
+        report = self._annotate_explain(report, invocation.tag, None)
+        note = self._overload_note(None)
+        if note is not None:
+            report = dataclasses.replace(
+                report, failure_notes=report.failure_notes + (note,)
+            )
+        return report
+
+    def _drain_route(
+        self,
+        zone: Optional[str],
+        invocation: Invocation,
+        script: Optional[TappScript] = None,
+    ) -> ScheduleDecision:
+        return self._gateway.route(invocation, script=script)
 
     def prewarm(self) -> int:
         """Eagerly build the scheduler's candidate indexes for the active

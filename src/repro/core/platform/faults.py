@@ -34,6 +34,11 @@ KINDS = (
     "flap_down", "flap_up",      # worker SUSPECT → restored (flappy lease)
     "controller_down", "controller_up",
     "sever", "heal",             # inter-zone partition (federations only)
+    # Traffic-side fault (PR 9): arrival-rate multiplier against one zone
+    # for a duration. The platform itself is untouched — the simulator
+    # consumes the window to amplify offered load, exercising the
+    # admission-queue / shedding / brownout overload path.
+    "overload_burst", "burst_end",
 )
 
 
@@ -84,26 +89,32 @@ class ChaosSpec:
     controller_downtime: float = 5.0
     partitions: int = 0
     partition_duration: float = 10.0
+    overload_bursts: int = 0
+    burst_duration: float = 5.0
+    burst_factor: float = 3.0
 
     def __post_init__(self) -> None:
         if self.horizon <= 0:
             raise ValueError("horizon must be > 0")
         for field in ("worker_crashes", "degraded_events", "flappy_workers",
-                      "controller_losses", "partitions"):
+                      "controller_losses", "partitions", "overload_bursts"):
             if getattr(self, field) < 0:
                 raise ValueError(f"{field} must be >= 0")
         for field in ("crash_downtime", "degraded_duration", "flap_period",
-                      "controller_downtime", "partition_duration"):
+                      "controller_downtime", "partition_duration",
+                      "burst_duration"):
             if getattr(self, field) <= 0:
                 raise ValueError(f"{field} must be > 0")
         if self.degraded_factor < 1.0:
             raise ValueError("degraded_factor must be >= 1.0")
+        if self.burst_factor < 1.0:
+            raise ValueError("burst_factor must be >= 1.0")
 
     @property
     def total_faults(self) -> int:
         return (self.worker_crashes + self.degraded_events
                 + self.flappy_workers + self.controller_losses
-                + self.partitions)
+                + self.partitions + self.overload_bursts)
 
 
 class FaultInjector:
@@ -117,7 +128,9 @@ class FaultInjector:
     platform's failure-detection API (``fail_worker`` / ``restore`` /
     ``suspect_worker`` / ``heartbeat`` / ``update_controller`` /
     ``sever`` / ``heal``), tolerating targets that disappeared since
-    scheduling (a deregistered worker) by skipping the event.
+    scheduling (a deregistered worker) by skipping the event — every
+    skip is recorded in :attr:`skipped` with its reason, so a chaos run
+    whose schedule silently stopped biting is visible after the fact.
     """
 
     def __init__(
@@ -132,6 +145,8 @@ class FaultInjector:
         self._controllers = tuple(controllers)
         self._zones = tuple(zones)
         self._schedule: Optional[Tuple[FaultEvent, ...]] = None
+        #: Events that did not take effect at apply time, with reasons.
+        self.skipped: List[Tuple[FaultEvent, str]] = []
 
     # -- schedule construction ---------------------------------------------------
 
@@ -185,6 +200,10 @@ class FaultInjector:
             ]
             _paired(spec.partitions, pairs, "sever", "heal",
                     spec.partition_duration)
+        # Drawn last so a default (zero-burst) spec consumes exactly the
+        # PR-6 stream — schedules stay bit-identical per seed.
+        _paired(spec.overload_bursts, self._zones, "overload_burst",
+                "burst_end", spec.burst_duration, value=spec.burst_factor)
         return events
 
     # -- application --------------------------------------------------------------
@@ -192,7 +211,9 @@ class FaultInjector:
     def apply(self, event: FaultEvent, platform, *, now: float = 0.0) -> bool:
         """Apply one event to ``platform``; returns whether it took effect
         (False: the target no longer exists, or the façade lacks the
-        capability — e.g. ``sever`` on a single-zone platform)."""
+        capability — e.g. ``sever`` on a single-zone platform). A False
+        return is never silent: the (event, reason) pair lands in
+        :attr:`skipped`."""
         kind, target = event.kind, event.target
         try:
             if kind == "crash":
@@ -212,24 +233,39 @@ class FaultInjector:
                 platform.restore(target)
                 platform.heartbeat_lease(target, now)
             elif kind == "controller_down":
-                return self._set_controller(platform, target, False)
+                return self._set_controller(platform, event, False)
             elif kind == "controller_up":
-                return self._set_controller(platform, target, True)
+                return self._set_controller(platform, event, True)
             elif kind in ("sever", "heal"):
                 if not hasattr(platform, kind):
-                    return False
+                    return self._skip(
+                        event, "platform has no inter-zone links"
+                    )
                 getattr(platform, kind)(*target)
+            elif kind in ("overload_burst", "burst_end"):
+                # Traffic-side fault: nothing to do to the platform — the
+                # simulator consumes the window to amplify arrivals. Still
+                # validate the target so a burst against a zone the
+                # deployment no longer has is reported, not ignored.
+                zones = getattr(platform, "zones", None)
+                if zones is not None and target not in zones:
+                    return self._skip(event, f"unknown zone {target!r}")
             else:  # pragma: no cover - KINDS-validated at construction
                 raise ValueError(f"unknown fault kind {kind!r}")
         except KeyError:
-            return False  # target deregistered since scheduling
+            return self._skip(event, "target deregistered since scheduling")
         return True
 
-    @staticmethod
-    def _set_controller(platform, name: str, healthy: bool) -> bool:
+    def _skip(self, event: FaultEvent, reason: str) -> bool:
+        self.skipped.append((event, reason))
+        return False
+
+    def _set_controller(self, platform, event: FaultEvent,
+                        healthy: bool) -> bool:
+        name = event.target
         controller = platform.watcher.cluster.controllers.get(name)
         if controller is None:
-            return False
+            return self._skip(event, f"unknown controller {name!r}")
         platform.watcher.update_controller(name, healthy=healthy,
                                            reachable=healthy)
         return True

@@ -32,6 +32,7 @@ platform on the same spec, policy, and seed (property-tested in
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import (
     Callable,
     Dict,
@@ -57,7 +58,9 @@ from repro.core.platform.facade import (
     PlatformStats,
     PolicyInput,
 )
+from repro.core.platform.overload import OverloadSpec
 from repro.core.platform.specs import FederationSpec, RetryPolicy
+from repro.core.tapp.ast import TappScript
 from repro.core.scheduler.engine import (
     Invocation,
     Outcome,
@@ -106,6 +109,18 @@ class FederatedPlacement(Placement):
         self.entry_zone = entry_zone
         self.hops = hops
 
+    def _rebind(self, decision, admitted, ledger, worker_ref) -> None:
+        """Re-point at a drain/brownout re-route decision; the drain
+        pass's hop record replaces the original attempt's (whose hops
+        were already charged to the federation counters)."""
+        super()._rebind(decision, admitted, ledger, worker_ref)
+        core = self._core
+        if core is not None:
+            hops = getattr(core._drain_hops, "value", None)
+            if hops is not None:
+                self.hops = hops
+                core._drain_hops.value = None
+
     @property
     def forwarded(self) -> bool:
         """Did the placement land outside the entry zone?"""
@@ -144,6 +159,13 @@ class ZoneStats:
     admitted: int = 0
     completed: int = 0
     evicted: int = 0
+    # This zone's admission-queue shard (PR 9): overflow entries parked
+    # by requests *entering* here, keyed by entry zone. All zero with no
+    # OverloadSpec queue armed.
+    queued: int = 0
+    shed: int = 0
+    deadline_exceeded: int = 0
+    queue_depth: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -163,6 +185,9 @@ class FederationStats:
     unplaced: int          # routing passes that exhausted every allowed
                            # zone (a retried request counts once per pass)
     cross_zone_rtt: float  # total RTT charged to hops (seconds)
+    # (source, target) zone links whose circuit breaker is currently open
+    # (PR 9) — forwards across them are suppressed to the probe rate.
+    open_circuits: Tuple[Tuple[str, str], ...] = ()
 
     def zone(self, name: str) -> ZoneStats:
         for z in self.zones:
@@ -186,6 +211,7 @@ class TappFederation(PlatformCore):
         max_policy_history: int = 8,
         retry: Optional[RetryPolicy] = None,
         lease: Optional[LeaseConfig] = None,
+        overload: Optional[OverloadSpec] = None,
     ) -> None:
         if not isinstance(spec, FederationSpec):
             raise TypeError(
@@ -202,6 +228,7 @@ class TappFederation(PlatformCore):
             max_policy_history=max_policy_history,
             retry=retry,
             lease=lease,
+            overload=overload,
         )
         self._adopt_controller_policies(spec.merged().controllers)
         self._spec = spec
@@ -234,6 +261,11 @@ class TappFederation(PlatformCore):
         # aware forwarding walk (PR 6).
         self._partitions: Set[FrozenSet[str]] = set()
         self._dead_zone_cache: Tuple[int, FrozenSet[str]] = (-1, frozenset())
+        # Hand-off slot for the drain path (PR 9): _drain_route stashes
+        # the drain pass's hops here and FederatedPlacement._rebind picks
+        # them up; thread-local because invoke-path brownout re-routes
+        # run outside the drain lock.
+        self._drain_hops = threading.local()
         if policy is not None:
             self.apply_policy(policy, strict=strict_policies)
 
@@ -398,17 +430,25 @@ class TappFederation(PlatformCore):
         return self._route_from(entry, invocation, trace)
 
     def _route_from(
-        self, entry: str, invocation: Invocation, trace: bool
+        self,
+        entry: str,
+        invocation: Invocation,
+        trace: bool,
+        script: Optional[TappScript] = None,
     ) -> Tuple[ScheduleDecision, Tuple[ForwardHop, ...]]:
         gateway = self._zone_gateways[entry]
         cluster = self._watcher.cluster
         unreachable = self._unreachable_from(entry)
-        decision = gateway.route(invocation, trace=trace, entry_zone=entry)
+        breaker = self._breaker
+        decision = gateway.route(invocation, trace=trace, entry_zone=entry,
+                                 script=script)
         if decision.scheduled:
             worker_zone = cluster.workers[decision.worker].zone
             if worker_zone == entry:
                 return decision, ()
-            if worker_zone not in unreachable:
+            if (worker_zone not in unreachable
+                    and (breaker is None
+                         or breaker.allow(entry, worker_zone))):
                 # A designated-controller block placed the work in its home
                 # zone directly: that is a cross-zone hop too, and it pays.
                 hop = ForwardHop(
@@ -416,20 +456,24 @@ class TappFederation(PlatformCore):
                     True,
                 )
                 self._account_hops(entry, worker_zone, (hop,))
+                if breaker is not None:
+                    breaker.record_success(entry, worker_zone, rtt=hop.rtt)
                 return decision, (hop,)
-            # The designated placement sits behind a severed link: the
-            # entry zone cannot deliver it. Convert to a failure and walk
-            # the (partition-filtered) forward targets instead — which,
-            # for tolerance none/same, pin the function to its (now
-            # unreachable) home zone, so the walk is empty and the
-            # request fails rather than escaping its designated zone.
+            # The designated placement sits behind a severed link (or an
+            # open circuit): the entry zone cannot deliver it. Convert to
+            # a failure and walk the (partition-filtered) forward targets
+            # instead — which, for tolerance none/same, pin the function
+            # to its (now unreachable) home zone, so the walk is empty and
+            # the request fails rather than escaping its designated zone.
             # The entry gateway's routed/scheduled counters already moved;
             # the severed outcome is accounted at this (platform) layer.
+            if breaker is not None and worker_zone in unreachable:
+                breaker.record_failure(entry, worker_zone)
             decision = self._severed_decision(decision, worker_zone, entry)
 
         hops: List[ForwardHop] = []
         for target in forward_targets(
-            self._watcher.script,
+            script if script is not None else self._watcher.script,
             invocation.tag,
             cluster,
             entry,
@@ -439,8 +483,13 @@ class TappFederation(PlatformCore):
             target_gateway = self._zone_gateways.get(target)
             if target_gateway is None:
                 continue  # a home zone outside the federation's entrypoints
+            if breaker is not None and not breaker.allow(entry, target):
+                # Open circuit: the link consumed no forward attempt — the
+                # breaker lets one probe through every probe_interval-th
+                # suppressed attempt, and only that probe pays a hop.
+                continue
             forwarded = target_gateway.route(
-                invocation, trace=trace, entry_zone=target
+                invocation, trace=trace, entry_zone=target, script=script
             )
             if forwarded.scheduled:
                 # The target zone's scheduler may itself place the work in
@@ -465,12 +514,17 @@ class TappFederation(PlatformCore):
                         )
                     hops.extend(taken)
                     self._account_hops(entry, worker_zone, taken)
+                    if breaker is not None:
+                        breaker.record_success(entry, target,
+                                               rtt=taken[0].rtt)
                     return forwarded, tuple(hops)
             hop = ForwardHop(
                 entry, target, self._spec.rtt(entry, target), False
             )
             hops.append(hop)
             self._account_hops(entry, None, (hop,))
+            if breaker is not None:
+                breaker.record_failure(entry, target)
         self._unplaced += 1
         # Every allowed zone declined: report the entry zone's decision
         # (its failure narrative is the one the caller entered through).
@@ -498,6 +552,23 @@ class TappFederation(PlatformCore):
                 self._forwarded_in.get(placed_zone, 0) + 1
             )
 
+    def _drain_route(
+        self,
+        zone: Optional[str],
+        invocation: Invocation,
+        script: Optional[TappScript] = None,
+    ) -> ScheduleDecision:
+        """Route a queued (or brownout-degraded) invocation from the
+        entry zone it was parked at, through the full forwarding walk.
+        The drain pass's hops are stashed for the immediately following
+        :meth:`FederatedPlacement._rebind` (thread-local: the core calls
+        the pair back-to-back on this thread)."""
+        entry = self._resolve_entry(zone)
+        decision, hops = self._route_from(entry, invocation, False,
+                                          script=script)
+        self._drain_hops.value = hops if decision.scheduled else None
+        return decision
+
     # -- unified invocation flow -------------------------------------------------
 
     def invoke(
@@ -510,6 +581,7 @@ class TappFederation(PlatformCore):
         request_id: int = 0,
         trace: bool = False,
         retry: Optional[RetryPolicy] = None,
+        now: Optional[float] = None,
     ) -> FederatedPlacement:
         """Route (zone-local first, forward per tolerance) **and** admit.
 
@@ -519,6 +591,12 @@ class TappFederation(PlatformCore):
         ``max_attempts`` times, deterministic backoff charged to
         ``retry_wait``; every attempt's hops are in ``hops`` (the entry
         gateway paid their RTT). ``followup: fail`` stays terminal.
+
+        With an :class:`OverloadSpec` queue armed, an invocation no zone
+        could take after retries is parked in the *entry zone's*
+        admission queue instead (``Placement.queued``); completions
+        drain it through the same entry-zone forwarding walk. ``now``
+        is the caller's clock for queue deadlines.
         """
         invocation = self._coerce_invocation(function, tag, model_id,
                                              request_id)
@@ -545,8 +623,16 @@ class TappFederation(PlatformCore):
             invocation, decision, worker_ref is not None, self._watcher,
             ledger, entry, hops, worker_ref,
         )
+        placement._core = self
         placement.attempts = attempts
         placement.retry_wait = waited
+        # Queue armed → park in the entry zone's queue instead of failing
+        # (failed_by_policy does not gate it: a saturated tAPP evaluation
+        # reports followup-fail exhaustion — see TappPlatform.invoke).
+        if (not placement.scheduled
+                and self._overload is not None
+                and self._overload.queue is not None):
+            placement = self._enqueue_overflow(placement, entry, now)
         return placement
 
     def retry(
@@ -586,6 +672,7 @@ class TappFederation(PlatformCore):
             invocation, decision, worker_ref is not None, self._watcher,
             ledger, entry, hops, worker_ref,
         )
+        replacement._core = self
         replacement.attempts = placement.attempts + 1
         replacement.retry_wait = (
             placement.retry_wait + policy.backoff(placement.attempts)
@@ -601,6 +688,7 @@ class TappFederation(PlatformCore):
         entry_zones: Optional[Sequence[Optional[str]]] = None,
         trace: bool = False,
         on_placement: Optional[Callable[[FederatedPlacement], None]] = None,
+        now: Optional[float] = None,
     ) -> List[FederatedPlacement]:
         """Invoke a batch, each item entering at its own zone.
 
@@ -623,7 +711,8 @@ class TappFederation(PlatformCore):
         for index, invocation in enumerate(invs):
             zone = entry_zones[index] if entry_zones is not None else None
             placement = self.invoke(
-                invocation, entry_zone=zone or entry_zone, trace=trace
+                invocation, entry_zone=zone or entry_zone, trace=trace,
+                now=now,
             )
             placements.append(placement)
             if on_placement is not None:
@@ -724,6 +813,11 @@ class TappFederation(PlatformCore):
             forward_rtt=forward_rtt,
             hops=tuple(hops),
             unreachable_zones=tuple(sorted(unreachable)),
+            overload_note=self._overload_note(entry),
+            open_circuits=(
+                self._breaker.open_circuits()
+                if self._breaker is not None else ()
+            ),
         )
 
     def prewarm(self) -> int:
@@ -741,6 +835,8 @@ class TappFederation(PlatformCore):
             gw_stats = self._zone_gateways[zone].stats
             workers = [w for w in cluster.workers.values() if w.zone == zone]
             admitted, completed, evicted = shards.get(zone, (0, 0, 0))
+            queue = self._overload_queues.get(zone)
+            qsnap = queue.snapshot() if queue is not None else {}
             zone_rows.append(
                 ZoneStats(
                     zone=zone,
@@ -757,6 +853,10 @@ class TappFederation(PlatformCore):
                     admitted=admitted,
                     completed=completed,
                     evicted=evicted,
+                    queued=qsnap.get("queued_total", 0),
+                    shed=qsnap.get("shed", 0),
+                    deadline_exceeded=qsnap.get("deadline_exceeded", 0),
+                    queue_depth=qsnap.get("depth", 0),
                 )
             )
             totals["routed"] += gw_stats.routed
@@ -778,4 +878,8 @@ class TappFederation(PlatformCore):
             forward_attempts=self._forward_attempts,
             unplaced=self._unplaced,
             cross_zone_rtt=self._cross_zone_rtt,
+            open_circuits=(
+                self._breaker.open_circuits()
+                if self._breaker is not None else ()
+            ),
         )

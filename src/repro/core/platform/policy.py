@@ -57,12 +57,24 @@ class PolicyDryRun:
     # when the script could not be lowered (the interpreter path accepts
     # scripts the compiler cannot — lowering failures never reject there).
     analysis: Optional[AnalysisReport] = None
+    # Analysis of the brownout-degraded plan (PR 9): scripts declaring
+    # ``on-overload: relax-affinity|any-zone`` pre-compile a degraded
+    # variant that live traffic may be re-routed through under sustained
+    # saturation, so it is verified at apply time exactly like the
+    # primary plan — a brownout can never swap in a proven-unplaceable
+    # policy. None when no tag opts in.
+    degraded_analysis: Optional[AnalysisReport] = None
 
     @property
     def findings(self) -> Tuple[Finding, ...]:
         found = tuple(self.report.findings)
         if self.analysis is not None:
             found += tuple(self.analysis.findings)
+        if self.degraded_analysis is not None:
+            found += tuple(
+                dataclasses.replace(f, where=f"on-overload:{f.where}")
+                for f in self.degraded_analysis.findings
+            )
         return found
 
     @property

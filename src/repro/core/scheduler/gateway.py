@@ -94,9 +94,14 @@ class Gateway:
         *,
         trace: bool = False,
         entry_zone: Optional[str] = None,
+        script: Optional[TappScript] = None,
     ) -> ScheduleDecision:
+        """Route one invocation. ``script`` overrides the published
+        script for this decision only (the brownout-degraded plan, PR 9);
+        when omitted the watcher-cached script is used."""
         self.stats.routed += 1
-        script = self._script()
+        if script is None:
+            script = self._script()
         cluster = self._watcher.cluster
         if script is None or not script.tags:
             decision = self._vanilla.schedule(

@@ -135,6 +135,11 @@ class RequestRecord:
     # cumulative deterministic backoff charged into its latency.
     retries: int = 0
     retry_wait: float = 0.0
+    # Overload handling (PR 9): time spent parked in the admission queue
+    # before a completion drained the request onto a worker. Requests
+    # shed or expired by the queue terminate with error "shed" /
+    # "deadline_exceeded" instead.
+    queue_wait: float = 0.0
 
     @property
     def latency(self) -> float:
@@ -199,6 +204,22 @@ class SimResult:
     def n_retried(self) -> int:
         """Requests that survived at least one retry re-route."""
         return sum(1 for r in self.records if r.retries)
+
+    @property
+    def n_shed(self) -> int:
+        """Requests the admission queue shed or expired (PR 9)."""
+        return sum(
+            1 for r in self.records
+            if r.error in ("shed", "deadline_exceeded")
+        )
+
+    @property
+    def n_queued(self) -> int:
+        """Requests that waited in the admission queue before placing."""
+        return sum(1 for r in self.records if r.queue_wait > 0.0)
+
+    def queue_waits(self) -> List[float]:
+        return [r.queue_wait for r in self.records if r.queue_wait > 0.0]
 
     def per_worker_counts(self) -> Dict[str, int]:
         counts: Dict[str, int] = {}
@@ -316,6 +337,14 @@ class Simulation:
         # to pre-chaos simulators.
         self.chaos = chaos
         self._injector: Optional[FaultInjector] = None
+        # Overload layer (PR 9): requests parked in the platform's
+        # admission queue, keyed by placement identity, until a queue
+        # event (drained / shed / expired) resolves them; and the
+        # precomputed overload_burst windows (start, end, zone, factor)
+        # the submit path uses to amplify arrivals — no RNG involved.
+        self._waiting: Dict[int, Tuple[Dict, RequestRecord]] = {}
+        self._burst_windows: List[Tuple[float, float, object, float]] = []
+        self._burst_rid = itertools.count(10_000_000)
 
     @property
     def watcher(self) -> Watcher:
@@ -358,6 +387,19 @@ class Simulation:
             )
             for event in self._injector.schedule():
                 self._push(event.at, "fault", event)
+                if event.kind == "overload_burst":
+                    self._burst_windows.append((
+                        event.at,
+                        event.until if event.until is not None
+                        else float("inf"),
+                        event.target,
+                        float(event.value or 1.0),
+                    ))
+        if hasattr(self.platform, "on_queue_event"):
+            # Admission-queue callbacks (a no-op unless the platform was
+            # built with an OverloadSpec queue): drained requests resume
+            # their timeline, shed/expired ones terminate with an error.
+            self.platform.on_queue_event = self._on_queue_event
         rid = itertools.count()
         for spec in workload:
             profile = self.profiles[spec.function]
@@ -429,7 +471,7 @@ class Simulation:
 
     def _on_submit(self, time: float, payload: Dict) -> None:
         invocation, record = self._begin_submit(time, payload)
-        placement = self._route_one(invocation, record.entry_zone)
+        placement = self._route_one(invocation, record.entry_zone, time)
         self._finish_submit(time, payload, record, placement)
 
     @property
@@ -437,17 +479,49 @@ class Simulation:
         return isinstance(self.platform, TappFederation)
 
     def _route_one(
-        self, invocation: Invocation, entry_zone: Optional[str] = None
+        self,
+        invocation: Invocation,
+        entry_zone: Optional[str] = None,
+        now: Optional[float] = None,
     ) -> Placement:
         if self.scheduler is None:
             if self._federated:
-                return self.platform.invoke(invocation, entry_zone=entry_zone)
-            return self.platform.invoke(invocation)
+                return self.platform.invoke(invocation, entry_zone=entry_zone,
+                                            now=now)
+            return self.platform.invoke(invocation, now=now)
         # Legacy adapter: external routing, platform-side admission.
         decision = self.scheduler(invocation, self.platform.cluster)
         return self.platform.place(invocation, decision)
 
+    def _burst_copies(self, time: float, payloads: List[Dict]) -> List[Dict]:
+        """Extra one-shot submit copies for payloads inside an active
+        overload_burst window: factor − 1 amplification against the
+        burst's target zone (a flat platform has one entry, so any
+        window amplifies it). Deterministic — rids come off a dedicated
+        counter and no RNG is drawn."""
+        extra: List[Dict] = []
+        for start, end, zone, factor in self._burst_windows:
+            if not (start <= time < end):
+                continue
+            copies = max(0, int(round(factor)) - 1)
+            if not copies:
+                continue
+            for payload in payloads:
+                if self._federated:
+                    entry = (payload["spec"].entry_zone
+                             or self.platform.spec.entry_zone)
+                    if entry != zone:
+                        continue
+                for _ in range(copies):
+                    burst = dict(payload)
+                    burst["remaining"] = 1  # one-shot: no user chain
+                    burst["rid"] = next(self._burst_rid)
+                    extra.append(burst)
+        return extra
+
     def _on_submit_batch(self, time: float, payloads: List[Dict]) -> None:
+        if self._burst_windows:
+            payloads = payloads + self._burst_copies(time, payloads)
         if len(payloads) == 1:
             self._on_submit(time, payloads[0])
             return
@@ -469,10 +543,11 @@ class Simulation:
                     invocations,
                     entry_zones=[p["spec"].entry_zone for p in payloads],
                     on_placement=_on_placement,
+                    now=time,
                 )
             else:
                 self.platform.invoke_batch(
-                    invocations, on_placement=_on_placement
+                    invocations, on_placement=_on_placement, now=time
                 )
             return
 
@@ -539,6 +614,19 @@ class Simulation:
             record.forwarded |= any(h.scheduled for h in hops)
 
         if not decision.scheduled or decision.worker is None:
+            outcome = getattr(placement, "queue_outcome", None)
+            if getattr(placement, "queued", False) and outcome is None:
+                # Parked in the admission queue (PR 9): the request's
+                # timeline pauses here; a completion-driven drain (or a
+                # shed/expiry) resumes it via _on_queue_event.
+                self._waiting[id(placement)] = (payload, record)
+                return
+            if outcome is not None:
+                # Shed at admission (queue full / brownout reject).
+                record.completed = now
+                record.error = outcome
+                self._finish_user_chain(now, payload, record)
+                return
             self._retry_or_fail(
                 now,
                 {"payload": payload, "record": record, "placement": placement},
@@ -647,10 +735,34 @@ class Simulation:
         self._warm[key] = time + duration
         self._push(time + duration, "finish", state)
 
+    def _on_queue_event(
+        self, event: str, placement: Placement, now: Optional[float]
+    ) -> None:
+        """Resolve a request parked in the platform's admission queue.
+
+        ``drained``: the placement was re-bound onto a worker by a
+        completion-driven drain — resume its timeline (queue wait is
+        wall time between park and drain, stamped by the platform).
+        ``shed`` / ``expired``: terminal failure; the user chain moves
+        on. Events for placements the sim is not tracking (e.g. direct
+        platform use from a test) are ignored."""
+        tracked = self._waiting.pop(id(placement), None)
+        if tracked is None:
+            return
+        payload, record = tracked
+        at = now if now is not None else record.submitted
+        if event == "drained":
+            record.queue_wait = placement.queue_wait
+            self._finish_submit(at, payload, record, placement)
+            return
+        record.completed = at
+        record.error = placement.queue_outcome or event
+        self._finish_user_chain(at, payload, record)
+
     def _on_finish(self, time: float, state: Dict) -> None:
         record: RequestRecord = state["record"]
         placement: Placement = state["placement"]
-        retired = placement.complete()
+        retired = placement.complete(now=time)
         link = state.pop("link", None)
         if link is not None:
             self._link_load[link] = max(0, self._link_load.get(link, 1) - 1)

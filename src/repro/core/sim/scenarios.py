@@ -19,6 +19,7 @@ from repro.core.platform import (
     ClusterSpec,
     ControllerSpec,
     FederationSpec,
+    OverloadSpec,
     RetryPolicy,
     TappFederation,
     TappPlatform,
@@ -546,6 +547,32 @@ def run_colocation_case(
     return sim, result
 
 
+#: Overload-aware variant of the data-locality policy (PR 9): db_query
+#: traffic is higher-priority than best-effort default traffic (the queue
+#: sheds default first when full) and may relax its affinity for the
+#: east-side workers under a sustained brownout.
+OVERLOAD_SCRIPT = """
+- default:
+  - workers:
+    - set:
+    strategy: platform
+    invalidate: overload
+- db_query:
+  - workers:
+    - set: east
+    strategy: random
+    invalidate: capacity_used 90%
+    priority: 2
+  - workers:
+    - set: france
+    strategy: random
+    invalidate: overload
+    priority: 2
+  followup: default
+  on-overload: relax-affinity
+"""
+
+
 def chaos_benchmark_chaos(
     *, seed: int = 0, crashes: int = 2, partitions: int = 0
 ) -> ChaosSpec:
@@ -568,6 +595,8 @@ def run_chaos_case(
     chaos: Optional[ChaosSpec] = None,
     retry: Optional[RetryPolicy] = RetryPolicy(max_attempts=3),
     federated: bool = False,
+    overload: Optional[OverloadSpec] = None,
+    script: Optional[str] = None,
 ) -> Tuple[Simulation, "SimResult"]:
     """Run one §5.2 test under seeded fault injection (PR 6).
 
@@ -579,6 +608,9 @@ def run_chaos_case(
     ``chaos=None`` runs the schedule-free control — bit-identical to a
     pre-chaos simulation. ``federated=True`` drives the two-rack
     federation instead (partitions then sever real forwarding links).
+    ``overload`` arms the PR 9 admission-queue / breaker / brownout
+    layer (off by default — placements stay bit-identical without it);
+    ``script`` overrides the default policy (e.g. ``OVERLOAD_SCRIPT``).
     """
     profiles = adhoc_profiles(False)
     config = SimConfig(seed=seed, gateway_zone=ZONE_EAST)
@@ -587,8 +619,9 @@ def run_chaos_case(
             colocation_federation_spec(),
             distribution=DistributionPolicy.SHARED,
             seed=seed,
-            policy=COLOCATION_BLANK_SCRIPT,
+            policy=script if script is not None else COLOCATION_BLANK_SCRIPT,
             retry=retry,
+            overload=overload,
         )
         network = colocation_network()
         config = SimConfig(seed=seed, gateway_zone=ZONE_RACK_A)
@@ -597,8 +630,9 @@ def run_chaos_case(
             benchmark_cluster(deployment_seed=seed),
             distribution=DistributionPolicy.SHARED,
             seed=seed,
-            policy=DATA_LOCALITY_SCRIPT,
+            policy=script if script is not None else DATA_LOCALITY_SCRIPT,
             retry=retry,
+            overload=overload,
         )
         network = benchmark_network()
     sim = Simulation(

@@ -84,6 +84,33 @@ class FollowupKind(enum.Enum):
             ) from None
 
 
+class OnOverload(enum.Enum):
+    """Tag-level brownout escape hatch (``on-overload:``, PR 9).
+
+    Under sustained saturation (the platform's brownout signal), the tag
+    either re-routes through a pre-compiled degraded plan —
+    ``relax-affinity`` drops affinity/anti-affinity clauses,
+    ``any-zone`` additionally widens designated controllers'
+    ``topology_tolerance`` to ``all`` — or is shed immediately
+    (``reject``) instead of queueing. Without the clause the tag is
+    untouched by brownouts.
+    """
+
+    RELAX_AFFINITY = "relax-affinity"
+    ANY_ZONE = "any-zone"
+    REJECT = "reject"
+
+    @classmethod
+    def parse(cls, text: str) -> "OnOverload":
+        try:
+            return cls(text.strip())
+        except ValueError:
+            raise ValueError(
+                f"unknown on-overload {text!r}; expected one of "
+                f"{[o.value for o in cls]}"
+            ) from None
+
+
 # ---------------------------------------------------------------------------
 # Invalidate conditions
 # ---------------------------------------------------------------------------
@@ -259,6 +286,10 @@ class Block:
     invalidate: Optional[Invalidate] = None
     affinity: Optional[Affinity] = None
     anti_affinity: Optional[AntiAffinity] = None
+    # Load-shedding priority (PR 9): when an admission queue is full the
+    # lowest-priority entrant is shed. A tag's priority is the max over
+    # its blocks; unset means 0 (shed first).
+    priority: Optional[int] = None
 
     def __post_init__(self) -> None:
         if not self.workers:
@@ -267,6 +298,13 @@ class Block:
         if kinds == {WorkerRef, WorkerSet}:
             # The grammar separates wrk-lists from set-lists; mixing is invalid.
             raise ValueError("a workers list cannot mix 'wrk' and 'set' items")
+        if self.priority is not None and (
+            not isinstance(self.priority, int) or self.priority < 0
+        ):
+            raise ValueError(
+                f"priority must be a non-negative integer; got "
+                f"{self.priority!r}"
+            )
 
     @property
     def uses_sets(self) -> bool:
@@ -281,6 +319,9 @@ class TagPolicy:
     blocks: Tuple[Block, ...]
     strategy: Optional[Strategy] = None  # block-selection strategy
     followup: Optional[FollowupKind] = None
+    # Brownout escape hatch (PR 9): what the platform may do with this
+    # tag's requests under sustained saturation. None means never degrade.
+    on_overload: Optional[OnOverload] = None
 
     def __post_init__(self) -> None:
         if not self.blocks:

@@ -43,6 +43,7 @@ from repro.core.tapp.ast import (
     ControllerClause,
     FollowupKind,
     Invalidate,
+    OnOverload,
     Strategy,
     TagPolicy,
     TappScript,
@@ -129,6 +130,7 @@ class CompiledBlock:
     uses_sets: bool
     wrks: Tuple[CompiledWrk, ...] = ()
     sets: Tuple[CompiledSet, ...] = ()
+    priority: int = 0  # load-shedding priority (PR 9); unset lowers to 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -146,6 +148,10 @@ class CompiledTag:
     # labels, in block source order, whose zone pins a followup-to-default
     # evaluation. The first label present in the live cluster wins.
     sticky_same_labels: Tuple[str, ...]
+    # Overload layer (PR 9): tag-wide shedding priority (max over block
+    # priorities) and the brownout escape hatch, if declared.
+    priority: int = 0
+    on_overload: Optional[OnOverload] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -179,6 +185,7 @@ def _compile_block(index: int, block: Block) -> CompiledBlock:
             strategy=strategy,
             uses_sets=True,
             sets=sets,
+            priority=block.priority or 0,
         )
     wrks = tuple(
         CompiledWrk(
@@ -197,6 +204,7 @@ def _compile_block(index: int, block: Block) -> CompiledBlock:
         strategy=strategy,
         uses_sets=False,
         wrks=wrks,
+        priority=block.priority or 0,
     )
 
 
@@ -217,6 +225,8 @@ def _compile_tag(policy: TagPolicy) -> CompiledTag:
         blocks=blocks,
         enumerated=tuple(enumerate(blocks)),
         sticky_same_labels=sticky,
+        priority=max((b.priority for b in blocks), default=0),
+        on_overload=policy.on_overload,
     )
 
 

@@ -37,6 +37,7 @@ from repro.core.tapp.ast import (
     ControllerClause,
     FollowupKind,
     Invalidate,
+    OnOverload,
     Strategy,
     TagPolicy,
     TappScript,
@@ -57,10 +58,11 @@ class TappParseError(ValueError):
         super().__init__(f"{path}: {message}" if path else message)
 
 
-_TAG_LEVEL_KEYS = {"strategy", "followup"}
+_TAG_LEVEL_KEYS = {"strategy", "followup", "on-overload"}
 _CONSTRAINT_KEYS = {"invalidate", "affinity", "anti-affinity"}
 _BLOCK_KEYS = (
-    {"controller", "topology_tolerance", "workers", "strategy"} | _CONSTRAINT_KEYS
+    {"controller", "topology_tolerance", "workers", "strategy", "priority"}
+    | _CONSTRAINT_KEYS
 )
 
 
@@ -124,12 +126,15 @@ def _parse_tag(
     path = f"{path}.{tag}"
     strategy: Optional[Strategy] = None
     followup: Optional[FollowupKind] = None
+    on_overload: Optional[OnOverload] = None
     block_items: List[Any] = []
     if options:
         if "strategy" in options:
             strategy = _parse_strategy(options["strategy"], path)
         if "followup" in options:
             followup = _parse_followup(options["followup"], path)
+        if "on-overload" in options:
+            on_overload = _parse_on_overload(options["on-overload"], path)
 
     if isinstance(body, Mapping):
         # mapping form: {blocks: [...], strategy: ..., followup: ...}
@@ -141,6 +146,8 @@ def _parse_tag(
             strategy = _parse_strategy(body["strategy"], path)
         if "followup" in body:
             followup = _parse_followup(body["followup"], path)
+        if "on-overload" in body:
+            on_overload = _parse_on_overload(body["on-overload"], path)
     elif isinstance(body, list):
         for j, item in enumerate(body):
             ipath = f"{path}[{j}]"
@@ -160,6 +167,12 @@ def _parse_tag(
                     if followup is not None:
                         raise TappParseError("duplicate tag-level followup", ipath)
                     followup = _parse_followup(item["followup"], ipath)
+                if "on-overload" in item:
+                    if on_overload is not None:
+                        raise TappParseError(
+                            "duplicate tag-level on-overload", ipath
+                        )
+                    on_overload = _parse_on_overload(item["on-overload"], ipath)
             else:
                 block_items.append(item)
     else:
@@ -174,7 +187,13 @@ def _parse_tag(
         _parse_block(item, f"{path}[{j}]") for j, item in enumerate(block_items)
     )
     try:
-        return TagPolicy(tag=tag, blocks=blocks, strategy=strategy, followup=followup)
+        return TagPolicy(
+            tag=tag,
+            blocks=blocks,
+            strategy=strategy,
+            followup=followup,
+            on_overload=on_overload,
+        )
     except ValueError as e:
         raise TappParseError(str(e), path) from e
 
@@ -206,6 +225,14 @@ def _parse_block(item: Mapping[str, Any], path: str) -> Block:
     invalidate = (
         _parse_invalidate(item["invalidate"], path) if "invalidate" in item else None
     )
+    priority: Optional[int] = None
+    if "priority" in item:
+        raw = item["priority"]
+        if isinstance(raw, bool) or not isinstance(raw, int) or raw < 0:
+            raise TappParseError(
+                f"priority must be a non-negative integer; got {raw!r}", path
+            )
+        priority = raw
     affinity, anti_affinity = _parse_affinities(item, path)
     workers = _parse_workers(item["workers"], f"{path}.workers")
     try:
@@ -216,6 +243,7 @@ def _parse_block(item: Mapping[str, Any], path: str) -> Block:
             invalidate=invalidate,
             affinity=affinity,
             anti_affinity=anti_affinity,
+            priority=priority,
         )
     except ValueError as e:
         raise TappParseError(str(e), path) from e
@@ -306,6 +334,13 @@ def _parse_strategy(value: Any, path: str) -> Strategy:
 def _parse_followup(value: Any, path: str) -> FollowupKind:
     try:
         return FollowupKind.parse(str(value))
+    except ValueError as e:
+        raise TappParseError(str(e), path) from e
+
+
+def _parse_on_overload(value: Any, path: str) -> OnOverload:
+    try:
+        return OnOverload.parse(str(value))
     except ValueError as e:
         raise TappParseError(str(e), path) from e
 

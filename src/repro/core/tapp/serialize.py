@@ -45,6 +45,8 @@ def _tag_to_obj(tag: TagPolicy) -> Dict[str, Any]:
         body.append({"strategy": tag.strategy.value})
     if tag.followup is not None:
         body.append({"followup": tag.followup.value})
+    if tag.on_overload is not None:
+        body.append({"on-overload": tag.on_overload.value})
     return {tag.tag: body}
 
 
@@ -69,6 +71,8 @@ def _block_to_obj(block: Block) -> Dict[str, Any]:
     obj["workers"] = workers
     if block.strategy is not None:
         obj["strategy"] = block.strategy.value
+    if block.priority is not None:
+        obj["priority"] = block.priority
     _constraints_to_obj(block, obj)
     return obj
 

@@ -456,6 +456,54 @@ class TestFacadeBatchContracts:
         ]
         assert f_loop.ledger_snapshot() == f_bat.ledger_snapshot()
 
+    def test_armed_idle_overload_layer_keeps_batch_bit_identity(self):
+        """PR 9: an OverloadSpec whose queue never fires must leave the
+        batched invoke path bit-identical to an unarmed platform —
+        decisions, ledger shards, and RNG-dependent stats alike."""
+        from repro.core.platform import (
+            BrownoutSpec,
+            OverloadSpec,
+            QueueSpec,
+        )
+
+        plain = _facade_platform()
+        armed = TappPlatform(
+            FACADE_SPEC,
+            distribution=DistributionPolicy.SHARED,
+            seed=0,
+            policy=FACADE_SCRIPT,
+            overload=OverloadSpec(
+                queue=QueueSpec(depth=8, deadline=5.0),
+                brownout=BrownoutSpec(),
+            ),
+        )
+        # 8 invocations == total capacity: everything schedules, the
+        # armed queue is never touched.
+        invocations = [
+            Invocation(FUNCTIONS[i % 3], tag="edge_only" if i % 4 == 0
+                       else None)
+            for i in range(8)
+        ]
+        plain_placements = plain.invoke_batch(invocations, now=0.0)
+        armed_placements = armed.invoke_batch(invocations, now=0.0)
+        assert [_key(p.decision) for p in plain_placements] == [
+            _key(p.decision) for p in armed_placements
+        ]
+        assert all(not p.queued for p in armed_placements)
+        for a, b in zip(plain_placements[::2], armed_placements[::2]):
+            a.complete(now=1.0)
+            b.complete(now=1.0)
+        assert plain.ledger_snapshot() == armed.ledger_snapshot()
+        armed_stats = armed.stats()
+        assert armed_stats.queued == armed_stats.queue_depth == 0
+        assert armed_stats.shed == armed_stats.brownout_reroutes == 0
+        plain_stats = plain.stats()
+        assert (plain_stats.routed, plain_stats.admitted,
+                plain_stats.completed, plain_stats.failed) == (
+            armed_stats.routed, armed_stats.admitted,
+            armed_stats.completed, armed_stats.failed,
+        )
+
     def test_federation_zone_stats_expose_ledger_shards(self):
         fed = TappFederation(_federation_spec(), seed=0, policy=FED_SCRIPT)
         placements = fed.invoke_batch(

@@ -24,19 +24,26 @@ from pathlib import Path
 import pytest
 
 from repro.core.platform import (
+    BreakerSpec,
     ChaosSpec,
     ClusterSpec,
     ControllerSpec,
     FaultEvent,
     FaultInjector,
     FederationSpec,
+    OverloadSpec,
+    QueueSpec,
     RetryPolicy,
     TappFederation,
     WorkerSpec,
 )
 from repro.core.scheduler.topology import DistributionPolicy
 from repro.core.sim.core import NetworkModel
-from repro.core.sim.scenarios import chaos_benchmark_chaos, run_chaos_case
+from repro.core.sim.scenarios import (
+    OVERLOAD_SCRIPT,
+    chaos_benchmark_chaos,
+    run_chaos_case,
+)
 
 FAILURE_DIR = Path(__file__).resolve().parent.parent / "chaos_failures"
 
@@ -209,11 +216,59 @@ class TestChaosSchedules:
         assert injector.apply(event, f, now=1.0) is False
         assert ledger_ok(f.stats().aggregate)
 
+    def test_skipped_events_are_reported_not_silently_ignored(self):
+        # Satellite (a): a False apply() return lands in injector.skipped
+        # with a reason, so a chaos run whose schedule stopped biting is
+        # visible after the fact.
+        f = chaos_federation()
+        injector = FaultInjector(ChaosSpec(seed=0), ["ghost"])
+        events = [
+            FaultEvent(at=1.0, kind="crash", target="ghost"),
+            FaultEvent(at=2.0, kind="controller_down", target="NoCtl"),
+            FaultEvent(at=3.0, kind="overload_burst", target="nowhere",
+                       value=2.0),
+        ]
+        for event in events:
+            assert injector.apply(event, f, now=event.at) is False
+        assert [e for e, _ in injector.skipped] == events
+        reasons = [reason for _, reason in injector.skipped]
+        assert "deregistered" in reasons[0]
+        assert "NoCtl" in reasons[1]
+        assert "nowhere" in reasons[2]
+        # Applied events don't pollute the skip log.
+        ok = FaultEvent(at=4.0, kind="crash", target="a0")
+        assert injector.apply(ok, f, now=4.0) is True
+        assert len(injector.skipped) == 3
+
     def test_fault_event_rejects_unknown_kind(self):
         with pytest.raises(ValueError):
             FaultEvent(at=0.0, kind="meteor", target="w0")
         with pytest.raises(ValueError):
             ChaosSpec(worker_crashes=-1)
+        with pytest.raises(ValueError):
+            ChaosSpec(overload_bursts=-1)
+        with pytest.raises(ValueError):
+            ChaosSpec(burst_factor=0.5)
+
+    def test_burst_free_spec_expands_to_the_pr6_schedule(self):
+        # Appending the overload_burst draw must not move the RNG stream
+        # of burst-free specs: per-seed schedules are pinned.
+        spec = ChaosSpec(seed=7, worker_crashes=3, partitions=1,
+                         flappy_workers=2)
+        workers = [f"w{i}" for i in range(6)]
+        base = FaultInjector(spec, workers, ("C",), ("a", "b")).schedule()
+        assert not any(e.kind in ("overload_burst", "burst_end")
+                       for e in base)
+        with_bursts = FaultInjector(
+            dataclasses.replace(spec, overload_bursts=2, burst_factor=3.0),
+            workers, ("C",), ("a", "b"),
+        ).schedule()
+        assert [e for e in with_bursts
+                if e.kind not in ("overload_burst", "burst_end")] == list(base)
+        bursts = [e for e in with_bursts if e.kind == "overload_burst"]
+        assert len(bursts) == 2
+        assert all(e.target in ("a", "b") and e.value == 3.0
+                   for e in bursts)
 
 
 # ---------------------------------------------------------------------------
@@ -285,6 +340,123 @@ class TestChaosSimulation:
         assert agg.inflight == 0
         assert sum(z.inflight for z in stats.zones) == 0
         assert sum(z.entered for z in stats.zones) >= len(result.records)
+
+
+# ---------------------------------------------------------------------------
+# Overload chaos (PR 9): circuit breakers + overload bursts
+# ---------------------------------------------------------------------------
+
+
+class TestCircuitBreakerChaos:
+    def _saturated_two_zone(self, breaker):
+        f = chaos_federation(overload=OverloadSpec(breaker=breaker))
+        # Saturate zone a (3 workers × 3 slots) so its entries forward,
+        # then drain every b/c worker: forwards to b/c keep failing but
+        # neither zone is all-DEAD, so forward_targets still offers them.
+        live = [f.invoke("fn", entry_zone="a") for _ in range(9)]
+        assert all(p.scheduled for p in live)
+        for zone in ("b", "c"):
+            for i in range(3):
+                f.drain(f"{zone}{i}")
+        return f
+
+    def test_open_breaker_cuts_forward_attempts_to_probe_rate(self):
+        spec = BreakerSpec(failure_threshold=3, probe_interval=5)
+        f = self._saturated_two_zone(spec)
+        # 3 failed invokes trip both (a→b) and (a→c): each invoke walks
+        # both targets and fails both forwards.
+        for _ in range(3):
+            assert not f.invoke("fn", entry_zone="a").scheduled
+        assert f.stats().open_circuits == (("a", "b"), ("a", "c"))
+        tripped = f.stats().forward_attempts
+        # While open, only every probe_interval-th suppressed attempt
+        # pays a forward attempt (the half-open probe); the rest are
+        # suppressed before any gateway is consulted.
+        for _ in range(10):
+            f.invoke("fn", entry_zone="a")
+        probes = f.stats().forward_attempts - tripped
+        assert probes == 4  # 10 suppressed per link → 2 probes per link
+        # A probe failure restarts the cooldown; circuits stay open.
+        assert f.stats().open_circuits == (("a", "b"), ("a", "c"))
+
+    def test_successful_probe_closes_the_circuit(self):
+        spec = BreakerSpec(failure_threshold=3, probe_interval=4)
+        f = self._saturated_two_zone(spec)
+        for _ in range(3):
+            f.invoke("fn", entry_zone="a")
+        assert f.stats().open_circuits
+        for i in range(3):
+            f.restore(f"b{i}")
+        # The next probe (every 4th suppressed attempt) lands in b and
+        # closes a→b; placements flow again.
+        placed = [f.invoke("fn", entry_zone="a").scheduled
+                  for _ in range(8)]
+        assert any(placed)
+        assert ("a", "b") not in f.stats().open_circuits
+        assert ledger_ok(f.stats().aggregate)
+
+    def test_breaker_feeds_on_severed_designated_hops(self):
+        # A partition that keeps failing a designated cross-zone hop
+        # eventually opens that link's breaker too.
+        f = chaos_federation(
+            overload=OverloadSpec(
+                breaker=BreakerSpec(failure_threshold=2, probe_interval=8)
+            )
+        )
+        f.sever("b", "a")
+        for _ in range(2):
+            f.invoke("fn", tag="pinned", entry_zone="b")
+        assert ("b", "a") in f.stats().open_circuits
+
+
+class TestOverloadBurstSimulation:
+    def test_burst_amplifies_offered_load_deterministically(self):
+        chaos = ChaosSpec(seed=2, horizon=60.0, overload_bursts=2,
+                          burst_duration=8.0, burst_factor=4.0)
+        _, base = run_chaos_case(test="hellojs", seed=1)
+        _, a = run_chaos_case(
+            test="hellojs", seed=1, chaos=chaos,
+            overload=OverloadSpec(queue=QueueSpec(depth=16, deadline=2.0)),
+            script=OVERLOAD_SCRIPT,
+        )
+        _, b = run_chaos_case(
+            test="hellojs", seed=1, chaos=chaos,
+            overload=OverloadSpec(queue=QueueSpec(depth=16, deadline=2.0)),
+            script=OVERLOAD_SCRIPT,
+        )
+        assert len(a.records) > len(base.records)  # bursts injected load
+        assert a.records == b.records
+
+    def test_burst_saturation_queues_and_drains_with_wait_accounting(self):
+        chaos = ChaosSpec(seed=2, horizon=60.0, overload_bursts=2,
+                          burst_duration=8.0, burst_factor=4.0)
+        sim, result = run_chaos_case(
+            test="hellojs", seed=1, chaos=chaos,
+            overload=OverloadSpec(queue=QueueSpec(depth=16, deadline=2.0)),
+            script=OVERLOAD_SCRIPT,
+        )
+        assert result.n_queued > 0
+        waits = result.queue_waits()
+        assert waits and all(w > 0.0 for w in waits)
+        stats = sim.platform.stats()
+        assert ledger_ok(stats)
+        assert stats.queued == result.n_queued + result.n_shed
+        assert stats.inflight == 0 and stats.queue_depth == 0
+
+    def test_sim_ledger_survives_bursts_plus_crashes(self):
+        chaos = ChaosSpec(seed=5, horizon=60.0, worker_crashes=2,
+                          crash_downtime=10.0, overload_bursts=1,
+                          burst_duration=6.0, burst_factor=3.0)
+        sim, result = run_chaos_case(
+            test="hellojs", seed=3, chaos=chaos,
+            overload=OverloadSpec(queue=QueueSpec(depth=8, deadline=1.5)),
+            script=OVERLOAD_SCRIPT,
+        )
+        stats = sim.platform.stats()
+        check(ledger_ok(stats), seed=3, invariant="burst-ledger",
+              detail=str(stats))
+        for record in result.records:
+            assert record.ok or record.error
 
 
 # ---------------------------------------------------------------------------

@@ -17,9 +17,14 @@ import random
 import pytest
 
 from repro.core.platform import (
+    BreakerSpec,
+    BrownoutSpec,
     ClusterSpec,
     ControllerSpec,
     FederationSpec,
+    OverloadSpec,
+    QueueSpec,
+    RetryPolicy,
     TappFederation,
     TappPlatform,
     WorkerSpec,
@@ -436,6 +441,111 @@ class TestForwarding:
             distribution=DistributionPolicy.SHARED,
         )
         assert fed.prewarm() > 0
+
+
+class TestPartitionRetryBudget:
+    """PR 6 retry machinery × federation partitions (PR 9 satellite):
+    with every remote zone severed, a retrying invoke must terminate
+    within its attempt budget and the partition must be visible in
+    ``explain()`` as ``unreachable_zones``."""
+
+    def _partitioned(self, retry=None):
+        fed = TappFederation(
+            _two_zone_spec(slots=1), seed=0,
+            distribution=DistributionPolicy.SHARED, retry=retry,
+        )
+        # Saturate za (vanilla path: 2 workers × 1 slot) so the only
+        # remaining capacity sits across the severed link.
+        for _ in range(2):
+            assert fed.invoke("fn", entry_zone="za").scheduled
+        fed.sever("za", "zb")
+        return fed
+
+    def test_scalar_invoke_terminates_within_budget(self):
+        fed = self._partitioned(retry=RetryPolicy(max_attempts=3))
+        placement = fed.invoke("fn", entry_zone="za")
+        assert not placement.scheduled
+        assert placement.attempts == 3  # budget spent, then terminated
+        assert placement.retry_wait > 0.0
+        report = fed.explain("fn", entry_zone="za")
+        assert report.unreachable_zones == ("zb",)
+        assert "unreachable" in report.render()
+
+    def test_invoke_batch_terminates_and_reports_unreachable(self):
+        fed = self._partitioned(retry=RetryPolicy(max_attempts=2))
+        batch = fed.invoke_batch(["fn"] * 3, entry_zones=["za"] * 3)
+        assert all(not p.scheduled for p in batch)
+        assert all(p.attempts == 2 for p in batch)
+        assert fed.explain("fn", entry_zone="za").unreachable_zones == (
+            "zb",
+        )
+        # Healing the link restores forwarding on the next invoke.
+        fed.heal("za", "zb")
+        healed = fed.invoke("fn", entry_zone="za")
+        assert healed.scheduled
+        assert fed.cluster.workers[healed.worker].zone == "zb"
+        assert fed.explain("fn", entry_zone="za").unreachable_zones == ()
+
+
+class TestArmedIdleBitIdentity:
+    """PR 9 acceptance: an OverloadSpec that never fires (queue + breaker
+    + brownout armed, cluster never saturated) is bit-identical to an
+    unarmed federation — decisions, traces, hops, RNG streams, ledgers."""
+
+    def test_armed_idle_equals_unarmed_under_churn(self):
+        armed_spec = OverloadSpec(
+            queue=QueueSpec(depth=8, deadline=5.0),
+            breaker=BreakerSpec(),
+            brownout=BrownoutSpec(),
+        )
+        for trial in range(4):
+            plain = TappFederation(
+                _two_zone_spec(slots=4), seed=trial,
+                distribution=DistributionPolicy.SHARED,
+                policy=MULTI_TAG_SCRIPT,
+            )
+            armed = TappFederation(
+                _two_zone_spec(slots=4), seed=trial,
+                distribution=DistributionPolicy.SHARED,
+                policy=MULTI_TAG_SCRIPT, overload=armed_spec,
+            )
+            rng = random.Random(200 + trial)
+            live = []
+            for step in range(60):
+                entry = rng.choice(("za", "zb"))
+                fn = rng.choice(("fn_a", "fn_b"))
+                tag = rng.choice((None, "spread"))
+                now = float(step)
+                p1 = plain.invoke(fn, tag=tag, entry_zone=entry,
+                                  trace=True, now=now)
+                p2 = armed.invoke(fn, tag=tag, entry_zone=entry,
+                                  trace=True, now=now)
+                context = f"trial={trial} step={step}"
+                _assert_same_decision(p1.decision, p2.decision, context)
+                assert p1.hops == p2.hops, context
+                assert not p2.queued and p2.queue_outcome is None, context
+                live.append((p1, p2))
+                # Retire early so capacity never runs out (the armed
+                # machinery must stay idle, not merely agree).
+                while len(live) > 6:
+                    a, b = live.pop(0)
+                    a.complete(now=now)
+                    b.complete(now=now)
+            for zone in ("za", "zb"):
+                assert (
+                    plain.zone_gateway(zone)._engine.scheduling_state()
+                    == armed.zone_gateway(zone)._engine.scheduling_state()
+                ), trial
+            armed_stats = armed.stats()
+            assert armed_stats.open_circuits == ()
+            agg = armed_stats.aggregate
+            assert agg.queued == agg.shed == agg.queue_depth == 0
+            assert agg.brownout_reroutes == 0
+            plain_agg = plain.stats().aggregate
+            assert (agg.routed, agg.admitted, agg.inflight, agg.failed) == (
+                plain_agg.routed, plain_agg.admitted, plain_agg.inflight,
+                plain_agg.failed,
+            )
 
 
 class TestFederationSpec:

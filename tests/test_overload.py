@@ -1,0 +1,565 @@
+"""Overload-resilience layer (PR 9): admission queues, load shedding,
+circuit breakers, brownout degradation — units and façade integration.
+
+The companion chaos-level coverage (overload bursts, breaker probe rate
+under drained zones) lives in ``tests/test_chaos.py``; the federated
+armed-idle bit-identity property lives in ``tests/test_federation.py``.
+"""
+import pytest
+
+from repro.core.platform import (
+    AdmissionQueue,
+    BreakerSpec,
+    BrownoutController,
+    BrownoutSpec,
+    CircuitBreaker,
+    ClusterSpec,
+    ControllerSpec,
+    OverloadSpec,
+    QueueSpec,
+    TappPlatform,
+    WorkerSpec,
+    degrade_script,
+)
+from repro.core.tapp import TappParseError, parse_tapp, script_to_yaml
+from repro.core.tapp.ast import OnOverload, TopologyTolerance
+
+
+def pool_cluster(n_workers: int = 3, slots: int = 2) -> ClusterSpec:
+    return ClusterSpec(
+        controllers=(ControllerSpec("Ctl"),),
+        workers=tuple(
+            WorkerSpec(f"w{i}", sets=("pool", "any"), capacity_slots=slots)
+            for i in range(n_workers)
+        ),
+    )
+
+
+DEFAULT_SCRIPT = (
+    "- default:\n"
+    "  - workers:\n"
+    "    - set: pool\n"
+    "    strategy: platform\n"
+    "    invalidate: overload\n"
+)
+
+PRIORITY_SCRIPT = DEFAULT_SCRIPT + (
+    "- hi:\n"
+    "  - workers:\n"
+    "    - set: pool\n"
+    "    strategy: platform\n"
+    "    invalidate: overload\n"
+    "    priority: 5\n"
+    "  followup: fail\n"
+    "- lo:\n"
+    "  - workers:\n"
+    "    - set: pool\n"
+    "    strategy: platform\n"
+    "    invalidate: overload\n"
+    "  followup: fail\n"
+)
+
+BROWNOUT_SCRIPT = DEFAULT_SCRIPT + (
+    "- sticky:\n"
+    "  - workers:\n"
+    "    - set: pool\n"
+    "      anti-affinity: [sticky_fn]\n"
+    "    strategy: platform\n"
+    "    invalidate: overload\n"
+    "  followup: fail\n"
+    "  on-overload: relax-affinity\n"
+    "- never:\n"
+    "  - workers:\n"
+    "    - set: pool\n"
+    "      anti-affinity: [never_fn]\n"
+    "    strategy: platform\n"
+    "    invalidate: overload\n"
+    "  followup: fail\n"
+    "  on-overload: reject\n"
+)
+
+
+def ledger_ok(stats) -> bool:
+    return stats.admitted == stats.completed + stats.evicted + stats.inflight
+
+
+# ---------------------------------------------------------------------------
+# Spec validation
+# ---------------------------------------------------------------------------
+
+
+class TestSpecs:
+    def test_queue_spec_validation(self):
+        assert QueueSpec().discipline == "fifo"
+        with pytest.raises(ValueError):
+            QueueSpec(depth=0)
+        with pytest.raises(ValueError):
+            QueueSpec(deadline=0.0)
+        with pytest.raises(ValueError):
+            QueueSpec(discipline="lifo")
+
+    def test_breaker_spec_validation(self):
+        with pytest.raises(ValueError):
+            BreakerSpec(failure_threshold=0)
+        with pytest.raises(ValueError):
+            BreakerSpec(probe_interval=0)
+        with pytest.raises(ValueError):
+            BreakerSpec(rtt_budget=-1.0)
+
+    def test_brownout_spec_validation(self):
+        with pytest.raises(ValueError):
+            BrownoutSpec(high_water=0)
+        with pytest.raises(ValueError):
+            BrownoutSpec(high_water=4, low_water=4)
+        with pytest.raises(ValueError):
+            BrownoutSpec(sustain=0)
+
+    def test_brownout_requires_a_queue(self):
+        with pytest.raises(ValueError, match="requires a queue"):
+            OverloadSpec(brownout=BrownoutSpec())
+        OverloadSpec(queue=QueueSpec(), brownout=BrownoutSpec())  # ok
+
+
+# ---------------------------------------------------------------------------
+# AdmissionQueue unit behaviour
+# ---------------------------------------------------------------------------
+
+
+class _Stub:
+    """Stand-in placement for queue-level tests."""
+
+    def __init__(self, name):
+        self.name = name
+
+
+class TestAdmissionQueue:
+    def test_fifo_head_order_and_drain_counters(self):
+        q = AdmissionQueue(QueueSpec(depth=4))
+        a, b = _Stub("a"), _Stub("b")
+        assert q.offer(a, 0, now=0.0)[0] == "queued"
+        assert q.offer(b, 0, now=1.0)[0] == "queued"
+        head = q.head()
+        assert head.placement is a
+        assert q.remove(head, drained=True)
+        assert q.head().placement is b
+        snap = q.snapshot()
+        assert snap == {"depth": 1, "queued_total": 2, "shed": 0,
+                        "deadline_exceeded": 0, "drained": 1}
+
+    def test_edf_orders_by_absolute_deadline(self):
+        q = AdmissionQueue(QueueSpec(depth=4, deadline=10.0,
+                                     discipline="edf"))
+        late, early = _Stub("late"), _Stub("early")
+        q.offer(late, 0, now=5.0)    # deadline 15
+        q.offer(early, 0, now=1.0)   # deadline 11
+        assert q.head().placement is early
+
+    def test_full_queue_sheds_lowest_priority_entrant(self):
+        q = AdmissionQueue(QueueSpec(depth=1))
+        lo, hi, lo2 = _Stub("lo"), _Stub("hi"), _Stub("lo2")
+        assert q.offer(lo, 0, now=0.0)[0] == "queued"
+        # Higher-priority newcomer evicts the queued low-priority entry.
+        status, victim = q.offer(hi, 5, now=0.0)
+        assert status == "shed" and victim.placement is lo
+        # Equal-or-lower newcomer loses against the incumbent.
+        status, victim = q.offer(lo2, 0, now=0.0)
+        assert status == "shed" and victim.placement is lo2
+        assert q.head().placement is hi
+        assert q.snapshot()["shed"] == 2
+
+    def test_expire_removes_only_overdue_entries(self):
+        q = AdmissionQueue(QueueSpec(depth=4, deadline=5.0))
+        a, b = _Stub("a"), _Stub("b")
+        q.offer(a, 0, now=0.0)   # deadline 5
+        q.offer(b, 0, now=4.0)   # deadline 9
+        expired = q.expire(now=6.0)
+        assert [e.placement for e in expired] == [a]
+        assert q.depth == 1 and q.snapshot()["deadline_exceeded"] == 1
+        assert q.expire(now=None) == []
+
+
+# ---------------------------------------------------------------------------
+# CircuitBreaker unit behaviour
+# ---------------------------------------------------------------------------
+
+
+class TestCircuitBreaker:
+    def test_opens_at_threshold_then_probes_deterministically(self):
+        br = CircuitBreaker(BreakerSpec(failure_threshold=2,
+                                        probe_interval=3))
+        assert br.allow("a", "b")
+        br.record_failure("a", "b")
+        assert not br.is_open("a", "b")
+        br.record_failure("a", "b")
+        assert br.is_open("a", "b")
+        # While open: every 3rd suppressed attempt is the half-open probe.
+        pattern = [br.allow("a", "b") for _ in range(6)]
+        assert pattern == [False, False, True, False, False, True]
+
+    def test_probe_success_closes_failure_restarts_cooldown(self):
+        br = CircuitBreaker(BreakerSpec(failure_threshold=1,
+                                        probe_interval=2))
+        br.record_failure("a", "b")
+        assert br.open_circuits() == (("a", "b"),)
+        assert [br.allow("a", "b") for _ in range(2)] == [False, True]
+        br.record_failure("a", "b")  # probe failed: cooldown restarts
+        assert [br.allow("a", "b") for _ in range(2)] == [False, True]
+        br.record_success("a", "b")
+        assert br.open_circuits() == ()
+        assert br.allow("a", "b")
+
+    def test_rtt_budget_counts_slow_success_as_failure(self):
+        br = CircuitBreaker(BreakerSpec(failure_threshold=2,
+                                        rtt_budget=0.05))
+        br.record_success("a", "b", rtt=0.2)
+        br.record_success("a", "b", rtt=0.2)
+        assert br.is_open("a", "b")
+        # A within-budget success is a real success.
+        br2 = CircuitBreaker(BreakerSpec(failure_threshold=2,
+                                         rtt_budget=0.05))
+        br2.record_failure("a", "b")
+        br2.record_success("a", "b", rtt=0.01)
+        br2.record_failure("a", "b")
+        assert not br2.is_open("a", "b")
+
+    def test_links_are_independent(self):
+        br = CircuitBreaker(BreakerSpec(failure_threshold=1))
+        br.record_failure("a", "b")
+        assert br.is_open("a", "b")
+        assert not br.is_open("a", "c")
+        assert br.allow("b", "a")
+        assert br.open_circuits() == (("a", "b"),)
+
+
+# ---------------------------------------------------------------------------
+# BrownoutController hysteresis
+# ---------------------------------------------------------------------------
+
+
+class TestBrownoutController:
+    def test_sustained_high_water_activates(self):
+        ctl = BrownoutController(BrownoutSpec(high_water=4, low_water=1,
+                                              sustain=3))
+        assert not ctl.observe(4)
+        assert not ctl.observe(5)
+        assert ctl.observe(4)          # third consecutive observation
+        assert ctl.activations == 1
+
+    def test_dip_below_high_water_breaks_the_streak(self):
+        ctl = BrownoutController(BrownoutSpec(high_water=4, low_water=1,
+                                              sustain=2))
+        assert not ctl.observe(4)
+        assert not ctl.observe(3)      # between the marks: streak broken
+        assert not ctl.observe(4)
+        assert ctl.observe(4)
+
+    def test_low_water_deactivates_between_marks_holds(self):
+        ctl = BrownoutController(BrownoutSpec(high_water=4, low_water=1,
+                                              sustain=1))
+        assert ctl.observe(4)
+        assert ctl.observe(2)          # hysteresis band: stays active
+        assert not ctl.observe(1)      # low water: reverts
+        assert not ctl.observe(2)
+
+
+# ---------------------------------------------------------------------------
+# degrade_script: the pre-compiled brownout plan
+# ---------------------------------------------------------------------------
+
+
+DEGRADE_SOURCE = """
+- default:
+  - workers:
+    - set: pool
+    strategy: platform
+- soft:
+  - workers:
+    - set: edge
+      affinity: [cache]
+    anti-affinity: [noisy]
+  followup: fail
+  on-overload: relax-affinity
+- wide:
+  - controller: Ctl
+    topology_tolerance: same
+    workers:
+    - set: edge
+  followup: fail
+  on-overload: any-zone
+- hard:
+  - workers:
+    - set: edge
+      affinity: [cache]
+  followup: fail
+  on-overload: reject
+"""
+
+
+class TestDegradeScript:
+    def test_relax_affinity_strips_soft_constraints(self):
+        degraded = degrade_script(parse_tapp(DEGRADE_SOURCE))
+        soft = next(t for t in degraded.tags if t.tag == "soft")
+        block = soft.blocks[0]
+        assert block.affinity is None and block.anti_affinity is None
+        assert all(item.affinity is None and item.anti_affinity is None
+                   for item in block.workers)
+
+    def test_any_zone_widens_topology_tolerance(self):
+        degraded = degrade_script(parse_tapp(DEGRADE_SOURCE))
+        wide = next(t for t in degraded.tags if t.tag == "wide")
+        assert (wide.blocks[0].controller.topology_tolerance
+                is TopologyTolerance.ALL)
+
+    def test_reject_and_unopted_tags_pass_through(self):
+        script = parse_tapp(DEGRADE_SOURCE)
+        degraded = degrade_script(script)
+        for name in ("default", "hard"):
+            original = next(t for t in script.tags if t.tag == name)
+            after = next(t for t in degraded.tags if t.tag == name)
+            assert after == original
+
+    def test_no_opt_in_means_no_degraded_plan(self):
+        assert degrade_script(parse_tapp(DEFAULT_SCRIPT)) is None
+        # reject alone needs no degraded *plan* either (handled at
+        # admission time).
+        reject_only = DEFAULT_SCRIPT.replace(
+            "    invalidate: overload\n",
+            "    invalidate: overload\n  on-overload: reject\n",
+        )
+        assert degrade_script(parse_tapp(reject_only)) is None
+
+
+# ---------------------------------------------------------------------------
+# Grammar: priority / on-overload lowering + round-trip
+# ---------------------------------------------------------------------------
+
+
+class TestOverloadGrammar:
+    def test_priority_and_on_overload_parse(self):
+        script = parse_tapp(BROWNOUT_SCRIPT)
+        sticky = next(t for t in script.tags if t.tag == "sticky")
+        assert sticky.on_overload is OnOverload.RELAX_AFFINITY
+        never = next(t for t in script.tags if t.tag == "never")
+        assert never.on_overload is OnOverload.REJECT
+        hi = next(t for t in parse_tapp(PRIORITY_SCRIPT).tags
+                  if t.tag == "hi")
+        assert hi.blocks[0].priority == 5
+
+    def test_priority_rejects_bool_and_negative(self):
+        template = (
+            "- t:\n"
+            "  - workers:\n"
+            "    - set: pool\n"
+            "    priority: {value}\n"
+        )
+        for bad in ("true", "-1", "'2'"):
+            with pytest.raises(TappParseError, match="priority"):
+                parse_tapp(template.format(value=bad))
+
+    def test_on_overload_rejects_unknown_and_duplicate(self):
+        with pytest.raises(TappParseError):
+            parse_tapp(
+                "- t:\n"
+                "  - workers:\n"
+                "    - set: pool\n"
+                "  on-overload: panic\n"
+            )
+        with pytest.raises(TappParseError, match="duplicate"):
+            parse_tapp(
+                "- t:\n"
+                "  - workers:\n"
+                "    - set: pool\n"
+                "  - on-overload: reject\n"
+                "  - on-overload: any-zone\n"
+            )
+
+    def test_serialize_round_trips_overload_clauses(self):
+        script = parse_tapp(BROWNOUT_SCRIPT + (
+            "- prio:\n"
+            "  - workers:\n"
+            "    - set: pool\n"
+            "    priority: 7\n"
+            "  followup: fail\n"
+        ))
+        rendered = script_to_yaml(script)
+        assert "on-overload: relax-affinity" in rendered
+        assert "priority: 7" in rendered
+        assert parse_tapp(rendered).tags == script.tags
+
+
+# ---------------------------------------------------------------------------
+# Flat façade integration: queue / drain / expiry / shed / brownout
+# ---------------------------------------------------------------------------
+
+
+class TestFlatAdmissionQueue:
+    def _tiny(self, **overload):
+        return TappPlatform(
+            pool_cluster(n_workers=1, slots=1), seed=0,
+            policy=PRIORITY_SCRIPT,
+            overload=OverloadSpec(**overload),
+        )
+
+    def test_saturated_invoke_parks_then_drains_on_complete(self):
+        p = self._tiny(queue=QueueSpec(depth=4))
+        first = p.invoke("fn", now=0.0)
+        assert first.scheduled
+        waiting = p.invoke("fn", now=0.0)
+        assert not waiting.scheduled and waiting.queued
+        assert p.stats().queue_depth == 1
+        first.complete(now=2.0)
+        assert waiting.scheduled and waiting.queue_outcome == "drained"
+        assert waiting.queue_wait == 2.0
+        waiting.complete(now=3.0)
+        stats = p.stats()
+        assert ledger_ok(stats) and stats.inflight == 0
+        assert stats.queued == 1 and stats.queue_depth == 0
+
+    def test_expired_entries_are_counted_and_never_placed(self):
+        p = self._tiny(queue=QueueSpec(depth=4, deadline=5.0))
+        first = p.invoke("fn", now=0.0)
+        stale = p.invoke("fn", now=0.0)
+        assert stale.queued
+        first.complete(now=10.0)  # past the 5s deadline
+        assert not stale.scheduled
+        assert stale.queue_outcome == "deadline_exceeded"
+        stats = p.stats()
+        assert stats.deadline_exceeded == 1 and stats.queue_depth == 0
+        assert ledger_ok(stats)
+
+    def test_full_queue_sheds_by_tag_priority(self):
+        p = self._tiny(queue=QueueSpec(depth=1))
+        busy = p.invoke("fn", now=0.0)
+        lo = p.invoke("fn", tag="lo", now=0.0)
+        assert lo.queued and lo.queue_outcome is None
+        hi = p.invoke("fn", tag="hi", now=0.0)
+        # The higher-priority newcomer evicted the queued lo entry.
+        assert hi.queued and lo.queue_outcome == "shed"
+        lo2 = p.invoke("fn", tag="lo", now=0.0)
+        assert not lo2.queued and lo2.queue_outcome == "shed"
+        assert p.stats().shed == 2
+        busy.complete(now=1.0)
+        assert hi.scheduled and hi.queue_outcome == "drained"
+
+    def test_explain_reports_queue_state(self):
+        p = self._tiny(queue=QueueSpec(depth=2))
+        p.invoke("fn", now=0.0)
+        p.invoke("fn", now=0.0)
+        report = p.explain("fn")
+        note = "\n".join(report.failure_notes)
+        assert "overload queue" in note and "depth 1/2" in note
+
+    def test_unarmed_platform_has_zero_overload_counters(self):
+        p = TappPlatform(pool_cluster(1, 1), seed=0, policy=PRIORITY_SCRIPT)
+        p.invoke("fn")
+        rejected = p.invoke("fn")
+        assert not rejected.scheduled and not rejected.queued
+        stats = p.stats()
+        assert stats.queued == stats.shed == stats.queue_depth == 0
+
+
+class TestBrownoutIntegration:
+    def _platform(self):
+        return TappPlatform(
+            pool_cluster(n_workers=3, slots=2), seed=0,
+            policy=BROWNOUT_SCRIPT,
+            overload=OverloadSpec(
+                queue=QueueSpec(depth=8),
+                brownout=BrownoutSpec(high_water=2, low_water=0, sustain=2),
+            ),
+        )
+
+    def _saturate_sticky(self, p):
+        """Three sticky_fn placements make every worker anti-affine to
+        the tag; later sticky invokes fail by policy and queue up.
+        Depth is observed *before* each offer, so after three queued
+        entries the sustain streak is one observation short of
+        activating — the next overflow tips it."""
+        live = [p.invoke("sticky_fn", tag="sticky", now=float(i))
+                for i in range(3)]
+        assert all(pl.scheduled for pl in live)
+        queued = [p.invoke("sticky_fn", tag="sticky", now=3.0 + i)
+                  for i in range(3)]
+        assert all(pl.queued for pl in queued)
+        assert not p.brownout_active
+        return live, queued
+
+    def test_sustained_saturation_reroutes_through_degraded_plan(self):
+        p = self._platform()
+        live, queued = self._saturate_sticky(p)
+        # on-overload: relax-affinity → once sustained saturation flips
+        # the brownout bit, the degraded plan drops the anti-affinity
+        # clause and the free slots become eligible. The tipping invoke
+        # itself is served through the degraded plan.
+        rerouted = [p.invoke("sticky_fn", tag="sticky", now=7.0 + i)
+                    for i in range(2)]
+        assert p.brownout_active
+        assert all(pl.scheduled for pl in rerouted)
+        assert p.stats().brownout_reroutes == 2
+
+    def test_reject_tags_shed_immediately_under_brownout(self):
+        p = self._platform()
+        self._saturate_sticky(p)
+        tipping = p.invoke("sticky_fn", tag="sticky", now=7.0)
+        assert tipping.scheduled and p.brownout_active
+        # Fill remaining capacity so `never` cannot route normally.
+        fillers = []
+        while True:
+            filler = p.invoke("filler", now=20.0)
+            if not filler.scheduled:
+                break
+            fillers.append(filler)
+        dropped = p.invoke("never_fn", tag="never", now=21.0)
+        assert not dropped.scheduled and dropped.queue_outcome == "shed"
+        assert p.stats().shed >= 1
+
+    def test_brownout_reverts_at_low_water(self):
+        p = self._platform()
+        placements, queued = self._saturate_sticky(p)
+        tipping = p.invoke("sticky_fn", tag="sticky", now=7.0)
+        assert tipping.scheduled and p.brownout_active
+        placements = placements + [tipping]
+        # Retiring the live work drains the queue (anti-affinity clears
+        # as sticky_fn instances finish) and depth falls to low water.
+        for _ in range(4):  # drained entries need completes too
+            for pl in list(placements) + list(queued):
+                if pl.scheduled and not pl.completed:
+                    pl.complete(now=30.0)
+        assert not p.brownout_active
+        stats = p.stats()
+        assert stats.queue_depth == 0 and stats.inflight == 0
+        assert ledger_ok(stats)
+
+
+class TestDuplicateComplete:
+    def test_double_complete_is_idempotent_but_loud(self):
+        p = TappPlatform(pool_cluster(1, 1), seed=0, policy=DEFAULT_SCRIPT)
+        placement = p.invoke("fn")
+        assert placement.complete() is True
+        before = p.stats()
+        assert placement.complete() is False
+        after = p.stats()
+        assert after.duplicate_completions == 1
+        assert before.duplicate_completions == 0
+        # The ledger was not touched twice.
+        assert after.completed == before.completed == 1
+        assert ledger_ok(after)
+
+    def test_unadmitted_complete_is_not_a_duplicate(self):
+        p = TappPlatform(pool_cluster(1, 1), seed=0, policy=DEFAULT_SCRIPT)
+        p.invoke("fn")
+        rejected = p.invoke("fn")
+        assert not rejected.admitted
+        assert rejected.complete() is False
+        assert rejected.complete() is False
+        assert p.stats().duplicate_completions == 0
+
+
+class TestDegradedDryRun:
+    def test_dry_run_verifies_the_brownout_plan(self):
+        p = TappPlatform(pool_cluster(3, 2), seed=0)
+        dry = p.dry_run_policy(BROWNOUT_SCRIPT)
+        assert dry.degraded_analysis is not None
+        p2 = TappPlatform(pool_cluster(3, 2), seed=0)
+        plain = p2.dry_run_policy(DEFAULT_SCRIPT)
+        assert plain.degraded_analysis is None

@@ -33,6 +33,44 @@ from repro.core.sim.core import NetworkModel
 # the script's runner/demo uses, so verdicts match what would go live.
 Case = Tuple[str, str, Callable[[], object]]
 
+# Federated brownout variant of the co-location policy (PR 9): the
+# latency class may relax its anti-affinity under sustained saturation,
+# the batch class may widen to any zone, and the join class refuses to
+# degrade. Verified here against the same two-rack federation the
+# chaos/overload sims deploy.
+OVERLOAD_COLOCATION_SCRIPT = """
+- default:
+  - workers:
+    - set:
+    strategy: platform
+    invalidate: overload
+- latency:
+  - workers:
+    - set:
+    strategy: platform
+    invalidate: capacity_used 90%
+    anti-affinity: [batch_crunch]
+    priority: 2
+  followup: default
+  on-overload: relax-affinity
+- batch:
+  - workers:
+    - set:
+    strategy: best_first
+    invalidate: overload
+    anti-affinity: [latency_api]
+  followup: default
+  on-overload: any-zone
+- join:
+  - workers:
+    - set:
+    strategy: platform
+    invalidate: overload
+    affinity: [cache_warmer]
+  followup: default
+  on-overload: reject
+"""
+
 
 def _flat(spec: ClusterSpec, distribution: DistributionPolicy):
     return lambda: TappPlatform(spec, distribution=distribution)
@@ -174,6 +212,23 @@ def build_cases() -> List[Case]:
             _federated(scenarios.colocation_federation_spec(),
                        DistributionPolicy.SHARED),
         ))
+
+    # Overload family (PR 9): scripts with ``on-overload`` opt-ins
+    # pre-compile a brownout-degraded plan at apply time; the verifier
+    # must analyze BOTH plans (a brownout can never swap in a
+    # proven-unplaceable policy), so these cases additionally require
+    # the degraded analysis to exist and be blocker-free.
+    cases.append((
+        "scenarios.OVERLOAD_SCRIPT",
+        scenarios.OVERLOAD_SCRIPT,
+        _flat(scenarios.benchmark_cluster(), DistributionPolicy.SHARED),
+    ))
+    cases.append((
+        "OVERLOAD_COLOCATION_SCRIPT[federated]",
+        OVERLOAD_COLOCATION_SCRIPT,
+        _federated(scenarios.colocation_federation_spec(),
+                   DistributionPolicy.SHARED),
+    ))
     return cases
 
 
@@ -185,10 +240,18 @@ def verify_case(name: str, script: str, factory, *,
     report = dry.analysis
     if report is None:
         return "script did not lower to a compiled plan (no analysis)"
+    if "on-overload" in script and dry.degraded_analysis is None:
+        # The script opts into brownout degradation, so apply_policy
+        # would pre-compile a degraded plan — it must be analyzed too.
+        return ("script declares on-overload but the degraded plan was "
+                "not analyzed")
     blockers = tuple(dry.errors) + tuple(dry.proofs)
     if verbose:
         print(f"--- {name} ---")
         print(report.verdict())
+        if dry.degraded_analysis is not None:
+            print("--- degraded (brownout) plan ---")
+            print(dry.degraded_analysis.verdict())
     if blockers:
         return "; ".join(str(f) for f in blockers)
     return None
