@@ -1,7 +1,7 @@
 PY := python
 export PYTHONPATH := src:.
 
-.PHONY: test lint verify-policies chaos chaos-overload bench bench-sched bench-sched-full bench-check bench-serve bench-throughput bench-throughput-smoke bench-overload bench-overload-smoke
+.PHONY: test lint verify-policies chaos chaos-overload bench bench-sched bench-sched-full bench-check bench-serve bench-throughput bench-throughput-smoke bench-overload bench-overload-smoke bench-coldstart bench-coldstart-smoke
 
 test:
 	$(PY) -m pytest -q
@@ -93,3 +93,15 @@ bench-overload:
 bench-overload-smoke:
 	$(PY) benchmarks/run.py overload --smoke --check \
 		--out bench_overload_smoke.json
+
+# Cold-start benchmark (PR 10): warm-first routing over an armed
+# warm-pool lifecycle vs a warmth-oblivious scatter policy at equal
+# open-loop load; gated at oblivious cold-start rate >= 2x the
+# warm-aware arm's. Full size merges the rows into the committed
+# serving artifact.
+bench-coldstart:
+	$(PY) benchmarks/run.py coldstart --check --merge BENCH_serving.json
+
+bench-coldstart-smoke:
+	$(PY) benchmarks/run.py coldstart --smoke --check \
+		--out bench_coldstart_smoke.json

@@ -41,6 +41,14 @@ def main() -> None:
 
         raise SystemExit(overload_main(sys.argv[2:]))
 
+    if len(sys.argv) > 1 and sys.argv[1] == "coldstart":
+        # Cold-start benchmark subcommand (warm-aware routing gate):
+        #   python benchmarks/run.py coldstart [--smoke] [--check]
+        #       [--merge BENCH_serving.json]
+        from benchmarks.coldstart_bench import main as coldstart_main
+
+        raise SystemExit(coldstart_main(sys.argv[2:]))
+
     if len(sys.argv) > 1 and sys.argv[1] == "serve":
         # Serving-engine benchmark subcommand (JSON artifact):
         #   python benchmarks/run.py serve [--out PATH]

@@ -27,7 +27,9 @@ compiled path at 1024w; churn cycle ≤ ``CHURN_FACTOR``× its paired
 steady-state window (× ``CHURN_NOISE`` headroom on fresh runs — both
 sides are ~5µs quantities on drifting hosts); platform façade ≤
 ``PLATFORM_FACTOR``× raw routing; zone-local federation invoke ≤
-``FEDERATION_FACTOR``× the flat-platform invoke; apply-time policy
+``FEDERATION_FACTOR``× the flat-platform invoke; lifecycle-armed
+warm-first invoke ≤ ``WARM_FIRST_FACTOR``× the plain tagged invoke;
+apply-time policy
 analysis of the constraint-heavy plan ≤ ``ANALYZER_BUDGET_US``
 (host-scaled) at 1024 workers. ``--throughput``
 runs the multi-entry federated throughput rows instead (one driver
@@ -59,6 +61,7 @@ from repro.core.platform import (
     ClusterSpec,
     ControllerSpec,
     FederationSpec,
+    LifecycleSpec,
     OverloadSpec,
     QueueSpec,
     RetryPolicy,
@@ -88,6 +91,26 @@ SCRIPT = """
   - workers:
     - set: east
     strategy: random
+    invalidate: capacity_used 80%
+  - workers:
+    - set: west
+  followup: default
+"""
+
+# Warm-first variant of the tagged script (PR 10): identical topology,
+# but the east set ranks warm-instance holders first (set-level inner
+# strategy — members never inherit the block strategy) instead of the
+# platform co-prime order. Used by the warm-pool fast-path gate row.
+WARM_FIRST_SCRIPT = """
+- default:
+  - workers:
+    - set:
+    strategy: platform
+    invalidate: overload
+- tagged:
+  - workers:
+    - set: east
+      strategy: warm-first
     invalidate: capacity_used 80%
   - workers:
     - set: west
@@ -166,6 +189,16 @@ RETRY_FACTOR = 1.1
 # reached after routing already failed. Same paired-floor gate shape as
 # the retry row.
 OVERLOAD_FACTOR = 1.1
+# Warm-pool lifecycle armed under a warm-first policy (PR 10): the armed
+# invoke adds the clockless-janitor guard, the per-function warm-mask
+# read (incrementally maintained alongside the availability index — a
+# dict hit plus journal replay of 0↔1 flips), the stable warm/cold bit
+# partition, and the pool's spawn-or-reuse admission hook. All of it is
+# O(1) per decision by construction; the gate pins the armed warm-first
+# invoke to WARM_FIRST_FACTOR x the plain tagged invoke at the
+# production point so warm ranking can never reintroduce an O(workers)
+# or O(pool) scan on the hot path.
+WARM_FIRST_FACTOR = 1.1
 # The vectorized batch path (PR 7): ``schedule_batch`` must amortize a
 # homogeneous 64-invocation batch to at least this much faster than
 # per-call compiled routing at the FLAT_TOP production point. The same
@@ -515,6 +548,42 @@ def _overload_row(n_workers: int, iters: int) -> Dict:
     }
 
 
+def _warm_first_row(n_workers: int, iters: int) -> Dict:
+    """Warm-pool fast path: lifecycle-armed warm-first invoke vs plain (PR 10).
+
+    Two platforms over the same deployment: the plain tagged script with
+    no lifecycle, and its warm-first variant with a warm-pool lifecycle
+    armed. No placement ever completes, so pools stay cold and the warm
+    mask is all-zero — the armed side's measured extra work is the pool
+    admission hook (spawn a cold instance per invoke), the clockless
+    lazy-janitor guard, the warm-mask read, and the empty warm
+    partition's fall-through to the best-first bit pick. The gate pins
+    it to ``WARM_FIRST_FACTOR`` × the plain invoke so cold-start-aware
+    routing stays O(1) per decision.
+    """
+    spec = _retry_platform_spec(n_workers)
+    plain = TappPlatform(
+        spec, distribution=DistributionPolicy.SHARED, seed=0, policy=SCRIPT
+    )
+    armed = TappPlatform(
+        spec, distribution=DistributionPolicy.SHARED, seed=0,
+        policy=WARM_FIRST_SCRIPT, lifecycle=LifecycleSpec(),
+    )
+    inv = Invocation("fn", tag="tagged")
+    us_plain, us_armed, ratio = _paired_ratio_us(
+        lambda: plain.invoke(inv),
+        lambda: armed.invoke(inv),
+        max(iters // 2, 500),
+    )
+    return {
+        "name": f"warm_first_invoke_{n_workers}w",
+        "us_plain": us_plain,
+        "us_invoke": us_armed,
+        "us_per_call": us_armed,
+        "warm_first_overhead": ratio,
+    }
+
+
 def _recovery_row(n_workers: int, iters: int) -> Dict:
     """Worker-failure recovery time: fail → evict → re-route (PR 6).
 
@@ -621,6 +690,14 @@ def microbench(*, smoke: bool = False) -> List[Dict]:
         retake = _overload_row(PLATFORM_SIZE, iters)
         if retake["overload_overhead"] < overload_row["overload_overhead"]:
             overload_row = retake
+    # ... and for the lifecycle-armed warm-first/plain pair (PR 10).
+    warm_first_row = _warm_first_row(PLATFORM_SIZE, iters)
+    for _ in range(2):
+        if warm_first_row["warm_first_overhead"] <= 0.8 * WARM_FIRST_FACTOR:
+            break
+        retake = _warm_first_row(PLATFORM_SIZE, iters)
+        if retake["warm_first_overhead"] < warm_first_row["warm_first_overhead"]:
+            warm_first_row = retake
     recovery_row = _recovery_row(PLATFORM_SIZE, iters)
     for n_workers in sizes:
         cluster = _cluster(n_workers)
@@ -683,6 +760,7 @@ def microbench(*, smoke: bool = False) -> List[Dict]:
     rows.append(federation_row)
     rows.append(retry_row)
     rows.append(overload_row)
+    rows.append(warm_first_row)
     rows.append(recovery_row)
     rows.append(_analyzer_row(PLATFORM_SIZE, iters))
     return rows
@@ -970,6 +1048,18 @@ def check_rows(rows: List[Dict], *, min_speedup: float = 1.0) -> List[str]:
                 f"vs plain invoke {row['us_plain']:.1f}us "
                 f"({overload_overhead:.2f}x > {OVERLOAD_FACTOR:.2f}x budget)"
             )
+        warm_first_overhead = row.get("warm_first_overhead")
+        if (
+            warm_first_overhead is not None
+            and warm_first_overhead > WARM_FIRST_FACTOR
+        ):
+            failures.append(
+                f"{row['name']}: warm-first lifecycle-armed invoke "
+                f"{row['us_invoke']:.1f}us "
+                f"vs plain invoke {row['us_plain']:.1f}us "
+                f"({warm_first_overhead:.2f}x > {WARM_FIRST_FACTOR:.2f}x "
+                f"budget)"
+            )
         speedup = row.get("speedup")
         if speedup is not None and speedup < min_speedup:
             failures.append(
@@ -1151,6 +1241,14 @@ def compare_rows(
                     f"{row['overload_overhead']:.2f}x exceeds committed "
                     f"{ref['overload_overhead']:.2f}x * {factor:.1f}"
                 )
+        if "warm_first_overhead" in row and "warm_first_overhead" in ref:
+            ceiling = ref["warm_first_overhead"] * factor
+            if row["warm_first_overhead"] > ceiling:
+                failures.append(
+                    f"{name}: warm-first overhead "
+                    f"{row['warm_first_overhead']:.2f}x exceeds committed "
+                    f"{ref['warm_first_overhead']:.2f}x * {factor:.1f}"
+                )
     for label in ("tagged", "default", "constrained"):
         now = _scaling_ratio(current, label)
         ref = _scaling_ratio(floors, label)
@@ -1262,6 +1360,12 @@ def main(argv=None) -> int:
                 f"{r['name']},plain={r['us_plain']:.1f}us,"
                 f"invoke={r['us_invoke']:.1f}us,"
                 f"overhead={r['overload_overhead']:.2f}x"
+            )
+        elif "warm_first_overhead" in r:
+            print(
+                f"{r['name']},plain={r['us_plain']:.1f}us,"
+                f"invoke={r['us_invoke']:.1f}us,"
+                f"overhead={r['warm_first_overhead']:.2f}x"
             )
         elif "analyzer_us" in r:
             print(

@@ -39,6 +39,13 @@ from repro.core.platform.faults import (
     FaultEvent,
     FaultInjector,
 )
+from repro.core.platform.lifecycle import (
+    InstancePool,
+    InstanceState,
+    LegacyWarmCache,
+    LifecycleManager,
+    LifecycleSpec,
+)
 from repro.core.platform.federation import (
     FederatedPlacement,
     FederationStats,
@@ -92,7 +99,12 @@ __all__ = [
     "ForwardHop",
     "HealthState",
     "HealthTransition",
+    "InstancePool",
+    "InstanceState",
     "LeaseConfig",
+    "LegacyWarmCache",
+    "LifecycleManager",
+    "LifecycleSpec",
     "OverloadSpec",
     "Placement",
     "PlatformCore",

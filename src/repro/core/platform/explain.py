@@ -41,11 +41,17 @@ class CandidateReport:
     # place this invocation's tag on the worker — the rejection is a
     # property of the (policy × topology), not of current load.
     inevitable: bool = False
+    # Warm-pool verdict (PR 10): does this worker hold an idle warm
+    # instance of the invocation's function right now? None when the
+    # lifecycle layer is unarmed (no warm/cold distinction exists).
+    warm: Optional[bool] = None
 
     def __str__(self) -> str:  # pragma: no cover - cosmetic
         verdict = "valid" if self.valid else f"rejected — {self.reason}"
         if self.inevitable:
             verdict += " (statically inevitable)"
+        if self.warm is not None:
+            verdict += " [warm]" if self.warm else " [cold]"
         return f"{self.worker}: {verdict}"
 
 
@@ -251,6 +257,29 @@ def annotate_inevitable(
         blocks=tuple(blocks),
         inevitable_workers=tuple(sorted(doomed)),
     )
+
+
+def annotate_warmth(report: ExplainReport, is_warm) -> ExplainReport:
+    """Stamp every candidate's warm/cold verdict (armed platforms only).
+
+    ``is_warm`` maps a worker name to whether it holds an idle warm
+    instance of the report's function — the same ``warm_idle`` signal
+    the ``warm-first`` strategy ranks by, so the report shows exactly
+    the ordering evidence the scheduler saw.
+    """
+    blocks: List[BlockReport] = []
+    changed = False
+    for block in report.blocks:
+        candidates = []
+        for c in block.candidates:
+            candidates.append(
+                dataclasses.replace(c, warm=bool(is_warm(c.worker)))
+            )
+            changed = True
+        blocks.append(dataclasses.replace(block, candidates=tuple(candidates)))
+    if not changed:
+        return report
+    return dataclasses.replace(report, blocks=tuple(blocks))
 
 
 def _parse_candidate(detail: str) -> CandidateReport:

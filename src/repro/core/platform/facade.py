@@ -53,8 +53,10 @@ from repro.core.analysis import AnalysisReport, FederationView, analyze_plan
 from repro.core.platform.explain import (
     ExplainReport,
     annotate_inevitable,
+    annotate_warmth,
     build_explain_report,
 )
+from repro.core.platform.lifecycle import LifecycleManager, LifecycleSpec
 from repro.core.platform.overload import (
     AdmissionQueue,
     BrownoutController,
@@ -203,7 +205,8 @@ class Placement:
     __slots__ = ("invocation", "decision", "admitted", "completed",
                  "_watcher", "_ledger", "_worker_ref", "_generation",
                  "attempts", "retry_wait", "failed_workers",
-                 "_core", "queued", "queue_outcome", "queue_wait")
+                 "_core", "queued", "queue_outcome", "queue_wait",
+                 "warm_hit")
 
     def __init__(
         self,
@@ -243,6 +246,10 @@ class Placement:
         self.queued = False
         self.queue_outcome: Optional[str] = None
         self.queue_wait = 0.0
+        # Warm-pool layer (PR 10): did the admission reuse an idle warm
+        # instance? None when the lifecycle layer is unarmed or nothing
+        # was admitted; the simulator prices cold starts off this flag.
+        self.warm_hit: Optional[bool] = None
 
     @property
     def scheduled(self) -> bool:
@@ -330,6 +337,21 @@ class Placement:
         # else: the worker was evicted mid-run (deregistration or crash);
         # the eviction already reconciled this ticket.
         core = self._core
+        if retired and core is not None and core._lifecycle is not None:
+            # Park the instance back in its warm pool *before* the queue
+            # drain below, so a drained head routed onto this worker sees
+            # the warmth this completion just created. The lazy janitor
+            # tick runs first: deadlines ≤ now expire before the new
+            # instance parks (its own deadline is now + keep_alive).
+            lifecycle = core._lifecycle
+            if now is not None:
+                lifecycle.expire(now)
+            lifecycle.on_complete(
+                self._worker_ref,
+                self.invocation.function,
+                self.decision.controller,
+                now,
+            )
         if core is not None and core._overload_queues:
             # A slot was freed (or at least a ticket retired): give the
             # admission queues a chance to place their heads through the
@@ -379,6 +401,11 @@ class PlatformStats:
     queue_depth: int = 0         # entries currently waiting
     duplicate_completions: int = 0
     brownout_reroutes: int = 0   # placements served via the degraded plan
+    # Warm-pool lifecycle (PR 10); all zero while the layer is unarmed.
+    cold_starts: int = 0         # admissions that spawned a new instance
+    warm_hits: int = 0           # admissions that reused an idle instance
+    expirations: int = 0         # instances terminated (janitor + idle cap)
+    idle_instances: int = 0      # instances currently parked warm
 
 
 class PlatformCore:
@@ -405,6 +432,7 @@ class PlatformCore:
         retry: Optional[RetryPolicy] = None,
         lease: Optional[LeaseConfig] = None,
         overload: Optional[OverloadSpec] = None,
+        lifecycle: Optional[LifecycleSpec] = None,
     ) -> None:
         # ``watcher`` adopts an existing instance (the legacy-shim
         # migration path) instead of building one around ``cluster``.
@@ -414,6 +442,16 @@ class PlatformCore:
         if watcher is not None and lease is not None:
             self._watcher.configure_lease(lease)
         self._runtime = ControllerRuntime(self._watcher)
+        # Warm-pool lifecycle (PR 10), entirely dormant without a
+        # LifecycleSpec: no pools, no warmth journal events, and every
+        # hook site is one None check — the unarmed platform stays
+        # bit-identical to the pre-lifecycle one.
+        self._lifecycle = (
+            LifecycleManager(lifecycle, self._watcher.cluster)
+            if lifecycle is not None else None
+        )
+        if self._lifecycle is not None:
+            self._watcher.attach_lifecycle(self._lifecycle)
         # Zone-sharded admission ledger (PR 7): one counter shard per
         # worker zone, plus the ``None`` shard for un-admitted
         # placements. Writes are zone-local (each placement holds the
@@ -530,7 +568,21 @@ class PlatformCore:
         forwarding included) shows no admission sequence ever placing the
         tag on that worker — the operator-facing split between "policy
         can never work here" and "cluster is busy right now".
+
+        With the warm-pool lifecycle armed, every candidate is also
+        stamped warm/cold — the exact ``warm_idle`` evidence a
+        ``warm-first`` strategy ranked by at evaluation time.
         """
+        if self._lifecycle is not None:
+            workers = self._watcher.cluster.workers
+            fhash = report.invocation.hash
+
+            def _is_warm(name: str) -> bool:
+                worker = workers.get(name)
+                return (worker is not None
+                        and worker.warm_idle.get(fhash, 0) > 0)
+
+            report = annotate_warmth(report, _is_warm)
         handle = self._active
         if handle is None or not handle.script.tags:
             return report
@@ -624,6 +676,10 @@ class PlatformCore:
             coerced = ControllerSpec.coerce(spec)
             if coerced.retry is not None:
                 self._controller_retry[coerced.name] = coerced.retry
+            if coerced.keep_alive is not None and self._lifecycle is not None:
+                self._lifecycle.set_controller_keep_alive(
+                    coerced.name, coerced.keep_alive
+                )
             controller = coerced.build()
         self._watcher.register_controller(controller)
 
@@ -631,16 +687,23 @@ class PlatformCore:
         """Deregister a controller (drained by the watcher before removal,
         symmetric to :meth:`remove_worker`)."""
         self._controller_retry.pop(name, None)
+        if self._lifecycle is not None:
+            self._lifecycle.forget_controller(name)
         self._watcher.deregister_controller(name)
 
     def _adopt_controller_policies(
         self, controllers: Iterable[ControllerSpec]
     ) -> None:
-        """Collect per-controller retry policies from declarative specs
-        (the constructor path, where the cluster is built wholesale)."""
+        """Collect per-controller retry policies (and lifecycle
+        keep-alive overrides) from declarative specs (the constructor
+        path, where the cluster is built wholesale)."""
         for spec in controllers:
             if spec.retry is not None:
                 self._controller_retry[spec.name] = spec.retry
+            if spec.keep_alive is not None and self._lifecycle is not None:
+                self._lifecycle.set_controller_keep_alive(
+                    spec.name, spec.keep_alive
+                )
 
     def drain(self, name: str) -> None:
         """Stop new admissions on a worker; running work keeps completing.
@@ -1044,15 +1107,16 @@ class PlatformCore:
 
     def _admit(
         self, invocation: Invocation, decision: ScheduleDecision
-    ) -> Tuple[Optional[WorkerState], _Ledger]:
+    ) -> Tuple[Optional[WorkerState], _Ledger, Optional[bool]]:
         """Record a scheduled decision's admission ticket (the single
         admission point of both façades); returns the live worker the
-        ticket was taken on (None: nothing to admit) plus the ledger
-        shard the ticket was charged to — the placement completes
-        against exactly that shard."""
+        ticket was taken on (None: nothing to admit), the ledger shard
+        the ticket was charged to — the placement completes against
+        exactly that shard — and the warm-pool verdict (did the armed
+        lifecycle reuse an idle instance? None unarmed/unadmitted)."""
         worker = decision.worker
         if worker is None:
-            return None, self._ledgers[None]
+            return None, self._ledgers[None], None
         ticket_worker = self._watcher.record_admission(
             worker, decision.controller or "?", invocation.function
         )
@@ -1060,7 +1124,12 @@ class PlatformCore:
             ticket_worker.zone if ticket_worker is not None else None
         )
         ledger.add_admitted()
-        return ticket_worker, ledger
+        warm_hit: Optional[bool] = None
+        if self._lifecycle is not None and ticket_worker is not None:
+            warm_hit = self._lifecycle.on_admit(
+                ticket_worker, invocation.function
+            )
+        return ticket_worker, ledger, warm_hit
 
     def place(
         self, invocation: Invocation, decision: ScheduleDecision
@@ -1071,11 +1140,45 @@ class PlatformCore:
         also usable directly with an externally-routed decision (legacy
         scheduler adapters).
         """
-        worker_ref, ledger = self._admit(invocation, decision)
+        worker_ref, ledger, warm_hit = self._admit(invocation, decision)
         placement = Placement(invocation, decision, worker_ref is not None,
                               self._watcher, ledger, worker_ref)
         placement._core = self
+        placement.warm_hit = warm_hit
         return placement
+
+    # -- warm-pool lifecycle (PR 10) ----------------------------------------------
+
+    @property
+    def lifecycle_spec(self) -> Optional[LifecycleSpec]:
+        return self._lifecycle.spec if self._lifecycle is not None else None
+
+    @property
+    def lifecycle(self) -> Optional[LifecycleManager]:
+        """The armed lifecycle manager (None: layer off). Read-mostly —
+        the admission hooks feed it; callers tick the janitor via
+        :meth:`expire_instances` and read :meth:`lifecycle_snapshot`."""
+        return self._lifecycle
+
+    def expire_instances(self, now: float) -> int:
+        """Run the warm-pool expiration janitor up to ``now`` (explicit
+        clock, same discipline as :meth:`check_leases`); returns the
+        number of idle instances terminated. No-op (0) unarmed. The
+        armed ``invoke``/``complete`` paths also run this lazily
+        whenever they are handed a clock, so calling it directly is
+        only needed to expire pools across idle gaps."""
+        if self._lifecycle is None:
+            return 0
+        return self._lifecycle.expire(now)
+
+    def lifecycle_snapshot(self) -> Dict[str, int]:
+        """Warm-pool counters + occupancy (all-zero mapping unarmed)."""
+        if self._lifecycle is None:
+            return {
+                "cold_starts": 0, "warm_hits": 0, "expirations": 0,
+                "idle_instances": 0, "busy_instances": 0, "pools": 0,
+            }
+        return self._lifecycle.snapshot()
 
     # -- overload layer (PR 9) ----------------------------------------------------
 
@@ -1205,9 +1308,12 @@ class PlatformCore:
         )
         if not decision.scheduled:
             return None
-        worker_ref, ledger = self._admit(placement.invocation, decision)
+        worker_ref, ledger, warm_hit = self._admit(
+            placement.invocation, decision
+        )
         placement._rebind(decision, worker_ref is not None, ledger,
                           worker_ref)
+        placement.warm_hit = warm_hit
         self._brownout_reroutes += 1
         return placement
 
@@ -1239,10 +1345,13 @@ class PlatformCore:
                     if not decision.scheduled:
                         break
                     queue.remove(head, drained=True)
-                    worker_ref, ledger = self._admit(invocation, decision)
+                    worker_ref, ledger, warm_hit = self._admit(
+                        invocation, decision
+                    )
                     drained = head.placement
                     drained._rebind(decision, worker_ref is not None,
                                     ledger, worker_ref)
+                    drained.warm_hit = warm_hit
                     drained.queue_outcome = "drained"
                     if now is not None and head.enqueued_at is not None:
                         drained.queue_wait = now - head.enqueued_at
@@ -1309,6 +1418,13 @@ class PlatformCore:
             completed += c
             evicted += e
         queued, shed, expired, depth = self._queue_totals()
+        cold_starts = warm_hits = expirations = idle_instances = 0
+        if self._lifecycle is not None:
+            pools = self._lifecycle.snapshot()
+            cold_starts = pools["cold_starts"]
+            warm_hits = pools["warm_hits"]
+            expirations = pools["expirations"]
+            idle_instances = pools["idle_instances"]
         return PlatformStats(
             routed=routed,
             tapp_routed=tapp_routed,
@@ -1335,6 +1451,10 @@ class PlatformCore:
             queue_depth=depth,
             duplicate_completions=self._duplicate_completions,
             brownout_reroutes=self._brownout_reroutes,
+            cold_starts=cold_starts,
+            warm_hits=warm_hits,
+            expirations=expirations,
+            idle_instances=idle_instances,
         )
 
     @staticmethod
@@ -1382,6 +1502,7 @@ class TappPlatform(PlatformCore):
         retry: Optional[RetryPolicy] = None,
         lease: Optional[LeaseConfig] = None,
         overload: Optional[OverloadSpec] = None,
+        lifecycle: Optional[LifecycleSpec] = None,
     ) -> None:
         if isinstance(spec, ClusterState):
             cluster = spec
@@ -1397,6 +1518,7 @@ class TappPlatform(PlatformCore):
             retry=retry,
             lease=lease,
             overload=overload,
+            lifecycle=lifecycle,
         )
         if isinstance(spec, ClusterSpec):
             self._adopt_controller_policies(spec.controllers)
@@ -1473,6 +1595,10 @@ class TappPlatform(PlatformCore):
         """
         invocation = self._coerce_invocation(function, tag, model_id,
                                              request_id)
+        if self._lifecycle is not None and now is not None:
+            # Lazy janitor: expire stale warm instances before routing,
+            # so warm-first ranks against the warmth that exists at now.
+            self._lifecycle.expire(now)
         placement = self.place(invocation, self._gateway.route(invocation,
                                                                trace=trace))
         if placement.scheduled:
@@ -1583,6 +1709,11 @@ class TappPlatform(PlatformCore):
             inv if isinstance(inv, Invocation) else Invocation(function=inv)
             for inv in invocations
         ]
+        if self._lifecycle is not None and now is not None:
+            # One janitor tick for the whole batch: the batch resolves
+            # against a single snapshot, so warmth expires once, up
+            # front, exactly like a sequence of invokes at equal now.
+            self._lifecycle.expire(now)
         placements: List[Placement] = []
         queue_armed = (
             self._overload is not None and self._overload.queue is not None

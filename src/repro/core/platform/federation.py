@@ -58,6 +58,7 @@ from repro.core.platform.facade import (
     PlatformStats,
     PolicyInput,
 )
+from repro.core.platform.lifecycle import LifecycleSpec
 from repro.core.platform.overload import OverloadSpec
 from repro.core.platform.specs import FederationSpec, RetryPolicy
 from repro.core.tapp.ast import TappScript
@@ -212,6 +213,7 @@ class TappFederation(PlatformCore):
         retry: Optional[RetryPolicy] = None,
         lease: Optional[LeaseConfig] = None,
         overload: Optional[OverloadSpec] = None,
+        lifecycle: Optional[LifecycleSpec] = None,
     ) -> None:
         if not isinstance(spec, FederationSpec):
             raise TypeError(
@@ -229,6 +231,7 @@ class TappFederation(PlatformCore):
             retry=retry,
             lease=lease,
             overload=overload,
+            lifecycle=lifecycle,
         )
         self._adopt_controller_policies(spec.merged().controllers)
         self._spec = spec
@@ -601,6 +604,10 @@ class TappFederation(PlatformCore):
         invocation = self._coerce_invocation(function, tag, model_id,
                                              request_id)
         entry = self._resolve_entry(entry_zone)
+        if self._lifecycle is not None and now is not None:
+            # Lazy janitor tick, same as the flat façade: stale warm
+            # instances expire before any zone ranks by warmth.
+            self._lifecycle.expire(now)
         self._entered[entry] += 1
         decision, hops = self._route_from(entry, invocation, trace)
         attempts, waited = 1, 0.0
@@ -618,12 +625,13 @@ class TappFederation(PlatformCore):
                                                       trace)
                     all_hops.extend(hops)
                 hops = tuple(all_hops)
-        worker_ref, ledger = self._admit(invocation, decision)
+        worker_ref, ledger, warm_hit = self._admit(invocation, decision)
         placement = FederatedPlacement(
             invocation, decision, worker_ref is not None, self._watcher,
             ledger, entry, hops, worker_ref,
         )
         placement._core = self
+        placement.warm_hit = warm_hit
         placement.attempts = attempts
         placement.retry_wait = waited
         # Queue armed → park in the entry zone's queue instead of failing
@@ -667,12 +675,13 @@ class TappFederation(PlatformCore):
         decision, hops = self._masked_route(
             failed, lambda: self._route_from(entry, invocation, False)
         )
-        worker_ref, ledger = self._admit(invocation, decision)
+        worker_ref, ledger, warm_hit = self._admit(invocation, decision)
         replacement = FederatedPlacement(
             invocation, decision, worker_ref is not None, self._watcher,
             ledger, entry, hops, worker_ref,
         )
         replacement._core = self
+        replacement.warm_hit = warm_hit
         replacement.attempts = placement.attempts + 1
         replacement.retry_wait = (
             placement.retry_wait + policy.backoff(placement.attempts)

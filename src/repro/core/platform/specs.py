@@ -79,7 +79,13 @@ class RetryPolicy:
 
 @dataclasses.dataclass(frozen=True)
 class WorkerSpec:
-    """Declarative description of one worker (model replica / invoker)."""
+    """Declarative description of one worker (model replica / invoker).
+
+    ``keep_alive`` overrides the platform's
+    :class:`~repro.core.platform.lifecycle.LifecycleSpec` keep-alive
+    window for instances pooled on this worker (None: inherit; inert
+    when the lifecycle layer is unarmed).
+    """
 
     name: str
     zone: str = "default"
@@ -88,6 +94,13 @@ class WorkerSpec:
     resident_models: Tuple[str, ...] = ()
     memory_bytes: int = _DEFAULT_MEMORY
     perf_factor: float = 1.0
+    keep_alive: Optional[float] = None
+
+    def __post_init__(self) -> None:
+        if self.keep_alive is not None and self.keep_alive <= 0:
+            raise ValueError(
+                f"keep_alive must be positive, got {self.keep_alive}"
+            )
 
     def build(self) -> WorkerState:
         return WorkerState(
@@ -98,6 +111,7 @@ class WorkerSpec:
             resident_models=frozenset(self.resident_models),
             memory_bytes=self.memory_bytes,
             perf_factor=self.perf_factor,
+            keep_alive=self.keep_alive,
         )
 
     @classmethod
@@ -115,6 +129,7 @@ class WorkerSpec:
                 resident_models=tuple(sorted(value.resident_models)),
                 memory_bytes=value.memory_bytes,
                 perf_factor=value.perf_factor,
+                keep_alive=value.keep_alive,
             )
         fields = dict(value)
         for key in ("sets", "resident_models"):
@@ -131,11 +146,21 @@ class ControllerSpec:
     schedules (None: the platform-level default, if any). It is platform
     configuration, not live state — :class:`ControllerState` does not
     carry it; the platform façade resolves it per placement.
+    ``keep_alive`` likewise overrides the platform lifecycle's
+    keep-alive window for instances completed under this controller
+    (resolution: worker > controller > spec default; inert unarmed).
     """
 
     name: str
     zone: str = "default"
     retry: Optional[RetryPolicy] = None
+    keep_alive: Optional[float] = None
+
+    def __post_init__(self) -> None:
+        if self.keep_alive is not None and self.keep_alive <= 0:
+            raise ValueError(
+                f"keep_alive must be positive, got {self.keep_alive}"
+            )
 
     def build(self) -> ControllerState:
         return ControllerState(name=self.name, zone=self.zone)

@@ -34,7 +34,9 @@ make a batch decision a couple of dict hits:
   controller-list sites it visits.
 
 * **Intra-batch admission correction.** Outcome records are valid only
-  under an unchanged ``(topology_epoch, load total)`` token. When an
+  under an unchanged ``(topology_epoch, load total, warm seq)`` token
+  (the warm-event sequence is part of the token because a lifecycle
+  janitor expiry changes warm-first outcomes *without* a load event). When an
   ``on_decision`` callback admits a placement mid-batch (the platform
   does, for every scheduled item), the token moves: cached outcomes and
   planes are dropped and the remaining items are solved freshly against
@@ -129,7 +131,7 @@ class BatchRouter:
         self._scheduled_outcome = None
         self._failed_outcome = None
         self._plan = None
-        self._token: Tuple[int, int] = (-1, -1)
+        self._token: Tuple[int, int, int] = (-1, -1, -1)
         self._churn = False
         # (tag, hash, proto) of the last zero-delta replay, for the
         # identical-run fast path in route_batch; None when the last
@@ -183,20 +185,23 @@ class BatchRouter:
         # residue records directly, skipping tag dispatch, cache-key
         # construction, and the outcome-cache lookup per item.
         reuse_tag = reuse_hash = reuse_records = None
-        epoch, load = self._token
+        epoch, load, warm = self._token
         for inv in invocations:
             if (
                 cluster.topology_epoch != epoch
                 or cluster._load_total != load
+                or cluster._warm_total != warm
             ):
                 # State moved mid-batch (on_decision admissions, epoch
-                # bumps): drop memoized outcomes and planes, re-solve the
-                # rest against the synced masks with scalar picks.
+                # bumps, warm-pool flips): drop memoized outcomes and
+                # planes, re-solve the rest against the synced masks
+                # with scalar picks.
                 epoch = cluster.topology_epoch
                 load = cluster._load_total
+                warm = cluster._warm_total
                 self._outcomes.clear()
                 self._planes.clear()
-                self._token = (epoch, load)
+                self._token = (epoch, load, warm)
                 self._churn = True
                 reuse_records = None
             decision = None
@@ -231,7 +236,9 @@ class BatchRouter:
         return decisions
 
     def _sync_token(self, cluster: ClusterState) -> None:
-        token = (cluster.topology_epoch, cluster._load_total)
+        token = (
+            cluster.topology_epoch, cluster._load_total, cluster._warm_total
+        )
         if token != self._token:
             self._outcomes.clear()
             self._planes.clear()
@@ -363,6 +370,10 @@ class BatchRouter:
             return items
         if strategy is Strategy.PLATFORM:
             return [items[i] for i in coprime_order_cached(len(items), fhash)]
+        if strategy is Strategy.WARM_FIRST:
+            # Tag-level warm-first is a validation error; every reference
+            # path degrades it to best_first, so mirror that here.
+            return items
         if len(items) >= 2:
             raise _NeedsScalar  # random over ≥2 items draws
         return items  # random over one item: zero draws, identity order
@@ -472,13 +483,20 @@ class BatchRouter:
         sets = cblock.sets
         n_items = len(sets)
         strategy = cblock.strategy
+        indexes = bindex.sets
         if strategy is Strategy.BEST_FIRST or n_items <= 1:
             item_order: Sequence[int] = range(n_items)
         elif strategy is Strategy.PLATFORM:
             item_order = coprime_order_cached(n_items, fhash)
+        elif strategy is Strategy.WARM_FIRST:
+            # Stable warm partition over set items — same ordering (and
+            # zero draws) as the scalar paths.
+            item_order = sorted(
+                range(n_items),
+                key=lambda i: not indexes[i].has_warm(cluster, fhash),
+            )
         else:
             raise _NeedsScalar  # random over ≥2 set items draws
-        indexes = bindex.sets
         for ipos in item_order:
             pos = self._solve_pick(
                 indexes[ipos], sets[ipos].strategy, fhash, cluster
@@ -512,6 +530,19 @@ class BatchRouter:
             return None
         if strategy is Strategy.PLATFORM:
             return self._pick_platform_vec(idx, avail, fhash)
+        if strategy is Strategy.WARM_FIRST:
+            # Pure bit ops, mirroring the scalar engine's pick: warm
+            # locals, cold locals, warm foreigns, cold foreigns.
+            warm = idx.warm_mask(cluster, fhash) & avail
+            if warm:
+                local = idx.local_mask
+                wl = warm & local
+                if wl:
+                    return (wl & -wl).bit_length() - 1
+                al = avail & local
+                if al:
+                    return (al & -al).bit_length() - 1
+                return (warm & -warm).bit_length() - 1
         return (avail & -avail).bit_length() - 1  # BEST_FIRST
 
     # -- mask-plane kernel picks --------------------------------------------

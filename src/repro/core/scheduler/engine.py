@@ -170,6 +170,77 @@ class Invocation:
 OnDecision = Callable[[Invocation, ScheduleDecision], None]
 
 
+# -- warm-first orderings (stable partitions, zero RNG draws) ---------------
+#
+# The warm-pool lifecycle (platform/lifecycle.py) maintains
+# WorkerState.warm_idle; with no lifecycle armed every count is 0, every
+# partition is the identity, and warm-first degenerates to best_first
+# exactly — which is what keeps the unconfigured path bit-identical.
+
+
+def _warm_view_order(views, fhash: int):
+    """One tier's views, warm candidates first (stable within each half)."""
+    warm = [v for v in views if v.worker.warm_idle.get(fhash, 0) > 0]
+    if not warm:
+        return views
+    warm.extend(v for v in views if v.worker.warm_idle.get(fhash, 0) <= 0)
+    return warm
+
+
+def _warm_worker_order(workers, fhash: int):
+    """One tier's workers, warm first (interpreter set expansion)."""
+    warm = [w for w in workers if w.warm_idle.get(fhash, 0) > 0]
+    if not warm:
+        return workers
+    warm.extend(w for w in workers if w.warm_idle.get(fhash, 0) <= 0)
+    return warm
+
+
+def _warm_item_order(items, by_name, fhash: int):
+    """A wrk item list, items whose worker is warm first (ghost or
+    out-of-view labels count as cold)."""
+    warm, cold = [], []
+    for item in items:
+        view = by_name.get(item.label)
+        if view is not None and view.worker.warm_idle.get(fhash, 0) > 0:
+            warm.append(item)
+        else:
+            cold.append(item)
+    warm.extend(cold)
+    return warm
+
+
+def _warm_set_order(items, entry, fhash: int):
+    """Set items with any warm member first (compiled traced path)."""
+    warm, cold = [], []
+    for item in items:
+        local, foreign = entry.set_members(item.label)
+        if any(
+            v.worker.warm_idle.get(fhash, 0) > 0 for v in local
+        ) or any(v.worker.warm_idle.get(fhash, 0) > 0 for v in foreign):
+            warm.append(item)
+        else:
+            cold.append(item)
+    warm.extend(cold)
+    return warm
+
+
+def _interp_warm_set_order(items, views, fhash: int):
+    """Set items with any warm member first (interpreter path)."""
+    warm, cold = [], []
+    for item in items:
+        if any(
+            v.worker.in_set(item.label)
+            and v.worker.warm_idle.get(fhash, 0) > 0
+            for v in views
+        ):
+            warm.append(item)
+        else:
+            cold.append(item)
+    warm.extend(cold)
+    return warm
+
+
 class TappEngine:
     """Stateless policy evaluator (all mutable state lives in the cluster
     snapshot and in the RNG/cursors the caller owns)."""
@@ -597,7 +668,11 @@ class TappEngine:
 
         if not cblock.uses_sets:
             by_name = entry.by_name
-            for item in self._c_ordered(cblock.wrks, cblock.strategy, fhash):
+            if cblock.strategy is Strategy.WARM_FIRST:
+                items = _warm_item_order(cblock.wrks, by_name, fhash)
+            else:
+                items = self._c_ordered(cblock.wrks, cblock.strategy, fhash)
+            for item in items:
                 view = by_name.get(item.label)
                 if view is None:
                     # Unknown label or filtered out by the zone restriction
@@ -620,7 +695,11 @@ class TappEngine:
         # come from the epoch-cached per-set expansion. Random tiers are
         # drawn lazily (iter_random), so RNG consumption stops at the
         # first valid candidate on every path.
-        for item in self._c_ordered(cblock.sets, cblock.strategy, fhash):
+        if cblock.strategy is Strategy.WARM_FIRST:
+            set_items = _warm_set_order(cblock.sets, entry, fhash)
+        else:
+            set_items = self._c_ordered(cblock.sets, cblock.strategy, fhash)
+        for item in set_items:
             local, foreign = entry.set_members(item.label)
             inner = item.strategy
             if inner is Strategy.RANDOM:
@@ -632,6 +711,12 @@ class TappEngine:
                 groups = (
                     [local[i] for i in coprime_order_cached(len(local), fhash)],
                     [foreign[i] for i in coprime_order_cached(len(foreign), fhash)],
+                )
+            elif inner is Strategy.WARM_FIRST:
+                # Warm partition within each tier; zero RNG draws.
+                groups = (
+                    _warm_view_order(local, fhash),
+                    _warm_view_order(foreign, fhash),
                 )
             else:  # BEST_FIRST: view order (local-first, insertion order)
                 groups = (local, foreign)
@@ -669,13 +754,19 @@ class TappEngine:
         sets = cblock.sets
         n_items = len(sets)
         strategy = cblock.strategy
+        indexes = bindex.sets
         if strategy is Strategy.BEST_FIRST or n_items <= 1:
             item_order: Sequence[int] = range(n_items)
         elif strategy is Strategy.PLATFORM:
             item_order = coprime_order_cached(n_items, fhash)
+        elif strategy is Strategy.WARM_FIRST:
+            # Stable partition: set items with any warm member first.
+            item_order = sorted(
+                range(n_items),
+                key=lambda i: not indexes[i].has_warm(cluster, fhash),
+            )
         else:  # RANDOM: same lazy draw sequence as ordering the items
             item_order = iter_random(range(n_items), self._rng)
-        indexes = bindex.sets
         for ipos in item_order:
             pos = self._c_pick(indexes[ipos], sets[ipos].strategy, fhash,
                                cluster)
@@ -701,6 +792,21 @@ class TappEngine:
             return None  # e.g. fully saturated: O(1), no rescan
         if strategy is Strategy.PLATFORM:
             return idx.pick_platform(avail, fhash)
+        if strategy is Strategy.WARM_FIRST:
+            # Warm partition per tier: warm locals, cold locals, warm
+            # foreigns, cold foreigns — pure bit ops, zero RNG draws.
+            # With no lifecycle armed the warm mask is 0 and this is
+            # exactly the BEST_FIRST lowest-bit pick.
+            warm = idx.warm_mask(cluster, fhash) & avail
+            if warm:
+                local = idx.local_mask
+                wl = warm & local
+                if wl:
+                    return (wl & -wl).bit_length() - 1
+                al = avail & local
+                if al:
+                    return (al & -al).bit_length() - 1
+                return (warm & -warm).bit_length() - 1
         return (avail & -avail).bit_length() - 1  # BEST_FIRST: lowest bit
 
     def _c_try(
@@ -748,6 +854,11 @@ class TappEngine:
         if strategy is Strategy.PLATFORM:
             order = coprime_order_cached(len(items), fhash)
             return (items[i] for i in order)
+        if strategy is Strategy.WARM_FIRST:
+            # Only reachable at tag level (blocks have no single warmth);
+            # the validator rejects it there, so treat defensively as
+            # best_first. Block/set warm-first is handled at call sites.
+            return items
         return iter_random(items, self._rng)
 
     # ======================================================================
@@ -1121,12 +1232,18 @@ class TappEngine:
         """
         if not block.uses_sets:
             # Explicit wrk list: the block-level strategy orders the list.
-            items = iter_ordered(
-                list(block.workers),
-                block.strategy or Strategy.BEST_FIRST,
-                rng=self._rng,
-                function_hash=invocation.hash,
-            )
+            strategy = block.strategy or Strategy.BEST_FIRST
+            if strategy is Strategy.WARM_FIRST:
+                items = _warm_item_order(
+                    list(block.workers), view_map, invocation.hash
+                )
+            else:
+                items = iter_ordered(
+                    list(block.workers),
+                    strategy,
+                    rng=self._rng,
+                    function_hash=invocation.hash,
+                )
             for item in items:
                 assert isinstance(item, WorkerRef)
                 view = view_map.get(item.label)
@@ -1142,12 +1259,18 @@ class TappEngine:
         # Set list: block-level strategy orders the *set items*; each set's
         # inner strategy orders its members. Distribution-view tiering
         # (local-first) is preserved within each set expansion.
-        set_items = iter_ordered(
-            list(block.workers),
-            block.strategy or Strategy.BEST_FIRST,
-            rng=self._rng,
-            function_hash=invocation.hash,
-        )
+        strategy = block.strategy or Strategy.BEST_FIRST
+        if strategy is Strategy.WARM_FIRST:
+            set_items = _interp_warm_set_order(
+                list(block.workers), views, invocation.hash
+            )
+        else:
+            set_items = iter_ordered(
+                list(block.workers),
+                strategy,
+                rng=self._rng,
+                function_hash=invocation.hash,
+            )
         for item in set_items:
             assert isinstance(item, WorkerSet)
             members = [v for v in views if v.worker.in_set(item.label)]
@@ -1155,6 +1278,12 @@ class TappEngine:
             foreign = [v.worker for v in members if not v.local]
             inner = item.strategy or Strategy.PLATFORM  # the platform default
             spec = resolve_constraints(item, block)
+            if inner is Strategy.WARM_FIRST:
+                for worker in _warm_worker_order(local, invocation.hash):
+                    yield worker, spec
+                for worker in _warm_worker_order(foreign, invocation.hash):
+                    yield worker, spec
+                continue
             for worker in iter_ordered(
                 local, inner, rng=self._rng, function_hash=invocation.hash
             ):

@@ -92,6 +92,18 @@ class WorkerState:
     # at admission so a ticket can never retire against a later
     # incarnation's counters.
     generation: int = 0
+    # Warm-pool occupancy: function hash -> count of IDLE (reusable)
+    # instances on this worker. Maintained by the platform lifecycle
+    # manager (``platform/lifecycle.py``) — empty unless a lifecycle is
+    # armed. Volatile like ``inflight`` (never bumps the topology epoch);
+    # 0<->1 transitions are reported via
+    # :meth:`ClusterState.note_worker_warmth` so the per-epoch candidate
+    # indexes can refresh their warm bitmasks incrementally.
+    warm_idle: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # Per-worker keep-alive override (seconds an IDLE instance survives);
+    # None defers to the controller-/spec-level default. Volatile: set at
+    # registration from WorkerSpec.keep_alive, read by the lifecycle.
+    keep_alive: Optional[float] = None
 
     @property
     def suspect(self) -> bool:
@@ -127,6 +139,10 @@ class WorkerState:
     def running_count(self, function: str) -> int:
         """Admitted invocations of ``function`` currently on this worker."""
         return self.running_functions.get(function, 0)
+
+    def warm_for(self, fhash: int) -> bool:
+        """True when an IDLE instance of the hashed function is poolable."""
+        return self.warm_idle.get(fhash, 0) > 0
 
 
 @dataclasses.dataclass
@@ -248,6 +264,21 @@ class ClusterState:
     _journal_lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False, compare=False
     )
+    # Warm-pool event journal: ``(worker_name, fhash)`` entries appended
+    # whenever a worker's IDLE-instance count for a function crosses the
+    # 0<->1 boundary (the only transitions that can flip a warm-bitmask
+    # bit). One merged journal, not zone-sharded: warm events exist only
+    # when a lifecycle is armed and are far rarer than load events, so
+    # replay cost is negligible — and expirations fire from a janitor,
+    # not from a zone entrypoint, so there is no natural shard writer.
+    _warm_journal: _LoadShard = dataclasses.field(
+        default_factory=_LoadShard, repr=False, compare=False
+    )
+    # Advisory total of warm events (the warm analogue of _load_total).
+    # Part of the batch router's memo validity token: a janitor expiry
+    # changes warmth WITHOUT a load event, so load cursors alone would
+    # replay stale warm-first outcomes.
+    _warm_total: int = 0
     # Per-epoch memo for the derived topology queries (workers_in_set /
     # set_labels / zones); cleared with the view cache.
     _query_cache: Dict = dataclasses.field(
@@ -345,6 +376,30 @@ class ClusterState:
                 journal.trimmed += len(log)
                 journal.log = []
             self._load_total += 1
+
+    # -- warm-pool event journal --------------------------------------------
+
+    @property
+    def warm_seq(self) -> int:
+        """Monotonic count of warm-bit flip events recorded so far."""
+        return self._warm_total
+
+    def note_worker_warmth(self, name: str, fhash: int) -> None:
+        """Record that ``name``'s warm bit for ``fhash`` flipped (0<->1).
+
+        Called by the lifecycle manager under its own lock whenever an
+        idle-instance count crosses the 0/1 boundary. The journal lock
+        keeps ``journal.seq == _warm_total`` under concurrent callers,
+        mirroring :meth:`note_worker_load`.
+        """
+        with self._journal_lock:
+            journal = self._warm_journal
+            log = journal.log
+            log.append((name, fhash))
+            if len(log) > _LOAD_LOG_LIMIT:
+                journal.trimmed += len(log)
+                journal.log = []
+            self._warm_total += 1
 
     # -- membership ---------------------------------------------------------
 

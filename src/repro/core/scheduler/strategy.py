@@ -144,6 +144,12 @@ def iter_ordered(
     if strategy is Strategy.PLATFORM:
         order = coprime_order_cached(len(items), function_hash)
         return (items[i] for i in order)
+    if strategy is Strategy.WARM_FIRST:
+        # Warm-first is warmth-aware and is ordered at the engine's call
+        # sites (it needs worker pool state this module never sees). The
+        # only route here is a tag-level warm-first — a validation error
+        # — so degrade to the best_first identity order.
+        return items
     raise ValueError(f"unknown strategy {strategy!r}")
 
 

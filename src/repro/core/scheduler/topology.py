@@ -322,6 +322,11 @@ class ItemIndex:
         "_replay_limit",
         "_bits",
         "_single_zone",
+        "_warm_masks",
+        "_warm_synced",
+        "_warm_positions",
+        "_warm_by_worker",
+        "local_mask",
     )
 
     def __init__(self, candidates, n_local: int) -> None:
@@ -332,6 +337,9 @@ class ItemIndex:
         self.serial = next(_ITEM_INDEX_SERIAL)
         self.n = len(candidates)
         self.n_local = n_local
+        # Local-tier bit mask (wrk lists are untiered: every position is
+        # "local"); the warm-first pick partitions within each tier.
+        self.local_mask = (1 << n_local) - 1
         self.workers = [c[0] for c in candidates]
         self.views = [c[1] for c in candidates]
         self.dyns = [c[3] for c in candidates]
@@ -388,6 +396,22 @@ class ItemIndex:
         self._scratch_local: Optional[List[int]] = None
         self._scratch_foreign: Optional[List[int]] = None
         self.avail = 0
+        # Warm bitmasks, one per function hash, over ALL non-None
+        # positions (not just static survivors): the interpreter's
+        # warm-first partition orders the raw candidate list before
+        # validity is tried, so the mask must agree on every position.
+        # Extra bits are harmless to picks (they AND with avail).
+        # Maintained incrementally against the cluster's warm journal.
+        self._warm_masks: Dict[int, int] = {}
+        self._warm_synced = 0
+        warm_positions = [
+            pos for pos, c in enumerate(candidates) if c[0] is not None
+        ]
+        self._warm_positions = warm_positions
+        warm_by: Dict[str, List[int]] = {}
+        for pos in warm_positions:
+            warm_by.setdefault(self.workers[pos].name, []).append(pos)
+        self._warm_by_worker = {k: tuple(v) for k, v in warm_by.items()}
 
     def static_survivors(self):
         """``(position, worker, saturation cap)`` of every static survivor.
@@ -604,6 +628,80 @@ class ItemIndex:
         if pos is None:
             pos = _draw_first_avail(self._scratch_foreign, avail, rng)
         return pos
+
+    # -- warm bitmasks (warm-first strategy) --------------------------------
+
+    def _warm_recompute(self, fhash: int) -> int:
+        """Derive one function's warm mask from live worker pool counts."""
+        mask = 0
+        workers = self.workers
+        bits = self._bits
+        for pos in self._warm_positions:
+            if workers[pos].warm_idle.get(fhash, 0) > 0:
+                mask |= bits[pos]
+        self._warm_masks[fhash] = mask
+        return mask
+
+    def _warm_replay(self, log, start: int) -> None:
+        by = self._warm_by_worker
+        masks = self._warm_masks
+        workers = self.workers
+        bits = self._bits
+        for i in range(start, len(log)):
+            name, fh = log[i]
+            cur = masks.get(fh)
+            if cur is None:
+                # Untracked function: its mask is fully recomputed on
+                # first request, so the event needs no replay.
+                continue
+            positions = by.get(name)
+            if positions is None:
+                continue
+            for pos in positions:
+                if workers[pos].warm_idle.get(fh, 0) > 0:
+                    cur |= bits[pos]
+                else:
+                    cur &= ~bits[pos]
+            masks[fh] = cur
+
+    def warm_mask(self, cluster: ClusterState, fhash: int) -> int:
+        """Bit i set iff candidate i holds an IDLE warm instance of
+        ``fhash``'s function.
+
+        Incremental like :meth:`refresh`: replays the cluster's merged
+        warm journal (``(name, fhash)`` events, emitted only on 0<->1
+        pool-count flips) from the last synced cursor; over-trimmed or
+        oversized windows fall back to a per-tracked-function recompute.
+        With no lifecycle armed the journal never moves and every mask
+        is the cached 0 — one dict hit per decision.
+        """
+        total = cluster._warm_total
+        masks = self._warm_masks
+        if total != self._warm_synced:
+            journal = cluster._warm_journal
+            # Same trimmed-then-log capture order as refresh(): a torn
+            # read across compaction looks over-trimmed and recomputes.
+            trimmed = journal.trimmed
+            log = journal.log
+            synced = self._warm_synced
+            if masks:
+                if synced < trimmed or total - synced >= self._replay_limit:
+                    for fh in list(masks):
+                        self._warm_recompute(fh)
+                else:
+                    self._warm_replay(log, synced - trimmed)
+            self._warm_synced = total
+        mask = masks.get(fhash)
+        if mask is None:
+            if len(masks) >= _PLATFORM_ORDER_CACHE:
+                masks.clear()
+            mask = self._warm_recompute(fhash)
+        return mask
+
+    def has_warm(self, cluster: ClusterState, fhash: int) -> bool:
+        """Any candidate (valid or not) holds a warm instance — the
+        set-item ordering key of a block-level ``warm-first``."""
+        return self.warm_mask(cluster, fhash) != 0
 
     def platform_order(self, fhash: int) -> List[int]:
         """The flat per-fhash co-prime trial order over static survivors.

@@ -112,6 +112,10 @@ class Watcher:
         # Last-heartbeat timestamps, per worker. Leases are opt-in: a
         # worker enters the detector on its first heartbeat_lease().
         self._leases: Dict[str, float] = {}
+        # Warm-pool lifecycle manager (PR 10), attached by an armed
+        # platform so worker removal forgets the worker's instances —
+        # an instance never outlives its worker. None when unarmed.
+        self._lifecycle = None
 
     # -- subscriptions ---------------------------------------------------------
 
@@ -128,6 +132,12 @@ class Watcher:
     @property
     def cluster(self) -> ClusterState:
         return self._cluster
+
+    def attach_lifecycle(self, manager) -> None:
+        """Bind the platform's warm-pool lifecycle manager (PR 10) so
+        deregistration and DEAD transitions forget the worker's
+        instances in the same breath as the eviction."""
+        self._lifecycle = manager
 
     def _zone_lock(self, zone: str) -> threading.Lock:
         lock = self._zone_locks.get(zone)
@@ -164,6 +174,10 @@ class Watcher:
                     worker.reachable = False
                     self._cluster.remove_worker(name)
             self._leases.pop(name, None)
+        if worker is not None and self._lifecycle is not None:
+            # Warm instances die with their worker: drop the pools and
+            # clear the warmth signal before anyone re-reads it.
+            self._lifecycle.forget_worker(name)
         self._notify("topology")
         return worker
 
@@ -417,6 +431,10 @@ class Watcher:
             worker.health = HealthState.DEAD
             worker.healthy = False
             worker.reachable = False
+        if self._lifecycle is not None:
+            # A crash kills the worker's instances too (the restarted
+            # incarnation boots with empty pools).
+            self._lifecycle.forget_worker(worker.name)
         return evicted
 
     def mark_dead(self, name: str) -> int:

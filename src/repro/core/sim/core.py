@@ -8,9 +8,10 @@ Reproduces the paper's evaluation environment (§5.3) as a closed-loop
 * the **gateway** (tAPP or vanilla) resolves each invocation to a worker
   using the *live* cluster snapshot — the same scheduler code that drives
   the JAX serving runtime;
-* **workers** have concurrent slots, per-function warm-container caches
-  with a TTL (code locality), a performance factor (heterogeneity /
-  stragglers), and zone placement;
+* **workers** have concurrent slots, per-function warm containers (code
+  locality) — modelled by the platform's warm-pool lifecycle when one is
+  armed, by a sim-local TTL cache otherwise — a performance factor
+  (heterogeneity / stragglers), and zone placement;
 * a **network model** charges zone-to-zone RTTs and bandwidth for
   functions that touch remote data (data locality) and the gateway→zone
   forwarding hop;
@@ -31,7 +32,12 @@ import statistics
 import warnings
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
-from repro.core.platform import Placement, TappFederation, TappPlatform
+from repro.core.platform import (
+    LegacyWarmCache,
+    Placement,
+    TappFederation,
+    TappPlatform,
+)
 from repro.core.platform.faults import ChaosSpec, FaultEvent, FaultInjector
 from repro.core.scheduler.engine import Invocation, ScheduleDecision
 from repro.core.scheduler.state import ClusterState
@@ -53,7 +59,12 @@ class FunctionProfile:
     exec_jitter: float = 0.05             # lognormal-ish multiplicative jitter
     cold_start_time: float = 0.35         # container/init time on first use (s)
     warm_overhead: float = 0.004          # warm-path platform overhead (s)
-    warm_ttl: float = 600.0               # warm cache TTL (OpenWhisk: 10 min)
+    # Deprecated (PR 10): the sim-local warm cache TTL. An armed warm-pool
+    # lifecycle (TappPlatform(..., lifecycle=LifecycleSpec(keep_alive=...)))
+    # is authoritative for warm/cold and ignores this field; setting it to
+    # a non-default value emits a DeprecationWarning but keeps the seed-era
+    # unarmed behaviour bit-for-bit (OpenWhisk: 10 min).
+    warm_ttl: float = 600.0
     data_zone: Optional[str] = None       # zone hosting the function's data
     data_bytes: int = 0                   # payload moved from data zone
     data_roundtrips: int = 1              # queries per invocation
@@ -65,6 +76,17 @@ class FunctionProfile:
     # (cache/membus pressure from dissimilar workloads; instances of the
     # same function share working sets and are not charged).
     interference_sensitivity: float = 0.0
+
+    def __post_init__(self) -> None:
+        if self.warm_ttl != 600.0:
+            warnings.warn(
+                "FunctionProfile.warm_ttl is deprecated; arm the platform's "
+                "warm-pool lifecycle (TappPlatform(..., lifecycle="
+                "LifecycleSpec(keep_alive=...))) to model container expiry "
+                "— armed platforms ignore warm_ttl entirely",
+                DeprecationWarning,
+                stacklevel=3,
+            )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -324,7 +346,7 @@ class Simulation:
         self.config = config or SimConfig()
         self.is_tapp = is_tapp
         self.rng = random.Random(self.config.seed)
-        self._warm: Dict[Tuple[str, str], float] = {}  # (worker, fn) -> last end
+        self._warm = LegacyWarmCache()                 # (worker, fn) -> last end
         self._queues: Dict[str, List] = {}             # worker -> FIFO of pending
         self._link_load: Dict[Tuple[str, str], int] = {}  # active transfers/link
         self._events: List = []
@@ -354,6 +376,16 @@ class Simulation:
     @property
     def cluster(self) -> ClusterState:
         return self.platform.cluster
+
+    @property
+    def _lifecycle_armed(self) -> bool:
+        """Warm-pool lifecycle armed on the platform (PR 10)?
+
+        Armed platforms own warm/cold: the placement's ``warm_hit``
+        verdict drives the latency model and the sim-local TTL cache is
+        never consulted or written.
+        """
+        return getattr(self.platform, "lifecycle_spec", None) is not None
 
     # -- event helpers -----------------------------------------------------------
 
@@ -683,14 +715,25 @@ class Simulation:
             return
 
         duration = 0.0
-        # Code locality: cold vs warm container.
-        key = (worker.name, profile.name)
-        last = self._warm.get(key)
-        if last is None or (time - last) > profile.warm_ttl:
+        # Code locality: cold vs warm container. An armed warm-pool
+        # lifecycle (PR 10) is authoritative: admission already
+        # spawned-or-reused an instance and stamped the verdict on the
+        # placement, and expiry runs platform-side off keep_alive —
+        # warm_ttl is ignored. Unarmed platforms keep the seed-era
+        # sim-local TTL cache bit-for-bit.
+        if self._lifecycle_armed:
+            if state["placement"].warm_hit:
+                duration += profile.warm_overhead
+            else:
+                duration += profile.cold_start_time
+                record.cold = True
+        elif self._warm.is_warm(
+            worker.name, profile.name, time, profile.warm_ttl
+        ):
+            duration += profile.warm_overhead
+        else:
             duration += profile.cold_start_time
             record.cold = True
-        else:
-            duration += profile.warm_overhead
 
         # Required local-only resource (the MQTT broker case).
         if profile.requires and not self.network.reachable(
@@ -732,7 +775,8 @@ class Simulation:
                 state["link"] = link
                 duration += profile.data_bytes * sharers / bw
 
-        self._warm[key] = time + duration
+        if not self._lifecycle_armed:
+            self._warm.touch(worker.name, profile.name, time + duration)
         self._push(time + duration, "finish", state)
 
     def _on_queue_event(
@@ -823,8 +867,7 @@ class Simulation:
             # tickets. Executing work is handled at its finish event (the
             # dead-ticket complete() there routes into retry-or-fail).
             target = event.target
-            for key in [k for k in self._warm if k[0] == target]:
-                del self._warm[key]
+            self._warm.forget_worker(target)
             for _, state in self._queues.pop(target, ()):
                 state["placement"].complete()
                 self._retry_or_fail(time, state, "worker-crashed")

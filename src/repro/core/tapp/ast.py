@@ -8,7 +8,7 @@ Grammar (paper, Fig. 4)::
     controller ::= controller: label  (topology_tolerance: all|same|none)?
     workers    ::= workers: (wrk: label  constraint*)+
                  | workers: (set: label?  strategy?  constraint*)+
-    strategy   ::= strategy: random | platform | best_first
+    strategy   ::= strategy: random | platform | best_first | warm-first
     constraint ::= invalidate | affinity | anti-affinity
     invalidate ::= invalidate: capacity_used n% | max_concurrent_invocations n | overload
     affinity   ::= affinity: fn (, fn)*            -- all must be running there
@@ -34,11 +34,22 @@ DEFAULT_TAG = "default"
 
 
 class Strategy(enum.Enum):
-    """Item-selection strategy at tag, block, or worker-set level."""
+    """Item-selection strategy at tag, block, or worker-set level.
+
+    ``WARM_FIRST`` (the warm-pool extension, ROADMAP item 1) orders
+    candidates that hold an IDLE warm instance of the invoked function
+    ahead of cold ones — a stable partition of the canonical best-first
+    order, consuming zero RNG draws. With no lifecycle armed every
+    worker is cold, so it degenerates to ``BEST_FIRST`` exactly.
+    Valid at block and set-item level only (a tag-level warm-first is a
+    validation error: tag strategies order *blocks*, which have no
+    single warmth).
+    """
 
     RANDOM = "random"
     PLATFORM = "platform"
     BEST_FIRST = "best_first"
+    WARM_FIRST = "warm_first"
 
     @classmethod
     def parse(cls, text: str) -> "Strategy":

@@ -14,6 +14,7 @@ from typing import List, Optional, Sequence
 from repro.core.tapp.ast import (
     DEFAULT_TAG,
     FollowupKind,
+    Strategy,
     TagPolicy,
     TappScript,
     WorkerRef,
@@ -103,6 +104,9 @@ def validate_script(
     Structural rules (always errors):
       * ``followup: default`` on the default tag itself (the paper pins the
         default tag's followup to ``fail``);
+      * ``strategy: warm-first`` at tag level — block selection has no
+        single warmth to rank by (the engine degrades it to best_first,
+        so the script never does what it says);
       * a non-default tag with ``followup: default`` (explicit or implied)
         while the script has no default tag → warning (the scheduler will
         treat the missing default as ``fail``).
@@ -115,7 +119,10 @@ def validate_script(
         so it is almost always a copy-paste slip);
       * worker sets declared in the deployment but referenced by no block
         (dead deployment metadata, or a typo in the script) — suppressed
-        when any block uses the blank set, which reaches every set member.
+        when any block uses the blank set, which reaches every set member;
+      * block-level ``warm-first`` on a set list whose every set declares
+        its own (non-warm-first) inner strategy: the block strategy only
+        orders the *sets* and member ordering never sees warm-first.
     """
     findings: List[Finding] = []
 
@@ -128,6 +135,17 @@ def validate_script(
                     where,
                     "the default tag cannot use 'followup: default' "
                     "(it is always 'fail')",
+                )
+            )
+        if tag.strategy is Strategy.WARM_FIRST:
+            findings.append(
+                Finding(
+                    "error",
+                    where,
+                    "strategy 'warm-first' ranks workers by warm-instance "
+                    "availability; at tag level it would order blocks, "
+                    "which have no single warmth — declare it on a block "
+                    "or worker set instead",
                 )
             )
         if (
@@ -227,6 +245,27 @@ def _validate_tag_topology(
     for bi, block in enumerate(tag.blocks):
         where = f"tag:{tag.tag}.block[{bi}]"
         findings.extend(_lint_duplicate_items(block, where))
+        if (
+            block.strategy is Strategy.WARM_FIRST
+            and block.uses_sets
+            and all(
+                isinstance(item, WorkerSet)
+                and item.strategy is not None
+                and item.strategy is not Strategy.WARM_FIRST
+                for item in block.workers
+            )
+        ):
+            findings.append(
+                Finding(
+                    "warning",
+                    where,
+                    "block-level 'warm-first' on a set list only orders the "
+                    "sets; every set here declares its own inner strategy, "
+                    "so member ordering never sees warm-first — declare "
+                    "'strategy: warm-first' on the sets to try warm members "
+                    "first",
+                )
+            )
         if (
             block.controller is not None
             and known_controllers is not None

@@ -525,6 +525,83 @@ class TestFacadeBatchContracts:
         )
 
 
+WARM_FIRST_BATCH_SCRIPT = """
+- default:
+  - workers:
+    - set:
+      strategy: warm-first
+- pinned:
+  - workers:
+    - set: edge
+      strategy: warm-first
+    - set: cloud
+      strategy: warm-first
+    strategy: warm-first
+  followup: default
+"""
+
+
+class TestWarmFirstBatchBitIdentity:
+    """PR 10: the batch kernel's warm-first bit-ops (warm & avail mask
+    partitions) must reproduce the scalar path exactly while warmth is
+    *live* — instances parking, being reused MRU, and expiring between
+    batches."""
+
+    def _armed(self):
+        from repro.core.platform import LifecycleSpec
+
+        return TappPlatform(
+            FACADE_SPEC,
+            distribution=DistributionPolicy.SHARED,
+            seed=0,
+            policy=WARM_FIRST_BATCH_SCRIPT,
+            lifecycle=LifecycleSpec(keep_alive=15.0),
+        )
+
+    def test_warm_batches_equal_invoke_loop(self):
+        p_loop, p_bat = self._armed(), self._armed()
+        for rnd in range(6):
+            # Rounds 0-2 run 10s apart (inside the 15s keep-alive, so
+            # instances are reused); round 3 jumps 50s ahead, expiring
+            # every parked instance through the batch path's janitor.
+            now = 10.0 * rnd + (50.0 if rnd >= 3 else 0.0)
+            invocations = [
+                Invocation(FUNCTIONS[i % 2],
+                           tag="pinned" if i % 3 == 0 else None)
+                for i in range(6)
+            ]
+            loop_placements = [p_loop.invoke(inv, now=now)
+                               for inv in invocations]
+            bat_placements = p_bat.invoke_batch(invocations, now=now)
+            assert [_key(p.decision) for p in loop_placements] == [
+                _key(p.decision) for p in bat_placements
+            ], rnd
+            assert [p.warm_hit for p in loop_placements] == [
+                p.warm_hit for p in bat_placements
+            ], rnd
+            # Retire everything so the next round sees parked warmth —
+            # and, two rounds on (20s > keep_alive=15s), its expiry.
+            for a, b in zip(loop_placements, bat_placements):
+                a.complete(now=now + 1.0)
+                b.complete(now=now + 1.0)
+            assert p_loop.ledger_snapshot() == p_bat.ledger_snapshot(), rnd
+            assert (p_loop.lifecycle_snapshot()
+                    == p_bat.lifecycle_snapshot()), rnd
+        assert (
+            p_loop.gateway._engine.scheduling_state()
+            == p_bat.gateway._engine.scheduling_state()
+        )
+        stats_loop, stats_bat = p_loop.stats(), p_bat.stats()
+        assert (stats_loop.cold_starts, stats_loop.warm_hits,
+                stats_loop.expirations) == (
+            stats_bat.cold_starts, stats_bat.warm_hits,
+            stats_bat.expirations,
+        )
+        # The sweep genuinely exercised both sides of the partition.
+        assert stats_loop.warm_hits > 0
+        assert stats_loop.expirations > 0
+
+
 # ---------------------------------------------------------------------------
 # jax backend
 # ---------------------------------------------------------------------------

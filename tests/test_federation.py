@@ -548,6 +548,62 @@ class TestArmedIdleBitIdentity:
             )
 
 
+class TestArmedLifecycleBitIdentity:
+    """PR 10: a warm-pool lifecycle armed under a policy that never uses
+    ``warm-first`` runs fully (instances spawn, park, reuse, expire) but
+    routing never reads the warmth — the federated façade's decisions,
+    traces, hops, and RNG streams stay bit-identical to an unarmed one."""
+
+    def test_armed_lifecycle_equals_unarmed_under_churn(self):
+        from repro.core.platform import LifecycleSpec
+
+        for trial in range(4):
+            plain = TappFederation(
+                _two_zone_spec(slots=4), seed=trial,
+                distribution=DistributionPolicy.SHARED,
+                policy=MULTI_TAG_SCRIPT,
+            )
+            armed = TappFederation(
+                _two_zone_spec(slots=4), seed=trial,
+                distribution=DistributionPolicy.SHARED,
+                policy=MULTI_TAG_SCRIPT,
+                lifecycle=LifecycleSpec(keep_alive=3.0),
+            )
+            rng = random.Random(300 + trial)
+            live = []
+            for step in range(60):
+                entry = rng.choice(("za", "zb"))
+                fn = rng.choice(("fn_a", "fn_b"))
+                tag = rng.choice((None, "spread"))
+                now = float(step)
+                p1 = plain.invoke(fn, tag=tag, entry_zone=entry,
+                                  trace=True)
+                p2 = armed.invoke(fn, tag=tag, entry_zone=entry,
+                                  trace=True, now=now)
+                context = f"trial={trial} step={step}"
+                _assert_same_decision(p1.decision, p2.decision, context)
+                assert p1.hops == p2.hops, context
+                live.append((p1, p2))
+                while len(live) > 6:
+                    a, b = live.pop(0)
+                    a.complete()
+                    b.complete(now=now)
+            for zone in ("za", "zb"):
+                assert (
+                    plain.zone_gateway(zone)._engine.scheduling_state()
+                    == armed.zone_gateway(zone)._engine.scheduling_state()
+                ), trial
+            # The lifecycle genuinely ran on the armed side.
+            snap = armed.lifecycle_snapshot()
+            assert snap["cold_starts"] > 0
+            assert plain.lifecycle_snapshot()["cold_starts"] == 0
+            agg1 = plain.stats().aggregate
+            agg2 = armed.stats().aggregate
+            assert (agg1.routed, agg1.admitted, agg1.inflight,
+                    agg1.failed) == (agg2.routed, agg2.admitted,
+                                     agg2.inflight, agg2.failed)
+
+
 class TestFederationSpec:
     def test_duplicate_zone_rejected(self):
         with pytest.raises(ValueError, match="duplicate federation zone"):

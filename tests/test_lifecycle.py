@@ -1,0 +1,551 @@
+"""Warm-pool instance lifecycle (PR 10).
+
+Covers the PR-10 contracts:
+* ``LifecycleSpec`` validation and the off-by-default arming discipline;
+* cold→warm→idle→term mechanics fed by the admission ledger: first use
+  is cold, completion parks the instance warm, reuse is MRU and O(1);
+* the deterministic expiration janitor: keep-alive resolution (worker >
+  controller > spec), ``max_idle`` caps, clockless completions never
+  expiring, and expiry under drain/deregister churn never stranding a
+  ledger ticket (``admitted == completed + evicted + inflight``);
+* ``warm-first`` routing: warm workers are tried before cold ones, the
+  unarmed path is bit-identical to a lifecycle-free platform, and
+  ``explain`` annotates per-candidate warmth;
+* the ``FunctionProfile.warm_ttl`` deprecation shim: old scenarios keep
+  their sim-local TTL semantics bit-for-bit (with a warning), armed
+  platforms ignore ``warm_ttl`` entirely;
+* validator findings: tag-level ``warm-first`` is a structural error,
+  block-level ``warm-first`` shadowed by explicit inner strategies lints.
+"""
+import random
+import warnings
+
+import pytest
+
+from repro.core.platform import (
+    ClusterSpec,
+    ControllerSpec,
+    LifecycleSpec,
+    TappPlatform,
+    WorkerSpec,
+)
+from repro.core.sim import (
+    FunctionProfile,
+    NetworkModel,
+    SimConfig,
+    Simulation,
+    WorkloadSpec,
+)
+from repro.core.tapp import parse_tapp, validate_script
+
+
+WARM_FIRST_SCRIPT = """
+- default:
+  - workers:
+    - set:
+      strategy: warm-first
+"""
+
+
+def _spec(n_workers=3, slots=2, worker_keep_alive=None,
+          controller_keep_alive=None):
+    return ClusterSpec(
+        controllers=(
+            ControllerSpec("C1", keep_alive=controller_keep_alive),
+        ),
+        workers=tuple(
+            WorkerSpec(
+                f"w{i}", sets=("pool", "any"), capacity_slots=slots,
+                keep_alive=worker_keep_alive,
+            )
+            for i in range(n_workers)
+        ),
+    )
+
+
+def _platform(lifecycle=LifecycleSpec(), *, policy=WARM_FIRST_SCRIPT,
+              seed=0, **spec_kwargs):
+    return TappPlatform(
+        _spec(**spec_kwargs), seed=seed, policy=policy, lifecycle=lifecycle,
+    )
+
+
+class TestLifecycleSpec:
+    def test_defaults(self):
+        spec = LifecycleSpec()
+        assert spec.keep_alive == 600.0
+        assert spec.max_idle is None
+
+    @pytest.mark.parametrize("keep_alive", [0.0, -1.0])
+    def test_non_positive_keep_alive_rejected(self, keep_alive):
+        with pytest.raises(ValueError, match="keep_alive"):
+            LifecycleSpec(keep_alive=keep_alive)
+
+    def test_negative_max_idle_rejected(self):
+        with pytest.raises(ValueError, match="max_idle"):
+            LifecycleSpec(max_idle=-1)
+
+    @pytest.mark.parametrize("keep_alive", [0.0, -2.0])
+    def test_worker_keep_alive_validated(self, keep_alive):
+        with pytest.raises(ValueError, match="keep_alive"):
+            WorkerSpec("w0", keep_alive=keep_alive)
+
+    @pytest.mark.parametrize("keep_alive", [0.0, -2.0])
+    def test_controller_keep_alive_validated(self, keep_alive):
+        with pytest.raises(ValueError, match="keep_alive"):
+            ControllerSpec("C", keep_alive=keep_alive)
+
+    def test_unarmed_platform_has_no_lifecycle(self):
+        p = TappPlatform(_spec(), policy=WARM_FIRST_SCRIPT)
+        assert p.lifecycle_spec is None
+        assert p.lifecycle is None
+        assert p.expire_instances(1e9) == 0
+        snap = p.lifecycle_snapshot()
+        assert set(snap.values()) == {0}
+
+
+class TestWarmPoolMechanics:
+    def test_cold_then_warm_reuse(self):
+        p = _platform()
+        p1 = p.invoke("fn", now=0.0)
+        assert p1.scheduled and p1.warm_hit is False
+        assert p.stats().cold_starts == 1
+        p1.complete(now=1.0)
+        snap = p.lifecycle_snapshot()
+        assert snap["idle_instances"] == 1 and snap["busy_instances"] == 0
+        p2 = p.invoke("fn", now=2.0)
+        assert p2.warm_hit is True
+        assert p2.decision.worker == p1.decision.worker
+        assert p.stats().warm_hits == 1
+        assert p.stats().cold_starts == 1
+
+    def test_instances_are_per_function(self):
+        p = _platform(n_workers=1)
+        p1 = p.invoke("fn_a", now=0.0)
+        p1.complete(now=1.0)
+        p2 = p.invoke("fn_b", now=2.0)
+        assert p2.warm_hit is False  # fn_a's instance serves only fn_a
+        assert p.lifecycle_snapshot()["pools"] == 2
+
+    def test_keep_alive_expiry(self):
+        p = _platform(LifecycleSpec(keep_alive=5.0), n_workers=1)
+        p.invoke("fn", now=0.0).complete(now=1.0)
+        # Within keep-alive: warm. Past it: the janitor reaps first.
+        warm = p.invoke("fn", now=3.0)
+        assert warm.warm_hit is True
+        warm.complete(now=4.0)
+        cold = p.invoke("fn", now=20.0)
+        assert cold.warm_hit is False
+        assert p.stats().expirations == 1
+        assert p.lifecycle_snapshot()["idle_instances"] == 0
+
+    def test_explicit_janitor_tick(self):
+        p = _platform(LifecycleSpec(keep_alive=5.0), n_workers=1)
+        p.invoke("fn", now=0.0).complete(now=1.0)
+        assert p.expire_instances(5.9) == 0   # deadline is 1.0 + 5.0
+        assert p.expire_instances(6.0) == 1
+        assert p.lifecycle_snapshot()["idle_instances"] == 0
+
+    def test_clockless_completions_never_expire(self):
+        p = _platform(LifecycleSpec(keep_alive=0.001), n_workers=1)
+        p.invoke("fn").complete()            # no clock anywhere
+        assert p.expire_instances(1e12) == 0
+        assert p.invoke("fn", now=1e12).warm_hit is True
+
+    def test_max_idle_caps_parked_instances(self):
+        p = _platform(LifecycleSpec(max_idle=1), n_workers=1)
+        a = p.invoke("fn", now=0.0)
+        b = p.invoke("fn", now=0.0)
+        assert a.warm_hit is False and b.warm_hit is False
+        a.complete(now=1.0)
+        b.complete(now=1.0)                  # pool full → terminated
+        snap = p.lifecycle_snapshot()
+        assert snap["idle_instances"] == 1
+        assert snap["expirations"] == 1
+
+    def test_worker_keep_alive_overrides_spec(self):
+        p = _platform(LifecycleSpec(keep_alive=1000.0), n_workers=1,
+                      worker_keep_alive=2.0)
+        p.invoke("fn", now=0.0).complete(now=1.0)
+        assert p.invoke("fn", now=10.0).warm_hit is False
+
+    def test_controller_keep_alive_overrides_spec(self):
+        p = _platform(LifecycleSpec(keep_alive=1000.0), n_workers=1,
+                      controller_keep_alive=2.0)
+        p.invoke("fn", now=0.0).complete(now=1.0)
+        assert p.invoke("fn", now=10.0).warm_hit is False
+
+    def test_mru_reuse_order(self):
+        # Two instances parked; the most recently parked is reused first,
+        # so the older one is the one the janitor reaps.
+        p = _platform(LifecycleSpec(keep_alive=10.0), n_workers=1)
+        a = p.invoke("fn", now=0.0)
+        b = p.invoke("fn", now=0.0)
+        a.complete(now=1.0)                  # older deadline: 11.0
+        b.complete(now=5.0)                  # newer deadline: 15.0
+        c = p.invoke("fn", now=6.0)          # reuses b's instance (MRU)
+        assert c.warm_hit is True
+        assert p.expire_instances(12.0) == 1  # a's instance expires alone
+        c.complete(now=12.5)
+        assert p.invoke("fn", now=13.0).warm_hit is True
+
+
+class TestWarmFirstRouting:
+    def test_warm_first_sticks_to_warm_worker(self):
+        p = _platform(seed=3, n_workers=4)
+        first = p.invoke("fn", now=0.0)
+        first.complete(now=1.0)
+        warm_worker = first.decision.worker
+        for step in range(8):
+            pl = p.invoke("fn", now=2.0 + step)
+            assert pl.decision.worker == warm_worker, step
+            assert pl.warm_hit is True
+            pl.complete(now=2.5 + step)
+
+    def test_warm_first_overflows_to_cold_then_returns(self):
+        p = _platform(seed=1, n_workers=3, slots=1)
+        a = p.invoke("fn", now=0.0)
+        a.complete(now=1.0)
+        warm_worker = a.decision.worker
+        b = p.invoke("fn", now=2.0)          # takes the warm slot
+        assert b.decision.worker == warm_worker and b.warm_hit is True
+        c = p.invoke("fn", now=2.0)          # warm worker full → cold spill
+        assert c.decision.worker != warm_worker and c.warm_hit is False
+        b.complete(now=3.0)
+        d = p.invoke("fn", now=4.0)          # warm again → back home
+        assert d.decision.worker == warm_worker and d.warm_hit is True
+
+    def test_explain_annotates_warmth_when_armed(self):
+        p = _platform(n_workers=3)
+        first = p.invoke("fn", now=0.0)
+        first.complete(now=1.0)
+        report = p.explain("fn")
+        verdicts = {
+            c.worker: c.warm
+            for block in report.blocks for c in block.candidates
+        }
+        assert verdicts[first.decision.worker] is True
+        assert all(
+            warm is False
+            for worker, warm in verdicts.items()
+            if worker != first.decision.worker
+        )
+
+    def test_explain_has_no_warmth_unarmed(self):
+        p = TappPlatform(_spec(), policy=WARM_FIRST_SCRIPT)
+        report = p.explain("fn")
+        assert all(
+            c.warm is None
+            for block in report.blocks for c in block.candidates
+        )
+
+    def test_armed_all_cold_is_bit_identical_to_no_lifecycle(self):
+        """Uniform warmth (every instance cold, nothing ever parked) keeps
+        warm-first partitions the identity: an armed platform's decisions,
+        traces, and RNG streams match a lifecycle-free one exactly."""
+        for trial in range(4):
+            plain = TappPlatform(_spec(n_workers=5, slots=64), seed=trial,
+                                 policy=WARM_FIRST_SCRIPT)
+            armed = TappPlatform(_spec(n_workers=5, slots=64), seed=trial,
+                                 policy=WARM_FIRST_SCRIPT,
+                                 lifecycle=LifecycleSpec(keep_alive=1e9))
+            rng = random.Random(40 + trial)
+            for step in range(50):
+                fn = rng.choice(("fn_a", "fn_b"))
+                p1 = plain.invoke(fn, trace=True)
+                p2 = armed.invoke(fn, trace=True, now=float(step))
+                ctx = f"trial={trial} step={step}"
+                assert p1.decision.worker == p2.decision.worker, ctx
+                assert p1.decision.trace == p2.decision.trace, ctx
+            assert (
+                plain.gateway._engine.scheduling_state()
+                == armed.gateway._engine.scheduling_state()
+            )
+
+    def test_armed_lifecycle_invisible_to_non_warm_first_policies(self):
+        """With no warm-first strategy in the script the lifecycle runs
+        fully (pools fill, instances expire) but routing never reads the
+        warmth — placements stay bit-identical to an unarmed platform
+        under completion churn."""
+        script = (
+            "- default:\n"
+            "  - workers:\n"
+            "    - set:\n"
+            "    strategy: platform\n"
+            "- spread:\n"
+            "  - workers:\n"
+            "    - set: pool\n"
+            "      strategy: random\n"
+            "  followup: default\n"
+        )
+        for trial in range(4):
+            plain = TappPlatform(_spec(n_workers=5), seed=trial,
+                                 policy=script)
+            armed = TappPlatform(_spec(n_workers=5), seed=trial,
+                                 policy=script,
+                                 lifecycle=LifecycleSpec(keep_alive=2.0))
+            rng = random.Random(90 + trial)
+            live = []
+            for step in range(60):
+                now = float(step)
+                fn = rng.choice(("fn_a", "fn_b"))
+                tag = rng.choice((None, "spread"))
+                p1 = plain.invoke(fn, tag=tag, trace=True)
+                p2 = armed.invoke(fn, tag=tag, trace=True, now=now)
+                ctx = f"trial={trial} step={step}"
+                assert p1.decision.worker == p2.decision.worker, ctx
+                assert p1.decision.trace == p2.decision.trace, ctx
+                if p1.admitted:
+                    live.append((p1, p2))
+                while len(live) > 4:
+                    a, b = live.pop(0)
+                    a.complete()
+                    b.complete(now=now)
+            assert (
+                plain.gateway._engine.scheduling_state()
+                == armed.gateway._engine.scheduling_state()
+            )
+            # The lifecycle really ran on the armed side — instances
+            # were spawned (and possibly reused/expired) — yet routing
+            # never diverged.
+            assert armed.stats().cold_starts > 0
+
+
+class TestJanitorChurn:
+    def test_expiry_under_drain_and_deregister_never_strands(self):
+        """Random invoke/complete/drain/restore/remove/add churn with the
+        janitor ticking throughout: the ledger invariant holds and busy
+        instances always equal inflight tickets."""
+        for trial in range(4):
+            p = _platform(LifecycleSpec(keep_alive=3.0), seed=trial,
+                          n_workers=4, slots=2)
+            rng = random.Random(70 + trial)
+            live = []
+            removed = set()
+            for step in range(120):
+                now = float(step) * 0.7
+                roll = rng.random()
+                if roll < 0.45:
+                    pl = p.invoke(rng.choice(("fn_a", "fn_b")), now=now)
+                    if pl.admitted:
+                        live.append(pl)
+                elif roll < 0.70 and live:
+                    live.pop(rng.randrange(len(live))).complete(now=now)
+                elif roll < 0.78:
+                    name = f"w{rng.randrange(4)}"
+                    if name not in removed:
+                        p.drain(name)
+                elif roll < 0.86:
+                    name = f"w{rng.randrange(4)}"
+                    if name not in removed:
+                        p.restore(name)
+                elif roll < 0.93:
+                    name = f"w{rng.randrange(4)}"
+                    if name not in removed:
+                        p.remove_worker(name)
+                        removed.add(name)
+                        live = [pl for pl in live
+                                if pl.decision.worker != name]
+                else:
+                    name = f"w{rng.randrange(4)}"
+                    if name in removed:
+                        p.add_worker(WorkerSpec(
+                            name, sets=("pool", "any"), capacity_slots=2,
+                        ))
+                        removed.discard(name)
+                p.expire_instances(now)
+                stats = p.stats()
+                snap = p.lifecycle_snapshot()
+                ctx = f"trial={trial} step={step}"
+                assert stats.admitted == (
+                    stats.completed + stats.evicted + stats.inflight
+                ), ctx
+                assert snap["busy_instances"] == stats.inflight, ctx
+            # Drain the survivors; every pool reconciles.
+            now = 1e6
+            for pl in live:
+                pl.complete(now=now)
+            stats = p.stats()
+            assert stats.inflight == 0
+            assert stats.admitted == stats.completed + stats.evicted
+            assert p.lifecycle_snapshot()["busy_instances"] == 0
+
+    def test_saturation_respawns_after_term(self):
+        """Keep a single worker saturated across keep-alive windows: each
+        round's instances expire (TERM) and the next round spawns cold
+        again — counters and the ledger stay exact."""
+        p = _platform(LifecycleSpec(keep_alive=1.0), n_workers=1, slots=2)
+        now = 0.0
+        for round_no in range(5):
+            a = p.invoke("fn", now=now)
+            b = p.invoke("fn", now=now)
+            assert a.warm_hit is False and b.warm_hit is False, round_no
+            overflow = p.invoke("fn", now=now)    # saturated → unscheduled
+            assert not overflow.scheduled, round_no
+            a.complete(now=now + 0.5)
+            b.complete(now=now + 0.5)
+            now += 10.0                           # idle past keep-alive
+            assert p.expire_instances(now) == 2, round_no
+        stats = p.stats()
+        assert stats.cold_starts == 10
+        assert stats.warm_hits == 0
+        assert stats.expirations == 10
+        assert stats.admitted == stats.completed == 10
+        snap = p.lifecycle_snapshot()
+        assert snap["idle_instances"] == snap["busy_instances"] == 0
+        assert snap["pools"] == 0
+
+    def test_dead_worker_pools_are_forgotten(self):
+        p = _platform(LifecycleSpec(keep_alive=1e9), n_workers=2)
+        pl = p.invoke("fn", now=0.0)
+        pl.complete(now=1.0)
+        victim = pl.decision.worker
+        assert p.lifecycle_snapshot()["idle_instances"] == 1
+        p.watcher.mark_dead(victim)
+        assert p.lifecycle_snapshot()["idle_instances"] == 0
+        nxt = p.invoke("fn", now=2.0)
+        assert nxt.warm_hit is False      # fresh incarnations start cold
+
+
+NET = NetworkModel(rtt={}, bandwidth={})
+
+
+def _sim_platform(lifecycle=None):
+    return TappPlatform(
+        ClusterSpec(
+            controllers=(ControllerSpec("C1", zone="cloud"),),
+            workers=(
+                WorkerSpec("w0", zone="cloud", capacity_slots=4),
+            ),
+        ),
+        lifecycle=lifecycle,
+    )
+
+
+def _cold_profile(**overrides):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return FunctionProfile(
+            name="cold-start", exec_time=0.030, exec_jitter=0.0,
+            cold_start_time=2.8, **overrides
+        )
+
+
+class TestWarmTtlDeprecation:
+    def test_non_default_warm_ttl_warns(self):
+        with pytest.warns(DeprecationWarning, match="warm_ttl"):
+            FunctionProfile(name="f", exec_time=0.1, warm_ttl=60.0)
+
+    def test_default_warm_ttl_is_silent(self):
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            FunctionProfile(name="f", exec_time=0.1)
+
+    def test_throttled_scenario_pinned(self):
+        """The §5.2 throttled cold-start case (scenarios.py): users pause
+        past the 60s TTL, so *every* request is cold — unchanged by the
+        deprecation shim."""
+        profile = _cold_profile(warm_ttl=60.0)
+        sim = Simulation(
+            _sim_platform(), NET, {"cold-start": profile},
+            SimConfig(seed=0),
+        )
+        result = sim.run([WorkloadSpec("cold-start", users=1,
+                                       requests_per_user=3, pause=660.0)])
+        assert [r.cold for r in result.records] == [True, True, True]
+        for r in result.records:
+            assert r.latency >= profile.cold_start_time
+
+    def test_fast_chain_stays_warm_unarmed(self):
+        profile = _cold_profile(warm_ttl=60.0)
+        sim = Simulation(
+            _sim_platform(), NET, {"cold-start": profile},
+            SimConfig(seed=0),
+        )
+        result = sim.run([WorkloadSpec("cold-start", users=1,
+                                       requests_per_user=3, pause=1.0)])
+        assert [r.cold for r in result.records] == [True, False, False]
+
+    def test_armed_platform_ignores_warm_ttl(self):
+        """Armed lifecycle: keep_alive governs expiry; the 60s warm_ttl
+        would have made every 660s-paused request cold, but a generous
+        keep-alive keeps the chain warm."""
+        profile = _cold_profile(warm_ttl=60.0)
+        sim = Simulation(
+            _sim_platform(lifecycle=LifecycleSpec(keep_alive=10_000.0)),
+            NET, {"cold-start": profile}, SimConfig(seed=0),
+        )
+        result = sim.run([WorkloadSpec("cold-start", users=1,
+                                       requests_per_user=3, pause=660.0)])
+        assert [r.cold for r in result.records] == [True, False, False]
+        stats = sim.platform.stats()
+        assert stats.cold_starts == 1 and stats.warm_hits == 2
+
+    def test_armed_platform_expires_by_keep_alive(self):
+        profile = _cold_profile()           # default (ignored) warm_ttl
+        sim = Simulation(
+            _sim_platform(lifecycle=LifecycleSpec(keep_alive=60.0)),
+            NET, {"cold-start": profile}, SimConfig(seed=0),
+        )
+        result = sim.run([WorkloadSpec("cold-start", users=1,
+                                       requests_per_user=3, pause=660.0)])
+        assert [r.cold for r in result.records] == [True, True, True]
+        assert sim.platform.stats().expirations == 2
+
+
+class TestValidatorWarmFirst:
+    def test_tag_level_warm_first_is_an_error(self):
+        script = parse_tapp(
+            "- alpha:\n"
+            "  - workers:\n"
+            "    - set:\n"
+            "  strategy: warm-first\n"
+        )
+        report = validate_script(script)
+        assert not report.ok
+        assert any("warm-first" in f.message for f in report.errors)
+
+    def test_block_and_set_warm_first_are_fine(self):
+        script = parse_tapp(WARM_FIRST_SCRIPT)
+        assert validate_script(script).ok
+        block_level = parse_tapp(
+            "- alpha:\n"
+            "  - workers:\n"
+            "    - set: east\n"
+            "    - set: west\n"
+            "    strategy: warm-first\n"
+        )
+        report = validate_script(block_level)
+        assert report.ok
+        assert not any("warm-first" in f.message for f in report.warnings)
+
+    def test_shadowed_block_warm_first_lints(self):
+        script = parse_tapp(
+            "- alpha:\n"
+            "  - workers:\n"
+            "    - set: east\n"
+            "      strategy: random\n"
+            "    - set: west\n"
+            "      strategy: best_first\n"
+            "    strategy: warm-first\n"
+        )
+        report = validate_script(script)
+        assert report.ok                      # a lint, not an error
+        assert any(
+            "warm-first" in f.message and f.level == "warning"
+            for f in report.findings
+        )
+
+    def test_partially_inherited_sets_do_not_lint(self):
+        script = parse_tapp(
+            "- alpha:\n"
+            "  - workers:\n"
+            "    - set: east\n"
+            "      strategy: random\n"
+            "    - set: west\n"
+            "    strategy: warm-first\n"
+        )
+        report = validate_script(script)
+        assert not any(
+            "warm-first" in f.message for f in report.warnings
+        )

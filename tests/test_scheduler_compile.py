@@ -41,7 +41,11 @@ from repro.core.tapp.ast import (
 
 ZONES = ("edge", "cloud", "far")
 SET_LABELS = ("edge", "cloud", "far", "gpu", "any")
-STRATEGIES = (None, Strategy.BEST_FIRST, Strategy.RANDOM, Strategy.PLATFORM)
+# WARM_FIRST rides the sweep with no lifecycle armed: every warm count
+# is 0, so its partitions are the identity (and at tag level it degrades
+# to best_first) — compiled, interpreted, and batch paths must all agree.
+STRATEGIES = (None, Strategy.BEST_FIRST, Strategy.RANDOM, Strategy.PLATFORM,
+              Strategy.WARM_FIRST)
 CONDITIONS = (
     None,
     Overload(),

@@ -229,6 +229,27 @@ def build_cases() -> List[Case]:
         _federated(scenarios.colocation_federation_spec(),
                    DistributionPolicy.SHARED),
     ))
+
+    # Warm-pool family (PR 10): both arms of the cold-start benchmark,
+    # verified against the deployment the bench actually drives. The
+    # warm-first script additionally regression-guards the validator's
+    # placement rules for the strategy (set-level is legal; tag-level
+    # would be an error-level finding and fail this gate).
+    from benchmarks.coldstart_bench import (
+        OBLIVIOUS_SCRIPT,
+        WARM_FIRST_COLDSTART_SCRIPT,
+    )
+
+    cases.append((
+        "coldstart_bench.WARM_FIRST_COLDSTART_SCRIPT",
+        WARM_FIRST_COLDSTART_SCRIPT,
+        _flat(scenarios.benchmark_cluster(), DistributionPolicy.SHARED),
+    ))
+    cases.append((
+        "coldstart_bench.OBLIVIOUS_SCRIPT",
+        OBLIVIOUS_SCRIPT,
+        _flat(scenarios.benchmark_cluster(), DistributionPolicy.SHARED),
+    ))
     return cases
 
 
